@@ -1,0 +1,27 @@
+//! Regenerates Fig 4/6/7 + Tables 1/3/4 (the §6 deep-net simulations).
+//! Full sizes with BENCH_FULL=1; quick otherwise.
+use ef_sgd::bench::Bench;
+use ef_sgd::experiments::{self, ExpContext};
+
+fn main() {
+    let ctx = ExpContext {
+        quick: std::env::var("BENCH_FULL").map_or(true, |v| v != "1"),
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let mut b = Bench::with_config(
+        "Fig 4/6/7 + Tables 1/3/4 (CIFAR simulations)",
+        ef_sgd::bench::BenchConfig {
+            measure_time: std::time::Duration::from_millis(1),
+            warmup_time: std::time::Duration::from_millis(0),
+            samples: 1,
+        },
+    );
+    b.bench("fig4_tables_1_3", || {
+        experiments::run("fig4", &ctx).expect("fig4");
+    });
+    b.bench("fig7_table_4", || {
+        experiments::run("fig7", &ctx).expect("fig7");
+    });
+    b.finish();
+}

@@ -1,0 +1,38 @@
+//! Collective latency on the simulated fabric: ring all-reduce vs
+//! parameter-server gather at several worker counts.
+
+use ef_sgd::bench::{black_box, Bench};
+use ef_sgd::collectives::{ring_allreduce, ParameterServer};
+use ef_sgd::compress::wire;
+use ef_sgd::net::{Fabric, LinkModel};
+use ef_sgd::util::Pcg64;
+
+fn main() {
+    let d = 100_000;
+    let mut b = Bench::new("collectives (d = 100k f32)");
+    for n in [2usize, 4, 8] {
+        let mut rng = Pcg64::seeded(n as u64);
+        let template: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        b.bench_elems(&format!("ring_allreduce n={n}"), (d * n) as u64, || {
+            let fabric = Fabric::new(n, LinkModel::default());
+            let mut buffers = template.clone();
+            ring_allreduce(&fabric, &mut buffers, 0);
+            black_box(&buffers);
+        });
+        b.bench_elems(&format!("ps_gather_sign n={n}"), (d * n) as u64, || {
+            let fabric = Fabric::new(n + 1, LinkModel::default());
+            let ps = ParameterServer::new(&fabric);
+            for w in 0..n {
+                ps.push_grad(&fabric, w, 0, wire::encode_scaled_sign(&template[w]));
+            }
+            black_box(ps.gather_mean(&fabric, 0, d));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,52 @@
+//! Compressor throughput on gradient-sized vectors (the L3 hot path that
+//! runs once per worker per round). Perf targets in EXPERIMENTS.md §Perf.
+
+use ef_sgd::bench::{black_box, Bench};
+use ef_sgd::compress::{Compressor, Identity, Qsgd, RandomK, ScaledSign, Sign, TernGrad, TopK};
+use ef_sgd::util::Pcg64;
+
+fn main() {
+    let d = 1_000_000;
+    let mut rng = Pcg64::seeded(0);
+    let mut p = vec![0.0f32; d];
+    rng.fill_normal(&mut p, 0.0, 1.0);
+    let mut out = vec![0.0f32; d];
+
+    let mut b = Bench::new("compressors (d = 1M f32)");
+    let cases: Vec<Box<dyn Compressor>> = vec![
+        Box::new(Identity),
+        Box::new(Sign),
+        Box::new(ScaledSign),
+        Box::new(TopK::count(d / 64)),
+        Box::new(RandomK::count(d / 64)),
+        Box::new(Qsgd::new(4)),
+        Box::new(TernGrad),
+    ];
+    for c in &cases {
+        let mut r = Pcg64::seeded(1);
+        b.bench_elems(c.name(), d as u64, || {
+            c.compress(black_box(&p), black_box(&mut out), &mut r);
+        });
+    }
+
+    // the norm kernels underlying scaled sign + density
+    b.bench_elems("norm1", d as u64, || {
+        black_box(ef_sgd::tensor::norm1(black_box(&p)));
+    });
+    b.bench_elems("density", d as u64, || {
+        black_box(ef_sgd::tensor::density(black_box(&p)));
+    });
+    // the full EF step (compress + residual update), with and without the
+    // Fig-2 density instrumentation (an extra L1+L2 pass over p)
+    let mut ef = ef_sgd::compress::ErrorFeedback::new(d, Box::new(ScaledSign));
+    let mut r = Pcg64::seeded(2);
+    b.bench_elems("ef_scaled_sign_step (density on)", d as u64, || {
+        ef.step_into(0.01, black_box(&p), black_box(&mut out), &mut r);
+    });
+    let mut ef2 = ef_sgd::compress::ErrorFeedback::new(d, Box::new(ScaledSign));
+    ef2.set_track_density(false);
+    b.bench_elems("ef_scaled_sign_step (density off)", d as u64, || {
+        ef2.step_into(0.01, black_box(&p), black_box(&mut out), &mut r);
+    });
+    b.finish();
+}

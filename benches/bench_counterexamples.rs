@@ -1,0 +1,29 @@
+//! Regenerates §3 counterexamples (CE1-3, Thm I) and times the drivers.
+//! Full sizes with BENCH_FULL=1; quick otherwise.
+use ef_sgd::bench::Bench;
+use ef_sgd::experiments::{self, ExpContext};
+
+fn ctx() -> ExpContext {
+    ExpContext {
+        quick: std::env::var("BENCH_FULL").map_or(true, |v| v != "1"),
+        out_dir: "results".into(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut b = Bench::with_config(
+        "paper counterexamples (CE1-3, Thm I)",
+        ef_sgd::bench::BenchConfig {
+            measure_time: std::time::Duration::from_millis(1),
+            warmup_time: std::time::Duration::from_millis(0),
+            samples: 1,
+        },
+    );
+    for id in ["ce1", "ce2", "ce3", "thm1"] {
+        b.bench(id, || {
+            experiments::run(id, &ctx()).expect(id);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,129 @@
+//! End-to-end round rate of the full coordinator stack: native-MLP workers
+//! (always) and the PJRT transformer workers (when artifacts are built).
+
+use ef_sgd::bench::{Bench, BenchConfig};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use ef_sgd::coordinator::worker::{GradSource, ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::data::synth_class::{self, SynthSpec};
+use ef_sgd::data::tokens::MarkovCorpus;
+use ef_sgd::model::mlp::{Mlp, MlpObjective};
+use ef_sgd::runtime::{LmSession, Runtime};
+use ef_sgd::util::Pcg64;
+use std::rc::Rc;
+use std::time::Duration;
+
+struct LmWorkerSource {
+    session: Rc<LmSession>,
+    corpus: Rc<MarkovCorpus>,
+    rng: Pcg64,
+}
+
+impl GradSource for LmWorkerSource {
+    fn dim(&self) -> usize {
+        self.session.d()
+    }
+
+    fn grad(&mut self, theta: &[f32], out: &mut [f32]) -> f64 {
+        let (b, s) = self.session.model.token_shape();
+        let tokens = self.corpus.sample_batch(b, s, &mut self.rng);
+        let (loss, grad) = self.session.train_step(theta, &tokens).expect("lm step");
+        out.copy_from_slice(&grad);
+        loss
+    }
+}
+
+fn mlp_rounds_per_run(n_workers: usize, rounds: usize) {
+    let spec = SynthSpec::cifar100_like();
+    let mut rng = Pcg64::seeded(0);
+    let (train, _) = synth_class::generate(&spec, &mut rng);
+    let mlp = Mlp::new(ef_sgd::experiments::lr_tuning::mlp_config(&spec));
+    let theta0 = mlp.init_params(&mut Pcg64::seeded(1));
+    let workers: Vec<Worker> = (0..n_workers)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    MlpObjective::new(mlp.clone(), train.clone(), 32),
+                    Pcg64::new(2, id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::ScaledSign,
+                64,
+                4,
+                Pcg64::new(3, id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: rounds,
+        schedule: LrSchedule::constant(0.02),
+        update_rule: UpdateRule::ApplyAggregate,
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, theta0).run();
+    std::hint::black_box(out.theta);
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        measure_time: Duration::from_secs(2),
+        warmup_time: Duration::from_millis(100),
+        samples: 5,
+    };
+    let mut b = Bench::with_config("end-to-end coordinator rounds", cfg);
+    for n in [1usize, 4, 8] {
+        let rounds = 10;
+        b.bench_elems(&format!("mlp ef-sign, {n} workers x {rounds} rounds"), rounds as u64, || {
+            mlp_rounds_per_run(n, rounds);
+        });
+    }
+
+    if let Ok(rt) = Runtime::load_default() {
+        for model in ["tiny", "small"] {
+            if rt.model(model).is_err() {
+                continue;
+            }
+            let session = Rc::new(LmSession::open(&rt, model).expect("open"));
+            let theta0 = rt.init_params(&session.model).unwrap();
+            let corpus = Rc::new(MarkovCorpus::new(session.model.vocab, 3, 0));
+            let rounds = 3usize;
+            let s2 = session.clone();
+            let c2 = corpus.clone();
+            b.bench_elems(
+                &format!("{model} transformer ef-sign, 2 workers x {rounds} rounds"),
+                rounds as u64,
+                move || {
+                    let workers: Vec<Worker> = (0..2)
+                        .map(|id| {
+                            Worker::new(
+                                id,
+                                Box::new(LmWorkerSource {
+                                    session: s2.clone(),
+                                    corpus: c2.clone(),
+                                    rng: Pcg64::new(4, id as u64),
+                                }),
+                                WorkerMode::ErrorFeedback,
+                                CompressorKind::ScaledSign,
+                                64,
+                                4,
+                                Pcg64::new(5, id as u64),
+                            )
+                        })
+                        .collect();
+                    let cfg = DriverConfig {
+                        steps: rounds,
+                        schedule: LrSchedule::constant(0.1),
+                        ..Default::default()
+                    };
+                    let out = TrainDriver::new(cfg, workers, theta0.clone()).run();
+                    std::hint::black_box(out.rounds);
+                },
+            );
+        }
+    } else {
+        println!("(artifacts missing: transformer e2e cases skipped)");
+    }
+    b.finish();
+}

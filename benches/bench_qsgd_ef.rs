@@ -1,0 +1,24 @@
+//! Regenerates the paper artifact: Remark 5 unbiased+EF (`repro exp rem5`).
+//! Full sizes with BENCH_FULL=1; quick otherwise.
+use ef_sgd::bench::Bench;
+use ef_sgd::experiments::{self, ExpContext};
+
+fn main() {
+    let ctx = ExpContext {
+        quick: std::env::var("BENCH_FULL").map_or(true, |v| v != "1"),
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let mut b = Bench::with_config(
+        "Remark 5 unbiased+EF",
+        ef_sgd::bench::BenchConfig {
+            measure_time: std::time::Duration::from_millis(1),
+            warmup_time: std::time::Duration::from_millis(0),
+            samples: 1,
+        },
+    );
+    b.bench("rem5", || {
+        experiments::run("rem5", &ctx).expect("rem5");
+    });
+    b.finish();
+}

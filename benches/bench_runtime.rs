@@ -1,0 +1,66 @@
+//! PJRT artifact execution latency: the L2/L1 dispatch costs that bound
+//! the coordinator's round rate. Skips gracefully without artifacts.
+
+use ef_sgd::bench::{black_box, Bench, BenchConfig};
+use ef_sgd::data::tokens::MarkovCorpus;
+use ef_sgd::runtime::{LmSession, Runtime};
+use ef_sgd::util::Pcg64;
+use std::time::Duration;
+
+fn main() {
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP bench_runtime: {e}");
+            return;
+        }
+    };
+    let cfg = BenchConfig {
+        measure_time: Duration::from_secs(2),
+        warmup_time: Duration::from_millis(200),
+        samples: 10,
+    };
+    let mut b = Bench::with_config("PJRT artifact dispatch", cfg);
+    for model in ["tiny", "small"] {
+        if rt.model(model).is_err() {
+            continue;
+        }
+        let session = LmSession::open(&rt, model).expect("open");
+        let d = session.d();
+        let theta = rt.init_params(&session.model).unwrap();
+        let corpus = MarkovCorpus::new(session.model.vocab, 3, 0);
+        let (bsz, s) = session.model.token_shape();
+        let mut rng = Pcg64::seeded(0);
+        let tokens = corpus.sample_batch(bsz, s, &mut rng);
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        let e = vec![0.0f32; d];
+
+        b.bench_elems(&format!("{model}: lm_step (loss+grad)"), d as u64, || {
+            black_box(session.train_step(&theta, &tokens).unwrap());
+        });
+        b.bench_elems(&format!("{model}: ef_sign kernel"), d as u64, || {
+            black_box(session.ef_sign(&g, &e, 0.1).unwrap());
+        });
+        b.bench_elems(&format!("{model}: lm_step_ef (fused)"), d as u64, || {
+            black_box(session.train_step_ef(&theta, &e, &tokens, 0.1).unwrap());
+        });
+        b.bench_elems(&format!("{model}: density kernel"), d as u64, || {
+            black_box(session.density(&g).unwrap());
+        });
+        b.bench_elems(&format!("{model}: apply_update"), d as u64, || {
+            black_box(session.apply_update(&theta, &g).unwrap());
+        });
+        // rust-native EF step for comparison (is PJRT dispatch the bottleneck?)
+        let mut ef = ef_sgd::compress::ErrorFeedback::new(
+            d,
+            Box::new(ef_sgd::compress::ScaledSign),
+        );
+        let mut out = vec![0.0f32; d];
+        let mut r2 = Pcg64::seeded(1);
+        b.bench_elems(&format!("{model}: rust-native ef step"), d as u64, || {
+            ef.step_into(0.1, black_box(&g), black_box(&mut out), &mut r2);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,43 @@
+//! Wire codec throughput: the bit-packing encode/decode on the
+//! coordinator's critical path.
+
+use ef_sgd::bench::{black_box, Bench};
+use ef_sgd::compress::wire;
+use ef_sgd::compress::{Compressor, TernGrad, TopK};
+use ef_sgd::util::Pcg64;
+
+fn main() {
+    let d = 1_000_000;
+    let mut rng = Pcg64::seeded(0);
+    let mut p = vec![0.0f32; d];
+    rng.fill_normal(&mut p, 0.0, 1.0);
+
+    let mut b = Bench::new("wire codecs (d = 1M f32)");
+    b.bench_bytes("encode_dense", 4 * d as u64, || {
+        black_box(wire::encode_dense(black_box(&p)));
+    });
+    b.bench_bytes("encode_scaled_sign", 4 * d as u64, || {
+        black_box(wire::encode_scaled_sign(black_box(&p)));
+    });
+    let enc_sign = wire::encode_scaled_sign(&p);
+    b.bench_bytes("decode_scaled_sign", 4 * d as u64, || {
+        black_box(wire::decode_scaled_sign(black_box(&enc_sign)).unwrap());
+    });
+    let mut acc = vec![0.0f32; d];
+    b.bench_bytes("decode_scaled_sign_add (PS hot path)", 4 * d as u64, || {
+        wire::decode_scaled_sign_add(black_box(&enc_sign), black_box(&mut acc)).unwrap();
+    });
+    let sparse = TopK::count(d / 64).compress_vec(&p, &mut Pcg64::seeded(1));
+    b.bench_elems("encode_sparse (k = d/64)", (d / 64) as u64, || {
+        black_box(wire::encode_sparse(black_box(&sparse)));
+    });
+    let enc_sparse = wire::encode_sparse(&sparse);
+    b.bench_elems("decode_sparse", (d / 64) as u64, || {
+        black_box(wire::decode_sparse(black_box(&enc_sparse)).unwrap());
+    });
+    let tern = TernGrad.compress_vec(&p, &mut Pcg64::seeded(2));
+    b.bench_bytes("encode_ternary", 4 * d as u64, || {
+        black_box(wire::encode_ternary(black_box(&tern)));
+    });
+    b.finish();
+}

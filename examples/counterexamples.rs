@@ -1,0 +1,20 @@
+//! Runs the paper's §3 counterexamples end to end and prints the
+//! trajectories: where SIGNSGD provably fails and error feedback fixes it.
+//!
+//! Run: `cargo run --release --example counterexamples [--quick]`
+
+use ef_sgd::experiments::{self, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    ef_sgd::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = ExpContext {
+        quick,
+        ..Default::default()
+    };
+    for id in ["ce1", "ce2", "ce3", "thm1"] {
+        experiments::run(id, &ctx)?;
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Distributed training over the simulated fabric: 8 workers train the MLP
+//! classifier under three gradient-exchange regimes and we compare loss,
+//! accuracy, and measured communication (the paper's core tradeoff).
+//!
+//! Run: `cargo run --release --example distributed_training [--quick]`
+
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use ef_sgd::coordinator::worker::{GradSource, ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::data::synth_class::{self, Dataset, SynthSpec};
+use ef_sgd::data::Sharder;
+use ef_sgd::metrics::sparkline;
+use ef_sgd::model::mlp::{Mlp, MlpObjective};
+use ef_sgd::net::MessageKind;
+use ef_sgd::util::Pcg64;
+
+/// GradSource wrapper that also evaluates test accuracy.
+struct ShardSource {
+    inner: ObjectiveSource<MlpObjective>,
+    test: Dataset,
+}
+
+impl GradSource for ShardSource {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn grad(&mut self, theta: &[f32], out: &mut [f32]) -> f64 {
+        self.inner.grad(theta, out)
+    }
+
+    fn eval_loss(&mut self, theta: &[f32]) -> f64 {
+        self.inner.obj.mlp.dataset_loss(theta, &self.test)
+    }
+
+    fn eval_acc(&mut self, theta: &[f32]) -> f64 {
+        self.inner.obj.mlp.accuracy(theta, &self.test)
+    }
+}
+
+fn main() {
+    ef_sgd::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 100 } else { 1_500 };
+    let n_workers = 8;
+
+    let spec = SynthSpec::cifar100_like();
+    let mut rng = Pcg64::seeded(7);
+    let (train, test) = synth_class::generate(&spec, &mut rng);
+    let mlp = Mlp::new(ef_sgd::experiments::lr_tuning::mlp_config(&spec));
+    let d = mlp.cfg.num_params();
+    println!(
+        "distributed run: {n_workers} workers, d={d}, {} train examples, {steps} rounds\n",
+        train.len()
+    );
+
+    let regimes: [(&str, WorkerMode, CompressorKind, UpdateRule, f64); 3] = [
+        (
+            "dense SGDM",
+            WorkerMode::DenseGrad,
+            CompressorKind::None,
+            UpdateRule::ServerMomentum { beta_millis: 900 },
+            0.02,
+        ),
+        (
+            "EF-SIGNSGD",
+            WorkerMode::ErrorFeedback,
+            CompressorKind::ScaledSign,
+            UpdateRule::ApplyAggregate,
+            0.02,
+        ),
+        (
+            "EF top-k (1/64)",
+            WorkerMode::ErrorFeedback,
+            CompressorKind::TopK,
+            UpdateRule::ApplyAggregate,
+            0.05,
+        ),
+    ];
+
+    for (name, mode, kind, rule, lr) in regimes {
+        let mut shard_rng = Pcg64::seeded(11);
+        let sharder = Sharder::new(&train, n_workers, &mut shard_rng);
+        let workers: Vec<Worker> = sharder
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Worker::new(
+                    id,
+                    Box::new(ShardSource {
+                        inner: ObjectiveSource::new(
+                            MlpObjective::new(mlp.clone(), shard.clone(), 16),
+                            Pcg64::new(3, id as u64),
+                        ),
+                        test: test.clone(),
+                    }),
+                    mode,
+                    kind,
+                    64,
+                    4,
+                    Pcg64::new(4, id as u64),
+                )
+            })
+            .collect();
+        let theta0 = mlp.init_params(&mut Pcg64::seeded(5));
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::new(lr, steps, vec![0.5, 0.75]),
+            update_rule: rule,
+            eval_every: (steps / 10).max(1),
+            ..Default::default()
+        };
+        let out = TrainDriver::new(cfg, workers, theta0).run();
+        let losses = &out.recorder.get("train_loss").unwrap().values;
+        let acc = out.recorder.last("eval_acc");
+        let push = out.traffic.bits_of_kind(MessageKind::GradPush);
+        println!(
+            "{name:<16} loss {:.3} -> {:.3}  test acc {:5.1}%  push {:>11.2} Mbit  {}",
+            losses.first().unwrap(),
+            losses.last().unwrap(),
+            100.0 * acc,
+            push as f64 / 1e6,
+            sparkline(losses, 36)
+        );
+        println!(
+            "{:16} critical-path comm {:.2} ms (simulated 10GbE)",
+            "",
+            out.traffic.critical_path_s() * 1e3
+        );
+    }
+    println!("\nshape to observe: EF variants track dense accuracy at a fraction of the bits.");
+}

@@ -1,0 +1,203 @@
+"""AOT lowering: JAX functions -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--configs tiny,small]
+
+Emits, per model config:
+  lm_step_<cfg>.hlo.txt      (theta f32[d], tokens i32[B,S+1]) -> (loss, grad)
+  lm_eval_<cfg>.hlo.txt      (theta, tokens) -> (loss,)
+  lm_step_ef_<cfg>.hlo.txt   (theta, e, tokens, gamma) -> (loss, delta, e_new)
+  ef_sign_<cfg>.hlo.txt      (g f32[d], e f32[d], gamma f32[1]) -> (delta, e_new)
+  ef_topk_<cfg>.hlo.txt      same, top-k with k = max(1, d/64)
+  density_<cfg>.hlo.txt      (v f32[d]) -> (phi,)
+  apply_update_<cfg>.hlo.txt (theta, delta) -> (theta',)
+  init_params_<cfg>.bin      raw little-endian f32 initial parameters
+plus a manifest.json the Rust artifact registry reads.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower(fn, *args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def emit(out_dir, name, text, entry):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    entry["file"] = name
+    entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+    entry["bytes"] = len(text)
+    return entry
+
+
+def arg(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_config(cfg: M.ModelConfig, out_dir: str):
+    d = M.num_params(cfg)
+    tok_shape = (cfg.batch, cfg.seq + 1)
+    k = max(1, d // 64)
+    arts = []
+
+    print(f"[aot] config {cfg.name}: d={d} tokens={tok_shape}")
+
+    theta = spec((d,))
+    vec = spec((d,))
+    gamma = spec((1,))
+    tokens = spec(tok_shape, jnp.int32)
+
+    arts.append(
+        emit(
+            out_dir,
+            f"lm_step_{cfg.name}.hlo.txt",
+            lower(partial(M.lm_step, cfg=cfg), theta, tokens),
+            {
+                "name": f"lm_step_{cfg.name}",
+                "inputs": [arg((d,)), arg(tok_shape, "i32")],
+                "outputs": [arg(()), arg((d,))],
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"lm_eval_{cfg.name}.hlo.txt",
+            lower(partial(M.lm_eval, cfg=cfg), theta, tokens),
+            {
+                "name": f"lm_eval_{cfg.name}",
+                "inputs": [arg((d,)), arg(tok_shape, "i32")],
+                "outputs": [arg(())],
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"lm_step_ef_{cfg.name}.hlo.txt",
+            lower(partial(M.lm_step_ef, cfg=cfg), theta, vec, tokens, gamma),
+            {
+                "name": f"lm_step_ef_{cfg.name}",
+                "inputs": [arg((d,)), arg((d,)), arg(tok_shape, "i32"), arg((1,))],
+                "outputs": [arg(()), arg((d,)), arg((d,))],
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"ef_sign_{cfg.name}.hlo.txt",
+            lower(M.ef_sign_artifact, vec, vec, gamma),
+            {
+                "name": f"ef_sign_{cfg.name}",
+                "inputs": [arg((d,)), arg((d,)), arg((1,))],
+                "outputs": [arg((d,)), arg((d,))],
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"ef_topk_{cfg.name}.hlo.txt",
+            lower(partial(M.ef_topk_artifact, k=k), vec, vec, gamma),
+            {
+                "name": f"ef_topk_{cfg.name}",
+                "inputs": [arg((d,)), arg((d,)), arg((1,))],
+                "outputs": [arg((d,)), arg((d,))],
+                "k": k,
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"density_{cfg.name}.hlo.txt",
+            lower(M.density_artifact, vec),
+            {
+                "name": f"density_{cfg.name}",
+                "inputs": [arg((d,))],
+                "outputs": [arg(())],
+            },
+        )
+    )
+    arts.append(
+        emit(
+            out_dir,
+            f"apply_update_{cfg.name}.hlo.txt",
+            lower(M.apply_update, theta, vec),
+            {
+                "name": f"apply_update_{cfg.name}",
+                "inputs": [arg((d,)), arg((d,))],
+                "outputs": [arg((d,))],
+            },
+        )
+    )
+
+    init = M.init_params(cfg, seed=0)
+    init_name = f"init_params_{cfg.name}.bin"
+    init.tofile(os.path.join(out_dir, init_name))
+
+    return {
+        "name": cfg.name,
+        "d": d,
+        "vocab": cfg.vocab,
+        "dim": cfg.dim,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "topk_k": k,
+        "init_params": init_name,
+        "artifacts": arts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "configs": []}
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        manifest["configs"].append(build_config(cfg, args.out))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['configs'])} configs to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (EF compression)."""
+
+from .ef_sign import ef_sign_step, ef_topk_step, density, BLOCK  # noqa: F401
+from . import ref  # noqa: F401

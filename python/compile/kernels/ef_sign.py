@@ -1,0 +1,206 @@
+"""Layer-1 Pallas kernels: the fused error-feedback scaled-sign step.
+
+This is the compression hot-spot of the paper (Algorithm 1, EF-SIGNSGD):
+
+    p     = gamma * g + e          (error correction)
+    delta = (||p||_1 / d) sign(p)  (compression)
+    e'    = p - delta              (residual update)
+
+The computation is bandwidth-bound (two passes over the gradient, no MXU
+work), so the TPU mapping is a two-stage streaming schedule over VMEM-sized
+blocks expressed with ``BlockSpec``:
+
+  stage 1  stream g,e HBM->VMEM, emit p and per-block partial L1 sums
+  (host)   scale = sum(partials) / d   -- a tiny (num_blocks,) reduction
+  stage 2  stream p HBM->VMEM, emit delta = scale*sign(p) and e' = p - delta
+
+Block size is a multiple of the 8x128 VPU lane layout. On this image the
+kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the block structure is still the one a real TPU would use.
+DESIGN.md section "Hardware adaptation" discusses the mapping; the analytic
+VMEM/bandwidth model is in EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes x 128 lanes x 8 = 8192 elements per block: 32 KiB of f32 per
+# operand, comfortably inside a 16 MiB VMEM budget for the 5 resident blocks
+# (g, e, p, delta, e').
+BLOCK = 8192
+
+
+def _stage1_kernel(gamma_ref, g_ref, e_ref, p_ref, partial_ref):
+    """p = gamma*g + e and the block's partial L1 sum."""
+    p = gamma_ref[0] * g_ref[...] + e_ref[...]
+    p_ref[...] = p
+    partial_ref[0] = jnp.sum(jnp.abs(p))
+
+
+def _stage2_kernel(scale_ref, p_ref, delta_ref, err_ref):
+    """delta = scale * sign(p), e' = p - delta."""
+    p = p_ref[...]
+    delta = scale_ref[0] * jnp.sign(p)
+    delta_ref[...] = delta
+    err_ref[...] = p - delta
+
+
+def _pad_to_block(v):
+    d = v.shape[0]
+    rem = (-d) % BLOCK
+    if rem:
+        v = jnp.concatenate([v, jnp.zeros((rem,), v.dtype)])
+    return v
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ef_sign_step(g, e, gamma, interpret=True):
+    """Fused EF scaled-sign step.
+
+    Args:
+      g: flat stochastic gradient, shape (d,), float32.
+      e: flat residual error, shape (d,), float32.
+      gamma: learning rate, shape (1,), float32.
+
+    Returns:
+      (delta, e_new): the applied update ``(||p||_1/d) sign(p)`` and the new
+      residual, both shape (d,). The exact invariant ``delta + e_new == p``
+      holds bit-for-bit (both stages compute from the same stored p).
+    """
+    d = g.shape[0]
+    gp = _pad_to_block(g)
+    ep = _pad_to_block(e)
+    dp = gp.shape[0]
+    nblk = dp // BLOCK
+
+    p, partials = pl.pallas_call(
+        _stage1_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # gamma broadcast to blocks
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gamma, gp, ep)
+
+    # Padding contributes |0| = 0, so the padded L1 sum equals the true one.
+    # Divide by the true d: the compressor scale is ||p||_1 / d.
+    scale = (jnp.sum(partials) / d).reshape(1)
+
+    delta, err = pl.pallas_call(
+        _stage2_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scale, p)
+
+    return delta[:d], err[:d]
+
+
+def _mask_kernel(thr_ref, p_ref, delta_ref, err_ref):
+    """Keep coordinates with |p| >= threshold, residual gets the rest."""
+    p = p_ref[...]
+    keep = jnp.abs(p) >= thr_ref[0]
+    delta = jnp.where(keep, p, 0.0)
+    delta_ref[...] = delta
+    err_ref[...] = p - delta
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def ef_topk_step(g, e, gamma, *, k, interpret=True):
+    """Fused EF top-k step: keep the k largest-magnitude coordinates of
+    p = gamma*g + e, residual keeps the rest.
+
+    The k-th magnitude is found with a sort at the JAX level (``lax.top_k``
+    emits a ``topk(..., largest=true)`` HLO instruction that xla_extension
+    0.5.1's text parser rejects; ``sort`` round-trips cleanly); the
+    bandwidth-heavy masking pass is the Pallas kernel. Coordinates tied with the k-th magnitude are all kept, so
+    the kept count can exceed k on ties — the Rust reference implements the
+    same threshold semantics.
+
+    Returns (delta, e_new) with delta + e_new == p exactly.
+    """
+    d = g.shape[0]
+    p_full = gamma[0] * g + e
+    thr = jnp.sort(jnp.abs(p_full))[d - k].reshape(1)
+
+    pp = _pad_to_block(p_full)
+    dp = pp.shape[0]
+    nblk = dp // BLOCK
+    delta, err = pl.pallas_call(
+        _mask_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(thr, pp)
+    return delta[:d], err[:d]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def density(v, interpret=True):
+    """phi(v) = ||v||_1^2 / (d ||v||_2^2), the paper's gradient density
+    (Lemma 8): the scaled-sign operator is a phi(v)-approximate compressor.
+
+    Computed with a single Pallas reduction pass (partial L1 and L2 sums per
+    block).
+    """
+
+    def kernel(v_ref, l1_ref, l2_ref):
+        x = v_ref[...]
+        l1_ref[0] = jnp.sum(jnp.abs(x))
+        l2_ref[0] = jnp.sum(x * x)
+
+    d = v.shape[0]
+    vp = _pad_to_block(v)
+    nblk = vp.shape[0] // BLOCK
+    l1p, l2p = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vp)
+    l1 = jnp.sum(l1p)
+    l2 = jnp.sum(l2p)
+    return jnp.where(l2 > 0, l1 * l1 / (d * l2), 1.0)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: deliberately naive, no tiling, no
+tricks. pytest checks the Pallas implementations against these with
+``assert_allclose`` across a hypothesis-driven sweep of shapes and values.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_sign_step_ref(g, e, gamma):
+    """Algorithm 1 lines 4-7, literally."""
+    p = gamma[0] * g + e
+    d = p.shape[0]
+    scale = jnp.sum(jnp.abs(p)) / d
+    delta = scale * jnp.sign(p)
+    return delta, p - delta
+
+
+def ef_topk_step_ref(g, e, gamma, k):
+    """Threshold semantics: keep every |p_i| >= (k-th largest |p|)."""
+    p = gamma[0] * g + e
+    thr = jnp.sort(jnp.abs(p))[p.shape[0] - k]
+    delta = jnp.where(jnp.abs(p) >= thr, p, 0.0)
+    return delta, p - delta
+
+
+def density_ref(v):
+    """phi(v) = ||v||_1^2 / (d ||v||_2^2); 1.0 for the zero vector."""
+    d = v.shape[0]
+    l1 = jnp.sum(jnp.abs(v))
+    l2 = jnp.sum(v * v)
+    return jnp.where(l2 > 0, l1 * l1 / (d * l2), 1.0)
+
+
+def scaled_sign(v):
+    """The paper's compressor C(v) = (||v||_1 / d) sign(v) (Lemma 8)."""
+    d = v.shape[0]
+    return (jnp.sum(jnp.abs(v)) / d) * jnp.sign(v)

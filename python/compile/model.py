@@ -1,0 +1,228 @@
+"""Layer-2: decoder-only transformer LM in JAX, over a *flat* parameter
+vector.
+
+The whole model is a function of a single ``theta: f32[d]`` so that the Rust
+coordinator sees exactly the object the paper's algorithms operate on — one
+flat gradient vector per worker, fed to the compression kernels and the
+error-feedback state. ``param_spec`` defines the layout; ``unflatten``
+carves ``theta`` into weight views inside the traced function (zero-copy
+slices under XLA).
+
+Artifacts lowered from here (see ``aot.py``):
+  lm_step   (theta, tokens) -> (loss, grad)      value_and_grad of the LM
+  lm_eval   (theta, tokens) -> loss
+  ef_sign   (g, e, gamma)   -> (delta, e_new)    calls the L1 Pallas kernel
+  lm_step_ef fused: train step + EF-sign compression in one executable
+"""
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ef_sign
+
+# --------------------------------------------------------------------------
+# Configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters; all artifact shapes derive from this."""
+
+    name: str
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    seq: int          # context length (tokens per example = seq + 1)
+    batch: int        # per-worker microbatch
+    mlp_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+# The configs shipped by `make artifacts`. "tiny" is the pytest / cargo-test
+# config; "small" is the end-to-end training run. Larger configs (e.g. the
+# 100M-parameter one in configs/transformer_100m.toml) use the same code but
+# are not AOT-compiled by default — CPU-PJRT wallclock, not code, is the
+# limit.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=64, dim=32, layers=2, heads=2, seq=32, batch=4),
+    "small": ModelConfig("small", vocab=256, dim=128, layers=4, heads=4, seq=64, batch=8),
+}
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat layout of theta."""
+    spec = [
+        ("embed", (cfg.vocab, cfg.dim)),
+        ("pos", (cfg.seq, cfg.dim)),
+    ]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.ln1.scale", (cfg.dim,)),
+            (f"l{i}.ln1.bias", (cfg.dim,)),
+            (f"l{i}.attn.wq", (cfg.dim, cfg.dim)),
+            (f"l{i}.attn.wk", (cfg.dim, cfg.dim)),
+            (f"l{i}.attn.wv", (cfg.dim, cfg.dim)),
+            (f"l{i}.attn.wo", (cfg.dim, cfg.dim)),
+            (f"l{i}.ln2.scale", (cfg.dim,)),
+            (f"l{i}.ln2.bias", (cfg.dim,)),
+            (f"l{i}.mlp.w1", (cfg.dim, cfg.mlp_mult * cfg.dim)),
+            (f"l{i}.mlp.b1", (cfg.mlp_mult * cfg.dim,)),
+            (f"l{i}.mlp.w2", (cfg.mlp_mult * cfg.dim, cfg.dim)),
+            (f"l{i}.mlp.b2", (cfg.dim,)),
+        ]
+    spec += [
+        ("lnf.scale", (cfg.dim,)),
+        ("lnf.bias", (cfg.dim,)),
+        ("head", (cfg.dim, cfg.vocab)),
+    ]
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def unflatten(theta, cfg: ModelConfig):
+    """Carve the flat theta into a dict of shaped views."""
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        params[name] = theta[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init, returned as the flat f32 vector."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        if name.endswith((".bias", ".b1", ".b2")) or name == "pos":
+            w = np.zeros(n, dtype=np.float32)
+        elif name.endswith(".scale"):
+            w = np.ones(n, dtype=np.float32)
+        elif name.endswith(".wo") or name.endswith(".w2"):
+            # residual-branch projections get the 1/sqrt(2*layers) shrink
+            std = 0.02 / math.sqrt(2.0 * cfg.layers)
+            w = rng.normal(0.0, std, n).astype(np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, n).astype(np.float32)
+        chunks.append(w)
+    return np.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, p, prefix, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    def split(v):
+        return v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (b,h,s,hd)
+
+    q = split(x @ p[f"{prefix}.wq"])
+    k = split(x @ p[f"{prefix}.wk"])
+    v = split(x @ p[f"{prefix}.wv"])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.dim)
+    return out @ p[f"{prefix}.wo"]
+
+
+def forward(theta, tokens, cfg: ModelConfig):
+    """Logits for next-token prediction. tokens: i32[batch, seq]."""
+    p = unflatten(theta, cfg)
+    x = p["embed"][tokens] + p["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.layers):
+        x = x + _attention(
+            _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"]),
+            p,
+            f"l{i}.attn",
+            cfg,
+        )
+        hmid = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        hmid = jax.nn.gelu(hmid @ p[f"l{i}.mlp.w1"] + p[f"l{i}.mlp.b1"])
+        x = x + hmid @ p[f"l{i}.mlp.w2"] + p[f"l{i}.mlp.b2"]
+    x = _layer_norm(x, p["lnf.scale"], p["lnf.bias"])
+    return x @ p["head"]
+
+
+def loss_fn(theta, tokens, cfg: ModelConfig):
+    """Mean next-token cross-entropy. tokens: i32[batch, seq+1]."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(theta, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# The functions that become artifacts
+
+
+def lm_step(theta, tokens, cfg: ModelConfig):
+    """(loss, grad) — the per-worker training step."""
+    loss, grad = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    return loss, grad
+
+
+def lm_eval(theta, tokens, cfg: ModelConfig):
+    return (loss_fn(theta, tokens, cfg),)
+
+
+def ef_sign_artifact(g, e, gamma):
+    """The L1 Pallas kernel wrapped as its own executable."""
+    return ef_sign.ef_sign_step(g, e, gamma)
+
+
+def ef_topk_artifact(g, e, gamma, k):
+    return ef_sign.ef_topk_step(g, e, gamma, k=k)
+
+
+def density_artifact(v):
+    return (ef_sign.density(v),)
+
+
+def apply_update(theta, delta):
+    return (theta - delta,)
+
+
+def lm_step_ef(theta, e, tokens, gamma, cfg: ModelConfig):
+    """Fused: train step + EF-sign compression in one executable.
+
+    Used by the single-worker fast path: one PJRT execute per step instead
+    of two, and the gradient never round-trips through host memory.
+    Returns (loss, delta, e_new).
+    """
+    loss, grad = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    delta, e_new = ef_sign.ef_sign_step(grad, e, gamma)
+    return loss, delta, e_new
+
+
+def make_example_tokens(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq + 1), dtype=np.int32)

@@ -1,0 +1,110 @@
+"""AOT path: HLO text artifacts are emitted, well-formed and self-consistent.
+
+Full numeric validation of the artifacts happens on the Rust side
+(rust/tests/runtime_integration.rs executes them via PJRT and compares with
+rust-native references); here we validate the python half of the contract.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files(manifest):
+    for cfg in manifest["configs"]:
+        for art in cfg["artifacts"]:
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), art["file"]
+            assert os.path.getsize(path) == art["bytes"]
+        assert os.path.exists(os.path.join(ART, cfg["init_params"]))
+
+
+def test_hlo_text_is_parseable_hlo(manifest):
+    for cfg in manifest["configs"]:
+        for art in cfg["artifacts"]:
+            with open(os.path.join(ART, art["file"])) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, art["file"]
+            assert "ENTRY" in head or "ENTRY" in open(os.path.join(ART, art["file"])).read()
+
+
+def test_manifest_d_matches_model(manifest):
+    for cfg in manifest["configs"]:
+        mc = M.CONFIGS[cfg["name"]]
+        assert cfg["d"] == M.num_params(mc)
+        assert cfg["vocab"] == mc.vocab
+        assert cfg["seq"] == mc.seq
+        assert cfg["batch"] == mc.batch
+
+
+def test_init_params_bin_shape_and_values(manifest):
+    for cfg in manifest["configs"]:
+        raw = np.fromfile(os.path.join(ART, cfg["init_params"]), dtype=np.float32)
+        assert raw.shape[0] == cfg["d"]
+        expected = M.init_params(M.CONFIGS[cfg["name"]], seed=0)
+        np.testing.assert_array_equal(raw, expected)
+
+
+def test_lowering_is_deterministic():
+    """Same function+shapes must produce identical HLO text (caching and
+    sha256 bookkeeping in the manifest rely on this)."""
+    cfg = M.CONFIGS["tiny"]
+    d = M.num_params(cfg)
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    ga = jax.ShapeDtypeStruct((1,), jnp.float32)
+    a = aot.lower(M.ef_sign_artifact, vec, vec, ga)
+    b = aot.lower(M.ef_sign_artifact, vec, vec, ga)
+    assert a == b
+
+
+def test_roundtrip_execute_matches_jax(manifest):
+    """Re-lower the function and compare against the emitted HLO text, then
+    check the jitted numerics against the oracle — guards lowering drift."""
+    from jax._src.lib import xla_client as xc
+
+    cfg = M.CONFIGS["tiny"]
+    d = M.num_params(cfg)
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 1, d).astype(np.float32)
+    e = rng.normal(0, 1, d).astype(np.float32)
+    ga = np.array([0.1], dtype=np.float32)
+
+    with open(os.path.join(ART, "ef_sign_tiny.hlo.txt")) as f:
+        text = f.read()
+    backend = jax.devices("cpu")[0].client
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(jax.jit(M.ef_sign_artifact).lower(
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ).compiler_ir("stablehlo")),
+        use_tuple_args=False,
+        return_tuple=True,
+    )
+    assert comp.as_hlo_text() == text
+
+    delta, enew = M.ef_sign_artifact(jnp.asarray(g), jnp.asarray(e), jnp.asarray(ga))
+    from compile.kernels import ref
+
+    dref, eref = ref.ef_sign_step_ref(jnp.asarray(g), jnp.asarray(e), jnp.asarray(ga))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(dref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(enew), np.asarray(eref), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,232 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis drives shapes/values; every property here is an invariant the
+paper's analysis relies on (Algorithm 1 semantics, Lemma 8 compression
+factor, exact residual bookkeeping).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ef_sign, ref
+
+SIZES = st.sampled_from([1, 2, 7, 128, 1000, 8192, 8193, 16384, 20000])
+
+
+def make_vec(d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, d).astype(np.float32))
+
+
+# ---------------------------------------------------------------- ef_sign
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=SIZES, seed=st.integers(0, 2**31 - 1), gamma=st.floats(1e-4, 10.0))
+def test_ef_sign_matches_ref(d, seed, gamma):
+    g = make_vec(d, seed)
+    e = make_vec(d, seed + 1)
+    ga = jnp.array([gamma], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(g, e, ga)
+    dref, eref = ref.ef_sign_step_ref(g, e, ga)
+    # f32 L1-sum accumulation order differs (tiled vs flat).
+    tol = 1e-4 * max(1.0, gamma)
+    np.testing.assert_allclose(delta, dref, rtol=1e-3, atol=tol)
+    np.testing.assert_allclose(err, eref, rtol=1e-3, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=SIZES, seed=st.integers(0, 2**31 - 1))
+def test_ef_sign_residual_identity(d, seed):
+    """delta + e' == p bit-for-bit: nothing is lost by the compressor+EF pair."""
+    g = make_vec(d, seed)
+    e = make_vec(d, seed + 7)
+    ga = jnp.array([0.3], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(g, e, ga)
+    p = ga[0] * g + e
+    np.testing.assert_allclose(np.asarray(delta) + np.asarray(err), p, rtol=0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([128, 1000, 8192, 20000]), seed=st.integers(0, 2**31 - 1))
+def test_ef_sign_is_delta_compressor(d, seed):
+    """Lemma 8: ||C(p) - p||^2 <= (1 - phi(p)) ||p||^2."""
+    g = make_vec(d, seed)
+    e = jnp.zeros_like(g)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(g, e, ga)
+    p = np.asarray(g)
+    phi = float(ref.density_ref(g))
+    lhs = float(np.sum(np.asarray(err) ** 2))
+    rhs = (1.0 - phi) * float(np.sum(p**2))
+    assert lhs <= rhs * (1.0 + 1e-4) + 1e-6
+
+
+def test_ef_sign_zero_vector():
+    d = 512
+    z = jnp.zeros((d,), jnp.float32)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(z, z, ga)
+    assert float(jnp.max(jnp.abs(delta))) == 0.0
+    assert float(jnp.max(jnp.abs(err))) == 0.0
+
+
+def test_ef_sign_constant_vector_lossless():
+    """For a constant-magnitude vector, phi = 1 and compression is exact."""
+    d = 4096
+    p = jnp.ones((d,), jnp.float32) * 0.7
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(p, jnp.zeros_like(p), ga)
+    np.testing.assert_allclose(delta, p, rtol=1e-6)
+    np.testing.assert_allclose(err, jnp.zeros_like(p), atol=1e-6)
+
+
+def test_ef_sign_scale_is_l1_over_d():
+    d = 1000
+    g = make_vec(d, 3)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, _ = ef_sign.ef_sign_step(g, jnp.zeros_like(g), ga)
+    expected = float(jnp.sum(jnp.abs(g))) / d
+    mags = np.unique(np.abs(np.asarray(delta)))
+    mags = mags[mags > 0]
+    assert mags.size >= 1
+    np.testing.assert_allclose(mags, expected, rtol=1e-5)
+
+
+@pytest.mark.parametrize("gamma", [1e-6, 1e-2, 1.0, 100.0])
+def test_ef_sign_gamma_sweep(gamma):
+    d = 8192 + 5  # non-multiple of BLOCK exercises padding
+    g = make_vec(d, 11)
+    e = make_vec(d, 12)
+    ga = jnp.array([gamma], dtype=jnp.float32)
+    delta, err = ef_sign.ef_sign_step(g, e, ga)
+    dref, eref = ref.ef_sign_step_ref(g, e, ga)
+    # f32 accumulation order differs between the tiled kernel and the flat
+    # reference; tolerance scales with the magnitude of p ~ gamma.
+    tol = 1e-4 * max(1.0, gamma)
+    np.testing.assert_allclose(delta, dref, rtol=2e-3, atol=tol)
+    np.testing.assert_allclose(err, eref, rtol=2e-3, atol=tol)
+
+
+# ---------------------------------------------------------------- top-k
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.sampled_from([16, 128, 1000, 8192, 9000]),
+    seed=st.integers(0, 2**31 - 1),
+    kfrac=st.sampled_from([1, 4, 16, 64]),
+)
+def test_topk_matches_ref(d, seed, kfrac):
+    k = max(1, d // kfrac)
+    g = make_vec(d, seed)
+    e = make_vec(d, seed + 5)
+    ga = jnp.array([0.5], dtype=jnp.float32)
+    delta, err = ef_sign.ef_topk_step(g, e, ga, k=k)
+    dref, eref = ref.ef_topk_step_ref(g, e, ga, k)
+    np.testing.assert_allclose(delta, dref, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(err, eref, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([64, 1000, 8192]), seed=st.integers(0, 2**31 - 1))
+def test_topk_keeps_at_least_k(d, seed):
+    k = max(1, d // 8)
+    g = make_vec(d, seed)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, _ = ef_sign.ef_topk_step(g, jnp.zeros_like(g), ga, k=k)
+    nz = int(jnp.sum(delta != 0))
+    assert nz >= k  # ties can push it above k; gaussian values make == k a.s.
+    assert nz <= d
+
+
+def test_topk_k_equals_d_is_identity():
+    d = 700
+    g = make_vec(d, 21)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    delta, err = ef_sign.ef_topk_step(g, jnp.zeros_like(g), ga, k=d)
+    np.testing.assert_allclose(delta, g, rtol=1e-6)
+    np.testing.assert_allclose(err, jnp.zeros_like(g), atol=1e-7)
+
+
+def test_topk_contraction_bound():
+    """top-k is a (k/d)-approximate compressor (Stich et al. Lemma A.1)."""
+    d, k = 2048, 32
+    g = make_vec(d, 33)
+    ga = jnp.array([1.0], dtype=jnp.float32)
+    _, err = ef_sign.ef_topk_step(g, jnp.zeros_like(g), ga, k=k)
+    lhs = float(jnp.sum(err**2))
+    rhs = (1.0 - k / d) * float(jnp.sum(g**2))
+    assert lhs <= rhs * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------- density
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=SIZES, seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_density_matches_ref(d, seed, scale):
+    v = make_vec(d, seed, scale)
+    phi = float(ef_sign.density(v))
+    phir = float(ref.density_ref(v))
+    np.testing.assert_allclose(phi, phir, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.sampled_from([2, 64, 1000, 8192]), seed=st.integers(0, 2**31 - 1))
+def test_density_in_unit_interval(d, seed):
+    v = make_vec(d, seed)
+    phi = float(ef_sign.density(v))
+    assert 0.0 < phi <= 1.0 + 1e-6
+
+
+def test_density_extremes():
+    d = 1024
+    one_hot = jnp.zeros((d,), jnp.float32).at[3].set(5.0)
+    np.testing.assert_allclose(float(ef_sign.density(one_hot)), 1.0 / d, rtol=1e-5)
+    const = jnp.full((d,), -2.5, jnp.float32)
+    np.testing.assert_allclose(float(ef_sign.density(const)), 1.0, rtol=1e-6)
+    zero = jnp.zeros((d,), jnp.float32)
+    assert float(ef_sign.density(zero)) == 1.0
+
+
+# ------------------------------------------------- multi-step EF dynamics
+
+
+def test_ef_iteration_tracks_sgd_sum():
+    """The proof-sketch identity x_t - e_t == x_0 - sum_i gamma*g_i:
+    the error-corrected EF iterate equals the SGD trajectory exactly."""
+    d = 4096
+    rng = np.random.default_rng(123)
+    x = jnp.zeros((d,), jnp.float32)
+    e = jnp.zeros((d,), jnp.float32)
+    ga = jnp.array([0.05], dtype=jnp.float32)
+    acc = np.zeros(d, dtype=np.float64)
+    for t in range(20):
+        g = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+        acc += 0.05 * np.asarray(g, dtype=np.float64)
+        delta, e = ef_sign.ef_sign_step(g, e, ga)
+        x = x - delta
+    np.testing.assert_allclose(
+        np.asarray(x, dtype=np.float64) - np.asarray(e, dtype=np.float64),
+        -acc,
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+def test_ef_error_norm_stays_bounded():
+    """Lemma 3 qualitatively: ||e_t|| does not blow up over many steps."""
+    d = 8192
+    rng = np.random.default_rng(7)
+    e = jnp.zeros((d,), jnp.float32)
+    ga = jnp.array([0.1], dtype=jnp.float32)
+    norms = []
+    for t in range(60):
+        g = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+        _, e = ef_sign.ef_sign_step(g, e, ga)
+        norms.append(float(jnp.linalg.norm(e)))
+    assert max(norms[30:]) < 10.0 * np.median(norms[30:])

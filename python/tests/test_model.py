@@ -1,0 +1,119 @@
+"""L2 model correctness: shapes, gradients, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return jnp.asarray(M.init_params(CFG, seed=0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jnp.asarray(M.make_example_tokens(CFG, seed=1))
+
+
+def test_param_spec_consistent():
+    d = M.num_params(CFG)
+    assert d == sum(int(np.prod(s)) for _, s in M.param_spec(CFG))
+    theta = M.init_params(CFG, seed=0)
+    assert theta.shape == (d,)
+    assert theta.dtype == np.float32
+
+
+def test_unflatten_roundtrip(theta):
+    params = M.unflatten(theta, CFG)
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == M.num_params(CFG)
+    # layout order: concatenating back reproduces theta
+    flat = jnp.concatenate([params[n].reshape(-1) for n, _ in M.param_spec(CFG)])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(theta))
+
+
+def test_forward_shape(theta, tokens):
+    logits = M.forward(theta, tokens[:, :-1], CFG)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_near_uniform_at_init(theta, tokens):
+    """With 0.02-scale init the model is near-uniform: loss ~ log(vocab)."""
+    loss = float(M.loss_fn(theta, tokens, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_grad_shape_and_finite(theta, tokens):
+    loss, grad = M.lm_step(theta, tokens, CFG)
+    assert grad.shape == theta.shape
+    assert bool(jnp.all(jnp.isfinite(grad)))
+    assert float(jnp.linalg.norm(grad)) > 0
+
+
+def test_grad_matches_finite_differences(theta, tokens):
+    """Spot-check autodiff against central differences on a few coords."""
+    _, grad = M.lm_step(theta, tokens, CFG)
+    rng = np.random.default_rng(0)
+    idxs = rng.integers(0, theta.shape[0], 5)
+    eps = 1e-2
+    for i in idxs:
+        tp = theta.at[i].add(eps)
+        tm = theta.at[i].add(-eps)
+        fd = (float(M.loss_fn(tp, tokens, CFG)) - float(M.loss_fn(tm, tokens, CFG))) / (
+            2 * eps
+        )
+        assert abs(fd - float(grad[i])) < 5e-3 + 0.2 * abs(fd), (
+            f"coord {i}: fd={fd} ad={float(grad[i])}"
+        )
+
+
+def test_causality(theta):
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, CFG.vocab, (1, CFG.seq), dtype=np.int32)
+    a = M.forward(jnp.asarray(theta), jnp.asarray(toks), CFG)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % CFG.vocab
+    b = M.forward(jnp.asarray(theta), jnp.asarray(toks2), CFG)
+    np.testing.assert_allclose(
+        np.asarray(a[0, : CFG.seq - 1]), np.asarray(b[0, : CFG.seq - 1]), atol=1e-5
+    )
+
+
+def test_sgd_steps_reduce_loss(theta, tokens):
+    """A few full-batch GD steps on one batch must reduce the loss."""
+    t = theta
+    first = float(M.loss_fn(t, tokens, CFG))
+    step = jax.jit(lambda th: M.lm_step(th, tokens, CFG))
+    for _ in range(5):
+        loss, grad = step(t)
+        t = t - 0.5 * grad
+    last = float(M.loss_fn(t, tokens, CFG))
+    assert last < first - 0.05, f"{first} -> {last}"
+
+
+def test_lm_step_ef_consistent_with_parts(theta, tokens):
+    """The fused artifact == train step followed by the EF kernel."""
+    e = jnp.asarray(np.random.default_rng(3).normal(0, 0.01, theta.shape[0]).astype(np.float32))
+    ga = jnp.array([0.1], dtype=jnp.float32)
+    loss_f, delta_f, enew_f = M.lm_step_ef(theta, e, tokens, ga, CFG)
+    loss_p, grad = M.lm_step(theta, tokens, CFG)
+    from compile.kernels import ef_sign
+    delta_p, enew_p = ef_sign.ef_sign_step(grad, e, ga)
+    np.testing.assert_allclose(float(loss_f), float(loss_p), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(delta_f), np.asarray(delta_p), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(enew_f), np.asarray(enew_p), rtol=1e-5, atol=1e-7)
+
+
+def test_init_is_deterministic():
+    a = M.init_params(CFG, seed=0)
+    b = M.init_params(CFG, seed=0)
+    np.testing.assert_array_equal(a, b)
+    c = M.init_params(CFG, seed=1)
+    assert not np.array_equal(a, c)

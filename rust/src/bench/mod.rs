@@ -1,0 +1,229 @@
+//! A criterion-style micro/macro benchmark harness.
+//!
+//! criterion is unavailable offline; this harness provides what the paper's
+//! benches need: warmup, adaptive iteration counts targeting a measurement
+//! budget, mean/std/median/min over samples, throughput reporting
+//! (elements/sec and bytes/sec), and a `--quick` mode for CI. Benches are
+//! `harness = false` binaries that build a [`Bench`] and call
+//! [`Bench::finish`].
+
+use crate::util::stats;
+use crate::util::timer::{fmt_duration, fmt_rate, Timer};
+use std::time::Duration;
+
+/// One benchmark group's settings.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Target wall-clock per measurement phase.
+    pub measure_time: Duration,
+    /// Target wall-clock for warmup.
+    pub warmup_time: Duration,
+    /// Number of samples (each sample = `iters` runs).
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if quick_mode() {
+            BenchConfig {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                samples: 10,
+            }
+        } else {
+            BenchConfig {
+                measure_time: Duration::from_secs(2),
+                warmup_time: Duration::from_millis(300),
+                samples: 20,
+            }
+        }
+    }
+}
+
+/// `--quick` flag or `BENCH_QUICK=1`: short measurement windows.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick" || a == "--test")
+        || std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+/// Result of a single benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub std: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub iters_per_sample: u64,
+    /// Optional element count per iteration for throughput reporting.
+    pub elements: Option<u64>,
+    pub bytes: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn elements_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn bytes_per_sec(&self) -> Option<f64> {
+        self.bytes.map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+}
+
+/// A named group of benchmark cases, printed as a table on `finish`.
+pub struct Bench {
+    group: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let cfg = BenchConfig::default();
+        println!("\n== bench group: {group} ==");
+        Bench {
+            group: group.to_string(),
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Self {
+        println!("\n== bench group: {group} ==");
+        Bench {
+            group: group.to_string(),
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_meta(name, None, None, &mut f)
+    }
+
+    /// Benchmark with an element count (per iteration) for throughput.
+    pub fn bench_elems(&mut self, name: &str, elements: u64, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_meta(name, Some(elements), None, &mut f)
+    }
+
+    /// Benchmark with a byte count (per iteration) for bandwidth.
+    pub fn bench_bytes(&mut self, name: &str, bytes: u64, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_meta(name, None, Some(bytes), &mut f)
+    }
+
+    fn bench_with_meta(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup + calibrate iterations per sample.
+        let mut iters: u64 = 1;
+        let warmup = Timer::start();
+        let mut one_iter = f64::INFINITY;
+        loop {
+            let t = Timer::start();
+            for _ in 0..iters {
+                f();
+            }
+            let per = t.elapsed_secs() / iters as f64;
+            one_iter = one_iter.min(per.max(1e-9));
+            if warmup.elapsed() >= self.cfg.warmup_time {
+                break;
+            }
+            iters = (iters * 2).min(1 << 24);
+        }
+        let per_sample = self.cfg.measure_time.as_secs_f64() / self.cfg.samples as f64;
+        let iters = ((per_sample / one_iter).ceil() as u64).clamp(1, 1 << 26);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t = Timer::start();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+
+        let mean = stats::mean(&samples_ns);
+        let result = BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_nanos(mean as u64),
+            std: Duration::from_nanos(stats::std(&samples_ns) as u64),
+            median: Duration::from_nanos(stats::median(&samples_ns) as u64),
+            min: Duration::from_nanos(
+                samples_ns.iter().cloned().fold(f64::INFINITY, f64::min) as u64,
+            ),
+            iters_per_sample: iters,
+            elements,
+            bytes,
+        };
+        let mut line = format!(
+            "  {:<42} mean {:>10}  median {:>10}  min {:>10}  (±{})",
+            result.name,
+            fmt_duration(result.mean),
+            fmt_duration(result.median),
+            fmt_duration(result.min),
+            fmt_duration(result.std),
+        );
+        if let Some(eps) = result.elements_per_sec() {
+            line.push_str(&format!("  {}", fmt_rate(eps)));
+        }
+        if let Some(bps) = result.bytes_per_sec() {
+            line.push_str(&format!(
+                "  {}/s",
+                crate::util::timer::fmt_bytes(bps)
+            ));
+        }
+        println!("{line}");
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a closing line. Returns the collected results for programmatic
+    /// comparison (used by the regression checks in benches).
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("== end group: {} ({} cases) ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            samples: 3,
+        };
+        let mut b = Bench::with_config("test", cfg);
+        let mut acc = 0u64;
+        let r = b.bench_elems("noop-ish", 100, || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.elements_per_sec().unwrap() > 0.0);
+        let results = b.finish();
+        assert_eq!(results.len(), 1);
+    }
+
+    #[test]
+    fn quick_mode_env() {
+        // Just exercise the path; value depends on environment.
+        let _ = quick_mode();
+    }
+}

@@ -1,0 +1,157 @@
+//! Command-line parsing for the `repro` binary.
+//!
+//! clap is unavailable offline; this is a small positional+flag parser with
+//! subcommands, `--key value` / `--key=value` options, and generated help.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, and options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    let (k, v) = rest.split_at(eq);
+                    out.options
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v[1..].to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                    && takes_value(rest)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.entry(rest.to_string()).or_default().push(v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opt_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Option<f64> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Options that take a following value (everything else with no `=` is a
+/// boolean flag). Kept as an explicit list so `repro exp fig3 --quick` works.
+fn takes_value(key: &str) -> bool {
+    matches!(
+        key,
+        "config"
+            | "set"
+            | "out"
+            | "model"
+            | "workers"
+            | "steps"
+            | "lr"
+            | "seed"
+            | "seeds"
+            | "compressor"
+            | "batch"
+            | "artifacts"
+            | "k-frac"
+            | "levels"
+            | "repeats"
+            | "filter"
+    )
+}
+
+pub const USAGE: &str = "\
+repro — Error Feedback Fixes SignSGD (ICML 2019) reproduction
+
+USAGE:
+    repro <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    train        Run distributed training via the PJRT runtime
+                 (--config configs/<f>.toml, --set k=v overrides, --quick)
+    exp <id>     Run a paper experiment: ce1 ce2 ce3 thm1 fig2 fig3 fig4
+                 fig5 fig7 table2 rem5 comm lemma3 all
+                 (--quick for reduced sizes, --out results/ for CSV/JSON)
+    artifacts    Print the artifact manifest summary
+    list         List available experiments
+    help         Show this help
+
+COMMON OPTIONS:
+    --quick              Reduced problem sizes (CI)
+    --out <dir>          Write CSV/JSON results (default: results/)
+    --seed <n>           Base RNG seed
+    --artifacts <dir>    Artifact directory (default: artifacts)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("exp fig3 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn options_with_equals_and_space() {
+        let a = parse("train --config=configs/a.toml --workers 8 --set training.lr=0.1");
+        assert_eq!(a.opt("config"), Some("configs/a.toml"));
+        assert_eq!(a.opt_usize("workers"), Some(8));
+        assert_eq!(a.opt_all("set"), &["training.lr=0.1".to_string()]);
+    }
+
+    #[test]
+    fn repeated_set() {
+        let a = parse("train --set a=1 --set b=2");
+        assert_eq!(a.opt_all("set").len(), 2);
+    }
+
+    #[test]
+    fn unknown_dashed_is_flag() {
+        let a = parse("bench --verbose next");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["next"]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Coordinate-wise majority vote over sign vectors: the multi-worker
+//! aggregation of signSGD-with-majority-vote (Bernstein et al. 2019). The
+//! paper's counterexamples extend to this setting; we implement it as the
+//! multi-worker sign baseline.
+
+/// Majority vote of sign vectors: out_i = sign(Σ_w sign(g_w_i)).
+/// Ties (possible for even worker counts) resolve to 0.
+pub fn majority_vote(signs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!signs.is_empty());
+    let d = signs[0].len();
+    assert!(signs.iter().all(|s| s.len() == d));
+    let mut out = vec![0.0f32; d];
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut tally = 0i64;
+        for s in signs {
+            let v = s[i];
+            tally += if v > 0.0 {
+                1
+            } else if v < 0.0 {
+                -1
+            } else {
+                0
+            };
+        }
+        *o = if tally > 0 {
+            1.0
+        } else if tally < 0 {
+            -1.0
+        } else {
+            0.0
+        };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{self, Pair, UsizeRange};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn basic_vote() {
+        let signs = vec![
+            vec![1.0, -1.0, 1.0],
+            vec![1.0, 1.0, -1.0],
+            vec![-1.0, -1.0, -1.0],
+        ];
+        assert_eq!(majority_vote(&signs), vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn even_tie_is_zero() {
+        let signs = vec![vec![1.0], vec![-1.0]];
+        assert_eq!(majority_vote(&signs), vec![0.0]);
+    }
+
+    #[test]
+    fn prop_vote_equals_sign_of_sign_sum() {
+        propcheck::check(&Pair(UsizeRange(1, 9), UsizeRange(1, 40)), |&(n, d)| {
+            let mut rng = Pcg64::seeded((n * 31 + d) as u64);
+            let signs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.sign() as f32).collect())
+                .collect();
+            let vote = majority_vote(&signs);
+            (0..d).all(|i| {
+                let sum: f32 = signs.iter().map(|s| s[i]).sum();
+                let expect = if sum > 0.0 {
+                    1.0
+                } else if sum < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                vote[i] == expect
+            })
+        });
+    }
+
+    #[test]
+    fn single_worker_identity_on_signs() {
+        let signs = vec![vec![1.0, -1.0, 0.0]];
+        assert_eq!(majority_vote(&signs), vec![1.0, -1.0, 0.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Collectives over the simulated fabric.
+//!
+//! * [`ps`]: parameter-server push/aggregate/broadcast — the topology the
+//!   paper's experiments use (compressed gradient push, dense broadcast).
+//! * [`ring`]: ring all-reduce (reduce-scatter + all-gather) of dense
+//!   vectors — the uncompressed baseline collective.
+//! * [`majority`]: coordinate-wise majority vote over sign vectors
+//!   (Bernstein et al. 2019's multi-worker SIGNSGD aggregation).
+//!
+//! All routes go through [`crate::net::Fabric::send`], so traffic and
+//! simulated time are accounted exactly.
+
+pub mod majority;
+pub mod ps;
+pub mod ring;
+
+pub use majority::majority_vote;
+pub use ps::ParameterServer;
+pub use ring::{ring_allgather, ring_allreduce};

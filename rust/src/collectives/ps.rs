@@ -1,0 +1,162 @@
+//! Parameter-server collective: compressed gradient push from workers to
+//! the leader, aggregation at the leader, dense (or compressed) broadcast
+//! back. This is the communication pattern of the paper's experiments and
+//! of 1-bit SGD (Seide et al. 2014).
+
+use crate::compress::wire::{self, Encoded, Format};
+use crate::net::{Fabric, Message, MessageKind, Payload};
+
+/// The leader endpoint of a parameter-server round.
+pub struct ParameterServer {
+    /// Node id of the leader on the fabric (convention: last node).
+    pub leader: usize,
+    pub workers: Vec<usize>,
+}
+
+impl ParameterServer {
+    /// Leader = node n−1, workers = 0..n−1.
+    pub fn new(fabric: &Fabric) -> Self {
+        let n = fabric.nodes();
+        assert!(n >= 2, "need at least 1 worker + leader");
+        ParameterServer {
+            leader: n - 1,
+            workers: (0..n - 1).collect(),
+        }
+    }
+
+    /// Worker side: push an encoded gradient to the leader.
+    pub fn push_grad(&self, fabric: &Fabric, worker: usize, round: u64, encoded: Encoded) {
+        fabric.send(Message {
+            src: worker,
+            dst: self.leader,
+            round,
+            kind: MessageKind::GradPush,
+            payload: Payload::Grad(encoded),
+        });
+    }
+
+    /// Leader side: collect one pushed gradient per worker for `round`,
+    /// decode, and return the *mean* as a dense vector.
+    /// Panics if a worker's message is missing (the scheduler guarantees
+    /// all pushes happen before the gather in the simulated loop).
+    pub fn gather_mean(&self, fabric: &Fabric, round: u64, d: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; d];
+        let msgs = fabric.recv_all(self.leader);
+        let mut got = 0usize;
+        for msg in msgs {
+            assert_eq!(msg.round, round, "stale message in PS gather");
+            if let Payload::Grad(e) = msg.payload {
+                match e.format {
+                    Format::SignScaled => {
+                        wire::decode_scaled_sign_add(&e, &mut acc).expect("decode")
+                    }
+                    Format::DenseF32 => {
+                        let v = wire::decode_dense(&e).expect("decode");
+                        crate::tensor::add_assign(&mut acc, &v);
+                    }
+                    Format::SparseIdxVal => {
+                        let v = wire::decode_sparse(&e).expect("decode");
+                        crate::tensor::add_assign(&mut acc, &v);
+                    }
+                    Format::Ternary => {
+                        let v = wire::decode_ternary(&e).expect("decode");
+                        crate::tensor::add_assign(&mut acc, &v);
+                    }
+                }
+                got += 1;
+            }
+        }
+        assert_eq!(got, self.workers.len(), "missing worker gradients");
+        crate::tensor::scale(1.0 / got as f32, &mut acc);
+        acc
+    }
+
+    /// Leader side: broadcast the parameter vector (dense) to all workers.
+    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) {
+        for &w in &self.workers {
+            fabric.send(Message {
+                src: self.leader,
+                dst: w,
+                round,
+                kind: MessageKind::ParamBroadcast,
+                payload: Payload::Params(params.to_vec()),
+            });
+        }
+    }
+
+    /// Worker side: receive the broadcast parameters.
+    pub fn recv_params(&self, fabric: &Fabric, worker: usize) -> Option<Vec<f32>> {
+        while let Some(msg) = fabric.recv(worker) {
+            if let Payload::Params(p) = msg.payload {
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::wire::{encode_dense, encode_scaled_sign, encode_sparse};
+    use crate::net::LinkModel;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn gather_mean_dense() {
+        let fabric = Fabric::new(3, LinkModel::default()); // 2 workers + leader
+        let ps = ParameterServer::new(&fabric);
+        ps.push_grad(&fabric, 0, 0, encode_dense(&[1.0, 2.0]));
+        ps.push_grad(&fabric, 1, 0, encode_dense(&[3.0, -2.0]));
+        let mean = ps.gather_mean(&fabric, 0, 2);
+        assert_eq!(mean, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_mean_mixed_formats() {
+        let fabric = Fabric::new(3, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        let p = [4.0f32, -2.0, 1.0, 1.0]; // scale 2.0
+        ps.push_grad(&fabric, 0, 0, encode_scaled_sign(&p));
+        ps.push_grad(&fabric, 1, 0, encode_sparse(&[0.0, 0.0, 5.0, 0.0]));
+        let mean = ps.gather_mean(&fabric, 0, 4);
+        assert_eq!(mean, vec![1.0, -1.0, 3.5, 1.0]);
+    }
+
+    #[test]
+    fn broadcast_roundtrip() {
+        let fabric = Fabric::new(4, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        let params = vec![1.0f32, -1.0, 0.5];
+        ps.broadcast_params(&fabric, 7, &params);
+        for w in 0..3 {
+            assert_eq!(ps.recv_params(&fabric, w).unwrap(), params);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "missing worker gradients")]
+    fn gather_detects_missing_worker() {
+        let fabric = Fabric::new(3, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        ps.push_grad(&fabric, 0, 0, encode_dense(&[1.0]));
+        let _ = ps.gather_mean(&fabric, 0, 1);
+    }
+
+    #[test]
+    fn traffic_accounting_separates_directions() {
+        let d = 1024;
+        let mut rng = Pcg64::seeded(0);
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        let fabric = Fabric::new(2, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        ps.push_grad(&fabric, 0, 0, encode_scaled_sign(&g));
+        let _ = ps.gather_mean(&fabric, 0, d);
+        ps.broadcast_params(&fabric, 0, &g);
+        let stats = fabric.stats();
+        use crate::net::MessageKind::*;
+        // push = d+32 bits (+frame), broadcast = 32d (+frame)
+        assert!(stats.bits_of_kind(GradPush) < stats.bits_of_kind(ParamBroadcast) / 20);
+    }
+}

@@ -1,0 +1,230 @@
+//! Ring all-reduce (reduce-scatter followed by all-gather), the
+//! bandwidth-optimal dense collective — the uncompressed baseline the
+//! paper's compression schemes are measured against.
+//!
+//! Each of the `n` workers holds a dense vector; after the call every
+//! worker holds the element-wise sum. 2(n−1) message rounds, each moving
+//! d/n values: total traffic 2·(n−1)/n·d·32 bits per worker.
+
+use crate::net::{Fabric, Message, MessageKind, Payload};
+
+/// Chunk boundaries: chunk c covers [offsets[c], offsets[c+1]).
+fn chunk_offsets(d: usize, n: usize) -> Vec<usize> {
+    let base = d / n;
+    let rem = d % n;
+    let mut offs = vec![0usize];
+    for c in 0..n {
+        let len = base + usize::from(c < rem);
+        offs.push(offs[c] + len);
+    }
+    offs
+}
+
+/// In-place ring all-reduce over `buffers` (one per worker), routing every
+/// transfer through the fabric for accounting. After return, every buffer
+/// contains the element-wise sum of the inputs.
+pub fn ring_allreduce(fabric: &Fabric, buffers: &mut [Vec<f32>], round: u64) {
+    let n = buffers.len();
+    assert!(n >= 1);
+    assert_eq!(fabric.nodes(), n, "fabric size mismatch");
+    if n == 1 {
+        return;
+    }
+    let d = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == d), "ragged buffers");
+    let offs = chunk_offsets(d, n);
+
+    // Reduce-scatter: after step s, worker w owns the partial sum of chunk
+    // (w - s - 1) mod n over workers {w-s-1, ..., w}.
+    for s in 0..n - 1 {
+        for w in 0..n {
+            let dst = (w + 1) % n;
+            let c = (w + n - s) % n;
+            let chunk = buffers[w][offs[c]..offs[c + 1]].to_vec();
+            fabric.send(Message {
+                src: w,
+                dst,
+                round,
+                kind: MessageKind::GradPush,
+                payload: Payload::Params(chunk),
+            });
+        }
+        for dst in 0..n {
+            let msg = fabric.recv(dst).expect("ring message missing");
+            let c = (dst + n - s - 1) % n;
+            if let Payload::Params(chunk) = msg.payload {
+                for (acc, v) in buffers[dst][offs[c]..offs[c + 1]].iter_mut().zip(&chunk) {
+                    *acc += v;
+                }
+            }
+        }
+    }
+
+    // All-gather: circulate the fully reduced chunks.
+    for s in 0..n - 1 {
+        for w in 0..n {
+            let dst = (w + 1) % n;
+            let c = (w + 1 + n - s) % n;
+            let chunk = buffers[w][offs[c]..offs[c + 1]].to_vec();
+            fabric.send(Message {
+                src: w,
+                dst,
+                round,
+                kind: MessageKind::GradPush,
+                payload: Payload::Params(chunk),
+            });
+        }
+        for dst in 0..n {
+            let msg = fabric.recv(dst).expect("ring message missing");
+            let c = (dst + n - s) % n;
+            if let Payload::Params(chunk) = msg.payload {
+                buffers[dst][offs[c]..offs[c + 1]].copy_from_slice(&chunk);
+            }
+        }
+    }
+}
+
+/// Ring all-gather: each worker contributes its vector; afterwards every
+/// worker holds the concatenation (by worker index).
+pub fn ring_allgather(fabric: &Fabric, inputs: &[Vec<f32>], round: u64) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    assert_eq!(fabric.nodes(), n);
+    let mut gathered: Vec<Vec<Vec<f32>>> = (0..n)
+        .map(|w| {
+            let mut v = vec![Vec::new(); n];
+            v[w] = inputs[w].clone();
+            v
+        })
+        .collect();
+    for s in 0..n.saturating_sub(1) {
+        for w in 0..n {
+            let dst = (w + 1) % n;
+            let c = (w + n - s) % n;
+            fabric.send(Message {
+                src: w,
+                dst,
+                round,
+                kind: MessageKind::GradPush,
+                payload: Payload::Params(gathered[w][c].clone()),
+            });
+        }
+        for dst in 0..n {
+            let msg = fabric.recv(dst).expect("allgather message missing");
+            let c = (dst + n - s - 1) % n;
+            if let Payload::Params(chunk) = msg.payload {
+                gathered[dst][c] = chunk;
+            }
+        }
+    }
+    gathered
+        .into_iter()
+        .map(|chunks| chunks.into_iter().flatten().collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+    use crate::propcheck::{self, Pair, UsizeRange};
+    use crate::util::Pcg64;
+
+    fn serial_sum(buffers: &[Vec<f32>]) -> Vec<f32> {
+        let d = buffers[0].len();
+        let mut out = vec![0.0f32; d];
+        for b in buffers {
+            for (o, v) in out.iter_mut().zip(b) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn allreduce_matches_serial_sum() {
+        let n = 4;
+        let d = 37; // not divisible by n
+        let mut rng = Pcg64::seeded(0);
+        let mut buffers: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let expect = serial_sum(&buffers);
+        let fabric = Fabric::new(n, LinkModel::default());
+        ring_allreduce(&fabric, &mut buffers, 0);
+        for b in &buffers {
+            for (x, e) in b.iter().zip(&expect) {
+                assert!((x - e).abs() < 1e-4, "{x} vs {e}");
+            }
+        }
+        assert_eq!(fabric.in_flight(), 0);
+    }
+
+    #[test]
+    fn prop_allreduce_any_n_d() {
+        propcheck::check_with(
+            &propcheck::Config {
+                cases: 25,
+                ..Default::default()
+            },
+            &Pair(UsizeRange(1, 8), UsizeRange(1, 64)),
+            |&(n, d)| {
+                let mut rng = Pcg64::seeded((n * 1000 + d) as u64);
+                let mut buffers: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; d];
+                        rng.fill_normal(&mut v, 0.0, 1.0);
+                        v
+                    })
+                    .collect();
+                let expect = serial_sum(&buffers);
+                let fabric = Fabric::new(n, LinkModel::default());
+                ring_allreduce(&fabric, &mut buffers, 0);
+                buffers
+                    .iter()
+                    .all(|b| b.iter().zip(&expect).all(|(x, e)| (x - e).abs() < 1e-3))
+            },
+        );
+    }
+
+    #[test]
+    fn allreduce_traffic_is_bandwidth_optimal() {
+        // Each worker sends 2*(n-1)/n*d values (+ framing).
+        let n = 4;
+        let d = 1000;
+        let mut buffers: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; d]).collect();
+        let fabric = Fabric::new(n, LinkModel::default());
+        ring_allreduce(&fabric, &mut buffers, 0);
+        let stats = fabric.stats();
+        let per_worker_payload = stats.sent_by(0) as f64
+            - 2.0 * (n - 1) as f64 * crate::net::message::FRAME_OVERHEAD_BITS as f64;
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64 * d as f64 * 32.0;
+        assert!(
+            (per_worker_payload - expect).abs() / expect < 0.01,
+            "{per_worker_payload} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn allgather_concatenates() {
+        let n = 3;
+        let inputs: Vec<Vec<f32>> = (0..n).map(|w| vec![w as f32; 2]).collect();
+        let fabric = Fabric::new(n, LinkModel::default());
+        let out = ring_allgather(&fabric, &inputs, 0);
+        for g in &out {
+            assert_eq!(g, &vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let fabric = Fabric::new(1, LinkModel::default());
+        let mut buffers = vec![vec![1.0f32, 2.0]];
+        ring_allreduce(&fabric, &mut buffers, 0);
+        assert_eq!(buffers[0], vec![1.0, 2.0]);
+        assert_eq!(fabric.stats().total_bits, 0);
+    }
+}

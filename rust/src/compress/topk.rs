@@ -1,0 +1,182 @@
+//! Top-k sparsification: keep the k largest-magnitude coordinates.
+//!
+//! A (k/d)-approximate compressor (Stich et al. 2018, Lemma A.1); with k=1
+//! and error feedback this is the greedy coordinate method of the paper's
+//! Remark 7. At most k coordinates are kept (threshold ties resolve by
+//! index); the Pallas kernel keeps all ties — identical on generic
+//! (tie-free) inputs, which the runtime integration test checks.
+
+use super::Compressor;
+use crate::util::Pcg64;
+
+/// Keep the k largest-|v| coordinates, zero the rest.
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    pub fn count(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The k-th largest magnitude of `p` (the keep-threshold), via
+    /// O(d) selection.
+    pub fn threshold(&self, p: &[f32]) -> f32 {
+        let k = self.k.min(p.len());
+        if k == 0 || p.is_empty() {
+            return f32::INFINITY;
+        }
+        let mut mags: Vec<f32> = p.iter().map(|v| v.abs()).collect();
+        let idx = k - 1;
+        mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        mags[idx]
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&self, p: &[f32], out: &mut [f32], _rng: &mut Pcg64) {
+        if self.k >= p.len() {
+            out.copy_from_slice(p);
+            return;
+        }
+        let thr = self.threshold(p);
+        // Keep strictly-above-threshold coordinates, then fill up to k with
+        // threshold ties (first-index order). Without the cap a
+        // constant-magnitude vector would tie on EVERY coordinate and the
+        // "sparse" message would be dense — a real wire-size hazard.
+        let mut budget = self.k;
+        for (o, v) in out.iter_mut().zip(p) {
+            if v.abs() > thr && budget > 0 {
+                *o = *v;
+                budget -= 1;
+            } else {
+                *o = 0.0;
+            }
+        }
+        if budget > 0 && thr > 0.0 {
+            for (o, v) in out.iter_mut().zip(p) {
+                if *o == 0.0 && v.abs() == thr {
+                    *o = *v;
+                    budget -= 1;
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn wire_bits(&self, d: usize) -> u64 {
+        // (index, value) pairs + a 32-bit count header.
+        let k = self.k.min(d) as u64;
+        k * (32 + 32) + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure_delta;
+    use crate::propcheck::{self, Pair, UsizeRange, VecF32};
+    use crate::tensor;
+
+    #[test]
+    fn keeps_largest() {
+        let p = [1.0, -5.0, 3.0, 0.5];
+        let mut rng = Pcg64::seeded(0);
+        let out = TopK::count(2).compress_vec(&p, &mut rng);
+        assert_eq!(out, vec![0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn k_ge_d_is_identity() {
+        let p = [1.0, 2.0, 3.0];
+        let mut rng = Pcg64::seeded(0);
+        assert_eq!(TopK::count(10).compress_vec(&p, &mut rng), p.to_vec());
+    }
+
+    #[test]
+    fn ties_capped_at_k() {
+        let p = [2.0, -2.0, 2.0, 1.0];
+        let mut rng = Pcg64::seeded(0);
+        let out = TopK::count(2).compress_vec(&p, &mut rng);
+        // threshold is 2.0; only the first two tied coords are kept
+        assert_eq!(out, vec![2.0, -2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn constant_vector_keeps_exactly_k() {
+        // The wire-size hazard: a constant-magnitude vector ties everywhere.
+        let p = vec![0.5f32; 1000];
+        let mut rng = Pcg64::seeded(0);
+        let out = TopK::count(10).compress_vec(&p, &mut rng);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 10);
+    }
+
+    #[test]
+    fn prop_contraction_at_least_k_over_d() {
+        // ||C(v) - v||^2 <= (1 - k/d) ||v||^2
+        propcheck::check(
+            &Pair(UsizeRange(1, 16), VecF32::new(16, 300)),
+            |(k, p)| {
+                let c = TopK::count(*k);
+                let mut rng = Pcg64::seeded(1);
+                let delta = measure_delta(&c, p, &mut rng);
+                delta >= *k as f64 / p.len() as f64 - 1e-6
+            },
+        );
+    }
+
+    #[test]
+    fn prop_kept_coordinates_unchanged() {
+        propcheck::check(&VecF32::new(8, 200), |p| {
+            let c = TopK::count(p.len() / 4 + 1);
+            let mut rng = Pcg64::seeded(2);
+            let out = c.compress_vec(p, &mut rng);
+            out.iter().zip(p).all(|(o, v)| *o == 0.0 || *o == *v)
+        });
+    }
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let p = vec![0.0f32; 32];
+        let mut rng = Pcg64::seeded(3);
+        let out = TopK::count(4).compress_vec(&p, &mut rng);
+        assert!(out.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn top1_is_greedy_coordinate() {
+        let p = [0.1, -0.9, 0.3];
+        let mut rng = Pcg64::seeded(4);
+        let out = TopK::count(1).compress_vec(&p, &mut rng);
+        assert_eq!(out, vec![0.0, -0.9, 0.0]);
+        // 1/d-approximate (Remark 7)
+        let delta = measure_delta(&TopK::count(1), &p, &mut rng);
+        assert!(delta >= 1.0 / 3.0 - 1e-7);
+    }
+
+    #[test]
+    fn residual_energy_decreases_with_k() {
+        let mut rng = Pcg64::seeded(5);
+        let mut p = vec![0.0f32; 256];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let mut prev = f64::NEG_INFINITY;
+        for k in [1usize, 4, 16, 64, 256] {
+            let d = measure_delta(&TopK::count(k), &p, &mut rng);
+            assert!(d >= prev - 1e-9, "k={k}");
+            prev = d;
+        }
+        assert!((prev - 1.0).abs() < 1e-9); // k=d exact
+        let _ = tensor::norm2_sq(&p);
+    }
+}

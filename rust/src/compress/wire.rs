@@ -1,0 +1,511 @@
+//! Wire codecs: the exact bit-level encodings the workers put on the
+//! simulated network. This is where the paper's communication claim is
+//! grounded — the ~64× compression versus 32-bit floats (sign bit per
+//! coordinate in each direction + one 32-bit scale per tensor) is measured
+//! on these encoders by `repro exp comm`, not asserted.
+
+use std::io::Write as _;
+
+/// Bit-level writer (LSB-first within each byte).
+#[derive(Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Number of valid bits in the buffer.
+    bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_bit(&mut self, bit: bool) {
+        let idx = (self.bits / 8) as usize;
+        if idx == self.bytes.len() {
+            self.bytes.push(0);
+        }
+        if bit {
+            self.bytes[idx] |= 1 << (self.bits % 8);
+        }
+        self.bits += 1;
+    }
+
+    /// Push the low `n` bits of `value`, LSB first.
+    /// Fast path: when the cursor is byte-aligned and n is a whole number
+    /// of bytes, append bytes directly (the codecs below keep their fields
+    /// byte-aligned so this is the common case).
+    pub fn push_bits(&mut self, value: u32, n: u32) {
+        if self.bits % 8 == 0 && n % 8 == 0 {
+            for i in 0..(n / 8) {
+                self.bytes.push((value >> (8 * i)) as u8);
+            }
+            self.bits += n as u64;
+            return;
+        }
+        for i in 0..n {
+            self.push_bit((value >> i) & 1 == 1);
+        }
+    }
+
+    /// Append a whole byte (cursor must be byte-aligned).
+    #[inline]
+    pub fn push_byte_aligned(&mut self, byte: u8) {
+        debug_assert_eq!(self.bits % 8, 0);
+        self.bytes.push(byte);
+        self.bits += 8;
+    }
+
+    pub fn push_f32(&mut self, v: f32) {
+        self.push_bits(v.to_bits(), 32);
+    }
+
+    pub fn push_u32(&mut self, v: u32) {
+        self.push_bits(v, 32);
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        self.bits
+    }
+
+    pub fn into_bytes(self) -> (Vec<u8>, u64) {
+        (self.bytes, self.bits)
+    }
+}
+
+/// Bit-level reader matching [`BitWriter`].
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        let idx = (self.pos / 8) as usize;
+        if idx >= self.bytes.len() {
+            return None;
+        }
+        let bit = (self.bytes[idx] >> (self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    pub fn read_bits(&mut self, n: u32) -> Option<u32> {
+        // fast path: byte-aligned whole-byte reads (the codecs keep their
+        // multi-bit fields byte-aligned)
+        if self.pos % 8 == 0 && n % 8 == 0 {
+            let start = (self.pos / 8) as usize;
+            let nbytes = (n / 8) as usize;
+            if start + nbytes > self.bytes.len() {
+                return None;
+            }
+            let mut v = 0u32;
+            for (i, b) in self.bytes[start..start + nbytes].iter().enumerate() {
+                v |= (*b as u32) << (8 * i);
+            }
+            self.pos += n as u64;
+            return Some(v);
+        }
+        let mut v = 0u32;
+        for i in 0..n {
+            if self.read_bit()? {
+                v |= 1 << i;
+            }
+        }
+        Some(v)
+    }
+
+    pub fn read_f32(&mut self) -> Option<f32> {
+        self.read_bits(32).map(f32::from_bits)
+    }
+
+    pub fn read_u32(&mut self) -> Option<u32> {
+        self.read_bits(32)
+    }
+}
+
+/// An encoded gradient payload with exact size accounting.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub bytes: Vec<u8>,
+    /// Exact payload size in bits (may be less than bytes.len()*8).
+    pub bits: u64,
+    pub format: Format,
+    /// Original vector length.
+    pub d: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    DenseF32,
+    SignScaled,
+    SparseIdxVal,
+    Ternary,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("payload truncated")]
+    Truncated,
+    #[error("format mismatch: expected {0:?}, got {1:?}")]
+    Format(Format, Format),
+}
+
+// ------------------------------------------------------------- dense f32
+
+/// Baseline encoding: 32 bits per coordinate.
+pub fn encode_dense(v: &[f32]) -> Encoded {
+    let mut bytes = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        bytes.write_all(&x.to_le_bytes()).unwrap();
+    }
+    Encoded {
+        bits: 32 * v.len() as u64,
+        bytes,
+        format: Format::DenseF32,
+        d: v.len(),
+    }
+}
+
+pub fn decode_dense(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    if e.format != Format::DenseF32 {
+        return Err(WireError::Format(Format::DenseF32, e.format));
+    }
+    if e.bytes.len() < e.d * 4 {
+        return Err(WireError::Truncated);
+    }
+    Ok((0..e.d)
+        .map(|i| f32::from_le_bytes(e.bytes[i * 4..i * 4 + 4].try_into().unwrap()))
+        .collect())
+}
+
+// --------------------------------------------------------- scaled sign
+
+/// The paper's wire format: one 32-bit scale (‖p‖₁/d) + d packed sign bits.
+/// Exact zeros (measure-zero after error correction) encode as +.
+/// `d + 32` bits total — the `Σ_i (d_i + 32)` accounting of §6.1.
+pub fn encode_scaled_sign(p: &[f32]) -> Encoded {
+    let scale = super::ScaledSign::scale(p);
+    // Byte-wise sign packing (hot path): the scale occupies exactly 4
+    // bytes, so sign bits start byte-aligned and pack 8 at a time,
+    // branch-free via the IEEE sign bit.
+    let d = p.len();
+    let mut bytes = Vec::with_capacity(4 + d.div_ceil(8));
+    bytes.extend_from_slice(&scale.to_bits().to_le_bytes());
+    let mut chunks = p.chunks_exact(8);
+    for c in &mut chunks {
+        let mut byte = 0u8;
+        for (j, x) in c.iter().enumerate() {
+            // bit = 1 for x >= 0 (and for -0.0, matching `*x >= 0.0`)
+            byte |= u8::from(*x >= 0.0) << j;
+        }
+        bytes.push(byte);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut byte = 0u8;
+        for (j, x) in rem.iter().enumerate() {
+            byte |= u8::from(*x >= 0.0) << j;
+        }
+        bytes.push(byte);
+    }
+    Encoded {
+        bytes,
+        bits: 32 + d as u64,
+        format: Format::SignScaled,
+        d,
+    }
+}
+
+/// Parse header + validate size for the scaled-sign format.
+fn sign_payload(e: &Encoded) -> Result<(f32, &[u8]), WireError> {
+    if e.format != Format::SignScaled {
+        return Err(WireError::Format(Format::SignScaled, e.format));
+    }
+    if e.bytes.len() < 4 + e.d.div_ceil(8) {
+        return Err(WireError::Truncated);
+    }
+    let scale = f32::from_bits(u32::from_le_bytes(e.bytes[..4].try_into().unwrap()));
+    Ok((scale, &e.bytes[4..]))
+}
+
+/// Decode to the dense update vector `scale * sign` (byte-wise unpack into
+/// a preallocated buffer; branch-free lane fill).
+pub fn decode_scaled_sign(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    let (scale, body) = sign_payload(e)?;
+    let mut out = vec![0.0f32; e.d];
+    let mut chunks = out.chunks_exact_mut(8);
+    let mut bi = 0usize;
+    for c in &mut chunks {
+        let byte = body[bi];
+        bi += 1;
+        for (j, o) in c.iter_mut().enumerate() {
+            *o = if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let byte = body[bi];
+        for (j, o) in rem.iter_mut().enumerate() {
+            *o = if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+    Ok(out)
+}
+
+/// Decode straight into a sum accumulator (the parameter-server hot path:
+/// no intermediate dense vector).
+pub fn decode_scaled_sign_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    let (scale, body) = sign_payload(e)?;
+    if acc.len() != e.d {
+        return Err(WireError::Truncated);
+    }
+    let mut chunks = acc.chunks_exact_mut(8);
+    let mut bi = 0usize;
+    for c in &mut chunks {
+        let byte = body[bi];
+        bi += 1;
+        for (j, a) in c.iter_mut().enumerate() {
+            *a += if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let byte = body[bi];
+        for (j, a) in rem.iter_mut().enumerate() {
+            *a += if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- sparse
+
+/// Sparse (top-k / random-k) encoding: u32 count + (u32 index, f32 value)
+/// per non-zero.
+pub fn encode_sparse(v: &[f32]) -> Encoded {
+    let mut w = BitWriter::new();
+    let nz: Vec<(u32, f32)> = v
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| **x != 0.0)
+        .map(|(i, x)| (i as u32, *x))
+        .collect();
+    w.push_u32(nz.len() as u32);
+    for (i, x) in &nz {
+        w.push_u32(*i);
+        w.push_f32(*x);
+    }
+    let (bytes, bits) = w.into_bytes();
+    Encoded {
+        bytes,
+        bits,
+        format: Format::SparseIdxVal,
+        d: v.len(),
+    }
+}
+
+pub fn decode_sparse(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    if e.format != Format::SparseIdxVal {
+        return Err(WireError::Format(Format::SparseIdxVal, e.format));
+    }
+    let mut r = BitReader::new(&e.bytes);
+    let count = r.read_u32().ok_or(WireError::Truncated)? as usize;
+    let mut out = vec![0.0f32; e.d];
+    for _ in 0..count {
+        let i = r.read_u32().ok_or(WireError::Truncated)? as usize;
+        let x = r.read_f32().ok_or(WireError::Truncated)?;
+        if i >= e.d {
+            return Err(WireError::Truncated);
+        }
+        out[i] = x;
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------- ternary
+
+/// TernGrad encoding: one 32-bit scale + 2 bits/coordinate
+/// (00 = 0, 01 = +m, 10 = −m).
+pub fn encode_ternary(v: &[f32]) -> Encoded {
+    let m = crate::tensor::norm_inf(v) as f32;
+    let mut w = BitWriter::new();
+    w.push_f32(m);
+    for x in v {
+        let code: u32 = if *x == 0.0 {
+            0
+        } else if *x > 0.0 {
+            1
+        } else {
+            2
+        };
+        w.push_bits(code, 2);
+    }
+    let (bytes, bits) = w.into_bytes();
+    Encoded {
+        bytes,
+        bits,
+        format: Format::Ternary,
+        d: v.len(),
+    }
+}
+
+pub fn decode_ternary(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    if e.format != Format::Ternary {
+        return Err(WireError::Format(Format::Ternary, e.format));
+    }
+    let mut r = BitReader::new(&e.bytes);
+    let m = r.read_f32().ok_or(WireError::Truncated)?;
+    let mut out = Vec::with_capacity(e.d);
+    for _ in 0..e.d {
+        let code = r.read_bits(2).ok_or(WireError::Truncated)?;
+        out.push(match code {
+            0 => 0.0,
+            1 => m,
+            _ => -m,
+        });
+    }
+    Ok(out)
+}
+
+/// Decode any payload format to a dense vector.
+pub fn decode_any(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    match e.format {
+        Format::DenseF32 => decode_dense(e),
+        Format::SignScaled => decode_scaled_sign(e),
+        Format::SparseIdxVal => decode_sparse(e),
+        Format::Ternary => decode_ternary(e),
+    }
+}
+
+/// Compression ratio of an encoding vs dense f32.
+pub fn compression_ratio(e: &Encoded) -> f64 {
+    (32.0 * e.d as f64) / e.bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, ScaledSign, TernGrad, TopK};
+    use crate::propcheck::{self, VecF32};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn bitio_roundtrip() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1011, 4);
+        w.push_f32(-1.5);
+        w.push_u32(12345);
+        w.push_bit(true);
+        let (bytes, bits) = w.into_bytes();
+        assert_eq!(bits, 4 + 32 + 32 + 1);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(4), Some(0b1011));
+        assert_eq!(r.read_f32(), Some(-1.5));
+        assert_eq!(r.read_u32(), Some(12345));
+        assert_eq!(r.read_bit(), Some(true));
+    }
+
+    #[test]
+    fn prop_dense_roundtrip() {
+        propcheck::check(&VecF32::new(0, 200), |v| {
+            decode_dense(&encode_dense(v)).unwrap() == *v
+        });
+    }
+
+    #[test]
+    fn prop_scaled_sign_wire_matches_compressor() {
+        // decode(encode(p)) equals ScaledSign::compress(p) on zero-free
+        // vectors (gaussian => zero-free a.s.).
+        propcheck::check(&VecF32::new(1, 300), |p| {
+            if p.iter().any(|x| *x == 0.0) {
+                return true;
+            }
+            let e = encode_scaled_sign(p);
+            assert_eq!(e.bits, p.len() as u64 + 32);
+            let dec = decode_scaled_sign(&e).unwrap();
+            let mut rng = Pcg64::seeded(0);
+            let direct = ScaledSign.compress_vec(p, &mut rng);
+            dec.iter().zip(&direct).all(|(a, b)| a == b)
+        });
+    }
+
+    #[test]
+    fn scaled_sign_zero_encodes_positive() {
+        let p = [0.0f32, -1.0, 1.0];
+        let dec = decode_scaled_sign(&encode_scaled_sign(&p)).unwrap();
+        let scale = 2.0 / 3.0;
+        assert!((dec[0] - scale).abs() < 1e-6); // documented zero behaviour
+        assert!((dec[1] + scale).abs() < 1e-6);
+        assert!((dec[2] - scale).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_add_accumulates() {
+        let p = [1.0f32, -2.0, 3.0, -4.0];
+        let e = encode_scaled_sign(&p);
+        let mut acc = vec![10.0f32; 4];
+        decode_scaled_sign_add(&e, &mut acc).unwrap();
+        let dec = decode_scaled_sign(&e).unwrap();
+        for i in 0..4 {
+            assert!((acc[i] - (10.0 + dec[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_sparse_roundtrip_topk() {
+        propcheck::check(&VecF32::new(4, 300), |p| {
+            let mut rng = Pcg64::seeded(1);
+            let delta = TopK::count((p.len() / 4).max(1)).compress_vec(p, &mut rng);
+            let e = encode_sparse(&delta);
+            decode_sparse(&e).unwrap() == delta
+        });
+    }
+
+    #[test]
+    fn prop_ternary_roundtrip() {
+        propcheck::check(&VecF32::new(1, 200), |p| {
+            let mut rng = Pcg64::seeded(2);
+            let t = TernGrad.compress_vec(p, &mut rng);
+            let e = encode_ternary(&t);
+            assert_eq!(e.bits, 2 * p.len() as u64 + 32);
+            let dec = decode_ternary(&e).unwrap();
+            dec.iter().zip(&t).all(|(a, b)| (a - b).abs() < 1e-6)
+        });
+    }
+
+    #[test]
+    fn compression_ratios() {
+        let d = 100_000;
+        let mut rng = Pcg64::seeded(3);
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let sign = encode_scaled_sign(&p);
+        let ratio = compression_ratio(&sign);
+        // d*32 / (d + 32) -> just under 32x for a single tensor
+        assert!(ratio > 31.9 && ratio < 32.0, "ratio={ratio}");
+        let dense = encode_dense(&p);
+        assert!((compression_ratio(&dense) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn format_mismatch_rejected() {
+        let p = [1.0f32, 2.0];
+        let e = encode_dense(&p);
+        assert!(matches!(
+            decode_scaled_sign(&e),
+            Err(WireError::Format(..))
+        ));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let p = [1.0f32; 64];
+        let mut e = encode_scaled_sign(&p);
+        e.bytes.truncate(4);
+        assert!(matches!(decode_scaled_sign(&e), Err(WireError::Truncated)));
+    }
+}

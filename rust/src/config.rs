@@ -1,0 +1,425 @@
+//! Run configuration: a TOML-subset parser and the typed configs.
+//!
+//! The `toml` crate is unavailable offline; this parser covers the subset
+//! used by `configs/*.toml`: `[section]` and `[section.sub]` headers,
+//! `key = value` with string/int/float/bool/array values, `#` comments.
+//! Values are flattened into a dotted-key map (`training.batch_size`), which
+//! the typed config structs read with defaults.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("config parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing required key '{0}'")]
+    Missing(String),
+    #[error("key '{0}' has wrong type (expected {1})")]
+    Type(String, &'static str),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("unknown value '{1}' for '{0}'")]
+    BadValue(String, String),
+}
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat dotted-key config map.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl ConfigMap {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::Parse(lineno + 1, "unterminated section".into()));
+                }
+                prefix = line[1..line.len() - 1].trim().to_string();
+                if prefix.is_empty() {
+                    return Err(ConfigError::Parse(lineno + 1, "empty section".into()));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, "expected key = value".into()))?;
+            let key = line[..eq].trim();
+            let vtext = line[eq + 1..].trim();
+            if key.is_empty() || vtext.is_empty() {
+                return Err(ConfigError::Parse(lineno + 1, "empty key or value".into()));
+            }
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            let value = parse_value(vtext)
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, format!("bad value: {vtext}")))?;
+            map.insert(full, value);
+        }
+        Ok(ConfigMap { values: map })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Merge `other` over `self` (other wins). Used for CLI overrides.
+    pub fn merge(&mut self, other: ConfigMap) {
+        self.values.extend(other.values);
+    }
+
+    /// Set a single dotted key from a `key=value` string (CLI `--set`).
+    pub fn set_kv(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let eq = kv
+            .find('=')
+            .ok_or_else(|| ConfigError::Parse(0, format!("--set expects key=value, got {kv}")))?;
+        let key = kv[..eq].trim().to_string();
+        let value = parse_value(kv[eq + 1..].trim())
+            .ok_or_else(|| ConfigError::Parse(0, format!("bad value in {kv}")))?;
+        self.values.insert(key, value);
+        Ok(())
+    }
+
+    // ---- typed getters with defaults ------------------------------------
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_i64())
+            .map(|v| v as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<String, ConfigError> {
+        self.values
+            .get(key)
+            .ok_or_else(|| ConfigError::Missing(key.into()))?
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or(ConfigError::Type(key.into(), "string"))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Option<Value> {
+    if text.starts_with('"') && text.ends_with('"') && text.len() >= 2 {
+        return Some(Value::Str(text[1..text.len() - 1].to_string()));
+    }
+    if text == "true" {
+        return Some(Value::Bool(true));
+    }
+    if text == "false" {
+        return Some(Value::Bool(false));
+    }
+    if text.starts_with('[') && text.ends_with(']') {
+        let inner = &text[1..text.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Some(Value::Arr(items));
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+// --------------------------------------------------------------------------
+// Typed run configs
+
+/// Which compressor the coordinator applies to worker gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorKind {
+    /// No compression (plain SGD path).
+    None,
+    /// Unscaled sign (1 bit/coord, the divergent baseline).
+    Sign,
+    /// (||p||_1/d) sign(p) — the paper's scaled sign (Lemma 8).
+    ScaledSign,
+    /// Top-k by magnitude.
+    TopK,
+    /// Random-k sparsification.
+    RandomK,
+    /// QSGD stochastic quantization (unbiased).
+    Qsgd,
+    /// TernGrad {-1, 0, +1} (unbiased).
+    TernGrad,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" | "identity" => CompressorKind::None,
+            "sign" => CompressorKind::Sign,
+            "scaled_sign" | "scaled-sign" => CompressorKind::ScaledSign,
+            "topk" | "top-k" => CompressorKind::TopK,
+            "randomk" | "random-k" => CompressorKind::RandomK,
+            "qsgd" => CompressorKind::Qsgd,
+            "terngrad" => CompressorKind::TernGrad,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::None => "none",
+            CompressorKind::Sign => "sign",
+            CompressorKind::ScaledSign => "scaled_sign",
+            CompressorKind::TopK => "topk",
+            CompressorKind::RandomK => "randomk",
+            CompressorKind::Qsgd => "qsgd",
+            CompressorKind::TernGrad => "terngrad",
+        }
+    }
+}
+
+/// Training-run configuration (the distributed driver and the e2e example).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model config name in the artifact manifest ("tiny", "small").
+    pub model: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub compressor: CompressorKind,
+    pub error_feedback: bool,
+    /// top-k / random-k keep fraction denominator (keep d/k_frac coords).
+    pub k_frac: usize,
+    /// QSGD quantization levels.
+    pub qsgd_levels: u32,
+    pub seed: u64,
+    /// Aggregation: "mean" or "majority_vote".
+    pub aggregation: String,
+    /// LR decay: divide by 10 at these step fractions (paper: 0.5, 0.75).
+    pub lr_decay_at: Vec<f64>,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tiny".into(),
+            workers: 1,
+            steps: 100,
+            lr: 0.1,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            compressor: CompressorKind::ScaledSign,
+            error_feedback: true,
+            k_frac: 64,
+            qsgd_levels: 4,
+            seed: 0,
+            aggregation: "mean".into(),
+            lr_decay_at: vec![0.5, 0.75],
+            eval_every: 0,
+            log_every: 10,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_map(m: &ConfigMap) -> Result<Self, ConfigError> {
+        let d = TrainConfig::default();
+        let comp_name = m.str_or("training.compressor", d.compressor.name());
+        let compressor = CompressorKind::parse(&comp_name)
+            .ok_or_else(|| ConfigError::BadValue("training.compressor".into(), comp_name))?;
+        let lr_decay_at = match m.values.get("training.lr_decay_at") {
+            Some(Value::Arr(items)) => items.iter().filter_map(|v| v.as_f64()).collect(),
+            _ => d.lr_decay_at.clone(),
+        };
+        Ok(TrainConfig {
+            model: m.str_or("model.name", &d.model),
+            workers: m.usize_or("training.workers", d.workers),
+            steps: m.usize_or("training.steps", d.steps),
+            lr: m.f64_or("training.lr", d.lr),
+            momentum: m.f64_or("training.momentum", d.momentum),
+            weight_decay: m.f64_or("training.weight_decay", d.weight_decay),
+            compressor,
+            error_feedback: m.bool_or("training.error_feedback", d.error_feedback),
+            k_frac: m.usize_or("training.k_frac", d.k_frac),
+            qsgd_levels: m.usize_or("training.qsgd_levels", d.qsgd_levels as usize) as u32,
+            seed: m.usize_or("training.seed", d.seed as usize) as u64,
+            aggregation: m.str_or("training.aggregation", &d.aggregation),
+            lr_decay_at,
+            eval_every: m.usize_or("training.eval_every", d.eval_every),
+            log_every: m.usize_or("training.log_every", d.log_every),
+            artifacts_dir: m.str_or("paths.artifacts", &d.artifacts_dir),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a run config
+[model]
+name = "small"   # which artifact config
+
+[training]
+workers = 4
+steps = 300
+lr = 0.056
+compressor = "scaled_sign"
+error_feedback = true
+lr_decay_at = [0.5, 0.75]
+
+[paths]
+artifacts = "artifacts"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(m.str_or("model.name", "x"), "small");
+        assert_eq!(m.usize_or("training.workers", 0), 4);
+        assert!((m.f64_or("training.lr", 0.0) - 0.056).abs() < 1e-12);
+        assert!(m.bool_or("training.error_feedback", false));
+    }
+
+    #[test]
+    fn typed_config() {
+        let m = ConfigMap::parse(SAMPLE).unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(tc.model, "small");
+        assert_eq!(tc.workers, 4);
+        assert_eq!(tc.compressor, CompressorKind::ScaledSign);
+        assert_eq!(tc.lr_decay_at, vec![0.5, 0.75]);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let m = ConfigMap::parse("a = \"x # not a comment\" # comment\n").unwrap();
+        assert_eq!(m.str_or("a", ""), "x # not a comment");
+    }
+
+    #[test]
+    fn set_kv_overrides() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        m.set_kv("training.workers=8").unwrap();
+        m.set_kv("training.compressor=\"topk\"").unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(tc.workers, 8);
+        assert_eq!(tc.compressor, CompressorKind::TopK);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(ConfigMap::parse("[unterminated\n").is_err());
+        assert!(ConfigMap::parse("novalue =\n").is_err());
+        assert!(ConfigMap::parse("bad value\n").is_err());
+    }
+
+    #[test]
+    fn compressor_kind_roundtrip() {
+        for k in [
+            CompressorKind::None,
+            CompressorKind::Sign,
+            CompressorKind::ScaledSign,
+            CompressorKind::TopK,
+            CompressorKind::RandomK,
+            CompressorKind::Qsgd,
+            CompressorKind::TernGrad,
+        ] {
+            assert_eq!(CompressorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(CompressorKind::parse("bogus"), None);
+    }
+}

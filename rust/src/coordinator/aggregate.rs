@@ -1,0 +1,90 @@
+//! Leader-side aggregation rules.
+
+use crate::collectives::majority_vote;
+
+/// How the leader combines per-worker updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// Element-wise mean of the decoded deltas — the EF-SGD rule (each
+    /// worker's residual absorbs its own compression error).
+    Mean,
+    /// Coordinate-wise majority vote of signs, scaled by the mean of the
+    /// senders' scales (the multi-worker SIGNSGD of Bernstein et al. 2019).
+    MajorityVote,
+}
+
+impl Aggregation {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mean" => Some(Aggregation::Mean),
+            "majority_vote" | "majority" => Some(Aggregation::MajorityVote),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregation::Mean => "mean",
+            Aggregation::MajorityVote => "majority_vote",
+        }
+    }
+
+    /// Combine decoded dense updates (one per worker).
+    pub fn combine(&self, updates: &[Vec<f32>]) -> Vec<f32> {
+        assert!(!updates.is_empty());
+        let d = updates[0].len();
+        match self {
+            Aggregation::Mean => {
+                let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+                let mut out = vec![0.0f32; d];
+                crate::tensor::mean_of(&refs, &mut out);
+                out
+            }
+            Aggregation::MajorityVote => {
+                // vote over signs; magnitude = mean per-worker L1 scale
+                let vote = majority_vote(updates);
+                let mean_scale: f64 = updates
+                    .iter()
+                    .map(|u| crate::tensor::norm1(u) / d as f64)
+                    .sum::<f64>()
+                    / updates.len() as f64;
+                vote.iter().map(|s| *s * mean_scale as f32).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_combine() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, -2.0];
+        assert_eq!(Aggregation::Mean.combine(&[a, b]), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn majority_combine_votes_and_scales() {
+        let updates = vec![
+            vec![1.0f32, -1.0, 1.0],  // scale 1
+            vec![3.0f32, 3.0, -3.0],  // scale 3
+            vec![2.0f32, -2.0, -2.0], // scale 2
+        ];
+        let out = Aggregation::MajorityVote.combine(&updates);
+        // votes: +,-,- ; mean scale = 2
+        assert_eq!(out, vec![2.0, -2.0, -2.0]);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Aggregation::parse("mean"), Some(Aggregation::Mean));
+        assert_eq!(
+            Aggregation::parse("majority_vote"),
+            Some(Aggregation::MajorityVote)
+        );
+        assert_eq!(Aggregation::parse("x"), None);
+        assert_eq!(Aggregation::MajorityVote.name(), "majority_vote");
+    }
+}

@@ -1,0 +1,423 @@
+//! The training driver: the leader's event loop gluing workers, fabric,
+//! aggregation, LR schedule, checkpointing and metrics.
+
+use super::aggregate::Aggregation;
+use super::round::{LrSchedule, RoundClock};
+use super::state::{CheckpointStore, Snapshot};
+use super::worker::Worker;
+use crate::collectives::ParameterServer;
+use crate::compress::wire;
+use crate::metrics::Recorder;
+use crate::net::{Fabric, LinkModel, Payload, TrafficStats};
+
+/// How the leader turns the aggregate into a parameter update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateRule {
+    /// x ← x − agg (workers already applied γ inside their EF step).
+    ApplyAggregate,
+    /// x ← x − γ·agg (workers sent γ-free vectors: sign votes, raw grads
+    /// for plain SGD).
+    ScaleByLr,
+    /// Server-side momentum on the mean raw gradient (the SGDM baseline):
+    /// m ← g + βm; x ← x − γm.
+    ServerMomentum { beta_millis: u32 },
+}
+
+/// Everything the driver needs besides the workers.
+pub struct DriverConfig {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub aggregation: Aggregation,
+    pub update_rule: UpdateRule,
+    pub weight_decay: f32,
+    pub link: LinkModel,
+    pub log_every: usize,
+    pub eval_every: usize,
+    /// Save a checkpoint every N rounds (0 = never).
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            steps: 100,
+            schedule: LrSchedule::constant(0.1),
+            aggregation: Aggregation::Mean,
+            update_rule: UpdateRule::ApplyAggregate,
+            weight_decay: 0.0,
+            link: LinkModel::default(),
+            log_every: 0,
+            eval_every: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub theta: Vec<f32>,
+    pub recorder: Recorder,
+    pub traffic: TrafficStats,
+    pub rounds: u64,
+}
+
+/// The coordinator driver.
+pub struct TrainDriver {
+    cfg: DriverConfig,
+    workers: Vec<Worker>,
+    theta: Vec<f32>,
+    fabric: Fabric,
+    ps: ParameterServer,
+    clock: RoundClock,
+    momentum: Vec<f32>,
+    wd_buf: Vec<f32>,
+}
+
+impl TrainDriver {
+    pub fn new(cfg: DriverConfig, workers: Vec<Worker>, theta0: Vec<f32>) -> Self {
+        assert!(!workers.is_empty());
+        let d = workers[0].dim();
+        assert!(workers.iter().all(|w| w.dim() == d));
+        assert_eq!(theta0.len(), d);
+        let fabric = Fabric::new(workers.len() + 1, cfg.link);
+        let ps = ParameterServer::new(&fabric);
+        TrainDriver {
+            momentum: vec![0.0; d],
+            wd_buf: vec![0.0; d],
+            cfg,
+            workers,
+            theta: theta0,
+            fabric,
+            ps,
+            clock: RoundClock::default(),
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    /// Resume from a checkpoint: restores theta and per-worker residuals.
+    pub fn restore(&mut self, snap: &Snapshot) {
+        assert_eq!(snap.theta.len(), self.theta.len());
+        assert_eq!(snap.worker_errors.len(), self.workers.len());
+        self.theta.copy_from_slice(&snap.theta);
+        for (w, e) in self.workers.iter_mut().zip(&snap.worker_errors) {
+            let mut bytes = Vec::with_capacity(8 + e.len() * 4);
+            bytes.extend_from_slice(&snap.round.to_le_bytes());
+            for v in e {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            w.ef_state_mut().load_state(&bytes).expect("restore EF");
+        }
+        while self.clock.current() < snap.round {
+            self.clock.advance();
+        }
+    }
+
+    fn checkpoint(&self) {
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return;
+        };
+        let store = CheckpointStore::new(dir).expect("checkpoint dir");
+        let snap = Snapshot {
+            round: self.clock.current(),
+            theta: self.theta.clone(),
+            worker_errors: self
+                .workers
+                .iter()
+                .map(|w| w.ef_state().error().to_vec())
+                .collect(),
+        };
+        store.save(&snap).expect("checkpoint save");
+    }
+
+    /// One synchronous round. Returns the mean worker training loss.
+    pub fn round(&mut self, recorder: &mut Recorder) -> f64 {
+        let step = self.clock.current();
+        let lr = self.cfg.schedule.lr(step as usize) as f32;
+        let d = self.theta.len();
+
+        // 1. broadcast parameters (accounted) — workers drain their queues.
+        self.ps.broadcast_params(&self.fabric, step, &self.theta);
+        for w in 0..self.workers.len() {
+            let _ = self.ps.recv_params(&self.fabric, w);
+        }
+
+        // 2-3. workers compute + compress + push.
+        let mut losses = 0.0f64;
+        for w in self.workers.iter_mut() {
+            // decoupled weight decay: g ← g + wd·x happens inside the
+            // worker via theta, approximated leader-side for simplicity:
+            // we pass theta and let the EF step handle γg; wd is applied
+            // to the aggregate below (equivalent for these experiments).
+            let enc = w.step_encode(&self.theta, lr);
+            losses += w.last_loss;
+            self.ps.push_grad(&self.fabric, w.id, step, enc);
+        }
+        let mean_loss = losses / self.workers.len() as f64;
+
+        // 4. leader: gather, decode, aggregate, update.
+        let msgs = self.fabric.recv_all(self.ps.leader);
+        let mut updates: Vec<Vec<f32>> = Vec::with_capacity(self.workers.len());
+        for msg in msgs {
+            debug_assert_eq!(msg.round, step, "stale push");
+            if let Payload::Grad(e) = msg.payload {
+                updates.push(wire::decode_any(&e).expect("decode push"));
+            }
+        }
+        assert_eq!(updates.len(), self.workers.len(), "missing worker push");
+        let agg = self.cfg.aggregation.combine(&updates);
+
+        match self.cfg.update_rule {
+            UpdateRule::ApplyAggregate => {
+                crate::tensor::sub_assign(&mut self.theta, &agg);
+            }
+            UpdateRule::ScaleByLr => {
+                crate::tensor::axpy(-lr, &agg, &mut self.theta);
+            }
+            UpdateRule::ServerMomentum { beta_millis } => {
+                let beta = beta_millis as f32 / 1000.0;
+                for (m, g) in self.momentum.iter_mut().zip(&agg) {
+                    *m = g + beta * *m;
+                }
+                crate::tensor::axpy(-lr, &self.momentum.clone(), &mut self.theta);
+            }
+        }
+        // decoupled weight decay on the iterate
+        if self.cfg.weight_decay > 0.0 {
+            self.wd_buf.copy_from_slice(&self.theta);
+            crate::tensor::axpy(-lr * self.cfg.weight_decay, &self.wd_buf, &mut self.theta);
+        }
+
+        // instrumentation
+        recorder.record("train_loss", step, mean_loss);
+        recorder.record("lr", step, lr as f64);
+        let mean_err: f64 = self
+            .workers
+            .iter()
+            .map(|w| w.error_norm())
+            .sum::<f64>()
+            / self.workers.len() as f64;
+        recorder.record("error_norm", step, mean_err);
+        let mean_phi: f64 = self.workers.iter().map(|w| w.last_phi).sum::<f64>()
+            / self.workers.len() as f64;
+        recorder.record("phi_corrected", step, mean_phi);
+        let mean_phi_g: f64 = self
+            .workers
+            .iter()
+            .map(|w| w.last_grad_density)
+            .sum::<f64>()
+            / self.workers.len() as f64;
+        recorder.record("phi_grad", step, mean_phi_g);
+        let _ = d;
+
+        self.clock.advance();
+        mean_loss
+    }
+
+    /// Run the configured number of rounds.
+    pub fn run(mut self) -> TrainOutcome {
+        let mut recorder = Recorder::new();
+        for step in 0..self.cfg.steps {
+            let loss = self.round(&mut recorder);
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                let bits = self.fabric.stats().total_bits;
+                log::info!(
+                    "round {step}: loss {loss:.4}  comm {:.2} Mbit",
+                    bits as f64 / 1e6
+                );
+            }
+            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                // eval through worker 0's source
+                let theta = self.theta.clone();
+                let w0 = &mut self.workers[0];
+                let el = w0.eval_loss(&theta);
+                let ea = w0.eval_acc(&theta);
+                if el.is_finite() {
+                    recorder.record("eval_loss", step as u64, el);
+                }
+                if ea.is_finite() {
+                    recorder.record("eval_acc", step as u64, ea);
+                }
+            }
+            if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
+                self.checkpoint();
+            }
+        }
+        recorder.record("final_loss", self.clock.current(), recorder.last("train_loss"));
+        let bits = self.fabric.stats().total_bits;
+        recorder.record("total_bits", self.clock.current(), bits as f64);
+        TrainOutcome {
+            theta: self.theta,
+            recorder,
+            traffic: self.fabric.stats(),
+            rounds: self.clock.current(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompressorKind;
+    use crate::coordinator::worker::{ObjectiveSource, WorkerMode};
+    use crate::model::toy::SparseNoiseQuadratic;
+    use crate::util::Pcg64;
+
+    fn quadratic_workers(n: usize, d: usize, mode: WorkerMode, kind: CompressorKind) -> Vec<Worker> {
+        (0..n)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 0.0),
+                        Pcg64::seeded(100 + id as u64),
+                    )),
+                    mode,
+                    kind,
+                    4,
+                    4,
+                    Pcg64::seeded(id as u64),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ef_multiworker_converges_on_quadratic() {
+        let d = 64;
+        let workers = quadratic_workers(4, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+        let cfg = DriverConfig {
+            steps: 400,
+            schedule: LrSchedule::new(0.2, 400, vec![0.5, 0.75]),
+            ..Default::default()
+        };
+        let theta0 = vec![1.0f32; d];
+        let driver = TrainDriver::new(cfg, workers, theta0);
+        let out = driver.run();
+        let final_norm = crate::tensor::norm2(&out.theta);
+        assert!(final_norm < 0.05, "||x|| = {final_norm}");
+        assert!(out.traffic.total_bits > 0);
+        assert_eq!(out.rounds, 400);
+    }
+
+    #[test]
+    fn dense_sgd_with_server_momentum_converges() {
+        let d = 32;
+        let workers = quadratic_workers(2, d, WorkerMode::DenseGrad, CompressorKind::None);
+        let cfg = DriverConfig {
+            steps: 200,
+            schedule: LrSchedule::constant(0.05),
+            update_rule: UpdateRule::ServerMomentum { beta_millis: 900 },
+            ..Default::default()
+        };
+        let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
+        assert!(crate::tensor::norm2(&out.theta) < 1e-2);
+    }
+
+    #[test]
+    fn majority_vote_runs_and_descends() {
+        let d = 16;
+        let workers = quadratic_workers(3, d, WorkerMode::SignVote, CompressorKind::Sign);
+        let cfg = DriverConfig {
+            steps: 150,
+            schedule: LrSchedule::new(0.05, 150, vec![0.5, 0.8]),
+            aggregation: Aggregation::MajorityVote,
+            update_rule: UpdateRule::ScaleByLr,
+            ..Default::default()
+        };
+        let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
+        assert!(crate::tensor::norm2(&out.theta) < 0.5);
+    }
+
+    #[test]
+    fn compressed_traffic_much_smaller_than_dense() {
+        let d = 4096;
+        let steps = 5;
+        let run = |mode, kind| {
+            let workers = quadratic_workers(2, d, mode, kind);
+            let cfg = DriverConfig {
+                steps,
+                schedule: LrSchedule::constant(0.01),
+                update_rule: if mode == WorkerMode::DenseGrad {
+                    UpdateRule::ScaleByLr
+                } else {
+                    UpdateRule::ApplyAggregate
+                },
+                ..Default::default()
+            };
+            let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
+            out.traffic.bits_of_kind(crate::net::MessageKind::GradPush)
+        };
+        let dense = run(WorkerMode::DenseGrad, CompressorKind::None);
+        let signed = run(WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+        let ratio = dense as f64 / signed as f64;
+        assert!(ratio > 25.0, "push compression ratio {ratio}");
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_identically() {
+        let d = 32;
+        let mk = || {
+            let workers =
+                quadratic_workers(2, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+            DriverConfig {
+                steps: 10,
+                schedule: LrSchedule::constant(0.1),
+                ..Default::default()
+            };
+            workers
+        };
+        // run A: 20 straight rounds
+        let cfg_a = DriverConfig {
+            steps: 20,
+            schedule: LrSchedule::constant(0.1),
+            ..Default::default()
+        };
+        let out_a = TrainDriver::new(cfg_a, mk(), vec![1.0f32; d]).run();
+
+        // run B: 10 rounds, snapshot, restore into a fresh driver, 10 more
+        let cfg_b1 = DriverConfig {
+            steps: 10,
+            schedule: LrSchedule::constant(0.1),
+            ..Default::default()
+        };
+        let mut drv = TrainDriver::new(cfg_b1, mk(), vec![1.0f32; d]);
+        let mut rec = Recorder::new();
+        for _ in 0..10 {
+            drv.round(&mut rec);
+        }
+        let snap = Snapshot {
+            round: drv.clock.current(),
+            theta: drv.theta.clone(),
+            worker_errors: drv
+                .workers
+                .iter()
+                .map(|w| w.ef_state().error().to_vec())
+                .collect(),
+        };
+        let cfg_b2 = DriverConfig {
+            steps: 0,
+            schedule: LrSchedule::constant(0.1),
+            ..Default::default()
+        };
+        let mut drv2 = TrainDriver::new(cfg_b2, mk(), vec![1.0f32; d]);
+        drv2.restore(&snap);
+        let mut rec2 = Recorder::new();
+        for _ in 0..10 {
+            drv2.round(&mut rec2);
+        }
+        // NOTE: worker RNG streams are reconstructed from seeds, and the
+        // quadratic grad is deterministic (noise 0), so trajectories match.
+        for (a, b) in out_a.theta.iter().zip(&drv2.theta) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Layer-3 coordinator: the distributed data-parallel training runtime.
+//!
+//! Topology: `w` workers + 1 leader over the simulated [`crate::net`]
+//! fabric. Each round:
+//!
+//! 1. the leader broadcasts the current parameters (accounted),
+//! 2. every worker computes a stochastic gradient on its own data shard
+//!    (natively or through the PJRT artifacts),
+//! 3. the worker runs its **error-feedback compression state** (Algorithm 2
+//!    lines 5–8) and pushes the encoded delta,
+//! 4. the leader decodes, aggregates (mean or majority vote), and applies
+//!    the update.
+//!
+//! The per-worker residual `e_t` is first-class coordinator state: it is
+//! owned by [`worker::Worker`], checkpointed by [`state::CheckpointStore`],
+//! and its norm is exported as a metric (Lemma 3 instrumentation).
+//!
+//! PJRT handles are not `Send`, so the event loop is single-threaded and
+//! deterministic; worker compute "parallelism" and all communication costs
+//! live in the fabric's simulated clock.
+
+pub mod aggregate;
+pub mod driver;
+pub mod round;
+pub mod state;
+pub mod worker;
+
+pub use aggregate::Aggregation;
+pub use driver::{TrainDriver, TrainOutcome};
+pub use round::LrSchedule;
+pub use worker::{GradSource, ObjectiveSource, Worker, WorkerMode};

@@ -1,0 +1,87 @@
+//! Round bookkeeping and the learning-rate schedule.
+//!
+//! The paper's schedule: the LR is divided by 10 at fixed fractions of the
+//! run (epochs 100 and 150 of 200 → fractions 0.5 and 0.75), and scaled
+//! proportionally to batch size for small-batch runs (Goyal et al. 2017).
+
+/// Step-decay schedule: lr(t) = base / 10^{#decay points passed}.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub total_steps: usize,
+    /// Fractions of total_steps at which to decimate.
+    pub decay_at: Vec<f64>,
+    pub decay_factor: f64,
+}
+
+impl LrSchedule {
+    pub fn new(base: f64, total_steps: usize, decay_at: Vec<f64>) -> Self {
+        LrSchedule {
+            base,
+            total_steps,
+            decay_at,
+            decay_factor: 10.0,
+        }
+    }
+
+    /// Constant schedule.
+    pub fn constant(base: f64) -> Self {
+        LrSchedule::new(base, usize::MAX, vec![])
+    }
+
+    pub fn lr(&self, step: usize) -> f64 {
+        let frac = step as f64 / self.total_steps as f64;
+        let passed = self.decay_at.iter().filter(|&&f| frac >= f).count();
+        self.base / self.decay_factor.powi(passed as i32)
+    }
+}
+
+/// Round counter with monotonicity checks — the leader uses this to detect
+/// stale gradient pushes (the gather asserts all messages carry the current
+/// round).
+#[derive(Clone, Debug, Default)]
+pub struct RoundClock {
+    round: u64,
+}
+
+impl RoundClock {
+    pub fn current(&self) -> u64 {
+        self.round
+    }
+
+    pub fn advance(&mut self) -> u64 {
+        self.round += 1;
+        self.round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule() {
+        let s = LrSchedule::new(0.056, 200, vec![0.5, 0.75]);
+        assert!((s.lr(0) - 0.056).abs() < 1e-12);
+        assert!((s.lr(99) - 0.056).abs() < 1e-12);
+        assert!((s.lr(100) - 0.0056).abs() < 1e-12);
+        assert!((s.lr(150) - 0.00056).abs() < 1e-12);
+        assert!((s.lr(199) - 0.00056).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = RoundClock::default();
+        assert_eq!(c.current(), 0);
+        assert_eq!(c.advance(), 1);
+        assert_eq!(c.advance(), 2);
+        assert_eq!(c.current(), 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Checkpointing: the coordinator's durable state is (round, theta,
+//! per-worker EF residuals). Losing `e_t` silently degrades EF-SGD back to
+//! plain compression, so residuals are part of the checkpoint, not an
+//! optimization cache.
+//!
+//! Format: `meta.json` + raw little-endian f32 blobs, one per tensor.
+
+use crate::util::json::{num, obj, s, Json};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("corrupt checkpoint: {0}")]
+    Corrupt(String),
+}
+
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+fn write_f32(path: &Path, data: &[f32]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)
+}
+
+fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, CheckpointError> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() != expect * 4 {
+        return Err(CheckpointError::Corrupt(format!(
+            "{} has {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            expect * 4
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// A full coordinator snapshot.
+pub struct Snapshot {
+    pub round: u64,
+    pub theta: Vec<f32>,
+    pub worker_errors: Vec<Vec<f32>>,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: &Path) -> Result<Self, CheckpointError> {
+        std::fs::create_dir_all(dir)?;
+        Ok(CheckpointStore {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn save(&self, snap: &Snapshot) -> Result<(), CheckpointError> {
+        write_f32(&self.dir.join("theta.f32"), &snap.theta)?;
+        for (w, e) in snap.worker_errors.iter().enumerate() {
+            write_f32(&self.dir.join(format!("error_{w}.f32")), e)?;
+        }
+        let meta = obj(vec![
+            ("round", num(snap.round as f64)),
+            ("d", num(snap.theta.len() as f64)),
+            ("workers", num(snap.worker_errors.len() as f64)),
+            ("format", s("ef-sgd-checkpoint-v1")),
+        ]);
+        // write meta last: its presence marks the checkpoint complete
+        std::fs::write(self.dir.join("meta.json"), meta.to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(&self) -> Result<Snapshot, CheckpointError> {
+        let meta_text = std::fs::read_to_string(self.dir.join("meta.json"))?;
+        let meta = Json::parse(&meta_text)?;
+        let d = meta
+            .get("d")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| CheckpointError::Corrupt("missing d".into()))?;
+        let workers = meta
+            .get("workers")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| CheckpointError::Corrupt("missing workers".into()))?;
+        let round = meta.get("round").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        let theta = read_f32(&self.dir.join("theta.f32"), d)?;
+        let worker_errors = (0..workers)
+            .map(|w| read_f32(&self.dir.join(format!("error_{w}.f32")), d))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Snapshot {
+            round,
+            theta,
+            worker_errors,
+        })
+    }
+
+    pub fn exists(&self) -> bool {
+        self.dir.join("meta.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("efsgd_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmpdir("rt");
+        let store = CheckpointStore::new(&dir).unwrap();
+        assert!(!store.exists());
+        let snap = Snapshot {
+            round: 42,
+            theta: vec![1.0, -2.0, 3.0],
+            worker_errors: vec![vec![0.1, 0.2, 0.3], vec![-0.1, 0.0, 0.5]],
+        };
+        store.save(&snap).unwrap();
+        assert!(store.exists());
+        let loaded = store.load().unwrap();
+        assert_eq!(loaded.round, 42);
+        assert_eq!(loaded.theta, snap.theta);
+        assert_eq!(loaded.worker_errors, snap.worker_errors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_sizes_detected() {
+        let dir = tmpdir("bad");
+        let store = CheckpointStore::new(&dir).unwrap();
+        let snap = Snapshot {
+            round: 1,
+            theta: vec![1.0; 8],
+            worker_errors: vec![vec![0.0; 8]],
+        };
+        store.save(&snap).unwrap();
+        // truncate a blob
+        std::fs::write(dir.join("error_0.f32"), [0u8; 4]).unwrap();
+        assert!(matches!(
+            store.load(),
+            Err(CheckpointError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_load_fails() {
+        let dir = tmpdir("missing");
+        let store = CheckpointStore::new(&dir).unwrap();
+        assert!(store.load().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,126 @@
+//! Batching and per-worker sharding: each worker sees a disjoint shard of
+//! the training set (data parallelism); batch order is a seeded shuffle so
+//! runs are exactly reproducible and each worker's stream is independent.
+
+use super::synth_class::Dataset;
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+/// Splits a dataset into `w` contiguous shards after a seeded shuffle.
+pub struct Sharder {
+    pub shards: Vec<Dataset>,
+}
+
+impl Sharder {
+    pub fn new(data: &Dataset, workers: usize, rng: &mut Pcg64) -> Self {
+        assert!(workers >= 1);
+        let perm = rng.permutation(data.len());
+        let per = data.len() / workers;
+        assert!(per >= 1, "more workers than examples");
+        let mut shards = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let lo = w * per;
+            let hi = if w + 1 == workers { data.len() } else { lo + per };
+            let rows: Vec<Vec<f32>> = perm[lo..hi]
+                .iter()
+                .map(|&i| data.x.row(i).to_vec())
+                .collect();
+            let y: Vec<usize> = perm[lo..hi].iter().map(|&i| data.y[i]).collect();
+            shards.push(Dataset::new(Matrix::from_rows(rows), y, data.classes));
+        }
+        Sharder { shards }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// An epoch-shuffling minibatch index iterator over one shard.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Pcg64,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: Pcg64) -> Self {
+        assert!(batch >= 1 && n >= 1);
+        let mut it = BatchIter {
+            order: (0..n).collect(),
+            pos: 0,
+            batch,
+            rng,
+        };
+        it.reshuffle();
+        it
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.pos = 0;
+    }
+
+    /// Next minibatch of indices; reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        if self.pos + self.batch > self.order.len() {
+            self.reshuffle();
+        }
+        let b = self.order[self.pos..self.pos + self.batch.min(self.order.len())].to_vec();
+        self.pos += self.batch;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_class::{generate, SynthSpec};
+
+    #[test]
+    fn shards_partition_dataset() {
+        let mut rng = Pcg64::seeded(0);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let sharder = Sharder::new(&train, 4, &mut rng);
+        assert_eq!(sharder.workers(), 4);
+        let total: usize = sharder.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, train.len());
+        // classes preserved
+        for s in &sharder.shards {
+            assert_eq!(s.classes, train.classes);
+        }
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, Pcg64::seeded(1));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for i in it.next_batch() {
+                seen.insert(i);
+            }
+        }
+        assert!(seen.len() >= 9); // 3 batches of 3 from a 10-elem epoch
+        for i in &seen {
+            assert!(*i < 10);
+        }
+    }
+
+    #[test]
+    fn batch_iter_deterministic() {
+        let mut a = BatchIter::new(20, 4, Pcg64::seeded(2));
+        let mut b = BatchIter::new(20, 4, Pcg64::seeded(2));
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "more workers than examples")]
+    fn too_many_workers_panics() {
+        let mut rng = Pcg64::seeded(3);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let _ = Sharder::new(&train, train.len() + 1, &mut rng);
+    }
+}

@@ -1,0 +1,17 @@
+//! Data generation and loading.
+//!
+//! * [`wilson`] — the Wilson et al. (2017) over-parameterized construction
+//!   the paper uses for its §5.2 generalization simulation (Appendix A.6).
+//! * [`synth_class`] — the synthetic "CIFAR-like" classification substitute
+//!   for the §6 deep-net experiments (teacher-MLP labels + noise).
+//! * [`tokens`] — synthetic token streams for the end-to-end transformer
+//!   run (Markov-chain corpus with learnable structure).
+//! * [`loader`] — batching and per-worker sharding.
+
+pub mod loader;
+pub mod synth_class;
+pub mod tokens;
+pub mod wilson;
+
+pub use loader::Sharder;
+pub use synth_class::Dataset;

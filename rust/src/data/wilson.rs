@@ -1,0 +1,130 @@
+//! The Wilson et al. (2017) §3.3 construction, as specified in the paper's
+//! Appendix A.6: n = 200 examples of dimension d = 6n, labels y ∈ {−1,1}
+//! uniform, and
+//!
+//! ```text
+//! A[i, 1] = y_i,  A[i, 2] = A[i, 3] = 1,
+//! A[i, 4+5(i-1) .. 4+5(i-1)+2(1-y_i)] = 1,   all else 0    (1-indexed)
+//! ```
+//!
+//! so each example has a label-revealing first coordinate, two shared
+//! coordinates, and 1 or 5 unique "memorization" coordinates depending on
+//! the label. Gradient-span methods provably generalize here; methods that
+//! leave the span (SIGNSGD) memorize via the unique coordinates and fail on
+//! the test split.
+
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+/// A generated problem, split into train and test halves.
+pub struct WilsonData {
+    pub train_a: Matrix,
+    pub train_y: Vec<f32>,
+    pub test_a: Matrix,
+    pub test_y: Vec<f32>,
+    pub d: usize,
+}
+
+/// Generate with the paper's sizes by default: n = 200, d = 6n.
+pub fn generate(n: usize, rng: &mut Pcg64) -> WilsonData {
+    let d = 6 * n;
+    let mut rows = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let y: f32 = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        let mut row = vec![0.0f32; d];
+        // paper indices are 1-based; translate to 0-based.
+        row[0] = y;
+        row[1] = 1.0;
+        row[2] = 1.0;
+        let start = 3 + 5 * i;
+        let count = 1 + 2 * (1 - y as i32) as usize; // y=+1 -> 1, y=-1 -> 5
+        for j in 0..count {
+            if start + j < d {
+                row[start + j] = 1.0;
+            }
+        }
+        rows.push(row);
+        ys.push(y);
+    }
+    // random equal split into train/test
+    let perm = rng.permutation(n);
+    let half = n / 2;
+    let take = |idx: &[usize]| {
+        let a = Matrix::from_rows(idx.iter().map(|&i| rows[i].clone()).collect());
+        let y: Vec<f32> = idx.iter().map(|&i| ys[i]).collect();
+        (a, y)
+    };
+    let (train_a, train_y) = take(&perm[..half]);
+    let (test_a, test_y) = take(&perm[half..]);
+    WilsonData {
+        train_a,
+        train_y,
+        test_a,
+        test_y,
+        d,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let mut rng = Pcg64::seeded(0);
+        let w = generate(200, &mut rng);
+        assert_eq!(w.d, 1200);
+        assert_eq!(w.train_a.rows, 100);
+        assert_eq!(w.test_a.rows, 100);
+        assert_eq!(w.train_a.cols, 1200);
+    }
+
+    #[test]
+    fn row_structure() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 20;
+        let w = generate(n, &mut rng);
+        for (r, &y) in (0..w.train_a.rows).zip(&w.train_y) {
+            let row = w.train_a.row(r);
+            assert_eq!(row[0], y);
+            assert_eq!(row[1], 1.0);
+            assert_eq!(row[2], 1.0);
+            let unique: usize = row[3..].iter().map(|v| *v as usize).sum();
+            if y > 0.0 {
+                assert_eq!(unique, 1, "positive label has 1 unique coord");
+            } else {
+                assert_eq!(unique, 5, "negative label has 5 unique coords");
+            }
+        }
+    }
+
+    #[test]
+    fn unique_blocks_disjoint() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 50;
+        let w = generate(n, &mut rng);
+        // Across ALL examples (train+test), each column beyond 2 is used by
+        // at most one example.
+        let mut col_use = vec![0usize; w.d];
+        for a in [&w.train_a, &w.test_a] {
+            for r in 0..a.rows {
+                for (c, v) in a.row(r).iter().enumerate().skip(3) {
+                    if *v != 0.0 {
+                        col_use[c] += 1;
+                    }
+                }
+            }
+        }
+        assert!(col_use.iter().all(|&u| u <= 1));
+    }
+
+    #[test]
+    fn labels_are_plus_minus_one() {
+        let mut rng = Pcg64::seeded(3);
+        let w = generate(30, &mut rng);
+        for y in w.train_y.iter().chain(&w.test_y) {
+            assert!(*y == 1.0 || *y == -1.0);
+        }
+    }
+}

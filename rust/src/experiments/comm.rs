@@ -1,0 +1,196 @@
+//! The communication claim (§1, §6.1): sign compression reduces gradient
+//! traffic by ~32× per direction (1 bit + one 32-bit scale per layer
+//! versus 32 bits per coordinate), ~64× when both directions are
+//! compressed. Measured, not asserted: we (a) evaluate the exact layer-wise
+//! formula Σᵢ(dᵢ+32) on real network shapes and (b) run the coordinator on
+//! the simulated fabric and read the bit counters.
+
+use super::{ExpContext, ExpResult};
+use crate::config::CompressorKind;
+use crate::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use crate::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use crate::coordinator::LrSchedule;
+use crate::metrics::Recorder;
+use crate::model::toy::SparseNoiseQuadratic;
+use crate::net::MessageKind;
+use crate::util::Pcg64;
+use anyhow::Result;
+
+/// Layer dimension tables for the paper's networks.
+/// VGG19 conv/fc layer parameter counts (CIFAR-10 variant, conv = k*k*cin*cout).
+fn vgg19_layers() -> Vec<usize> {
+    let mut dims = Vec::new();
+    let cfg: [(usize, usize); 16] = [
+        (3, 64),
+        (64, 64),
+        (64, 128),
+        (128, 128),
+        (128, 256),
+        (256, 256),
+        (256, 256),
+        (256, 256),
+        (256, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+    ];
+    for (cin, cout) in cfg {
+        dims.push(3 * 3 * cin * cout);
+    }
+    dims.push(512 * 10); // classifier
+    dims
+}
+
+/// Resnet18 layer parameter counts (CIFAR variant).
+fn resnet18_layers() -> Vec<usize> {
+    let mut dims = vec![3 * 3 * 3 * 64];
+    let blocks: [(usize, usize, usize); 4] = [(64, 64, 2), (64, 128, 2), (128, 256, 2), (256, 512, 2)];
+    for (cin, cout, n) in blocks {
+        for b in 0..n {
+            let c_in = if b == 0 { cin } else { cout };
+            dims.push(3 * 3 * c_in * cout);
+            dims.push(3 * 3 * cout * cout);
+            if b == 0 && cin != cout {
+                dims.push(cin * cout); // 1x1 downsample
+            }
+        }
+    }
+    dims.push(512 * 10);
+    dims
+}
+
+/// The paper's accounting: layer-wise scaled sign = Σᵢ(dᵢ + 32) bits.
+fn sign_bits(layers: &[usize]) -> u64 {
+    layers.iter().map(|&d| d as u64 + 32).sum()
+}
+
+fn dense_bits(layers: &[usize]) -> u64 {
+    layers.iter().map(|&d| 32 * d as u64).sum()
+}
+
+pub fn comm(ctx: &ExpContext) -> Result<ExpResult> {
+    let mut rec = Recorder::new();
+    rec.tag("experiment", "comm");
+    let mut lines = vec!["== Communication accounting (the ~64x claim) ==".to_string()];
+
+    // (a) analytic, on the paper's network shapes
+    lines.push("  layer-wise formula  Sum_i (d_i + 32)  vs dense 32*d:".into());
+    for (name, layers) in [("VGG19", vgg19_layers()), ("Resnet18", resnet18_layers())] {
+        let d: usize = layers.iter().sum();
+        let sb = sign_bits(&layers);
+        let db = dense_bits(&layers);
+        let one_way = db as f64 / sb as f64;
+        // Paper's ~64x: both directions sign-compressed (worker push +
+        // majority-vote/sign broadcast), vs dense both ways.
+        let two_way = (2 * db) as f64 / (2 * sb) as f64;
+        // and the deployed asymmetric variant: compressed push, dense pull
+        let asym = (2 * db) as f64 / (sb + db) as f64;
+        lines.push(format!(
+            "    {name:<9} d={d:>9}  layers={:<3} sign {:>12} bits  dense {:>13} bits  ratio {:.2}x one-way ({:.2}x both-compressed, {:.2}x push-only)",
+            layers.len(), sb, db, one_way, two_way, asym
+        ));
+        rec.record(&format!("ratio_{name}"), 0, one_way);
+    }
+
+    // (b) measured on the fabric: EF-sign vs dense push traffic
+    let d = if ctx.quick { 4096 } else { 262_144 };
+    let steps = 10;
+    let run = |mode: WorkerMode, kind: CompressorKind| {
+        let workers: Vec<Worker> = (0..4)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 1.0),
+                        Pcg64::seeded(id as u64),
+                    )),
+                    mode,
+                    kind,
+                    64,
+                    4,
+                    Pcg64::seeded(100 + id as u64),
+                )
+            })
+            .collect();
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(0.01),
+            update_rule: if mode == WorkerMode::DenseGrad {
+                UpdateRule::ScaleByLr
+            } else {
+                UpdateRule::ApplyAggregate
+            },
+            ..Default::default()
+        };
+        TrainDriver::new(cfg, workers, vec![1.0f32; d])
+            .run()
+            .traffic
+    };
+    let dense = run(WorkerMode::DenseGrad, CompressorKind::None);
+    let signd = run(WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let topk = run(WorkerMode::ErrorFeedback, CompressorKind::TopK);
+    let push_dense = dense.bits_of_kind(MessageKind::GradPush);
+    let push_sign = signd.bits_of_kind(MessageKind::GradPush);
+    let push_topk = topk.bits_of_kind(MessageKind::GradPush);
+    lines.push(format!(
+        "  measured on fabric (d={d}, 4 workers, {steps} rounds): push traffic\n    dense {:>14} bits | ef-sign {:>14} bits ({:.2}x) | ef-top-k(1/64) {:>13} bits ({:.2}x)",
+        push_dense,
+        push_sign,
+        push_dense as f64 / push_sign as f64,
+        push_topk,
+        push_dense as f64 / push_topk as f64,
+    ));
+    rec.record("measured_sign_ratio", 0, push_dense as f64 / push_sign as f64);
+
+    // (c) simulated wall-clock effect of compression on a 1 GbE link
+    let link = crate::net::LinkModel::one_gbe();
+    let t_dense = link.transfer_time(dense_bits(&vgg19_layers()));
+    let t_sign = link.transfer_time(sign_bits(&vgg19_layers()));
+    lines.push(format!(
+        "  1 GbE per-round gradient push (VGG19): dense {:.1} ms vs sign {:.2} ms",
+        t_dense * 1e3,
+        t_sign * 1e3
+    ));
+    lines.push(
+        "  paper claim: ~32x per compressed direction, '~64x' counting both directions;\n  the extra 32 bits/layer are negligible when params >> layers (3 orders of magnitude)."
+            .into(),
+    );
+    Ok(ExpResult {
+        id: "comm",
+        summary: lines.join("\n"),
+        recorders: vec![("ratios".into(), rec)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_ratio_near_32x() {
+        for layers in [vgg19_layers(), resnet18_layers()] {
+            let r = dense_bits(&layers) as f64 / sign_bits(&layers) as f64;
+            assert!(r > 31.5 && r < 32.0, "ratio {r}");
+        }
+    }
+
+    #[test]
+    fn vgg19_param_count_plausible() {
+        let d: usize = vgg19_layers().iter().sum();
+        // VGG19 conv backbone ~20M params
+        assert!(d > 15_000_000 && d < 25_000_000, "d={d}");
+    }
+
+    #[test]
+    fn measured_matches_analytic_quick() {
+        let r = comm(&ExpContext::quick()).unwrap();
+        let rec = &r.recorders[0].1;
+        let measured = rec.get("measured_sign_ratio").unwrap().last().unwrap();
+        // framing overhead + scale make it slightly under 32
+        assert!(measured > 25.0 && measured < 32.5, "measured {measured}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig. 2: the density φ(v) = ‖v‖₁²/(d‖v‖₂²) of the stochastic gradients
+//! g_t and of the error-corrected gradients g_t + e_t during training.
+//!
+//! The paper's point: the convergence rate depends on φ(g+e) (the density
+//! of what actually gets compressed), and in practice it stays well above
+//! the 1/d worst case (min > 0.13 for VGG19/CIFAR-10). We track both
+//! densities while training the MLP substitute with EF-SIGNSGD; the
+//! end-to-end transformer run (examples/e2e_transformer.rs) records the
+//! same series through the Pallas density kernel.
+
+use super::{ExpContext, ExpResult};
+use crate::data::synth_class::{self, SynthSpec};
+use crate::metrics::{sparkline, Recorder};
+use crate::model::mlp::{Mlp, MlpObjective};
+use crate::model::StochasticObjective;
+use crate::optim::{EfSignSgd, Optimizer};
+use crate::util::Pcg64;
+use anyhow::Result;
+
+pub fn fig2(ctx: &ExpContext) -> Result<ExpResult> {
+    let spec = SynthSpec::cifar100_like();
+    let steps = if ctx.quick { 300 } else { 3_000 };
+    let batch = 128;
+    let mut rng = Pcg64::seeded(ctx.seed + 41);
+    let (train, _) = synth_class::generate(&spec, &mut rng);
+    let mlp = Mlp::new(super::lr_tuning::mlp_config(&spec));
+    let d = mlp.cfg.num_params();
+    let mut theta = mlp.init_params(&mut rng);
+    let obj = MlpObjective::new(mlp, train, batch);
+    let mut opt = EfSignSgd::new(d, 0.05, Pcg64::seeded(ctx.seed));
+    let mut g = vec![0.0f32; d];
+    let mut data_rng = Pcg64::seeded(ctx.seed + 42);
+
+    let mut rec = Recorder::new();
+    rec.tag("experiment", "fig2");
+    let mut phi_g_all = Vec::new();
+    let mut phi_pe_all = Vec::new();
+    for t in 0..steps {
+        obj.stoch_grad(&theta, &mut data_rng, &mut g);
+        // phi(g_t): raw gradient density
+        let phi_g = crate::tensor::density(&g);
+        opt.step(&mut theta, &g);
+        // phi(g_t + e_t): density of the error-corrected vector, as
+        // reported by the EF step itself (p = γg + e; φ is scale-free in γ
+        // only when e=0, so this is the exact quantity Fig. 2 plots for the
+        // compressed input).
+        let phi_pe = opt.last_density();
+        if t % (steps / 200).max(1) == 0 {
+            rec.record("phi_grad", t as u64, phi_g);
+            rec.record("phi_corrected", t as u64, phi_pe);
+        }
+        phi_g_all.push(phi_g);
+        phi_pe_all.push(phi_pe);
+    }
+    let min_g = phi_g_all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let min_pe = phi_pe_all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean_g = crate::util::stats::mean(&phi_g_all);
+    let mean_pe = crate::util::stats::mean(&phi_pe_all);
+    let summary = format!(
+        "== Fig 2: gradient density phi during EF-SIGNSGD training (d={d}, {steps} steps) ==\n  \
+         phi(g_t):      mean {mean_g:.3}  min {min_g:.3}   {}\n  \
+         phi(g_t+e_t):  mean {mean_pe:.3}  min {min_pe:.3}   {}\n  \
+         worst case 1/d = {:.2e}\n  \
+         paper shape: both densities sit far above 1/d (VGG19 paper min was ~0.13);\n  the corrected density is the one the rate depends on (Lemma 8 + Thm II).",
+        sparkline(&phi_g_all, 40),
+        sparkline(&phi_pe_all, 40),
+        1.0 / d as f64
+    );
+    Ok(ExpResult {
+        id: "fig2",
+        summary,
+        recorders: vec![("density".into(), rec)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densities_far_above_worst_case_quick() {
+        let r = fig2(&ExpContext::quick()).unwrap();
+        let rec = &r.recorders[0].1;
+        let min_pe = rec.get("phi_corrected").unwrap().min().unwrap();
+        let d = 1.0 / 7000.0; // ~1/d scale
+        assert!(min_pe > 50.0 * d, "min phi(g+e) = {min_pe}");
+        let min_g = rec.get("phi_grad").unwrap().min().unwrap();
+        assert!(min_g > 0.0 && min_g <= 1.0);
+    }
+}

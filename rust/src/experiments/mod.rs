@@ -1,0 +1,113 @@
+//! Experiment drivers: one module per table/figure of the paper.
+//!
+//! Every experiment is runnable as `repro exp <id>` (see the table in
+//! DESIGN.md §4), prints the paper-shaped summary to stdout, and writes its
+//! raw series as CSV/JSON under `--out` (default `results/`). `--quick`
+//! shrinks sizes for CI; the full settings regenerate EXPERIMENTS.md.
+
+pub mod ablation;
+pub mod cifar_sim;
+pub mod comm;
+pub mod counterexamples;
+pub mod density;
+pub mod error_bound;
+pub mod genspan;
+pub mod lr_tuning;
+pub mod qsgd_ef;
+pub mod sparse_noise;
+
+use crate::metrics::Recorder;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    pub quick: bool,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            quick: false,
+            seed: 0,
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExpContext {
+    pub fn quick() -> Self {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// The output of one experiment: a human summary (also printed) plus named
+/// recorders whose series are written as `<id>_<name>.csv`.
+pub struct ExpResult {
+    pub id: &'static str,
+    pub summary: String,
+    pub recorders: Vec<(String, Recorder)>,
+}
+
+impl ExpResult {
+    pub fn write(&self, ctx: &ExpContext) -> std::io::Result<()> {
+        std::fs::create_dir_all(&ctx.out_dir)?;
+        for (name, rec) in &self.recorders {
+            rec.write_csv(&ctx.out_dir.join(format!("{}_{name}.csv", self.id)))?;
+            rec.write_json(&ctx.out_dir.join(format!("{}_{name}.json", self.id)))?;
+        }
+        std::fs::write(
+            ctx.out_dir.join(format!("{}_summary.txt", self.id)),
+            &self.summary,
+        )
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "ce1", "ce2", "ce3", "thm1", "fig2", "fig3", "fig4", "fig5", "fig7", "table2", "rem5",
+    "comm", "lemma3", "ablation",
+];
+
+/// Run an experiment by id (prints the summary and writes results).
+pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpResult> {
+    let result = match id {
+        "ce1" => counterexamples::ce1(ctx),
+        "ce2" => counterexamples::ce2(ctx),
+        "ce3" => counterexamples::ce3(ctx),
+        "thm1" => counterexamples::thm1(ctx),
+        "fig2" => density::fig2(ctx),
+        "fig3" => genspan::fig3(ctx),
+        "fig4" => cifar_sim::fig4(ctx),
+        "fig5" => sparse_noise::fig5(ctx),
+        "fig7" => cifar_sim::fig7(ctx),
+        "table2" => lr_tuning::table2(ctx),
+        "rem5" => qsgd_ef::rem5(ctx),
+        "comm" => comm::comm(ctx),
+        "lemma3" => error_bound::lemma3(ctx),
+        "ablation" => ablation::ablation(ctx),
+        other => bail!("unknown experiment '{other}'; known: {}", ALL.join(" ")),
+    };
+    let result = result?;
+    println!("{}", result.summary);
+    result.write(ctx)?;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("nope", &ExpContext::quick()).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Appendix A.1 / Fig. 5: the sparse-noise toy problem where SIGNSGD is
+//! *faster* than SGD and EF-SIGNSGD — the noise on the single bad
+//! coordinate accumulates in the EF residual instead of being scaled away.
+//!
+//! Setup (paper): f(x) = ½‖x‖², x ∈ R^100, stochastic gradient = x + noise
+//! with N(0, 100²) on coordinate 1 only. LRs: 0.001 for SGD/EF-SIGNSGD,
+//! 0.01 for SIGNSGD/(scaled)SIGNSGD. 100 repetitions.
+
+use super::{ExpContext, ExpResult};
+use crate::metrics::{sparkline, Recorder, SeriesBundle, Series};
+use crate::model::toy::SparseNoiseQuadratic;
+use crate::model::StochasticObjective;
+use crate::optim;
+use crate::util::Pcg64;
+use anyhow::Result;
+
+pub fn fig5(ctx: &ExpContext) -> Result<ExpResult> {
+    let d = 100;
+    let steps = if ctx.quick { 300 } else { 1_000 };
+    let repeats = if ctx.quick { 20 } else { 100 };
+    let obj = SparseNoiseQuadratic::new(d, 100.0);
+
+    let algos: [(&str, f32); 4] = [
+        ("sgd", 0.001),
+        ("ef_signsgd", 0.001),
+        ("signsgd_unscaled", 0.01),
+        ("signsgd", 0.01), // scaled
+    ];
+
+    let mut rec = Recorder::new();
+    rec.tag("experiment", "fig5");
+    let mut lines = vec![format!(
+        "== Fig 5: sparse-noise quadratic d={d}, noise N(0,100^2) on coord 1, {repeats} repeats =="
+    )];
+
+    for (algo, lr) in algos {
+        let mut bundle = SeriesBundle::default();
+        for rep in 0..repeats {
+            let mut series = Series::default();
+            let mut opt = optim::build(algo, d, lr, 0.9, ctx.seed + rep as u64).unwrap();
+            let mut x = vec![1.0f32; d];
+            let mut g = vec![0.0f32; d];
+            let mut rng = Pcg64::seeded(ctx.seed + 1000 + rep as u64);
+            for t in 0..steps {
+                obj.stoch_grad(&x, &mut rng, &mut g);
+                opt.step(&mut x, &g);
+                if t % (steps / 100).max(1) == 0 {
+                    series.push(t as u64, obj.loss(&x));
+                }
+            }
+            bundle.push(series);
+        }
+        let (stepsv, mean, std) = bundle.aggregate();
+        for ((s, m), sd) in stepsv.iter().zip(&mean).zip(&std) {
+            rec.record(&format!("loss_{algo}"), *s, *m);
+            rec.record(&format!("std_{algo}"), *s, *sd);
+        }
+        // time-to-threshold: first recorded step with loss < 1.0
+        let t_hit = stepsv
+            .iter()
+            .zip(&mean)
+            .find(|(_, m)| **m < 1.0)
+            .map(|(s, _)| *s as i64)
+            .unwrap_or(-1);
+        lines.push(format!(
+            "  {algo:<18} lr {lr:<6} final {:.3e}  steps-to-loss<1: {t_hit:>5}  {}",
+            mean.last().unwrap(),
+            sparkline(&mean, 30)
+        ));
+    }
+    lines.push(
+        "  paper shape: SIGNSGD and scaled SIGNSGD reach low loss FASTER than SGD;\n  EF-SIGNSGD tracks SGD's (slower) rate — noise accumulates in e_t, contradicting the\n  coordinate-wise-variance explanation of sign methods' speed (paper's point)."
+            .into(),
+    );
+    Ok(ExpResult {
+        id: "fig5",
+        summary: lines.join("\n"),
+        recorders: vec![("series".into(), rec)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_quick() {
+        let r = fig5(&ExpContext::quick()).unwrap();
+        let rec = &r.recorders[0].1;
+        // sign methods beat sgd at matched mid-training step
+        let at = |name: &str, frac: f64| {
+            let s = rec.get(name).unwrap();
+            let i = ((s.values.len() - 1) as f64 * frac) as usize;
+            s.values[i]
+        };
+        let mid_sign = at("loss_signsgd_unscaled", 0.5);
+        let mid_sgd = at("loss_sgd", 0.5);
+        assert!(
+            mid_sign < mid_sgd,
+            "sign {mid_sign} should lead sgd {mid_sgd} mid-run"
+        );
+        // EF behaves like SGD (same order of magnitude), not like signSGD
+        let mid_ef = at("loss_ef_signsgd", 0.5);
+        assert!(mid_ef > mid_sign, "EF should NOT enjoy the sign speedup");
+    }
+}

@@ -1,0 +1,49 @@
+//! `ef-sgd`: a full-system reproduction of *Error Feedback Fixes SignSGD and
+//! other Gradient Compression Schemes* (Karimireddy, Rebjock, Stich, Jaggi —
+//! ICML 2019).
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — distributed data-parallel training coordinator:
+//!   leader/worker topology over a simulated network fabric with exact bit
+//!   accounting, collectives (ring all-reduce, parameter server, majority
+//!   vote), per-worker error-feedback state, compression codecs, native
+//!   reference models, and the paper's full experiment suite.
+//! * **L2** — a JAX transformer LM (`python/compile/model.py`), AOT-lowered
+//!   to HLO-text artifacts executed through [`runtime`] (PJRT CPU client).
+//! * **L1** — Pallas kernels for the fused EF-sign compression step
+//!   (`python/compile/kernels/`), lowered into the same artifacts.
+//!
+//! Python never runs on the training path: after `make artifacts`, the
+//! `repro` binary is self-contained.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use ef_sgd::compress::{Compressor, ScaledSign};
+//! use ef_sgd::optim::{EfSgd, Optimizer};
+//!
+//! let mut opt = EfSgd::new(2, 0.1, Box::new(ScaledSign));
+//! let mut x = vec![1.0f32, -2.0];
+//! let g = vec![0.3f32, 0.1];
+//! opt.step(&mut x, &g);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod collectives;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod logging;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod optim;
+pub mod propcheck;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

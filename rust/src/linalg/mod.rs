@@ -1,0 +1,269 @@
+//! Dense linear algebra for the generalization experiments: Cholesky
+//! factorization, triangular solves, the minimum-norm least-squares solution
+//! (max-margin dual, Lemma 9) and projection onto the span of a set of
+//! vectors (Theorem IV's distance-to-gradient-span metric).
+
+use crate::tensor::Matrix;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Shape(String),
+}
+
+/// Cholesky factorization A = L L^T for symmetric positive definite A
+/// (computed in f64 internally for stability). Returns lower-triangular L.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, LinalgError> {
+    if a.rows != a.cols {
+        return Err(LinalgError::Shape(format!("{}x{} not square", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(i, sum));
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(Matrix::from_vec(
+        n,
+        n,
+        l.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+/// Solve L y = b for lower-triangular L.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve L^T x = y for lower-triangular L.
+pub fn solve_upper_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in (i + 1)..n {
+            sum -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve the SPD system A x = b via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>, LinalgError> {
+    let l = cholesky(a)?;
+    Ok(solve_upper_t(&l, &solve_lower(&l, b)))
+}
+
+/// Minimum-norm solution of the under-determined system A x = y for
+/// A in R^{n x d}, d > n, rank n:  x* = A^T (A A^T)^{-1} y.
+/// This is the max-margin solution of the over-parameterized least-squares
+/// problem (paper §5.1 / Lemma 9). A small ridge stabilizes near-singular
+/// Gram matrices.
+pub fn min_norm_solution(a: &Matrix, y: &[f32], ridge: f32) -> Result<Vec<f32>, LinalgError> {
+    if a.rows != y.len() {
+        return Err(LinalgError::Shape(format!(
+            "A has {} rows but y has {}",
+            a.rows,
+            y.len()
+        )));
+    }
+    let mut gram = a.gram();
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += ridge;
+    }
+    let alpha = solve_spd(&gram, y)?;
+    Ok(a.matvec_t(&alpha))
+}
+
+/// Projection of x onto the row space of G (rows = spanning vectors):
+/// P x = G^T (G G^T)^{-1} G x, computed via ridge-regularized Gram solve.
+/// Used for Theorem IV's ||x_t - Pi_{G_t}(x_t)||.
+pub fn project_onto_rowspace(g: &Matrix, x: &[f32], ridge: f32) -> Result<Vec<f32>, LinalgError> {
+    if g.cols != x.len() {
+        return Err(LinalgError::Shape(format!(
+            "G has {} cols but x has {}",
+            g.cols,
+            x.len()
+        )));
+    }
+    let gx = g.matvec(x);
+    let mut gram = g.gram();
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += ridge;
+    }
+    let alpha = solve_spd(&gram, &gx)?;
+    Ok(g.matvec_t(&alpha))
+}
+
+/// Largest eigenvalue of A·Aᵀ via power iteration (used to pick stable
+/// step sizes: for f = ‖Ax−y‖²/n, L = 2·λmax(AᵀA)/n = 2·λmax(AAᵀ)/n).
+pub fn gram_lambda_max(a: &Matrix, iters: usize) -> f64 {
+    let n = a.rows;
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        // w = A (A^T v)
+        let atv = a.matvec_t(&v);
+        let w = a.matvec(&atv);
+        lambda = crate::tensor::norm2(&w);
+        if lambda == 0.0 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = (*wi as f64 / lambda) as f32;
+        }
+    }
+    lambda
+}
+
+/// Distance from x to the row space of G.
+pub fn distance_to_rowspace(g: &Matrix, x: &[f32], ridge: f32) -> Result<f64, LinalgError> {
+    let p = project_onto_rowspace(g, x, ridge)?;
+    let mut diff = vec![0.0f32; x.len()];
+    crate::tensor::sub(x, &p, &mut diff);
+    Ok(crate::tensor::norm2(&diff))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+    use crate::util::Pcg64;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1
+        assert!(matches!(
+            cholesky(&a),
+            Err(LinalgError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn solve_spd_solves() {
+        let a = spd(10, 3);
+        let mut rng = Pcg64::seeded(4);
+        let mut x_true = vec![0.0f32; 10];
+        rng.fill_normal(&mut x_true, 0.0, 1.0);
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (g, e) in x.iter().zip(&x_true) {
+            assert!((g - e).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn min_norm_is_interpolating_and_in_rowspace() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::randn(6, 30, 1.0, &mut rng);
+        let y: Vec<f32> = (0..6).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let x = min_norm_solution(&a, &y, 1e-6).unwrap();
+        // interpolates
+        let pred = a.matvec(&x);
+        for (p, t) in pred.iter().zip(&y) {
+            assert!((p - t).abs() < 1e-3, "{p} vs {t}");
+        }
+        // lies in the row space: distance to rowspace ~ 0
+        let dist = distance_to_rowspace(&a, &x, 1e-8).unwrap();
+        assert!(dist < 1e-3, "dist={dist}");
+    }
+
+    #[test]
+    fn min_norm_has_smallest_norm() {
+        let mut rng = Pcg64::seeded(6);
+        let a = Matrix::randn(4, 20, 1.0, &mut rng);
+        let y = vec![1.0f32, -1.0, 1.0, 1.0];
+        let x_min = min_norm_solution(&a, &y, 1e-8).unwrap();
+        // Any other interpolating solution (min-norm + rowspace-orthogonal
+        // perturbation) has strictly larger norm.
+        for trial in 0..5 {
+            let mut z = vec![0.0f32; 20];
+            let mut rng2 = Pcg64::seeded(100 + trial);
+            rng2.fill_normal(&mut z, 0.0, 1.0);
+            // orthogonalize z against rows of a
+            let proj = project_onto_rowspace(&a, &z, 1e-9).unwrap();
+            tensor::sub_assign(&mut z, &proj);
+            if tensor::norm2(&z) < 1e-6 {
+                continue;
+            }
+            let mut other = x_min.clone();
+            tensor::add_assign(&mut other, &z);
+            // still interpolates
+            let pred = a.matvec(&other);
+            for (p, t) in pred.iter().zip(&y) {
+                assert!((p - t).abs() < 1e-2);
+            }
+            assert!(tensor::norm2(&other) > tensor::norm2(&x_min));
+        }
+    }
+
+    #[test]
+    fn projection_is_idempotent_and_contractive() {
+        let mut rng = Pcg64::seeded(8);
+        let g = Matrix::randn(5, 40, 1.0, &mut rng);
+        let mut x = vec![0.0f32; 40];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let p1 = project_onto_rowspace(&g, &x, 1e-9).unwrap();
+        let p2 = project_onto_rowspace(&g, &p1, 1e-9).unwrap();
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        assert!(tensor::norm2(&p1) <= tensor::norm2(&x) * (1.0 + 1e-6));
+    }
+
+    #[test]
+    fn distance_zero_for_vector_in_span() {
+        let g = Matrix::from_rows(vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 0.0]]);
+        let x = [3.0, -2.0, 0.0];
+        assert!(distance_to_rowspace(&g, &x, 1e-10).unwrap() < 1e-4);
+        let y = [0.0, 0.0, 5.0];
+        assert!((distance_to_rowspace(&g, &y, 1e-10).unwrap() - 5.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,244 @@
+//! `repro`: the leader entrypoint. Subcommands: train (PJRT-backed
+//! distributed training), exp (paper experiments), artifacts, list.
+
+use anyhow::{anyhow, bail, Context, Result};
+use ef_sgd::cli::{Args, USAGE};
+use ef_sgd::config::{CompressorKind, ConfigMap, TrainConfig};
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use ef_sgd::coordinator::worker::{GradSource, Worker, WorkerMode};
+use ef_sgd::coordinator::{Aggregation, LrSchedule};
+use ef_sgd::data::tokens::MarkovCorpus;
+use ef_sgd::experiments::{self, ExpContext};
+use ef_sgd::metrics::sparkline;
+use ef_sgd::runtime::{LmSession, Runtime};
+use ef_sgd::util::Pcg64;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn main() {
+    ef_sgd::logging::init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("exp") => cmd_exp(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("list") => {
+            println!("experiments: {}", experiments::ALL.join(" "));
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn exp_context(args: &Args) -> ExpContext {
+    ExpContext {
+        quick: args.flag("quick"),
+        seed: args.opt_usize("seed").unwrap_or(0) as u64,
+        out_dir: PathBuf::from(args.opt("out").unwrap_or("results")),
+        artifacts_dir: PathBuf::from(args.opt("artifacts").unwrap_or("artifacts")),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let ctx = exp_context(args);
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    if id == "all" {
+        for id in experiments::ALL {
+            let t = std::time::Instant::now();
+            experiments::run(id, &ctx)?;
+            log::info!("experiment {id} done in {:.1}s", t.elapsed().as_secs_f64());
+        }
+    } else {
+        experiments::run(id, &ctx)?;
+    }
+    println!("\nresults written to {}", ctx.out_dir.display());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+    let manifest = ef_sgd::runtime::Manifest::load(&dir).map_err(|e| anyhow!("{e}"))?;
+    for cfg in &manifest.configs {
+        println!(
+            "config {:<8} d={:<9} vocab={:<6} dim={:<5} layers={} seq={} batch={}",
+            cfg.name, cfg.d, cfg.vocab, cfg.dim, cfg.layers, cfg.seq, cfg.batch
+        );
+        for a in &cfg.artifacts {
+            println!(
+                "  {:<24} {:<28} in:{} out:{}",
+                a.name,
+                a.file,
+                a.inputs.len(),
+                a.outputs.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A GradSource backed by the PJRT LM session. Each worker shares the
+/// compiled session (Rc) but owns its token stream (its data shard).
+struct LmWorkerSource {
+    session: Rc<LmSession>,
+    corpus: Rc<MarkovCorpus>,
+    rng: Pcg64,
+    eval_rng: Pcg64,
+}
+
+impl GradSource for LmWorkerSource {
+    fn dim(&self) -> usize {
+        self.session.d()
+    }
+
+    fn grad(&mut self, theta: &[f32], out: &mut [f32]) -> f64 {
+        let (b, s) = self.session.model.token_shape();
+        let tokens = self.corpus.sample_batch(b, s, &mut self.rng);
+        let (loss, grad) = self.session.train_step(theta, &tokens).expect("lm step");
+        out.copy_from_slice(&grad);
+        loss
+    }
+
+    fn eval_loss(&mut self, theta: &[f32]) -> f64 {
+        let (b, s) = self.session.model.token_shape();
+        let tokens = self.corpus.sample_batch(b, s, &mut self.eval_rng);
+        self.session.eval(theta, &tokens).unwrap_or(f64::NAN)
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // config file + --set overrides + a few direct flags
+    let mut map = if let Some(path) = args.opt("config") {
+        ConfigMap::load(Path::new(path)).context("load config")?
+    } else {
+        ConfigMap::default()
+    };
+    for kv in args.opt_all("set") {
+        map.set_kv(kv).map_err(|e| anyhow!("{e}"))?;
+    }
+    let mut cfg = TrainConfig::from_map(&map).map_err(|e| anyhow!("{e}"))?;
+    if let Some(m) = args.opt("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(w) = args.opt_usize("workers") {
+        cfg.workers = w;
+    }
+    if let Some(s) = args.opt_usize("steps") {
+        cfg.steps = s;
+    }
+    if let Some(lr) = args.opt_f64("lr") {
+        cfg.lr = lr;
+    }
+    if let Some(c) = args.opt("compressor") {
+        cfg.compressor =
+            CompressorKind::parse(c).ok_or_else(|| anyhow!("bad compressor '{c}'"))?;
+    }
+    if args.flag("quick") {
+        cfg.steps = cfg.steps.min(20);
+    }
+
+    log::info!(
+        "train: model={} workers={} steps={} lr={} compressor={} ef={}",
+        cfg.model,
+        cfg.workers,
+        cfg.steps,
+        cfg.lr,
+        cfg.compressor.name(),
+        cfg.error_feedback
+    );
+
+    let rt = Runtime::load(Path::new(&cfg.artifacts_dir)).context(
+        "loading artifacts (run `make artifacts` first, or pass --artifacts <dir>)",
+    )?;
+    let session = Rc::new(LmSession::open(&rt, &cfg.model)?);
+    let theta0 = rt.init_params(&session.model).map_err(|e| anyhow!("{e}"))?;
+    let corpus = Rc::new(MarkovCorpus::new(session.model.vocab, 4, cfg.seed));
+
+    let mode = match (cfg.compressor, cfg.error_feedback) {
+        (CompressorKind::None, _) => WorkerMode::DenseGrad,
+        (_, true) => WorkerMode::ErrorFeedback,
+        (_, false) => WorkerMode::PlainCompress,
+    };
+    let workers: Vec<Worker> = (0..cfg.workers)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(LmWorkerSource {
+                    session: session.clone(),
+                    corpus: corpus.clone(),
+                    rng: Pcg64::new(cfg.seed, 1000 + id as u64),
+                    eval_rng: Pcg64::new(cfg.seed, 5000 + id as u64),
+                }),
+                mode,
+                cfg.compressor,
+                cfg.k_frac,
+                cfg.qsgd_levels,
+                Pcg64::new(cfg.seed, id as u64),
+            )
+        })
+        .collect();
+
+    let update_rule = if mode == WorkerMode::DenseGrad {
+        UpdateRule::ServerMomentum {
+            beta_millis: (cfg.momentum * 1000.0) as u32,
+        }
+    } else {
+        UpdateRule::ApplyAggregate
+    };
+    let dcfg = DriverConfig {
+        steps: cfg.steps,
+        schedule: LrSchedule::new(cfg.lr, cfg.steps, cfg.lr_decay_at.clone()),
+        aggregation: Aggregation::parse(&cfg.aggregation)
+            .ok_or_else(|| anyhow!("bad aggregation '{}'", cfg.aggregation))?,
+        update_rule,
+        weight_decay: cfg.weight_decay as f32,
+        log_every: cfg.log_every.max(1),
+        eval_every: cfg.eval_every,
+        ..Default::default()
+    };
+    let driver = TrainDriver::new(dcfg, workers, theta0);
+    let outcome = driver.run();
+
+    let losses = &outcome.recorder.get("train_loss").unwrap().values;
+    println!("\n== training summary ==");
+    println!("  rounds:        {}", outcome.rounds);
+    println!(
+        "  loss:          {:.4} -> {:.4}   {}",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        sparkline(losses, 50)
+    );
+    println!(
+        "  gradient push: {:.3} Mbit ({} compression)",
+        outcome.traffic.bits_of_kind(ef_sgd::net::MessageKind::GradPush) as f64 / 1e6,
+        cfg.compressor.name()
+    );
+    println!("{}", outcome.traffic.summary());
+
+    // persist the run
+    let out = PathBuf::from(args.opt("out").unwrap_or("results"));
+    std::fs::create_dir_all(&out)?;
+    outcome
+        .recorder
+        .write_csv(&out.join(format!("train_{}_{}.csv", cfg.model, cfg.compressor.name())))?;
+    println!("metrics written to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Metric recording for experiments and training runs.
+//!
+//! A [`Recorder`] collects named scalar series keyed by step; writers dump
+//! them as CSV (one column per series) or JSON for the experiment index in
+//! EXPERIMENTS.md. Multi-seed runs aggregate through [`SeriesBundle`]
+//! (mean ± std across repetitions, the paper's shaded-region plots).
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A named scalar time-series.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub steps: Vec<u64>,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.steps.push(step);
+        self.values.push(value);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Minimum value in the series.
+    pub fn min(&self) -> Option<f64> {
+        self.values
+            .iter()
+            .cloned()
+            .fold(None, |m: Option<f64>, v| Some(m.map_or(v, |m| m.min(v))))
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.values
+            .iter()
+            .cloned()
+            .fold(None, |m: Option<f64>, v| Some(m.map_or(v, |m| m.max(v))))
+    }
+}
+
+/// Collects many named series for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Series>,
+    pub tags: BTreeMap<String, String>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn tag(&mut self, key: &str, value: &str) {
+        self.tags.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push(step, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Last value of a series, or NaN.
+    pub fn last(&self, name: &str) -> f64 {
+        self.get(name).and_then(|s| s.last()).unwrap_or(f64::NAN)
+    }
+
+    /// CSV with a `step` column and one column per series (union of steps;
+    /// missing values are empty cells).
+    pub fn to_csv(&self) -> String {
+        let mut steps: Vec<u64> = self
+            .series
+            .values()
+            .flat_map(|s| s.steps.iter().copied())
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        let names: Vec<&String> = self.series.keys().collect();
+        let mut out = String::from("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        // per-series step -> value maps
+        let maps: Vec<BTreeMap<u64, f64>> = names
+            .iter()
+            .map(|n| {
+                let s = &self.series[*n];
+                s.steps.iter().copied().zip(s.values.iter().copied()).collect()
+            })
+            .collect();
+        for step in steps {
+            out.push_str(&step.to_string());
+            for m in &maps {
+                out.push(',');
+                if let Some(v) = m.get(&step) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        obj(vec![
+                            (
+                                "steps",
+                                arr(v.steps.iter().map(|&x| num(x as f64)).collect()),
+                            ),
+                            ("values", arr(v.values.iter().map(|&x| num(x)).collect())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let tags = Json::Obj(
+            self.tags
+                .iter()
+                .map(|(k, v)| (k.clone(), s(v)))
+                .collect(),
+        );
+        obj(vec![("tags", tags), ("series", series)])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string_compact().as_bytes())
+    }
+}
+
+/// Aggregates the same series across repetitions (seeds): mean ± std at
+/// each recorded step — the paper's "solid curve + shaded region".
+#[derive(Clone, Debug, Default)]
+pub struct SeriesBundle {
+    pub runs: Vec<Series>,
+}
+
+impl SeriesBundle {
+    pub fn push(&mut self, s: Series) {
+        self.runs.push(s);
+    }
+
+    /// (steps, mean, std) truncated to the shortest run.
+    pub fn aggregate(&self) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+        if self.runs.is_empty() {
+            return (vec![], vec![], vec![]);
+        }
+        let n = self.runs.iter().map(|r| r.len()).min().unwrap();
+        let steps = self.runs[0].steps[..n].to_vec();
+        let mut means = Vec::with_capacity(n);
+        let mut stds = Vec::with_capacity(n);
+        for i in 0..n {
+            let vals: Vec<f64> = self.runs.iter().map(|r| r.values[i]).collect();
+            means.push(stats::mean(&vals));
+            stds.push(stats::std(&vals));
+        }
+        (steps, means, stds)
+    }
+
+    /// Mean and std of the final value across runs.
+    pub fn final_stats(&self) -> (f64, f64) {
+        let finals: Vec<f64> = self.runs.iter().filter_map(|r| r.last()).collect();
+        (stats::mean(&finals), stats::std(&finals))
+    }
+
+    /// Mean of the per-run maxima (e.g. "best test accuracy", Table 1).
+    pub fn best_stats(&self) -> (f64, f64) {
+        let bests: Vec<f64> = self.runs.iter().filter_map(|r| r.max()).collect();
+        (stats::mean(&bests), stats::std(&bests))
+    }
+}
+
+/// Render an ASCII sparkline of a series — experiment drivers print these so
+/// the loss curves are visible in terminal output / EXPERIMENTS.md.
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let n = values.len();
+    let step = (n as f64 / width.max(1) as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < n && out.chars().count() < width {
+        let v = values[i as usize];
+        let idx = (((v - lo) / span) * 7.0).round() as usize;
+        out.push(GLYPHS[idx.min(7)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_csv() {
+        let mut r = Recorder::new();
+        r.record("loss", 0, 2.0);
+        r.record("loss", 1, 1.5);
+        r.record("acc", 1, 0.4);
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,acc,loss");
+        assert_eq!(lines[1], "0,,2");
+        assert_eq!(lines[2], "1,0.4,1.5");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Recorder::new();
+        r.tag("algo", "ef-signsgd");
+        r.record("loss", 0, 1.0);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.at(&["tags", "algo"]).unwrap().as_str(),
+            Some("ef-signsgd")
+        );
+        assert_eq!(
+            parsed
+                .at(&["series", "loss", "values", "0"])
+                .unwrap()
+                .as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn bundle_aggregates() {
+        let mut b = SeriesBundle::default();
+        for off in 0..3 {
+            let mut s = Series::default();
+            for t in 0..5 {
+                s.push(t, t as f64 + off as f64);
+            }
+            b.push(s);
+        }
+        let (steps, mean, std) = b.aggregate();
+        assert_eq!(steps.len(), 5);
+        assert!((mean[0] - 1.0).abs() < 1e-12);
+        assert!((std[0] - 1.0).abs() < 1e-12);
+        let (fm, _) = b.final_stats();
+        assert!((fm - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparkline_has_width() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64 / 10.0).sin()).collect();
+        let sl = sparkline(&vals, 20);
+        assert_eq!(sl.chars().count(), 20);
+    }
+}

@@ -1,0 +1,142 @@
+//! Over-parameterized least squares, §5.1: f(x) = ‖Ax − y‖² with
+//! A ∈ R^{n×d}, d > n. Used by the Fig. 3 generalization simulation: we
+//! track train loss, test loss, and the distance of the iterate to the
+//! span of the observed gradients.
+
+use super::StochasticObjective;
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+pub struct LeastSquares {
+    pub a: Matrix,
+    pub y: Vec<f32>,
+}
+
+impl LeastSquares {
+    pub fn new(a: Matrix, y: Vec<f32>) -> Self {
+        assert_eq!(a.rows, y.len());
+        LeastSquares { a, y }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Residual r = Ax − y.
+    pub fn residual(&self, x: &[f32]) -> Vec<f32> {
+        let mut r = self.a.matvec(x);
+        for (ri, yi) in r.iter_mut().zip(&self.y) {
+            *ri -= yi;
+        }
+        r
+    }
+
+    /// Loss on another (test) dataset.
+    pub fn loss_on(a: &Matrix, y: &[f32], x: &[f32]) -> f64 {
+        let pred = a.matvec(x);
+        pred.iter()
+            .zip(y)
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / y.len() as f64
+    }
+
+    /// The max-margin (minimum-norm) interpolating solution (Lemma 9).
+    pub fn min_norm_solution(&self) -> Vec<f32> {
+        crate::linalg::min_norm_solution(&self.a, &self.y, 1e-6).expect("gram solve")
+    }
+}
+
+impl StochasticObjective for LeastSquares {
+    fn dim(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Mean squared residual (normalizing makes losses comparable across n).
+    fn loss(&self, x: &[f32]) -> f64 {
+        let r = self.residual(x);
+        crate::tensor::norm2_sq(&r) / self.n() as f64
+    }
+
+    /// Single-row stochastic gradient: n · 2·rᵢ·aᵢ / n = 2·rᵢ·aᵢ for the
+    /// mean-normalized loss (unbiased).
+    fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        let i = rng.below(self.n());
+        let ri = crate::tensor::dot(self.a.row(i), x) as f32 - self.y[i];
+        for (o, aij) in out.iter_mut().zip(self.a.row(i)) {
+            *o = 2.0 * ri * aij;
+        }
+        self.loss(x)
+    }
+
+    /// Full-batch gradient: (2/n) Aᵀ(Ax − y).
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        let r = self.residual(x);
+        let g = self.a.matvec_t(&r);
+        let scale = 2.0 / self.n() as f32;
+        for (o, gi) in out.iter_mut().zip(&g) {
+            *o = scale * gi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+
+    fn small_problem() -> LeastSquares {
+        let mut rng = Pcg64::seeded(0);
+        let a = Matrix::randn(5, 20, 1.0, &mut rng);
+        let y: Vec<f32> = (0..5).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        LeastSquares::new(a, y)
+    }
+
+    #[test]
+    fn zero_loss_at_min_norm_solution() {
+        let p = small_problem();
+        let x = p.min_norm_solution();
+        assert!(p.loss(&x) < 1e-6);
+    }
+
+    #[test]
+    fn full_grad_matches_stochastic_mean() {
+        let p = small_problem();
+        let mut rng = Pcg64::seeded(1);
+        let mut x = vec![0.0f32; p.dim()];
+        rng.fill_normal(&mut x, 0.0, 0.5);
+        let mut fg = vec![0.0f32; p.dim()];
+        p.full_grad(&x, &mut fg);
+        let mut acc = vec![0.0f64; p.dim()];
+        let n = 50_000;
+        let mut g = vec![0.0f32; p.dim()];
+        for _ in 0..n {
+            p.stoch_grad(&x, &mut rng, &mut g);
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                // stochastic grad is 2 r_i a_i = per-example grad of the
+                // SUM loss; the mean-loss full grad is its mean... the
+                // stochastic estimate targets (2/n)sum = full_grad * ...
+                *a += *gi as f64 / n as f64;
+            }
+        }
+        // E[stoch] = (1/n) sum_i 2 r_i a_i = full_grad of mean loss * 1
+        for (a, f) in acc.iter().zip(&fg) {
+            assert!((a - *f as f64).abs() < 0.05, "{a} vs {f}");
+        }
+    }
+
+    #[test]
+    fn gradient_descent_interpolates() {
+        let p = small_problem();
+        let mut x = vec![0.0f32; p.dim()];
+        let mut g = vec![0.0f32; p.dim()];
+        for _ in 0..2000 {
+            p.full_grad(&x, &mut g);
+            tensor::axpy(-0.05, &g, &mut x);
+        }
+        assert!(p.loss(&x) < 1e-8, "loss={}", p.loss(&x));
+        // GD from 0 converges to the min-norm solution (Lemma 9)
+        let mn = p.min_norm_solution();
+        assert!(tensor::rel_l2(&x, &mn) < 1e-2);
+    }
+}

@@ -1,0 +1,331 @@
+//! A fully-connected ReLU classifier with manual backprop over a flat
+//! parameter vector — the native workhorse of the CIFAR-simulation sweeps
+//! (Fig. 4/6/7, Tables 1/3/4) where hundreds of runs are needed.
+
+use super::StochasticObjective;
+use crate::data::synth_class::Dataset;
+use crate::tensor;
+use crate::util::Pcg64;
+
+/// Architecture: in_dim -> hidden[0] -> ... -> classes, ReLU activations.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub in_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+impl MlpConfig {
+    /// (in, out) per layer.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::new();
+        let mut prev = self.in_dim;
+        for &h in &self.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, self.classes));
+        dims
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layer_dims().iter().map(|(i, o)| i * o + o).sum()
+    }
+}
+
+/// The model itself: stateless apart from the config; parameters live in a
+/// caller-owned flat vector (matching the coordinator's view).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub cfg: MlpConfig,
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig) -> Self {
+        Mlp { cfg }
+    }
+
+    /// He-initialized flat parameter vector.
+    pub fn init_params(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.cfg.num_params()];
+        let mut off = 0;
+        for (fan_in, fan_out) in self.cfg.layer_dims() {
+            let std = (2.0 / fan_in as f64).sqrt();
+            rng.fill_normal(&mut theta[off..off + fan_in * fan_out], 0.0, std);
+            off += fan_in * fan_out + fan_out; // biases stay zero
+        }
+        theta
+    }
+
+    /// Forward pass for one example; returns per-layer pre-activations and
+    /// activations (needed by backprop) and the logits.
+    fn forward_cache(&self, theta: &[f32], x: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut off = 0;
+        let dims = self.cfg.layer_dims();
+        for (li, (fan_in, fan_out)) in dims.iter().enumerate() {
+            let w = &theta[off..off + fan_in * fan_out];
+            let b = &theta[off + fan_in * fan_out..off + fan_in * fan_out + fan_out];
+            off += fan_in * fan_out + fan_out;
+            let input = acts.last().unwrap();
+            let mut z = vec![0.0f32; *fan_out];
+            for i in 0..*fan_in {
+                let xi = input[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &w[i * fan_out..(i + 1) * fan_out];
+                tensor::axpy(xi, row, &mut z);
+            }
+            tensor::add_assign(&mut z, b);
+            if li + 1 < dims.len() {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0); // ReLU
+                }
+            }
+            acts.push(z);
+        }
+        let logits = acts.last().unwrap().clone();
+        (acts, logits)
+    }
+
+    /// Softmax cross-entropy loss of logits vs label.
+    fn ce_loss(logits: &[f32], label: usize) -> (f64, Vec<f32>) {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = logits.iter().map(|v| ((v - max) as f64).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        let loss = -(exps[label] / sum).ln();
+        let mut dlogits: Vec<f32> = exps.iter().map(|e| (e / sum) as f32).collect();
+        dlogits[label] -= 1.0;
+        (loss, dlogits)
+    }
+
+    /// Mean loss + gradient over a batch of examples; returns mean loss.
+    pub fn grad_batch(
+        &self,
+        theta: &[f32],
+        xs: &[&[f32]],
+        ys: &[usize],
+        grad: &mut [f32],
+    ) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(grad.len(), theta.len());
+        tensor::zero(grad);
+        let mut total = 0.0f64;
+        let dims = self.cfg.layer_dims();
+        // parameter offsets per layer
+        let mut offsets = Vec::with_capacity(dims.len());
+        let mut off = 0;
+        for (fi, fo) in &dims {
+            offsets.push(off);
+            off += fi * fo + fo;
+        }
+        let scale = 1.0 / xs.len() as f32;
+        for (x, &label) in xs.iter().zip(ys) {
+            let (acts, logits) = self.forward_cache(theta, x);
+            let (loss, mut delta) = Self::ce_loss(&logits, label);
+            total += loss;
+            // backward
+            for li in (0..dims.len()).rev() {
+                let (fan_in, fan_out) = dims[li];
+                let w_off = offsets[li];
+                let input = &acts[li];
+                // dW += input^T delta ; db += delta
+                for i in 0..fan_in {
+                    let xi = input[i];
+                    if xi != 0.0 {
+                        let row = &mut grad[w_off + i * fan_out..w_off + (i + 1) * fan_out];
+                        tensor::axpy(scale * xi, &delta, row);
+                    }
+                }
+                let b_off = w_off + fan_in * fan_out;
+                tensor::axpy(scale, &delta, &mut grad[b_off..b_off + fan_out]);
+                if li == 0 {
+                    break;
+                }
+                // dInput = W delta, masked by ReLU'
+                let w = &theta[w_off..w_off + fan_in * fan_out];
+                let mut dinput = vec![0.0f32; fan_in];
+                for i in 0..fan_in {
+                    if input[i] > 0.0 {
+                        dinput[i] =
+                            tensor::dot(&w[i * fan_out..(i + 1) * fan_out], &delta) as f32;
+                    }
+                }
+                delta = dinput;
+            }
+        }
+        total / xs.len() as f64
+    }
+
+    /// Mean loss over a batch (no gradient).
+    pub fn loss_batch(&self, theta: &[f32], xs: &[&[f32]], ys: &[usize]) -> f64 {
+        let mut total = 0.0f64;
+        for (x, &label) in xs.iter().zip(ys) {
+            let (_, logits) = self.forward_cache(theta, x);
+            total += Self::ce_loss(&logits, label).0;
+        }
+        total / xs.len() as f64
+    }
+
+    /// Classification accuracy over a dataset.
+    pub fn accuracy(&self, theta: &[f32], data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let (_, logits) = self.forward_cache(theta, data.x.row(i));
+            // diverged runs produce NaN logits; count those as wrong
+            let pred = crate::util::stats::argmax(
+                &logits.iter().map(|v| *v as f64).collect::<Vec<_>>(),
+            )
+            .unwrap_or(usize::MAX);
+            if pred == data.y[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len() as f64
+    }
+
+    /// Mean loss over a dataset.
+    pub fn dataset_loss(&self, theta: &[f32], data: &Dataset) -> f64 {
+        let xs: Vec<&[f32]> = (0..data.len()).map(|i| data.x.row(i)).collect();
+        self.loss_batch(theta, &xs, &data.y)
+    }
+}
+
+/// Minibatch objective over a dataset (the GradSource for the CIFAR sims).
+pub struct MlpObjective {
+    pub mlp: Mlp,
+    pub data: Dataset,
+    pub batch_size: usize,
+}
+
+impl MlpObjective {
+    pub fn new(mlp: Mlp, data: Dataset, batch_size: usize) -> Self {
+        assert!(batch_size >= 1);
+        MlpObjective {
+            mlp,
+            data,
+            batch_size,
+        }
+    }
+}
+
+impl StochasticObjective for MlpObjective {
+    fn dim(&self) -> usize {
+        self.mlp.cfg.num_params()
+    }
+
+    fn loss(&self, theta: &[f32]) -> f64 {
+        self.mlp.dataset_loss(theta, &self.data)
+    }
+
+    fn stoch_grad(&self, theta: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        let b = self.batch_size.min(self.data.len());
+        let idxs = rng.sample_indices(self.data.len(), b);
+        let xs: Vec<&[f32]> = idxs.iter().map(|&i| self.data.x.row(i)).collect();
+        let ys: Vec<usize> = idxs.iter().map(|&i| self.data.y[i]).collect();
+        self.mlp.grad_batch(theta, &xs, &ys, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_class::Dataset;
+    use crate::tensor::Matrix;
+
+    fn tiny_mlp() -> Mlp {
+        Mlp::new(MlpConfig {
+            in_dim: 4,
+            hidden: vec![8],
+            classes: 3,
+        })
+    }
+
+    #[test]
+    fn param_count() {
+        let m = tiny_mlp();
+        assert_eq!(m.cfg.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = tiny_mlp();
+        let mut rng = Pcg64::seeded(0);
+        let theta = m.init_params(&mut rng);
+        let x: Vec<f32> = (0..4).map(|i| 0.3 * (i as f32 + 1.0)).collect();
+        let xs = [x.as_slice()];
+        let ys = [1usize];
+        let mut grad = vec![0.0f32; theta.len()];
+        m.grad_batch(&theta, &xs, &ys, &mut grad);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for i in (0..theta.len()).step_by(7) {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd =
+                (m.loss_batch(&tp, &xs, &ys) - m.loss_batch(&tm, &xs, &ys)) / (2.0 * eps as f64);
+            assert!(
+                (fd - grad[i] as f64).abs() < 1e-3 + 0.05 * fd.abs(),
+                "coord {i}: fd {fd} vs ad {}",
+                grad[i]
+            );
+            checked += 1;
+        }
+        assert!(checked > 5);
+    }
+
+    #[test]
+    fn batch_grad_is_mean_of_singles() {
+        let m = tiny_mlp();
+        let mut rng = Pcg64::seeded(1);
+        let theta = m.init_params(&mut rng);
+        let x1: Vec<f32> = vec![1.0, -0.5, 0.2, 0.0];
+        let x2: Vec<f32> = vec![-1.0, 0.5, 0.4, 1.0];
+        let mut g1 = vec![0.0f32; theta.len()];
+        let mut g2 = vec![0.0f32; theta.len()];
+        let mut gb = vec![0.0f32; theta.len()];
+        m.grad_batch(&theta, &[&x1], &[0], &mut g1);
+        m.grad_batch(&theta, &[&x2], &[2], &mut g2);
+        m.grad_batch(&theta, &[&x1, &x2], &[0, 2], &mut gb);
+        for i in 0..theta.len() {
+            let mean = 0.5 * (g1[i] + g2[i]);
+            assert!((gb[i] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn trains_on_separable_data() {
+        // Linearly separable 2-class problem: accuracy should reach ~100%.
+        let mut rng = Pcg64::seeded(2);
+        let n = 60;
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let label = i % 2;
+            let center = if label == 0 { -2.0f32 } else { 2.0 };
+            rows.push(vec![
+                center + rng.normal() as f32 * 0.3,
+                center + rng.normal() as f32 * 0.3,
+            ]);
+            labels.push(label);
+        }
+        let data = Dataset::new(Matrix::from_rows(rows), labels, 2);
+        let mlp = Mlp::new(MlpConfig {
+            in_dim: 2,
+            hidden: vec![8],
+            classes: 2,
+        });
+        let mut theta = mlp.init_params(&mut rng);
+        let obj = MlpObjective::new(mlp.clone(), data.clone(), 16);
+        let mut g = vec![0.0f32; theta.len()];
+        for _ in 0..300 {
+            obj.stoch_grad(&theta, &mut rng, &mut g);
+            tensor::axpy(-0.1, &g, &mut theta);
+        }
+        assert!(mlp.accuracy(&theta, &data) > 0.95);
+        assert!(mlp.dataset_loss(&theta, &data) < 0.2);
+    }
+}

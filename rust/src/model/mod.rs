@@ -1,0 +1,43 @@
+//! Native Rust models: the counterexample problems of §3, the
+//! over-parameterized least-squares of §5, the sparse-noise quadratic of
+//! Appendix A.1, and an MLP classifier with manual backprop used by the
+//! CIFAR-simulation sweeps (running hundreds of training runs through the
+//! PJRT transformer would be wallclock-prohibitive; the phenomena are
+//! optimizer-level — see DESIGN.md substitutions).
+
+pub mod least_squares;
+pub mod mlp;
+pub mod toy;
+
+pub use least_squares::LeastSquares;
+pub use mlp::{Mlp, MlpConfig};
+
+use crate::util::Pcg64;
+
+/// A differentiable objective with stochastic gradients over a flat
+/// parameter vector — the native counterpart of the L2 artifact interface.
+pub trait StochasticObjective {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Full-batch objective value.
+    fn loss(&self, x: &[f32]) -> f64;
+
+    /// Sample a stochastic gradient at `x` into `out`; returns the
+    /// minibatch loss.
+    fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64;
+
+    /// Full-batch (deterministic) gradient, if cheap. Default: average many
+    /// stochastic draws (used only by tests).
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        let mut rng = Pcg64::seeded(0);
+        let mut tmp = vec![0.0f32; self.dim()];
+        crate::tensor::zero(out);
+        let n = 256;
+        for _ in 0..n {
+            self.stoch_grad(x, &mut rng, &mut tmp);
+            crate::tensor::add_assign(out, &tmp);
+        }
+        crate::tensor::scale(1.0 / n as f32, out);
+    }
+}

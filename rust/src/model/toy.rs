@@ -1,0 +1,367 @@
+//! The paper's pedagogic problems, §3 and Appendix A.1.
+//!
+//! * [`Ce1Linear`] — Counterexample 1: f(x) = x/4 on [−1,1] with the
+//!   bimodal stochastic gradient g ∈ {4 w.p. ¼, −1 w.p. ¾} (E[g] = ¼).
+//! * [`Ce2NonSmooth`] — Counterexample 2 / Fig. 1: f(x) = ε|x₁+x₂| +
+//!   |x₁−x₂| with subgradient oracle; SIGNSGD is trapped on x₁+x₂ = const.
+//! * [`Ce3LeastSquares`] — Counterexample 3: the smooth 2-D least-squares
+//!   version with stochastic row sampling.
+//! * [`SharedSignTheorem1`] — Theorem I's construction for general d:
+//!   rows aᵢ = ±s ⊙ |rᵢ| share the sign pattern s.
+//! * [`SparseNoiseQuadratic`] — Appendix A.1 / Fig. 5: f(x) = ½‖x‖² with
+//!   N(0, 100²) noise on the first coordinate only.
+
+use super::StochasticObjective;
+use crate::util::Pcg64;
+
+// ---------------------------------------------------------------- CE 1
+
+/// Counterexample 1: minimize f(x) = x/4 over [−1, 1].
+pub struct Ce1Linear;
+
+impl Ce1Linear {
+    /// Projection onto the feasible box.
+    pub fn project(x: &mut [f32]) {
+        x[0] = x[0].clamp(-1.0, 1.0);
+    }
+
+    pub const OPT: f64 = -0.25; // f(-1)
+}
+
+impl StochasticObjective for Ce1Linear {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        0.25 * x[0] as f64
+    }
+
+    fn stoch_grad(&self, _x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        // g = 4 w.p. 1/4, −1 w.p. 3/4; E[g] = 1/4 = f'(x).
+        out[0] = if rng.uniform() < 0.25 { 4.0 } else { -1.0 };
+        f64::NAN
+    }
+
+    fn full_grad(&self, _x: &[f32], out: &mut [f32]) {
+        out[0] = 0.25;
+    }
+}
+
+// ---------------------------------------------------------------- CE 2
+
+/// Counterexample 2: f(x) = ε|x₁+x₂| + |x₁−x₂| (non-smooth, convex,
+/// minimum at the origin). The full subgradient is available.
+pub struct Ce2NonSmooth {
+    pub eps: f32,
+}
+
+impl Ce2NonSmooth {
+    pub fn new(eps: f32) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Ce2NonSmooth { eps }
+    }
+
+    /// The subgradient of §3: sign(x₁+x₂)·ε·(1,1) + sign(x₁−x₂)·(1,−1).
+    /// At ties (x₁ = x₂) we select the subgradient with sign = +1 — a valid
+    /// element of the subdifferential, and the selection under which the
+    /// paper's claim "sign(g) = ±(1,−1) whenever x₁+x₂ > 0" holds at every
+    /// point (so the SIGNSGD trap is exact, not just almost-sure).
+    pub fn subgrad(&self, x: &[f32], out: &mut [f32]) {
+        let s = (x[0] + x[1]).signum_or_zero();
+        let t = if x[0] >= x[1] { 1.0 } else { -1.0 };
+        out[0] = self.eps * s + t;
+        out[1] = self.eps * s - t;
+    }
+}
+
+trait SignumOrZero {
+    fn signum_or_zero(self) -> f32;
+}
+
+impl SignumOrZero for f32 {
+    fn signum_or_zero(self) -> f32 {
+        if self > 0.0 {
+            1.0
+        } else if self < 0.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+impl StochasticObjective for Ce2NonSmooth {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        (self.eps * (x[0] + x[1]).abs() + (x[0] - x[1]).abs()) as f64
+    }
+
+    fn stoch_grad(&self, x: &[f32], _rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        self.subgrad(x, out);
+        self.loss(x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        self.subgrad(x, out);
+    }
+}
+
+// ---------------------------------------------------------------- CE 3
+
+/// Counterexample 3: f(x) = ⟨a₁,x⟩² + ⟨a₂,x⟩² with
+/// a₁,₂ = ±(1,−1) + ε(1,1); stochastic gradient picks one row.
+pub struct Ce3LeastSquares {
+    pub a1: [f32; 2],
+    pub a2: [f32; 2],
+}
+
+impl Ce3LeastSquares {
+    pub fn new(eps: f32) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Ce3LeastSquares {
+            a1: [1.0 + eps, -1.0 + eps],
+            a2: [-1.0 + eps, 1.0 + eps],
+        }
+    }
+}
+
+impl StochasticObjective for Ce3LeastSquares {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        let d1 = (self.a1[0] * x[0] + self.a1[1] * x[1]) as f64;
+        let d2 = (self.a2[0] * x[0] + self.a2[1] * x[1]) as f64;
+        d1 * d1 + d2 * d2
+    }
+
+    fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        // With prob 1/2, grad of 2*<a_i,x>^2: note the paper's f has no 1/2
+        // factor, and each term is sampled w.p. 1/2, so the unbiased
+        // stochastic gradient is 2 * 2 <a_i, x> a_i * (1/2 normalization
+        // folded in): g = 4<a_i,x> a_i would be E-correct for sum sampling
+        // with p=1/2 each — we sample i and return the gradient of
+        // 2*(<a_i,x>)^2 so E[g] = grad f.
+        let a = if rng.bernoulli(0.5) { &self.a1 } else { &self.a2 };
+        let inner = a[0] * x[0] + a[1] * x[1];
+        out[0] = 4.0 * inner * a[0];
+        out[1] = 4.0 * inner * a[1];
+        self.loss(x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        let i1 = self.a1[0] * x[0] + self.a1[1] * x[1];
+        let i2 = self.a2[0] * x[0] + self.a2[1] * x[1];
+        out[0] = 2.0 * (i1 * self.a1[0] + i2 * self.a2[0]);
+        out[1] = 2.0 * (i1 * self.a1[1] + i2 * self.a2[1]);
+    }
+}
+
+// ------------------------------------------------------------ Theorem I
+
+/// Theorem I's family: f(x) = Σᵢ ⟨aᵢ,x⟩² where sign(aᵢ) = ±s for a shared
+/// pattern s ∈ {−1,1}^d. SIGNSGD's iterates can only move along ±s, so it
+/// almost surely never reaches the optimum from a random start.
+pub struct SharedSignTheorem1 {
+    pub rows: Vec<Vec<f32>>,
+    d: usize,
+}
+
+impl SharedSignTheorem1 {
+    /// Build n rows over dimension d with shared sign pattern.
+    pub fn new(n: usize, d: usize, rng: &mut Pcg64) -> Self {
+        assert!(d >= 2 && n >= d, "need n >= d for a unique optimum");
+        let s: Vec<f32> = (0..d).map(|_| rng.sign() as f32).collect();
+        let rows = (0..n)
+            .map(|_| {
+                let flip = rng.sign() as f32;
+                (0..d)
+                    .map(|j| flip * s[j] * (0.2 + rng.uniform() as f32))
+                    .collect()
+            })
+            .collect();
+        SharedSignTheorem1 { rows, d }
+    }
+}
+
+impl StochasticObjective for SharedSignTheorem1 {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        self.rows
+            .iter()
+            .map(|a| {
+                let inner: f64 = a.iter().zip(x).map(|(ai, xi)| (*ai * *xi) as f64).sum();
+                inner * inner
+            })
+            .sum()
+    }
+
+    fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        let n = self.rows.len();
+        let a = &self.rows[rng.below(n)];
+        let inner: f32 = a.iter().zip(x).map(|(ai, xi)| ai * xi).sum();
+        // grad of n * <a_i, x>^2 (importance-weighted so E[g] = grad f)
+        for (o, ai) in out.iter_mut().zip(a) {
+            *o = 2.0 * n as f32 * inner * ai;
+        }
+        self.loss(x)
+    }
+}
+
+// -------------------------------------------------- sparse-noise toy
+
+/// Appendix A.1 / Fig. 5: f(x) = ½‖x‖², ∇f = x, stochastic gradient adds
+/// N(0, noise_std²) to the FIRST coordinate only.
+pub struct SparseNoiseQuadratic {
+    pub d: usize,
+    pub noise_std: f64,
+}
+
+impl SparseNoiseQuadratic {
+    pub fn new(d: usize, noise_std: f64) -> Self {
+        SparseNoiseQuadratic { d, noise_std }
+    }
+}
+
+impl StochasticObjective for SparseNoiseQuadratic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        0.5 * crate::tensor::norm2_sq(x)
+    }
+
+    fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
+        out.copy_from_slice(x);
+        out[0] += rng.normal_ms(0.0, self.noise_std) as f32;
+        self.loss(x)
+    }
+
+    fn full_grad(&self, x: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce1_gradient_is_unbiased() {
+        let mut rng = Pcg64::seeded(0);
+        let mut g = [0.0f32];
+        let n = 200_000;
+        let mean: f64 = (0..n)
+            .map(|_| {
+                Ce1Linear.stoch_grad(&[0.0], &mut rng, &mut g);
+                g[0] as f64
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn ce1_sign_of_gradient_is_usually_negative() {
+        // E[sign(g)] = 1/4 - 3/4 = -1/2: signSGD moves x UP toward +1,
+        // increasing f — the crux of the counterexample.
+        let mut rng = Pcg64::seeded(1);
+        let mut g = [0.0f32];
+        let n = 100_000;
+        let mean_sign: f64 = (0..n)
+            .map(|_| {
+                Ce1Linear.stoch_grad(&[0.0], &mut rng, &mut g);
+                g[0].signum() as f64
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean_sign + 0.5).abs() < 0.01, "{mean_sign}");
+    }
+
+    #[test]
+    fn ce2_subgradient_matches_paper() {
+        let p = Ce2NonSmooth::new(0.5);
+        let mut g = [0.0f32; 2];
+        p.subgrad(&[1.0, 1.0], &mut g); // tie: subgradient choice t=+1
+        assert_eq!(g, [1.5, -0.5]);
+        p.subgrad(&[2.0, 0.0], &mut g); // both positive
+        assert_eq!(g, [1.5, -0.5]);
+        assert!((p.loss(&[0.0, 0.0])).abs() < 1e-12);
+        assert!(p.loss(&[1.0, 1.0]) > 0.0);
+    }
+
+    #[test]
+    fn ce2_sign_trap() {
+        // For x with x1+x2 > 0 and x1 != x2, sign(g) = ±(1,-1): the signSGD
+        // update never changes x1+x2.
+        let p = Ce2NonSmooth::new(0.5);
+        let mut g = [0.0f32; 2];
+        for x in [[2.0f32, 0.0], [0.0, 2.0], [1.5, 0.5], [1.0, 1.0]] {
+            p.subgrad(&x, &mut g);
+            let s = [g[0].signum(), g[1].signum()];
+            assert_eq!(s[0] + s[1], 0.0, "sign pattern must be (±1, ∓1)");
+        }
+    }
+
+    #[test]
+    fn ce3_full_grad_consistent_with_stochastic_mean() {
+        let p = Ce3LeastSquares::new(0.3);
+        let x = [0.7f32, -0.2];
+        let mut fg = [0.0f32; 2];
+        p.full_grad(&x, &mut fg);
+        let mut rng = Pcg64::seeded(2);
+        let mut acc = [0.0f64; 2];
+        let n = 100_000;
+        let mut g = [0.0f32; 2];
+        for _ in 0..n {
+            p.stoch_grad(&x, &mut rng, &mut g);
+            acc[0] += g[0] as f64 / n as f64;
+            acc[1] += g[1] as f64 / n as f64;
+        }
+        assert!((acc[0] - fg[0] as f64).abs() < 0.05, "{acc:?} vs {fg:?}");
+        assert!((acc[1] - fg[1] as f64).abs() < 0.05);
+    }
+
+    #[test]
+    fn thm1_rows_share_sign_pattern() {
+        let mut rng = Pcg64::seeded(3);
+        let p = SharedSignTheorem1::new(8, 4, &mut rng);
+        let s0: Vec<f32> = p.rows[0].iter().map(|v| v.signum()).collect();
+        for row in &p.rows {
+            let s: Vec<f32> = row.iter().map(|v| v.signum()).collect();
+            let same = s.iter().zip(&s0).all(|(a, b)| a == b);
+            let flipped = s.iter().zip(&s0).all(|(a, b)| *a == -*b);
+            assert!(same || flipped);
+        }
+    }
+
+    #[test]
+    fn thm1_unique_optimum_at_zero() {
+        let mut rng = Pcg64::seeded(4);
+        let p = SharedSignTheorem1::new(10, 3, &mut rng);
+        assert!(p.loss(&[0.0, 0.0, 0.0]) < 1e-12);
+        assert!(p.loss(&[0.1, 0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn sparse_noise_only_first_coordinate() {
+        let p = SparseNoiseQuadratic::new(10, 100.0);
+        let x = vec![1.0f32; 10];
+        let mut rng = Pcg64::seeded(5);
+        let mut g = vec![0.0f32; 10];
+        p.stoch_grad(&x, &mut rng, &mut g);
+        for v in &g[1..] {
+            assert_eq!(*v, 1.0);
+        }
+        assert!((g[0] - 1.0).abs() > 1.0); // noise almost surely large
+    }
+}

@@ -1,0 +1,113 @@
+//! Exact traffic accounting: bits per (src → dst) link, per message kind,
+//! plus a simulated clock per node integrating link transfer times.
+
+use super::message::MessageKind;
+use std::collections::BTreeMap;
+
+/// Aggregated traffic statistics for one fabric.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficStats {
+    /// Total bits per (src, dst) pair.
+    pub per_link: BTreeMap<(usize, usize), u64>,
+    /// Total bits per message kind.
+    pub per_kind: BTreeMap<MessageKind, u64>,
+    /// Message count per kind.
+    pub msg_count: BTreeMap<MessageKind, u64>,
+    /// Simulated busy-time per node (seconds of link occupancy).
+    pub node_time_s: BTreeMap<usize, f64>,
+    /// Total bits over all links.
+    pub total_bits: u64,
+    /// Total simulated communication time if all transfers were serial.
+    pub serial_time_s: f64,
+}
+
+impl TrafficStats {
+    pub fn record(&mut self, src: usize, dst: usize, kind: MessageKind, bits: u64, time_s: f64) {
+        *self.per_link.entry((src, dst)).or_default() += bits;
+        *self.per_kind.entry(kind).or_default() += bits;
+        *self.msg_count.entry(kind).or_default() += 1;
+        *self.node_time_s.entry(src).or_default() += time_s;
+        *self.node_time_s.entry(dst).or_default() += time_s;
+        self.total_bits += bits;
+        self.serial_time_s += time_s;
+    }
+
+    /// Bits sent from a node (upload).
+    pub fn sent_by(&self, node: usize) -> u64 {
+        self.per_link
+            .iter()
+            .filter(|((s, _), _)| *s == node)
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
+    /// Bits received by a node (download).
+    pub fn received_by(&self, node: usize) -> u64 {
+        self.per_link
+            .iter()
+            .filter(|((_, d), _)| *d == node)
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
+    pub fn bits_of_kind(&self, kind: MessageKind) -> u64 {
+        self.per_kind.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Max simulated busy-time over nodes — a lower bound on the wall-clock
+    /// communication time of the round set.
+    pub fn critical_path_s(&self) -> f64 {
+        self.node_time_s.values().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "total {:.3} Mbit over {} links; critical path {:.3} ms\n",
+            self.total_bits as f64 / 1e6,
+            self.per_link.len(),
+            self.critical_path_s() * 1e3
+        );
+        for (kind, bits) in &self.per_kind {
+            out.push_str(&format!(
+                "  {:<16} {:>12.3} Mbit in {:>6} msgs\n",
+                kind.name(),
+                *bits as f64 / 1e6,
+                self.msg_count.get(kind).unwrap_or(&0)
+            ));
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        *self = TrafficStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut t = TrafficStats::default();
+        t.record(0, 1, MessageKind::GradPush, 1000, 0.5);
+        t.record(1, 0, MessageKind::ParamBroadcast, 2000, 0.25);
+        t.record(0, 2, MessageKind::GradPush, 500, 0.1);
+        assert_eq!(t.total_bits, 3500);
+        assert_eq!(t.sent_by(0), 1500);
+        assert_eq!(t.received_by(0), 2000);
+        assert_eq!(t.bits_of_kind(MessageKind::GradPush), 1500);
+        assert_eq!(t.msg_count[&MessageKind::GradPush], 2);
+        assert!((t.critical_path_s() - 0.85).abs() < 1e-12);
+        assert!(t.summary().contains("grad_push"));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut t = TrafficStats::default();
+        t.record(0, 1, MessageKind::Control, 10, 0.1);
+        t.reset();
+        assert_eq!(t.total_bits, 0);
+        assert!(t.per_link.is_empty());
+    }
+}

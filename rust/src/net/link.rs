@@ -1,0 +1,79 @@
+//! Link performance model: fixed latency + bandwidth-limited serialization,
+//! `t(bits) = latency + bits / bandwidth`.
+//!
+//! Defaults model a 10 GbE datacenter link (the regime of Seide et al. and
+//! the paper's motivation); presets for faster/slower fabrics let the
+//! comm experiment sweep the crossover where compression stops mattering.
+
+/// Per-link performance model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0);
+        assert!(latency_s >= 0.0);
+        LinkModel {
+            bandwidth_bps,
+            latency_s,
+        }
+    }
+
+    /// 10 GbE with 50 µs latency (commodity datacenter, the paper's regime).
+    pub fn ten_gbe() -> Self {
+        LinkModel::new(10e9, 50e-6)
+    }
+
+    /// 1 GbE with 100 µs latency (the Strom-2015 commodity-cloud regime).
+    pub fn one_gbe() -> Self {
+        LinkModel::new(1e9, 100e-6)
+    }
+
+    /// 100 Gb InfiniBand-class link with 2 µs latency.
+    pub fn infiniband() -> Self {
+        LinkModel::new(100e9, 2e-6)
+    }
+
+    /// Transfer time for a message of `bits`.
+    pub fn transfer_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.bandwidth_bps
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel::ten_gbe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = LinkModel::new(1e9, 1e-4);
+        let t = l.transfer_time(1_000_000);
+        assert!((t - (1e-4 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bits_costs_latency() {
+        let l = LinkModel::ten_gbe();
+        assert_eq!(l.transfer_time(0), l.latency_s);
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let bits = 32 * 25_000_000u64; // 100 MB of gradients
+        assert!(
+            LinkModel::infiniband().transfer_time(bits) < LinkModel::ten_gbe().transfer_time(bits)
+        );
+        assert!(LinkModel::ten_gbe().transfer_time(bits) < LinkModel::one_gbe().transfer_time(bits));
+    }
+}

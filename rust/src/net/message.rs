@@ -1,0 +1,90 @@
+//! Message framing for the simulated fabric.
+
+use crate::compress::wire::Encoded;
+
+/// What a message carries.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// An encoded (possibly compressed) gradient/update.
+    Grad(Encoded),
+    /// A dense parameter broadcast (raw f32).
+    Params(Vec<f32>),
+    /// Control traffic (round barriers etc.) with a nominal size.
+    Control(u64),
+}
+
+impl Payload {
+    /// Exact payload size in bits.
+    pub fn bits(&self) -> u64 {
+        match self {
+            Payload::Grad(e) => e.bits,
+            Payload::Params(v) => 32 * v.len() as u64,
+            Payload::Control(bits) => *bits,
+        }
+    }
+}
+
+/// Traffic classification for the accounting breakdowns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MessageKind {
+    GradPush,
+    ParamBroadcast,
+    Control,
+}
+
+impl MessageKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MessageKind::GradPush => "grad_push",
+            MessageKind::ParamBroadcast => "param_broadcast",
+            MessageKind::Control => "control",
+        }
+    }
+}
+
+/// A routed message. Framing overhead (headers) is a fixed 64 bytes,
+/// matching a TCP/IP+Ethernet header budget.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub src: usize,
+    pub dst: usize,
+    pub round: u64,
+    pub kind: MessageKind,
+    pub payload: Payload,
+}
+
+/// Fixed per-message framing overhead in bits.
+pub const FRAME_OVERHEAD_BITS: u64 = 64 * 8;
+
+impl Message {
+    /// Total on-wire size: payload + framing.
+    pub fn wire_bits(&self) -> u64 {
+        self.payload.bits() + FRAME_OVERHEAD_BITS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::wire::encode_scaled_sign;
+
+    #[test]
+    fn payload_bits() {
+        assert_eq!(Payload::Params(vec![0.0; 10]).bits(), 320);
+        assert_eq!(Payload::Control(100).bits(), 100);
+        let e = encode_scaled_sign(&vec![1.0f32; 64]);
+        assert_eq!(Payload::Grad(e).bits(), 64 + 32);
+    }
+
+    #[test]
+    fn wire_bits_include_framing() {
+        let m = Message {
+            src: 0,
+            dst: 1,
+            round: 0,
+            kind: MessageKind::Control,
+            payload: Payload::Control(8),
+        };
+        assert_eq!(m.wire_bits(), 8 + FRAME_OVERHEAD_BITS);
+    }
+}

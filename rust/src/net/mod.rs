@@ -1,0 +1,20 @@
+//! Simulated network fabric.
+//!
+//! The paper's communication claims (the ~64× reduction, and the shape of
+//! the time-to-accuracy tradeoff) are properties of *what goes on the
+//! wire*. Real NICs are not available here, so the fabric models them:
+//! every message carries an exact bit count (from the wire codecs in
+//! [`crate::compress::wire`]), every link has a bandwidth/latency model,
+//! and the accounting layer integrates transfer times into a simulated
+//! clock per node. The collectives and the coordinator route all gradient
+//! traffic through this fabric — nothing is exchanged "for free".
+
+pub mod accounting;
+pub mod fabric;
+pub mod link;
+pub mod message;
+
+pub use accounting::TrafficStats;
+pub use fabric::Fabric;
+pub use link::LinkModel;
+pub use message::{Message, MessageKind, Payload};

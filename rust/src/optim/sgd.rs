@@ -1,0 +1,120 @@
+//! Plain SGD and SGD-with-momentum (the paper's SGDM baseline).
+
+use super::Optimizer;
+use crate::tensor;
+
+/// `x ← x − γ g`.
+pub struct Sgd {
+    lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        tensor::axpy(-self.lr, g, x);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Heavy-ball momentum: `m ← g + β m; x ← x − γ m` (PyTorch convention,
+/// matching the paper's SGDM with β = 0.9).
+pub struct Sgdm {
+    lr: f32,
+    beta: f32,
+    m: Vec<f32>,
+}
+
+impl Sgdm {
+    pub fn new(d: usize, lr: f32, beta: f32) -> Self {
+        Sgdm {
+            lr,
+            beta,
+            m: vec![0.0; d],
+        }
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.m
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn name(&self) -> &'static str {
+        "sgdm"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        assert_eq!(g.len(), self.m.len());
+        for (m, gi) in self.m.iter_mut().zip(g) {
+            *m = gi + self.beta * *m;
+        }
+        tensor::axpy(-self.lr, &self.m, x);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_math() {
+        let mut x = vec![1.0f32, 2.0];
+        Sgd::new(0.5).step(&mut x, &[2.0, -2.0]);
+        assert_eq!(x, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn sgdm_first_step_equals_sgd() {
+        let mut x1 = vec![1.0f32, -1.0];
+        let mut x2 = x1.clone();
+        let g = [0.5f32, 0.25];
+        Sgd::new(0.1).step(&mut x1, &g);
+        Sgdm::new(2, 0.1, 0.9).step(&mut x2, &g);
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn sgdm_accumulates_momentum() {
+        let mut opt = Sgdm::new(1, 1.0, 0.5);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0]); // m=1, x=-1
+        opt.step(&mut x, &[1.0]); // m=1.5, x=-2.5
+        assert!((x[0] + 2.5).abs() < 1e-6);
+        assert!((opt.momentum()[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut x = vec![5.0f32; 10];
+        let mut opt = Sgd::new(0.1);
+        for _ in 0..200 {
+            let g = x.clone();
+            opt.step(&mut x, &g);
+        }
+        assert!(crate::tensor::norm2(&x) < 1e-4);
+    }
+}

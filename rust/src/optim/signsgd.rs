@@ -1,0 +1,318 @@
+//! The sign-based family: SIGNSGD, scaled SIGNSGD, SIGNSGDM (signum), the
+//! generic EF-SGD (Algorithm 2) and EF-SIGNSGD (Algorithm 1).
+
+use super::Optimizer;
+use crate::compress::{Compressor, ErrorFeedback, ScaledSign};
+use crate::tensor;
+use crate::util::Pcg64;
+
+/// SIGNSGD: `x ← x − γ sign(g)`. The paper's counterexamples show this
+/// does not converge in general (§3).
+pub struct SignSgd {
+    lr: f32,
+    scratch: Vec<f32>,
+}
+
+impl SignSgd {
+    pub fn new(lr: f32) -> Self {
+        SignSgd {
+            lr,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for SignSgd {
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        self.scratch.resize(g.len(), 0.0);
+        tensor::sign_into(g, &mut self.scratch);
+        tensor::axpy(-self.lr, &self.scratch, x);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Scaled SIGNSGD (§6.1): `x ← x − γ (‖g‖₁/d) sign(g)`. Isolates the effect
+/// of scaling from that of error feedback.
+pub struct ScaledSignSgd {
+    lr: f32,
+    scratch: Vec<f32>,
+    last_density: f64,
+}
+
+impl ScaledSignSgd {
+    pub fn new(lr: f32) -> Self {
+        ScaledSignSgd {
+            lr,
+            scratch: Vec::new(),
+            last_density: f64::NAN,
+        }
+    }
+}
+
+impl Optimizer for ScaledSignSgd {
+    fn name(&self) -> &'static str {
+        "scaled_signsgd"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        self.scratch.resize(g.len(), 0.0);
+        let mut rng = Pcg64::seeded(0); // ScaledSign is deterministic
+        ScaledSign.compress(g, &mut self.scratch, &mut rng);
+        self.last_density = tensor::density(g);
+        tensor::axpy(-self.lr, &self.scratch, x);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn last_density(&self) -> f64 {
+        self.last_density
+    }
+}
+
+/// SIGNSGDM / signum (Bernstein et al.): `m ← g + β m; x ← x − γ sign(m)`.
+pub struct SignSgdm {
+    lr: f32,
+    beta: f32,
+    m: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl SignSgdm {
+    pub fn new(d: usize, lr: f32, beta: f32) -> Self {
+        SignSgdm {
+            lr,
+            beta,
+            m: vec![0.0; d],
+            scratch: vec![0.0; d],
+        }
+    }
+}
+
+impl Optimizer for SignSgdm {
+    fn name(&self) -> &'static str {
+        "signsgdm"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        assert_eq!(g.len(), self.m.len());
+        for (m, gi) in self.m.iter_mut().zip(g) {
+            *m = gi + self.beta * *m;
+        }
+        tensor::sign_into(&self.m, &mut self.scratch);
+        tensor::axpy(-self.lr, &self.scratch, x);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// EF-SGD (Algorithm 2): error feedback around an arbitrary compressor.
+///
+/// ```text
+/// p ← γ g + e;   Δ ← C(p);   x ← x − Δ;   e ← p − Δ
+/// ```
+pub struct EfSgd {
+    ef: ErrorFeedback,
+    lr: f32,
+    rng: Pcg64,
+    delta: Vec<f32>,
+    last_density: f64,
+}
+
+impl EfSgd {
+    pub fn new(d: usize, lr: f32, compressor: Box<dyn Compressor>) -> Self {
+        Self::with_rng(d, lr, compressor, Pcg64::seeded(0))
+    }
+
+    pub fn with_rng(d: usize, lr: f32, compressor: Box<dyn Compressor>, rng: Pcg64) -> Self {
+        EfSgd {
+            ef: ErrorFeedback::new(d, compressor),
+            lr,
+            rng,
+            delta: vec![0.0; d],
+            last_density: f64::NAN,
+        }
+    }
+
+    pub fn error(&self) -> &[f32] {
+        self.ef.error()
+    }
+}
+
+impl Optimizer for EfSgd {
+    fn name(&self) -> &'static str {
+        "ef_sgd"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        self.last_density = self
+            .ef
+            .step_into(self.lr, g, &mut self.delta, &mut self.rng);
+        tensor::sub_assign(x, &self.delta);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn error_norm(&self) -> f64 {
+        self.ef.error_norm()
+    }
+
+    fn last_density(&self) -> f64 {
+        self.last_density
+    }
+}
+
+/// EF-SIGNSGD (Algorithm 1) = EF-SGD with the scaled sign compressor.
+pub struct EfSignSgd {
+    inner: EfSgd,
+}
+
+impl EfSignSgd {
+    pub fn new(d: usize, lr: f32, rng: Pcg64) -> Self {
+        EfSignSgd {
+            inner: EfSgd::with_rng(d, lr, Box::new(ScaledSign), rng),
+        }
+    }
+
+    pub fn error(&self) -> &[f32] {
+        self.inner.error()
+    }
+}
+
+impl Optimizer for EfSignSgd {
+    fn name(&self) -> &'static str {
+        "ef_signsgd"
+    }
+
+    fn step(&mut self, x: &mut [f32], g: &[f32]) {
+        self.inner.step(x, g);
+    }
+
+    fn lr(&self) -> f32 {
+        self.inner.lr()
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.inner.set_lr(lr);
+    }
+
+    fn error_norm(&self) -> f64 {
+        self.inner.error_norm()
+    }
+
+    fn last_density(&self) -> f64 {
+        self.inner.last_density()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+
+    #[test]
+    fn signsgd_moves_by_lr_per_coordinate() {
+        let mut x = vec![0.0f32, 0.0, 0.0];
+        SignSgd::new(0.1).step(&mut x, &[5.0, -0.01, 0.0]);
+        assert_eq!(x, vec![-0.1, 0.1, 0.0]);
+    }
+
+    #[test]
+    fn scaled_signsgd_update_magnitude() {
+        let mut x = vec![0.0f32; 4];
+        let g = [4.0f32, -2.0, 1.0, 1.0]; // l1 = 8, scale = 2
+        ScaledSignSgd::new(0.5).step(&mut x, &g);
+        assert_eq!(x, vec![-1.0, 1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn ef_signsgd_first_step_equals_scaled_signsgd() {
+        // e_0 = 0 so the first updates coincide.
+        let g = [3.0f32, -1.0, 0.5, 2.0];
+        let mut x1 = vec![0.0f32; 4];
+        let mut x2 = vec![0.0f32; 4];
+        ScaledSignSgd::new(0.2).step(&mut x1, &g);
+        EfSignSgd::new(4, 0.2, Pcg64::seeded(0)).step(&mut x2, &g);
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ef_sgd_with_identity_is_sgd() {
+        use crate::compress::Identity;
+        let d = 16;
+        let mut rng = Pcg64::seeded(1);
+        let mut g = vec![0.0f32; d];
+        let mut x1 = vec![1.0f32; d];
+        let mut x2 = vec![1.0f32; d];
+        let mut sgd = crate::optim::Sgd::new(0.05);
+        let mut ef = EfSgd::new(d, 0.05, Box::new(Identity));
+        for _ in 0..20 {
+            rng.fill_normal(&mut g, 0.0, 1.0);
+            sgd.step(&mut x1, &g);
+            ef.step(&mut x2, &g);
+        }
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert!(ef.error_norm() < 1e-7);
+    }
+
+    #[test]
+    fn ef_topk_converges_quadratic_where_plain_topk_biased_lags() {
+        // Greedy-coordinate EF (Remark 7): top-1 with EF still converges.
+        let d = 10;
+        let mut x = (0..d).map(|i| (i + 1) as f32 / 2.0).collect::<Vec<_>>();
+        let mut opt = EfSgd::new(d, 0.2, Box::new(TopK::count(1)));
+        for _ in 0..500 {
+            let g = x.clone();
+            opt.step(&mut x, &g);
+        }
+        assert!(tensor::norm2(&x) < 1e-2, "norm={}", tensor::norm2(&x));
+    }
+
+    #[test]
+    fn error_norm_zero_before_steps() {
+        let opt = EfSignSgd::new(8, 0.1, Pcg64::seeded(0));
+        assert_eq!(opt.error_norm(), 0.0);
+    }
+
+    #[test]
+    fn signsgdm_uses_momentum_sign() {
+        let mut opt = SignSgdm::new(1, 0.1, 0.9);
+        let mut x = vec![0.0f32];
+        // First grad +1 builds m=+1; then a weak -0.5 grad leaves m positive.
+        opt.step(&mut x, &[1.0]);
+        opt.step(&mut x, &[-0.5]); // m = -0.5 + 0.9 = 0.4 > 0
+        assert!((x[0] + 0.2).abs() < 1e-6); // moved -0.1 twice
+    }
+}

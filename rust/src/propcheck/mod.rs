@@ -1,0 +1,308 @@
+//! `propcheck`: a small property-based testing framework.
+//!
+//! proptest/quickcheck are unavailable offline, so this module provides the
+//! subset the test-suite needs: composable generators over a seeded
+//! [`Pcg64`](crate::util::Pcg64), a configurable runner, and greedy
+//! shrinking for failing cases (halving for numbers, prefix/element
+//! shrinking for vectors). Failures report the seed so any case can be
+//! replayed deterministically.
+
+use crate::util::Pcg64;
+use std::fmt::Debug;
+
+/// A generator of random values with an attached shrinker.
+pub trait Gen {
+    type Item: Clone + Debug;
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Item;
+
+    /// Candidate smaller versions of a failing value, most aggressive first.
+    fn shrink(&self, value: &Self::Item) -> Vec<Self::Item> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Configuration for the runner.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env overrides let CI crank the case count up without recompiling.
+        let cases = std::env::var("PROPCHECK_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PROPCHECK_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x5eed);
+        Config {
+            cases,
+            seed,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values; panic with the (shrunk)
+/// counterexample on failure.
+pub fn check_with<G: Gen>(cfg: &Config, gen: &G, mut prop: impl FnMut(&G::Item) -> bool) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed.wrapping_add(case as u64), 0x9e3779b9);
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let shrunk = shrink_failure(cfg, gen, value, &mut prop);
+            panic!(
+                "propcheck: property failed (case {case}, seed {}).\n  counterexample: {:?}",
+                cfg.seed, shrunk
+            );
+        }
+    }
+}
+
+/// Run with the default config.
+pub fn check<G: Gen>(gen: &G, prop: impl FnMut(&G::Item) -> bool) {
+    check_with(&Config::default(), gen, prop)
+}
+
+fn shrink_failure<G: Gen>(
+    cfg: &Config,
+    gen: &G,
+    mut value: G::Item,
+    prop: &mut impl FnMut(&G::Item) -> bool,
+) -> G::Item {
+    let mut steps = 0;
+    'outer: while steps < cfg.max_shrink_steps {
+        for candidate in gen.shrink(&value) {
+            steps += 1;
+            if !prop(&candidate) {
+                value = candidate;
+                continue 'outer;
+            }
+            if steps >= cfg.max_shrink_steps {
+                break;
+            }
+        }
+        break;
+    }
+    value
+}
+
+// ---------------------------------------------------------------- basic gens
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Item = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            let span = *v - self.0;
+            out.push(self.0);
+            // geometric ladder toward v gives binary-search-like shrinking
+            for denom in [2usize, 4, 8, 16, 64, 256] {
+                let step = span / denom;
+                if step > 0 {
+                    out.push(*v - step);
+                }
+            }
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi].
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Item = f64;
+
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.uniform_in(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.0 + self.1) / 2.0;
+        if (*v - mid).abs() > 1e-9 {
+            vec![mid, self.0 + (*v - self.0) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Gaussian f32 vector with length drawn from [min_len, max_len].
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub std: f64,
+}
+
+impl VecF32 {
+    pub fn new(min_len: usize, max_len: usize) -> Self {
+        VecF32 {
+            min_len,
+            max_len,
+            std: 1.0,
+        }
+    }
+}
+
+impl Gen for VecF32 {
+    type Item = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 0.0, self.std);
+        v
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // shorter prefixes
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // zero out elements
+        if let Some(i) = v.iter().position(|x| *x != 0.0) {
+            let mut z = v.clone();
+            z[i] = 0.0;
+            out.push(z);
+        }
+        // halve magnitudes
+        if v.iter().any(|x| x.abs() > 1e-3) {
+            out.push(v.iter().map(|x| x / 2.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independently generated values.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Item = (A::Item, B::Item);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Item {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, (a, b): &Self::Item) -> Vec<Self::Item> {
+        let mut out: Vec<Self::Item> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Map a generator through a function (no shrinking past the map).
+pub struct Map<G, F> {
+    pub gen: G,
+    pub f: F,
+}
+
+impl<G: Gen, T: Clone + Debug, F: Fn(G::Item) -> T> Gen for Map<G, F> {
+    type Item = T;
+
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        (self.f)(self.gen.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&UsizeRange(1, 100), |&n| n >= 1 && n <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        check(&UsizeRange(0, 1000), |&n| n < 500);
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        // Capture the panic message and check the counterexample shrank to
+        // (near) the boundary 500.
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                &Config {
+                    cases: 200,
+                    seed: 42,
+                    max_shrink_steps: 500,
+                },
+                &UsizeRange(0, 1_000_000),
+                |&n| n < 500,
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        let ce: usize = msg
+            .rsplit("counterexample: ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((500..600).contains(&ce), "shrunk to {ce}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        check(&VecF32::new(2, 50), |v| v.len() >= 2 && v.len() <= 50);
+    }
+
+    #[test]
+    fn pair_gen_works() {
+        check(&Pair(UsizeRange(1, 8), VecF32::new(1, 16)), |(n, v)| {
+            *n >= 1 && !v.is_empty()
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = Config {
+            cases: 5,
+            seed: 7,
+            max_shrink_steps: 10,
+        };
+        let mut first: Vec<Vec<f32>> = Vec::new();
+        check_with(&cfg, &VecF32::new(1, 10), |v| {
+            first.push(v.clone());
+            true
+        });
+        let mut second: Vec<Vec<f32>> = Vec::new();
+        check_with(&cfg, &VecF32::new(1, 10), |v| {
+            second.push(v.clone());
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,259 @@
+//! The artifact manifest: what `aot.py` built, with shapes and hashes.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ManifestError {
+    #[error("io error reading manifest: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, ManifestError> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(ManifestError::Malformed(format!("dtype {other}"))),
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One model configuration's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub d: usize,
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub topk_k: usize,
+    pub init_params_file: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        let full = format!("{name}_{}", self.name);
+        self.artifacts.iter().find(|a| a.name == full)
+    }
+
+    /// Tokens-per-batch shape (batch, seq+1).
+    pub fn token_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq + 1)
+    }
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ModelEntry>,
+}
+
+fn parse_args(j: &Json) -> Result<Vec<ArgSpec>, ManifestError> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| ManifestError::Malformed("args not array".into()))?;
+    arr.iter()
+        .map(|a| {
+            let shape = a
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| ManifestError::Malformed("missing shape".into()))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let dtype = DType::parse(a.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"))?;
+            Ok(ArgSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        let configs = j
+            .get("configs")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| ManifestError::Malformed("missing configs".into()))?
+            .iter()
+            .map(|c| {
+                let get_usize = |k: &str| c.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                let artifacts = c
+                    .get("artifacts")
+                    .and_then(|a| a.as_arr())
+                    .ok_or_else(|| ManifestError::Malformed("missing artifacts".into()))?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArtifactSpec {
+                            name: a
+                                .get("name")
+                                .and_then(|v| v.as_str())
+                                .ok_or_else(|| {
+                                    ManifestError::Malformed("artifact name".into())
+                                })?
+                                .to_string(),
+                            file: a
+                                .get("file")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or_default()
+                                .to_string(),
+                            sha256: a
+                                .get("sha256")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or_default()
+                                .to_string(),
+                            inputs: parse_args(a.get("inputs").unwrap_or(&Json::Null))?,
+                            outputs: parse_args(a.get("outputs").unwrap_or(&Json::Null))?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, ManifestError>>()?;
+                Ok(ModelEntry {
+                    name: c
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| ManifestError::Malformed("config name".into()))?
+                        .to_string(),
+                    d: get_usize("d"),
+                    vocab: get_usize("vocab"),
+                    dim: get_usize("dim"),
+                    layers: get_usize("layers"),
+                    heads: get_usize("heads"),
+                    seq: get_usize("seq"),
+                    batch: get_usize("batch"),
+                    topk_k: get_usize("topk_k"),
+                    init_params_file: c
+                        .get("init_params")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    artifacts,
+                })
+            })
+            .collect::<Result<Vec<_>, ManifestError>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            configs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+
+    /// Load a model's initial parameters (raw LE f32).
+    pub fn init_params(&self, entry: &ModelEntry) -> Result<Vec<f32>, ManifestError> {
+        let bytes = std::fs::read(self.dir.join(&entry.init_params_file))?;
+        if bytes.len() != entry.d * 4 {
+            return Err(ManifestError::Malformed(format!(
+                "init params size {} != 4*d ({})",
+                bytes.len(),
+                entry.d * 4
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Default artifact directory: $EF_SGD_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("EF_SGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<Manifest> {
+        let dir = default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn parses_built_manifest_if_present() {
+        let Some(m) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let tiny = m.model("tiny").expect("tiny config");
+        assert!(tiny.d > 0);
+        assert!(tiny.artifact("lm_step").is_some());
+        assert!(tiny.artifact("ef_sign").is_some());
+        let ef = tiny.artifact("ef_sign").unwrap();
+        assert_eq!(ef.inputs.len(), 3);
+        assert_eq!(ef.inputs[0].shape, vec![tiny.d]);
+        let params = m.init_params(tiny).unwrap();
+        assert_eq!(params.len(), tiny.d);
+    }
+
+    #[test]
+    fn parses_inline_manifest() {
+        let dir = std::env::temp_dir().join(format!("efsgd_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"configs":[{"name":"x","d":4,"vocab":2,"dim":2,"layers":1,
+                "heads":1,"seq":2,"batch":1,"topk_k":1,"init_params":"x.bin",
+                "artifacts":[{"name":"lm_step_x","file":"lm_step_x.hlo.txt","sha256":"ab",
+                  "bytes":10,"inputs":[{"shape":[4],"dtype":"f32"}],
+                  "outputs":[{"shape":[],"dtype":"f32"}]}]}]}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("x.bin"), [0u8; 16]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("x").unwrap();
+        assert_eq!(e.d, 4);
+        assert_eq!(e.artifact("lm_step").unwrap().inputs[0].dtype, DType::F32);
+        assert_eq!(m.init_params(e).unwrap(), vec![0.0; 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/dir")).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! The runtime: one PJRT CPU client + a compile cache keyed by artifact
+//! name. Compilation happens once per artifact per process; the coordinator
+//! hot loop only executes.
+
+use super::artifact::{Manifest, ManifestError, ModelEntry};
+use super::executable::Execution;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Execution>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and start the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!("{e}"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.configs.iter().map(|c| c.artifacts.len()).sum::<usize>()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default directory (EF_SGD_ARTIFACTS or ./artifacts).
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&super::artifact::default_dir())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.manifest
+            .model(name)
+            .ok_or_else(|| anyhow!("model config '{name}' not in manifest"))
+    }
+
+    pub fn init_params(&self, entry: &ModelEntry) -> Result<Vec<f32>, ManifestError> {
+        self.manifest.init_params(entry)
+    }
+
+    /// Get (compiling and caching on first use) the executable for
+    /// `<artifact>_<model>`.
+    pub fn executable(&self, model: &ModelEntry, artifact: &str) -> Result<Rc<Execution>> {
+        let spec = model
+            .artifact(artifact)
+            .ok_or_else(|| anyhow!("artifact '{artifact}' not in config '{}'", model.name))?;
+        if let Some(hit) = self.cache.borrow().get(&spec.name) {
+            return Ok(hit.clone());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.name))?;
+        log::info!(
+            "runtime: compiled {} in {:.2}s",
+            spec.name,
+            t.elapsed().as_secs_f64()
+        );
+        let execution = Rc::new(Execution {
+            spec: spec.clone(),
+            exe,
+        });
+        self.cache
+            .borrow_mut()
+            .insert(spec.name.clone(), execution.clone());
+        Ok(execution)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// Integration coverage for the runtime lives in
+// rust/tests/runtime_integration.rs (requires `make artifacts`).

@@ -1,0 +1,122 @@
+//! Execution helpers: typed argument marshalling to/from `xla::Literal`,
+//! tuple unpacking, and a thin wrapper that pairs a compiled executable
+//! with its manifest spec for shape checking.
+
+use super::artifact::{ArgSpec, ArtifactSpec, DType};
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+/// A typed argument for an artifact call.
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> ArgValue<'a> {
+    fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+
+    fn to_literal(&self, spec: &ArgSpec) -> Result<Literal> {
+        if self.len() != spec.elements() {
+            bail!(
+                "argument has {} elements, spec wants {:?}",
+                self.len(),
+                spec.shape
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&x| x as i64).collect();
+        let lit = match (self, spec.dtype) {
+            (ArgValue::F32(v), DType::F32) => Literal::vec1(v),
+            (ArgValue::I32(v), DType::I32) => Literal::vec1(v),
+            _ => bail!("dtype mismatch for arg with shape {:?}", spec.shape),
+        };
+        if spec.shape.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims).context("reshape literal")
+        }
+    }
+}
+
+/// A compiled artifact plus its interface spec.
+pub struct Execution {
+    pub spec: ArtifactSpec,
+    pub exe: PjRtLoadedExecutable,
+}
+
+impl Execution {
+    /// Execute with shape-checked arguments; returns the output tuple parts.
+    pub fn call(&self, args: &[ArgValue]) -> Result<Vec<Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let literals: Vec<Literal> = args
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(a, s)| a.to_literal(s))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        tuple.to_tuple().context("untuple result")
+    }
+
+    /// Convenience: call and convert every output to f32 vectors
+    /// (scalars become length-1).
+    pub fn call_f32(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        let outs = self.call(args)?;
+        outs.iter().map(lit_to_f32).collect()
+    }
+}
+
+/// Literal (f32 array or scalar) to Vec<f32>.
+pub fn lit_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    let n = lit.element_count();
+    if n == 1 {
+        // covers rank-0 scalars, where to_vec can be touchy
+        let v: f32 = lit.get_first_element()?;
+        return Ok(vec![v]);
+    }
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argvalue_shape_checks() {
+        let spec = ArgSpec {
+            shape: vec![2, 2],
+            dtype: DType::F32,
+        };
+        let ok = ArgValue::F32(&[1.0, 2.0, 3.0, 4.0]).to_literal(&spec);
+        assert!(ok.is_ok());
+        let bad_len = ArgValue::F32(&[1.0]).to_literal(&spec);
+        assert!(bad_len.is_err());
+        let bad_ty = ArgValue::I32(&[1, 2, 3, 4]).to_literal(&spec);
+        assert!(bad_ty.is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, -2.0, 3.5]);
+        assert_eq!(lit_to_f32(&lit).unwrap(), vec![1.0, -2.0, 3.5]);
+        let scalar = Literal::scalar(7.25f32);
+        assert_eq!(lit_to_f32(&scalar).unwrap(), vec![7.25]);
+    }
+}

@@ -1,0 +1,126 @@
+//! LmSession: the typed facade over one model config's artifact set —
+//! train step (loss+grad), the fused train+EF-compress step, the standalone
+//! Pallas EF-sign kernel, eval, parameter update, and gradient density.
+
+use super::client::Runtime;
+use super::executable::{ArgValue, Execution};
+use anyhow::Result;
+use std::rc::Rc;
+
+pub struct LmSession {
+    pub model: super::artifact::ModelEntry,
+    lm_step: Rc<Execution>,
+    lm_eval: Rc<Execution>,
+    lm_step_ef: Rc<Execution>,
+    ef_sign: Rc<Execution>,
+    ef_topk: Rc<Execution>,
+    apply_update: Rc<Execution>,
+    density: Rc<Execution>,
+}
+
+impl LmSession {
+    /// Compile (or fetch cached) all artifacts for `model_name`.
+    pub fn open(rt: &Runtime, model_name: &str) -> Result<LmSession> {
+        let model = rt.model(model_name)?.clone();
+        Ok(LmSession {
+            lm_step: rt.executable(&model, "lm_step")?,
+            lm_eval: rt.executable(&model, "lm_eval")?,
+            lm_step_ef: rt.executable(&model, "lm_step_ef")?,
+            ef_sign: rt.executable(&model, "ef_sign")?,
+            ef_topk: rt.executable(&model, "ef_topk")?,
+            apply_update: rt.executable(&model, "apply_update")?,
+            density: rt.executable(&model, "density")?,
+            model,
+        })
+    }
+
+    pub fn d(&self) -> usize {
+        self.model.d
+    }
+
+    /// Expected token buffer length (batch * (seq+1)).
+    pub fn token_len(&self) -> usize {
+        let (b, s) = self.model.token_shape();
+        b * s
+    }
+
+    /// (loss, grad) at theta on a token batch.
+    pub fn train_step(&self, theta: &[f32], tokens: &[i32]) -> Result<(f64, Vec<f32>)> {
+        let outs = self
+            .lm_step
+            .call_f32(&[ArgValue::F32(theta), ArgValue::I32(tokens)])?;
+        Ok((outs[0][0] as f64, outs[1].clone()))
+    }
+
+    /// Fused train + EF-scaled-sign compression (one PJRT dispatch):
+    /// returns (loss, delta, new_error).
+    pub fn train_step_ef(
+        &self,
+        theta: &[f32],
+        e: &[f32],
+        tokens: &[i32],
+        gamma: f32,
+    ) -> Result<(f64, Vec<f32>, Vec<f32>)> {
+        let g = [gamma];
+        let mut outs = self.lm_step_ef.call_f32(&[
+            ArgValue::F32(theta),
+            ArgValue::F32(e),
+            ArgValue::I32(tokens),
+            ArgValue::F32(&g),
+        ])?;
+        let e_new = outs.pop().unwrap();
+        let delta = outs.pop().unwrap();
+        Ok((outs[0][0] as f64, delta, e_new))
+    }
+
+    /// The standalone Pallas kernel: (delta, e_new) = EF-sign(g, e, gamma).
+    pub fn ef_sign(&self, g: &[f32], e: &[f32], gamma: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let ga = [gamma];
+        let mut outs = self.ef_sign.call_f32(&[
+            ArgValue::F32(g),
+            ArgValue::F32(e),
+            ArgValue::F32(&ga),
+        ])?;
+        let e_new = outs.pop().unwrap();
+        let delta = outs.pop().unwrap();
+        Ok((delta, e_new))
+    }
+
+    /// The Pallas top-k variant (k fixed at AOT time, see manifest).
+    pub fn ef_topk(&self, g: &[f32], e: &[f32], gamma: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let ga = [gamma];
+        let mut outs = self.ef_topk.call_f32(&[
+            ArgValue::F32(g),
+            ArgValue::F32(e),
+            ArgValue::F32(&ga),
+        ])?;
+        let e_new = outs.pop().unwrap();
+        let delta = outs.pop().unwrap();
+        Ok((delta, e_new))
+    }
+
+    /// Eval loss on a token batch.
+    pub fn eval(&self, theta: &[f32], tokens: &[i32]) -> Result<f64> {
+        let outs = self
+            .lm_eval
+            .call_f32(&[ArgValue::F32(theta), ArgValue::I32(tokens)])?;
+        Ok(outs[0][0] as f64)
+    }
+
+    /// theta' = theta − delta (device-side).
+    pub fn apply_update(&self, theta: &[f32], delta: &[f32]) -> Result<Vec<f32>> {
+        let outs = self
+            .apply_update
+            .call_f32(&[ArgValue::F32(theta), ArgValue::F32(delta)])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Gradient density phi(v) via the Pallas reduction kernel.
+    pub fn density(&self, v: &[f32]) -> Result<f64> {
+        let outs = self.density.call_f32(&[ArgValue::F32(v)])?;
+        Ok(outs[0][0] as f64)
+    }
+}
+
+// Numeric validation against the Rust-native reference implementations is
+// in rust/tests/runtime_integration.rs (requires built artifacts).

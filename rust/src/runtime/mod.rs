@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the only bridge between the Rust coordinator and
+//! the JAX/Pallas compute layers — Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! PJRT handle types are not `Send`; the runtime is used from the
+//! single-threaded coordinator event loop (worker parallelism is simulated;
+//! communication is accounted by the fabric).
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod lm;
+
+pub use artifact::{ArgSpec, ArtifactSpec, DType, Manifest, ModelEntry};
+pub use client::Runtime;
+pub use executable::{ArgValue, Execution};
+pub use lm::LmSession;

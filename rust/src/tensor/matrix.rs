@@ -1,0 +1,208 @@
+//! Row-major f32 matrix with the operations the native models and the
+//! max-margin computation need: matmul (cache-blocked), transpose products,
+//! row/col views.
+
+use crate::util::Pcg64;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, std as f64);
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// out = self * other, cache-blocked i-k-j loop order.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for (o, b) in orow.iter_mut().zip(brow) {
+                        *o += a * *b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// y = self * x (matrix-vector).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| super::dot(self.row(r), x) as f32)
+            .collect()
+    }
+
+    /// y = self^T * x without materializing the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            super::axpy(x[r], self.row(r), &mut y);
+        }
+        y
+    }
+
+    /// Gram matrix self * self^T (n x n for an n x d matrix).
+    pub fn gram(&self) -> Matrix {
+        let n = self.rows;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = super::dot(self.row(i), self.row(j)) as f32;
+                g.data[i * n + j] = v;
+                g.data[j * n + i] = v;
+            }
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        super::norm2(&self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::randn(7, 7, 1.0, &mut rng);
+        let i = Matrix::identity(7);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_matches_naive_blocked_boundary() {
+        // size > block to exercise the blocked path
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::randn(9, 130, 1.0, &mut rng);
+        let b = Matrix::randn(130, 11, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..9 {
+            for j in 0..11 {
+                let mut acc = 0.0f64;
+                for k in 0..130 {
+                    acc += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                assert!((c.at(i, j) as f64 - acc).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Matrix::randn(6, 9, 1.0, &mut rng);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let expect = a.transpose().matvec(&x);
+        let got = a.matvec_t(&x);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg64::seeded(9);
+        let a = Matrix::randn(5, 20, 1.0, &mut rng);
+        let g = a.gram();
+        for i in 0..5 {
+            assert!(g.at(i, i) > 0.0);
+            for j in 0..5 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Dense f32 vector/matrix math.
+//!
+//! No BLAS in the offline build: everything the optimizers, the native MLP
+//! and the collectives need is implemented here (axpy-style kernels, norms,
+//! a cache-blocked matmul). Hot-path functions are written branch-free over
+//! slices so LLVM auto-vectorizes them; the bench harness tracks their
+//! throughput (benches/bench_compressors.rs covers the norm kernels).
+
+pub mod matrix;
+
+pub use matrix::Matrix;
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// y = alpha * x + beta * y
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * *xi + beta * *yi;
+    }
+}
+
+/// Element-wise in-place scale.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Dot product, accumulated in f64 for stability.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum::<f64>()
+}
+
+/// L1 norm (f64 accumulation, 4-lane unrolled so the f64 adds pipeline).
+pub fn norm1(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += c[0].abs() as f64;
+        acc[1] += c[1].abs() as f64;
+        acc[2] += c[2].abs() as f64;
+        acc[3] += c[3].abs() as f64;
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for v in chunks.remainder() {
+        total += v.abs() as f64;
+    }
+    total
+}
+
+/// Squared L2 norm (f64 accumulation, 4-lane unrolled).
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += c[0] as f64 * c[0] as f64;
+        acc[1] += c[1] as f64 * c[1] as f64;
+        acc[2] += c[2] as f64 * c[2] as f64;
+        acc[3] += c[3] as f64 * c[3] as f64;
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for v in chunks.remainder() {
+        total += *v as f64 * *v as f64;
+    }
+    total
+}
+
+/// Single-pass L1 + squared-L2 (the density hot path reads x once).
+pub fn norm1_norm2_sq(x: &[f32]) -> (f64, f64) {
+    let mut a1 = [0.0f64; 4];
+    let mut a2 = [0.0f64; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        for i in 0..4 {
+            let v = c[i] as f64;
+            a1[i] += v.abs();
+            a2[i] += v * v;
+        }
+    }
+    let mut l1 = a1.iter().sum::<f64>();
+    let mut l2 = a2.iter().sum::<f64>();
+    for v in chunks.remainder() {
+        let v = *v as f64;
+        l1 += v.abs();
+        l2 += v * v;
+    }
+    (l1, l2)
+}
+
+/// L2 norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// L-infinity norm.
+pub fn norm_inf(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |m, v| m.max(v.abs() as f64))
+}
+
+/// The paper's gradient density phi(v) = ||v||_1^2 / (d ||v||_2^2)
+/// (Lemma 8: the scaled-sign operator is a phi(v)-approximate compressor).
+/// Returns 1.0 for the zero vector (compression of 0 is exact).
+pub fn density(v: &[f32]) -> f64 {
+    let (l1, l2) = norm1_norm2_sq(v);
+    if l2 == 0.0 {
+        1.0
+    } else {
+        l1 * l1 / (v.len() as f64 * l2)
+    }
+}
+
+/// out = x - y
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a - b;
+    }
+}
+
+/// out = x + y
+pub fn add(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a + b;
+    }
+}
+
+/// x -= y, in place.
+pub fn sub_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a -= b;
+    }
+}
+
+/// x += y, in place.
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Set all elements to zero.
+pub fn zero(x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = 0.0);
+}
+
+/// Mean of several equal-length vectors into `out`.
+pub fn mean_of(vectors: &[&[f32]], out: &mut [f32]) {
+    assert!(!vectors.is_empty());
+    zero(out);
+    for v in vectors {
+        add_assign(out, v);
+    }
+    scale(1.0 / vectors.len() as f32, out);
+}
+
+/// Coordinate-wise sign with sign(0) = 0 (matches `jnp.sign`).
+pub fn sign_into(x: &[f32], out: &mut [f32]) {
+    for (o, v) in out.iter_mut().zip(x) {
+        *o = if *v > 0.0 {
+            1.0
+        } else if *v < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+    }
+}
+
+/// Maximum absolute difference between two vectors.
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f64 {
+    x.iter()
+        .zip(y)
+        .fold(0.0f64, |m, (a, b)| m.max((a - b).abs() as f64))
+}
+
+/// Relative L2 distance ||x-y|| / max(||y||, eps).
+pub fn rel_l2(x: &[f32], y: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = (*a - *b) as f64;
+        num += d * d;
+    }
+    let den = norm2(y).max(1e-12);
+    num.sqrt() / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((norm1(&x) - 7.0).abs() < 1e-12);
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        assert!((norm_inf(&x) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_extremes() {
+        let d = 128;
+        let mut one_hot = vec![0.0f32; d];
+        one_hot[7] = 3.0;
+        assert!((density(&one_hot) - 1.0 / d as f64).abs() < 1e-9);
+        let constant = vec![-0.5f32; d];
+        assert!((density(&constant) - 1.0).abs() < 1e-9);
+        assert_eq!(density(&vec![0.0f32; d]), 1.0);
+    }
+
+    #[test]
+    fn density_in_unit_interval() {
+        let mut rng = crate::util::Pcg64::seeded(1);
+        for _ in 0..20 {
+            let v: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+            let phi = density(&v);
+            assert!(phi > 0.0 && phi <= 1.0 + 1e-9, "phi={phi}");
+        }
+    }
+
+    #[test]
+    fn sign_semantics() {
+        let x = [2.5, -0.1, 0.0];
+        let mut out = [9.0; 3];
+        sign_into(&x, &mut out);
+        assert_eq!(out, [1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_of(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_f64_accumulation() {
+        // Large cancellation that f32 accumulation would get wrong.
+        let n = 100_000;
+        let x: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let y = vec![1.0f32; n];
+        assert_eq!(dot(&x, &y), 0.0);
+    }
+}

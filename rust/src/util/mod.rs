@@ -1,0 +1,7 @@
+//! Small shared utilities: RNG, statistics, timing, JSON.
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg64;

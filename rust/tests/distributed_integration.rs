@@ -1,0 +1,207 @@
+//! Integration: the full coordinator stack (workers + fabric + collectives
+//! + EF state) on the native MLP workload — convergence, exact
+//! communication accounting, and failure/restart behaviour.
+
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use ef_sgd::coordinator::state::{CheckpointStore, Snapshot};
+use ef_sgd::coordinator::worker::{GradSource, ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::data::synth_class::{self, Dataset, SynthSpec};
+use ef_sgd::data::Sharder;
+use ef_sgd::model::mlp::{Mlp, MlpConfig, MlpObjective};
+use ef_sgd::net::message::FRAME_OVERHEAD_BITS;
+use ef_sgd::net::MessageKind;
+use ef_sgd::util::Pcg64;
+
+struct ShardSource {
+    inner: ObjectiveSource<MlpObjective>,
+    test: Dataset,
+}
+
+impl GradSource for ShardSource {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn grad(&mut self, theta: &[f32], out: &mut [f32]) -> f64 {
+        self.inner.grad(theta, out)
+    }
+
+    fn eval_acc(&mut self, theta: &[f32]) -> f64 {
+        self.inner.obj.mlp.accuracy(theta, &self.test)
+    }
+}
+
+fn setup(
+    n_workers: usize,
+    mode: WorkerMode,
+    kind: CompressorKind,
+) -> (Vec<Worker>, Vec<f32>, Mlp, Dataset) {
+    let spec = SynthSpec::tiny();
+    let mut rng = Pcg64::seeded(0);
+    let (train, test) = synth_class::generate(&spec, &mut rng);
+    let mlp = Mlp::new(MlpConfig {
+        in_dim: spec.dim,
+        hidden: vec![32],
+        classes: spec.classes,
+    });
+    let theta0 = mlp.init_params(&mut Pcg64::seeded(1));
+    let sharder = Sharder::new(&train, n_workers, &mut rng);
+    let workers = sharder
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Worker::new(
+                id,
+                Box::new(ShardSource {
+                    inner: ObjectiveSource::new(
+                        MlpObjective::new(mlp.clone(), shard.clone(), 8),
+                        Pcg64::new(2, id as u64),
+                    ),
+                    test: test.clone(),
+                }),
+                mode,
+                kind,
+                8,
+                4,
+                Pcg64::new(3, id as u64),
+            )
+        })
+        .collect();
+    (workers, theta0, mlp, test)
+}
+
+#[test]
+fn ef_signsgd_multiworker_learns_classification() {
+    let (workers, theta0, mlp, test) =
+        setup(4, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let steps = 600;
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::new(0.05, steps, vec![0.5, 0.75]),
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, theta0).run();
+    let acc = mlp.accuracy(&out.theta, &test);
+    assert!(acc > 0.75, "test acc {acc}");
+    // training loss decreased substantially
+    let losses = &out.recorder.get("train_loss").unwrap().values;
+    assert!(losses.last().unwrap() < &(losses.first().unwrap() * 0.5));
+}
+
+#[test]
+fn push_traffic_matches_analytic_formula_exactly() {
+    let n_workers = 3;
+    let (workers, theta0, ..) =
+        setup(n_workers, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let d = theta0.len() as u64;
+    let steps = 7u64;
+    let cfg = DriverConfig {
+        steps: steps as usize,
+        schedule: LrSchedule::constant(0.05),
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, theta0).run();
+    let push = out.traffic.bits_of_kind(MessageKind::GradPush);
+    // exact: per push = (d + 32) payload + frame; pushes = workers * steps
+    let expect = (d + 32 + FRAME_OVERHEAD_BITS) * n_workers as u64 * steps;
+    assert_eq!(push, expect);
+    // broadcast: dense params both ways accounting
+    let bcast = out.traffic.bits_of_kind(MessageKind::ParamBroadcast);
+    let expect_b = (32 * d + FRAME_OVERHEAD_BITS) * n_workers as u64 * steps;
+    assert_eq!(bcast, expect_b);
+}
+
+#[test]
+fn majority_vote_multiworker_descends() {
+    let (workers, theta0, mlp, test) = setup(5, WorkerMode::SignVote, CompressorKind::Sign);
+    let steps = 600;
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::new(0.01, steps, vec![0.5, 0.75]),
+        aggregation: ef_sgd::coordinator::Aggregation::MajorityVote,
+        update_rule: UpdateRule::ScaleByLr,
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, theta0).run();
+    let acc = mlp.accuracy(&out.theta, &test);
+    assert!(acc > 0.4, "majority-vote acc {acc} (chance = 0.25)");
+}
+
+#[test]
+fn checkpoint_to_disk_and_restore() {
+    let dir = std::env::temp_dir().join(format!("efsgd_int_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (workers, theta0, ..) = setup(2, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let cfg = DriverConfig {
+        steps: 10,
+        schedule: LrSchedule::constant(0.05),
+        checkpoint_every: 5,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, theta0).run();
+    let store = CheckpointStore::new(&dir).unwrap();
+    assert!(store.exists());
+    let snap: Snapshot = store.load().unwrap();
+    assert_eq!(snap.round, 10);
+    assert_eq!(snap.theta.len(), out.theta.len());
+    assert_eq!(snap.worker_errors.len(), 2);
+    // restoring into a fresh driver places theta and residuals back
+    let (workers2, theta0b, ..) = setup(2, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let cfg2 = DriverConfig {
+        steps: 0,
+        schedule: LrSchedule::constant(0.05),
+        ..Default::default()
+    };
+    let mut driver = TrainDriver::new(cfg2, workers2, theta0b);
+    driver.restore(&snap);
+    assert_eq!(driver.theta(), snap.theta.as_slice());
+    for (w, e) in driver.workers().iter().zip(&snap.worker_errors) {
+        assert_eq!(w.ef_state().error(), e.as_slice());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_worker_driver_equals_local_optimizer() {
+    // With one worker, mean aggregation, and EF-scaled-sign the driver's
+    // trajectory must equal a local EfSignSgd run on the same grad stream.
+    use ef_sgd::model::toy::SparseNoiseQuadratic;
+    use ef_sgd::optim::{EfSignSgd, Optimizer};
+    let d = 48;
+    let steps = 50;
+    let mk_src = || {
+        ObjectiveSource::new(SparseNoiseQuadratic::new(d, 0.5), Pcg64::new(10, 7))
+    };
+    let worker = Worker::new(
+        0,
+        Box::new(mk_src()),
+        WorkerMode::ErrorFeedback,
+        CompressorKind::ScaledSign,
+        8,
+        4,
+        Pcg64::new(11, 0),
+    );
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::constant(0.07),
+        ..Default::default()
+    };
+    let theta0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let out = TrainDriver::new(cfg, vec![worker], theta0.clone()).run();
+
+    let mut opt = EfSignSgd::new(d, 0.07, Pcg64::seeded(0));
+    let mut x = theta0;
+    let mut src = mk_src();
+    let mut g = vec![0.0f32; d];
+    for _ in 0..steps {
+        src.grad(&x, &mut g);
+        opt.step(&mut x, &g);
+    }
+    for (a, b) in out.theta.iter().zip(&x) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}

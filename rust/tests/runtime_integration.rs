@@ -1,0 +1,181 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and the
+//! numerics match the Rust-native references (the L1/L2 <-> L3 contract).
+//!
+//! These tests are skipped (with a message) when `make artifacts` has not
+//! been run — `make test` always builds artifacts first.
+
+use ef_sgd::compress::{ErrorFeedback, ScaledSign};
+use ef_sgd::data::tokens::MarkovCorpus;
+use ef_sgd::runtime::{LmSession, Runtime};
+use ef_sgd::tensor;
+use ef_sgd::util::Pcg64;
+
+fn open_tiny() -> Option<(Runtime, LmSession)> {
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e}");
+            return None;
+        }
+    };
+    let session = LmSession::open(&rt, "tiny").expect("open tiny session");
+    Some((rt, session))
+}
+
+fn randn(d: usize, seed: u64, std: f64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.0, std);
+    v
+}
+
+#[test]
+fn ef_sign_artifact_matches_rust_reference() {
+    let Some((_rt, session)) = open_tiny() else { return };
+    let d = session.d();
+    let g = randn(d, 1, 1.0);
+    let e = randn(d, 2, 0.5);
+    let gamma = 0.1f32;
+    let (delta, e_new) = session.ef_sign(&g, &e, gamma).unwrap();
+
+    // rust-native reference: p = gamma g + e; delta = scaled_sign(p); e' = p - delta
+    let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
+    ef.load_state(
+        &[0u64.to_le_bytes().to_vec(), e.iter().flat_map(|v| v.to_le_bytes()).collect()]
+            .concat(),
+    )
+    .unwrap();
+    let mut rng = Pcg64::seeded(0);
+    let delta_ref = {
+        let mut out = vec![0.0f32; d];
+        ef.step_into(gamma, &g, &mut out, &mut rng);
+        out
+    };
+    assert!(
+        tensor::rel_l2(&delta, &delta_ref) < 1e-3,
+        "delta mismatch {}",
+        tensor::rel_l2(&delta, &delta_ref)
+    );
+    assert!(tensor::rel_l2(&e_new, ef.error()) < 1e-3);
+    // exact invariant: delta + e' == gamma g + e
+    for i in 0..d {
+        let p = gamma * g[i] + e[i];
+        assert!((delta[i] + e_new[i] - p).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn density_artifact_matches_rust() {
+    let Some((_rt, session)) = open_tiny() else { return };
+    let d = session.d();
+    for seed in [3u64, 4, 5] {
+        let v = randn(d, seed, 2.0);
+        let phi_pjrt = session.density(&v).unwrap();
+        let phi_rust = tensor::density(&v);
+        assert!(
+            (phi_pjrt - phi_rust).abs() < 1e-4,
+            "{phi_pjrt} vs {phi_rust}"
+        );
+    }
+}
+
+#[test]
+fn lm_step_loss_near_uniform_at_init_and_grad_finite() {
+    let Some((rt, session)) = open_tiny() else { return };
+    let theta = rt.init_params(&session.model).unwrap();
+    let corpus = MarkovCorpus::new(session.model.vocab, 3, 0);
+    let (b, s) = session.model.token_shape();
+    let mut rng = Pcg64::seeded(7);
+    let tokens = corpus.sample_batch(b, s, &mut rng);
+    let (loss, grad) = session.train_step(&theta, &tokens).unwrap();
+    let uniform = (session.model.vocab as f64).ln();
+    assert!((loss - uniform).abs() < 0.5, "loss {loss} vs ln V {uniform}");
+    assert!(grad.iter().all(|v| v.is_finite()));
+    assert!(tensor::norm2(&grad) > 0.0);
+    // eval on the same tokens equals the train loss
+    let eval = session.eval(&theta, &tokens).unwrap();
+    assert!((eval - loss).abs() < 1e-4);
+}
+
+#[test]
+fn fused_step_consistent_with_parts() {
+    let Some((rt, session)) = open_tiny() else { return };
+    let d = session.d();
+    let theta = rt.init_params(&session.model).unwrap();
+    let e = randn(d, 8, 0.01);
+    let corpus = MarkovCorpus::new(session.model.vocab, 3, 1);
+    let (b, s) = session.model.token_shape();
+    let mut rng = Pcg64::seeded(9);
+    let tokens = corpus.sample_batch(b, s, &mut rng);
+    let gamma = 0.2f32;
+
+    let (loss_f, delta_f, enew_f) = session.train_step_ef(&theta, &e, &tokens, gamma).unwrap();
+    let (loss_p, grad) = session.train_step(&theta, &tokens).unwrap();
+    let (delta_p, enew_p) = session.ef_sign(&grad, &e, gamma).unwrap();
+
+    assert!((loss_f - loss_p).abs() < 1e-5);
+    assert!(tensor::rel_l2(&delta_f, &delta_p) < 1e-3);
+    assert!(tensor::rel_l2(&enew_f, &enew_p) < 1e-3);
+}
+
+#[test]
+fn apply_update_artifact() {
+    let Some((_rt, session)) = open_tiny() else { return };
+    let d = session.d();
+    let theta = randn(d, 10, 1.0);
+    let delta = randn(d, 11, 0.1);
+    let out = session.apply_update(&theta, &delta).unwrap();
+    for i in 0..d {
+        assert!((out[i] - (theta[i] - delta[i])).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn topk_artifact_threshold_semantics() {
+    let Some((rt, session)) = open_tiny() else { return };
+    let d = session.d();
+    let k = rt.model("tiny").unwrap().topk_k;
+    let g = randn(d, 12, 1.0);
+    let e = vec![0.0f32; d];
+    let (delta, e_new) = session.ef_topk(&g, &e, 1.0).unwrap();
+    let nz = delta.iter().filter(|v| **v != 0.0).count();
+    assert!(nz >= k && nz <= k + 8, "kept {nz} vs k {k}");
+    // kept coords preserve value; identity delta + e' = p
+    for i in 0..d {
+        assert!((delta[i] + e_new[i] - g[i]).abs() < 1e-5);
+        assert!(delta[i] == 0.0 || (delta[i] - g[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn a_few_training_steps_reduce_loss() {
+    let Some((rt, session)) = open_tiny() else { return };
+    let mut theta = rt.init_params(&session.model).unwrap();
+    let d = session.d();
+    let corpus = MarkovCorpus::new(session.model.vocab, 3, 2);
+    let (b, s) = session.model.token_shape();
+    let mut rng = Pcg64::seeded(13);
+    let mut e = vec![0.0f32; d];
+    // The tiny LM learns gradually (4 x 32 tokens/step); assert a clear
+    // downward trend rather than a large absolute drop.
+    let mut losses = Vec::new();
+    for _ in 0..350 {
+        let tokens = corpus.sample_batch(b, s, &mut rng);
+        let (loss, delta, e_new) = session.train_step_ef(&theta, &e, &tokens, 0.5).unwrap();
+        tensor::sub_assign(&mut theta, &delta);
+        e = e_new;
+        losses.push(loss);
+    }
+    let head = ef_sgd::util::stats::mean(&losses[..50]);
+    let tail = ef_sgd::util::stats::mean(&losses[300..]);
+    assert!(tail < head - 0.02, "loss head {head} -> tail {tail}");
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some((rt, _session)) = open_tiny() else { return };
+    let n = rt.compiled_count();
+    // reopening the session must not recompile anything
+    let _again = LmSession::open(&rt, "tiny").unwrap();
+    assert_eq!(rt.compiled_count(), n);
+}
