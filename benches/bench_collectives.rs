@@ -2,7 +2,7 @@
 //! parameter-server gather at several worker counts.
 
 use ef_sgd::bench::{black_box, Bench};
-use ef_sgd::collectives::{ring_allreduce, ParameterServer};
+use ef_sgd::collectives::{ring_allreduce, ring_allreduce_parallel, ParameterServer};
 use ef_sgd::compress::wire;
 use ef_sgd::net::{Fabric, LinkModel};
 use ef_sgd::util::Pcg64;
@@ -25,6 +25,16 @@ fn main() {
             ring_allreduce(&fabric, &mut buffers, 0);
             black_box(&buffers);
         });
+        b.bench_elems(
+            &format!("ring_allreduce_parallel n={n}"),
+            (d * n) as u64,
+            || {
+                let fabric = Fabric::new(n, LinkModel::default());
+                let mut buffers = template.clone();
+                ring_allreduce_parallel(&fabric, &mut buffers, 0);
+                black_box(&buffers);
+            },
+        );
         b.bench_elems(&format!("ps_gather_sign n={n}"), (d * n) as u64, || {
             let fabric = Fabric::new(n + 1, LinkModel::default());
             let ps = ParameterServer::new(&fabric);

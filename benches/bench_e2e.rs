@@ -11,12 +11,12 @@ use ef_sgd::data::tokens::MarkovCorpus;
 use ef_sgd::model::mlp::{Mlp, MlpObjective};
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
 struct LmWorkerSource {
-    session: Rc<LmSession>,
-    corpus: Rc<MarkovCorpus>,
+    session: Arc<LmSession>,
+    corpus: Arc<MarkovCorpus>,
     rng: Pcg64,
 }
 
@@ -34,7 +34,7 @@ impl GradSource for LmWorkerSource {
     }
 }
 
-fn mlp_rounds_per_run(n_workers: usize, rounds: usize) {
+fn mlp_rounds_per_run(n_workers: usize, rounds: usize, threads: usize) {
     let spec = SynthSpec::cifar100_like();
     let mut rng = Pcg64::seeded(0);
     let (train, _) = synth_class::generate(&spec, &mut rng);
@@ -60,6 +60,7 @@ fn mlp_rounds_per_run(n_workers: usize, rounds: usize) {
         steps: rounds,
         schedule: LrSchedule::constant(0.02),
         update_rule: UpdateRule::ApplyAggregate,
+        threads,
         ..Default::default()
     };
     let out = TrainDriver::new(cfg, workers, theta0).run();
@@ -76,8 +77,21 @@ fn main() {
     for n in [1usize, 4, 8] {
         let rounds = 10;
         b.bench_elems(&format!("mlp ef-sign, {n} workers x {rounds} rounds"), rounds as u64, || {
-            mlp_rounds_per_run(n, rounds);
+            mlp_rounds_per_run(n, rounds, 1);
         });
+    }
+    // worker-pool scaling: same workload, more coordinator threads
+    // (results are bit-identical; only wall-clock changes)
+    for threads in [2usize, 4, 8] {
+        let n = 8;
+        let rounds = 10;
+        b.bench_elems(
+            &format!("mlp ef-sign, {n} workers x {rounds} rounds, {threads} threads"),
+            rounds as u64,
+            || {
+                mlp_rounds_per_run(n, rounds, threads);
+            },
+        );
     }
 
     if let Ok(rt) = Runtime::load_default() {
@@ -85,9 +99,9 @@ fn main() {
             if rt.model(model).is_err() {
                 continue;
             }
-            let session = Rc::new(LmSession::open(&rt, model).expect("open"));
+            let session = Arc::new(LmSession::open(&rt, model).expect("open"));
             let theta0 = rt.init_params(&session.model).unwrap();
-            let corpus = Rc::new(MarkovCorpus::new(session.model.vocab, 3, 0));
+            let corpus = Arc::new(MarkovCorpus::new(session.model.vocab, 3, 0));
             let rounds = 3usize;
             let s2 = session.clone();
             let c2 = corpus.clone();

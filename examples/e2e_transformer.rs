@@ -9,7 +9,7 @@
 //!
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example e2e_transformer [--quick] [--model small]
-//!     [--steps N] [--workers N] [--fused]
+//!     [--steps N] [--workers N] [--threads N] [--fused]
 //!
 //! `--fused` uses the single-dispatch lm_step_ef artifact (train step + EF
 //! compression in one PJRT execute) — the optimized single-worker path.
@@ -25,11 +25,11 @@ use ef_sgd::net::MessageKind;
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::timer::Timer;
 use ef_sgd::util::Pcg64;
-use std::rc::Rc;
+use std::sync::Arc;
 
 struct LmWorkerSource {
-    session: Rc<LmSession>,
-    corpus: Rc<MarkovCorpus>,
+    session: Arc<LmSession>,
+    corpus: Arc<MarkovCorpus>,
     rng: Pcg64,
     eval_rng: Pcg64,
 }
@@ -72,14 +72,15 @@ fn main() -> Result<()> {
     let workers: usize = arg("--workers")
         .and_then(|s| s.parse().ok())
         .unwrap_or(if fused { 1 } else { 4 });
+    let threads: usize = arg("--threads").and_then(|s| s.parse().ok()).unwrap_or(1);
     let lr: f64 = arg("--lr").and_then(|s| s.parse().ok()).unwrap_or(1.0);
 
     let rt = Runtime::load_default()
         .context("artifacts missing — run `make artifacts` first")?;
-    let session = Rc::new(LmSession::open(&rt, &model)?);
+    let session = Arc::new(LmSession::open(&rt, &model)?);
     let d = session.d();
     let entry = &session.model;
-    let corpus = Rc::new(MarkovCorpus::new(entry.vocab, 4, 0));
+    let corpus = Arc::new(MarkovCorpus::new(entry.vocab, 4, 0));
     let mut ent_rng = Pcg64::seeded(99);
     let entropy = corpus.entropy_estimate(20_000, &mut ent_rng);
     println!(
@@ -95,18 +96,20 @@ fn main() -> Result<()> {
     if fused {
         run_fused(&session, &corpus, theta0, steps, lr as f32, entropy)
     } else {
-        run_distributed(session, corpus, theta0, steps, workers, lr, entropy)
+        run_distributed(session, corpus, theta0, steps, workers, threads, lr, entropy)
     }
 }
 
 /// Multi-worker path: the coordinator drives lm_step per worker, EF-sign
 /// compression + parameter-server exchange on the fabric.
+#[allow(clippy::too_many_arguments)]
 fn run_distributed(
-    session: Rc<LmSession>,
-    corpus: Rc<MarkovCorpus>,
+    session: Arc<LmSession>,
+    corpus: Arc<MarkovCorpus>,
     theta0: Vec<f32>,
     steps: usize,
     n_workers: usize,
+    threads: usize,
     lr: f64,
     entropy: f64,
 ) -> Result<()> {
@@ -133,6 +136,7 @@ fn run_distributed(
         schedule: LrSchedule::new(lr, steps, vec![0.5, 0.75]),
         aggregation: Aggregation::Mean,
         update_rule: UpdateRule::ApplyAggregate,
+        threads,
         log_every: 10,
         eval_every: (steps / 10).max(1),
         ..Default::default()

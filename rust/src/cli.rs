@@ -81,6 +81,7 @@ fn takes_value(key: &str) -> bool {
             | "out"
             | "model"
             | "workers"
+            | "threads"
             | "steps"
             | "lr"
             | "seed"
@@ -115,6 +116,8 @@ COMMON OPTIONS:
     --quick              Reduced problem sizes (CI)
     --out <dir>          Write CSV/JSON results (default: results/)
     --seed <n>           Base RNG seed
+    --threads <n>        Worker-pool threads for `train` (default 1;
+                         results are bit-identical for any value)
     --artifacts <dir>    Artifact directory (default: artifacts)
 ";
 

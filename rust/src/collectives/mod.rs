@@ -8,7 +8,9 @@
 //!   (Bernstein et al. 2019's multi-worker SIGNSGD aggregation).
 //!
 //! All routes go through [`crate::net::Fabric::send`], so traffic and
-//! simulated time are accounted exactly.
+//! simulated time are accounted exactly — including from the threaded
+//! variants, whose sends/recvs interleave through the same mutex-guarded
+//! accounting layer.
 
 pub mod majority;
 pub mod ps;
@@ -16,4 +18,4 @@ pub mod ring;
 
 pub use majority::majority_vote;
 pub use ps::ParameterServer;
-pub use ring::{ring_allgather, ring_allreduce};
+pub use ring::{ring_allgather, ring_allreduce, ring_allreduce_parallel};

@@ -6,7 +6,9 @@
 use crate::compress::wire::{self, Encoded, Format};
 use crate::net::{Fabric, Message, MessageKind, Payload};
 
-/// The leader endpoint of a parameter-server round.
+/// The leader endpoint of a parameter-server round. `Clone` so each
+/// worker-pool thread can hold its own copy of the (cheap) topology.
+#[derive(Clone, Debug)]
 pub struct ParameterServer {
     /// Node id of the leader on the fabric (convention: last node).
     pub leader: usize,
@@ -39,9 +41,14 @@ impl ParameterServer {
     /// decode, and return the *mean* as a dense vector.
     /// Panics if a worker's message is missing (the scheduler guarantees
     /// all pushes happen before the gather in the simulated loop).
+    ///
+    /// Messages are accumulated in worker order regardless of arrival
+    /// order, so the f32 sum is bit-identical whether the pushes came from
+    /// one thread or many.
     pub fn gather_mean(&self, fabric: &Fabric, round: u64, d: usize) -> Vec<f32> {
         let mut acc = vec![0.0f32; d];
-        let msgs = fabric.recv_all(self.leader);
+        let mut msgs = fabric.recv_all(self.leader);
+        msgs.sort_by_key(|m| m.src);
         let mut got = 0usize;
         for msg in msgs {
             assert_eq!(msg.round, round, "stale message in PS gather");

@@ -5,8 +5,24 @@
 //! Each of the `n` workers holds a dense vector; after the call every
 //! worker holds the element-wise sum. 2(n−1) message rounds, each moving
 //! d/n values: total traffic 2·(n−1)/n·d·32 bits per worker.
+//!
+//! In the all-reduce, payload buffers are **moved** through the fabric,
+//! not cloned: each worker seeds one chunk copy, then every forwarding hop
+//! takes ownership of the received `Vec`, accumulates (or copies out) in
+//! place, and sends the same allocation onward. That turns the per-step
+//! O(n²) chunk clones of the naive implementation into O(n) total
+//! allocations. (The all-gather keeps one copy per hop — inherent, since
+//! every worker retains what it forwards.)
+//!
+//! [`ring_allreduce`] runs the schedule lock-step on the calling thread;
+//! [`ring_allreduce_parallel`] runs one scoped thread per worker with
+//! blocking receives. Both produce identical buffers and identical
+//! accounting: each node's inbox is fed by a single peer (its ring
+//! predecessor) in program order, so the per-chunk accumulation order is
+//! fixed by the ring schedule, not by thread timing.
 
 use crate::net::{Fabric, Message, MessageKind, Payload};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Chunk boundaries: chunk c covers [offsets[c], offsets[c+1]).
 fn chunk_offsets(d: usize, n: usize) -> Vec<usize> {
@@ -18,6 +34,49 @@ fn chunk_offsets(d: usize, n: usize) -> Vec<usize> {
         offs.push(offs[c] + len);
     }
     offs
+}
+
+fn send_chunk(fabric: &Fabric, src: usize, dst: usize, round: u64, chunk: Vec<f32>) {
+    fabric.send(Message {
+        src,
+        dst,
+        round,
+        kind: MessageKind::GradPush,
+        payload: Payload::Params(chunk),
+    });
+}
+
+fn take_chunk(msg: Message) -> Vec<f32> {
+    match msg.payload {
+        Payload::Params(chunk) => chunk,
+        other => panic!("ring collective got non-params payload: {other:?}"),
+    }
+}
+
+/// Sets the shared poison flag if its thread unwinds, so ring peers
+/// blocked on a receive from the dead thread bail out instead of parking
+/// forever (a panic anywhere would otherwise deadlock `thread::scope`).
+struct PoisonOnPanic<'a>(&'a AtomicBool);
+
+impl Drop for PoisonOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Blocking receive that aborts (panics) if a ring peer has panicked.
+fn recv_checked(fabric: &Fabric, node: usize, poisoned: &AtomicBool) -> Message {
+    loop {
+        if let Some(msg) = fabric.recv_timeout(node, std::time::Duration::from_millis(50)) {
+            return msg;
+        }
+        assert!(
+            !poisoned.load(Ordering::SeqCst),
+            "ring peer thread panicked; aborting collective on node {node}"
+        );
+    }
 }
 
 /// In-place ring all-reduce over `buffers` (one per worker), routing every
@@ -34,58 +93,103 @@ pub fn ring_allreduce(fabric: &Fabric, buffers: &mut [Vec<f32>], round: u64) {
     assert!(buffers.iter().all(|b| b.len() == d), "ragged buffers");
     let offs = chunk_offsets(d, n);
 
-    // Reduce-scatter: after step s, worker w owns the partial sum of chunk
-    // (w - s - 1) mod n over workers {w-s-1, ..., w}.
+    // Reduce-scatter. `cur[w]` is the chunk worker w sends next: seeded
+    // with its own chunk w, thereafter the chunk received (and accumulated
+    // into) on the previous step. After step s, worker w has contributed
+    // to the partial sum of chunk (w − s − 1) mod n.
+    let mut cur: Vec<Vec<f32>> = buffers
+        .iter()
+        .enumerate()
+        .map(|(w, b)| b[offs[w]..offs[w + 1]].to_vec())
+        .collect();
     for s in 0..n - 1 {
-        for w in 0..n {
-            let dst = (w + 1) % n;
-            let c = (w + n - s) % n;
-            let chunk = buffers[w][offs[c]..offs[c + 1]].to_vec();
-            fabric.send(Message {
-                src: w,
-                dst,
-                round,
-                kind: MessageKind::GradPush,
-                payload: Payload::Params(chunk),
-            });
+        for (w, chunk) in cur.iter_mut().enumerate() {
+            send_chunk(fabric, w, (w + 1) % n, round, std::mem::take(chunk));
         }
-        for dst in 0..n {
-            let msg = fabric.recv(dst).expect("ring message missing");
+        for (dst, slot) in cur.iter_mut().enumerate() {
+            let mut chunk = take_chunk(fabric.recv(dst).expect("ring message missing"));
             let c = (dst + n - s - 1) % n;
-            if let Payload::Params(chunk) = msg.payload {
-                for (acc, v) in buffers[dst][offs[c]..offs[c + 1]].iter_mut().zip(&chunk) {
-                    *acc += v;
-                }
+            for (acc, v) in chunk.iter_mut().zip(&buffers[dst][offs[c]..offs[c + 1]]) {
+                *acc += *v;
             }
+            *slot = chunk;
         }
     }
 
-    // All-gather: circulate the fully reduced chunks.
+    // After n−1 steps, cur[w] is the fully reduced chunk (w+1) mod n.
+    for (w, chunk) in cur.iter().enumerate() {
+        let c = (w + 1) % n;
+        buffers[w][offs[c]..offs[c + 1]].copy_from_slice(chunk);
+    }
+
+    // All-gather: circulate the reduced chunks, still by moving the same
+    // allocations around the ring.
     for s in 0..n - 1 {
-        for w in 0..n {
-            let dst = (w + 1) % n;
-            let c = (w + 1 + n - s) % n;
-            let chunk = buffers[w][offs[c]..offs[c + 1]].to_vec();
-            fabric.send(Message {
-                src: w,
-                dst,
-                round,
-                kind: MessageKind::GradPush,
-                payload: Payload::Params(chunk),
-            });
+        for (w, chunk) in cur.iter_mut().enumerate() {
+            send_chunk(fabric, w, (w + 1) % n, round, std::mem::take(chunk));
         }
-        for dst in 0..n {
-            let msg = fabric.recv(dst).expect("ring message missing");
+        for (dst, slot) in cur.iter_mut().enumerate() {
+            let chunk = take_chunk(fabric.recv(dst).expect("ring message missing"));
             let c = (dst + n - s) % n;
-            if let Payload::Params(chunk) = msg.payload {
-                buffers[dst][offs[c]..offs[c + 1]].copy_from_slice(&chunk);
-            }
+            buffers[dst][offs[c]..offs[c + 1]].copy_from_slice(&chunk);
+            *slot = chunk;
         }
     }
 }
 
+/// Threaded ring all-reduce: one scoped thread per worker, blocking
+/// receives, sends/recvs interleaving through the shared (mutex-guarded)
+/// fabric accounting. Bit totals and resulting buffers are identical to
+/// [`ring_allreduce`]; wall-clock scales with cores since the per-chunk
+/// accumulate/copy work runs concurrently.
+pub fn ring_allreduce_parallel(fabric: &Fabric, buffers: &mut [Vec<f32>], round: u64) {
+    let n = buffers.len();
+    assert!(n >= 1);
+    assert_eq!(fabric.nodes(), n, "fabric size mismatch");
+    if n == 1 {
+        return;
+    }
+    let d = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == d), "ragged buffers");
+    let offs = chunk_offsets(d, n);
+    let offs = &offs;
+    let poisoned = AtomicBool::new(false);
+    let poisoned = &poisoned;
+
+    std::thread::scope(|scope| {
+        for (w, buf) in buffers.iter_mut().enumerate() {
+            scope.spawn(move || {
+                let _poison_guard = PoisonOnPanic(poisoned);
+                // Reduce-scatter: forward-and-accumulate around the ring.
+                let mut cur = buf[offs[w]..offs[w + 1]].to_vec();
+                for s in 0..n - 1 {
+                    send_chunk(fabric, w, (w + 1) % n, round, std::mem::take(&mut cur));
+                    let mut chunk = take_chunk(recv_checked(fabric, w, poisoned));
+                    let c = (w + n - s - 1) % n;
+                    for (acc, v) in chunk.iter_mut().zip(&buf[offs[c]..offs[c + 1]]) {
+                        *acc += *v;
+                    }
+                    cur = chunk;
+                }
+                let own = (w + 1) % n;
+                buf[offs[own]..offs[own + 1]].copy_from_slice(&cur);
+                // All-gather: circulate the reduced chunks.
+                for s in 0..n - 1 {
+                    send_chunk(fabric, w, (w + 1) % n, round, std::mem::take(&mut cur));
+                    let chunk = take_chunk(recv_checked(fabric, w, poisoned));
+                    let c = (w + n - s) % n;
+                    buf[offs[c]..offs[c + 1]].copy_from_slice(&chunk);
+                    cur = chunk;
+                }
+            });
+        }
+    });
+}
+
 /// Ring all-gather: each worker contributes its vector; afterwards every
-/// worker holds the concatenation (by worker index).
+/// worker holds the concatenation (by worker index). One copy per hop is
+/// inherent here (every worker keeps the vector it forwards), so the send
+/// clones from the stored slot and the receive moves into place.
 pub fn ring_allgather(fabric: &Fabric, inputs: &[Vec<f32>], round: u64) -> Vec<Vec<f32>> {
     let n = inputs.len();
     assert_eq!(fabric.nodes(), n);
@@ -98,22 +202,13 @@ pub fn ring_allgather(fabric: &Fabric, inputs: &[Vec<f32>], round: u64) -> Vec<V
         .collect();
     for s in 0..n.saturating_sub(1) {
         for w in 0..n {
-            let dst = (w + 1) % n;
             let c = (w + n - s) % n;
-            fabric.send(Message {
-                src: w,
-                dst,
-                round,
-                kind: MessageKind::GradPush,
-                payload: Payload::Params(gathered[w][c].clone()),
-            });
+            send_chunk(fabric, w, (w + 1) % n, round, gathered[w][c].clone());
         }
         for dst in 0..n {
-            let msg = fabric.recv(dst).expect("allgather message missing");
+            let chunk = take_chunk(fabric.recv(dst).expect("allgather message missing"));
             let c = (dst + n - s - 1) % n;
-            if let Payload::Params(chunk) = msg.payload {
-                gathered[dst][c] = chunk;
-            }
+            gathered[dst][c] = chunk;
         }
     }
     gathered
@@ -140,18 +235,22 @@ mod tests {
         out
     }
 
-    #[test]
-    fn allreduce_matches_serial_sum() {
-        let n = 4;
-        let d = 37; // not divisible by n
-        let mut rng = Pcg64::seeded(0);
-        let mut buffers: Vec<Vec<f32>> = (0..n)
+    fn random_buffers(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n)
             .map(|_| {
                 let mut v = vec![0.0f32; d];
                 rng.fill_normal(&mut v, 0.0, 1.0);
                 v
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn allreduce_matches_serial_sum() {
+        let n = 4;
+        let d = 37; // not divisible by n
+        let mut buffers = random_buffers(n, d, 0);
         let expect = serial_sum(&buffers);
         let fabric = Fabric::new(n, LinkModel::default());
         ring_allreduce(&fabric, &mut buffers, 0);
@@ -172,14 +271,7 @@ mod tests {
             },
             &Pair(UsizeRange(1, 8), UsizeRange(1, 64)),
             |&(n, d)| {
-                let mut rng = Pcg64::seeded((n * 1000 + d) as u64);
-                let mut buffers: Vec<Vec<f32>> = (0..n)
-                    .map(|_| {
-                        let mut v = vec![0.0f32; d];
-                        rng.fill_normal(&mut v, 0.0, 1.0);
-                        v
-                    })
-                    .collect();
+                let mut buffers = random_buffers(n, d, (n * 1000 + d) as u64);
                 let expect = serial_sum(&buffers);
                 let fabric = Fabric::new(n, LinkModel::default());
                 ring_allreduce(&fabric, &mut buffers, 0);
@@ -188,6 +280,27 @@ mod tests {
                     .all(|b| b.iter().zip(&expect).all(|(x, e)| (x - e).abs() < 1e-3))
             },
         );
+    }
+
+    /// The threaded variant is bit-identical to the sequential one: same
+    /// buffers (exactly, not within tolerance) and same accounted traffic.
+    #[test]
+    fn parallel_allreduce_bit_identical_to_sequential() {
+        for (n, d) in [(2usize, 64usize), (3, 37), (4, 100), (8, 129)] {
+            let mut seq = random_buffers(n, d, 42 + n as u64);
+            let mut par = seq.clone();
+            let fabric_seq = Fabric::new(n, LinkModel::default());
+            let fabric_par = Fabric::new(n, LinkModel::default());
+            ring_allreduce(&fabric_seq, &mut seq, 0);
+            ring_allreduce_parallel(&fabric_par, &mut par, 0);
+            assert_eq!(seq, par, "n={n} d={d}");
+            assert_eq!(
+                fabric_seq.stats().total_bits,
+                fabric_par.stats().total_bits,
+                "n={n} d={d}"
+            );
+            assert_eq!(fabric_par.in_flight(), 0);
+        }
     }
 
     #[test]
@@ -224,6 +337,7 @@ mod tests {
         let fabric = Fabric::new(1, LinkModel::default());
         let mut buffers = vec![vec![1.0f32, 2.0]];
         ring_allreduce(&fabric, &mut buffers, 0);
+        ring_allreduce_parallel(&fabric, &mut buffers, 0);
         assert_eq!(buffers[0], vec![1.0, 2.0]);
         assert_eq!(fabric.stats().total_bits, 0);
     }

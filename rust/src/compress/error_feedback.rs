@@ -115,29 +115,66 @@ impl ErrorFeedback {
         delta
     }
 
-    /// Serialize the residual state (checkpointing). Format: raw LE f32.
+    /// Set the state directly (used by the coordinator restore path):
+    /// step counter, residual `e`, and the corrected gradient `p` of the
+    /// last completed step (so [`corrected`](Self::corrected) stays valid
+    /// across a restore instead of silently reading zeros).
+    pub fn set_state(&mut self, steps: u64, e: &[f32], p: &[f32]) {
+        assert_eq!(e.len(), self.e.len(), "residual dim mismatch");
+        assert_eq!(p.len(), self.p.len(), "corrected dim mismatch");
+        self.steps = steps;
+        self.e.copy_from_slice(e);
+        self.p.copy_from_slice(p);
+    }
+
+    /// Serialize the full state (checkpointing). Versioned format:
+    /// `b"EFS2"` magic, steps (u64 LE), residual `e` (d raw LE f32), then
+    /// the corrected gradient `p` (d raw LE f32). The pre-versioned format
+    /// stored only (steps, e); restoring it left `corrected()` all-zero,
+    /// so v1 blobs are rejected rather than half-restored.
     pub fn save_state(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.e.len() * 4 + 8);
+        let d = self.e.len();
+        let mut out = Vec::with_capacity(Self::STATE_MAGIC.len() + 8 + d * 8);
+        out.extend_from_slice(Self::STATE_MAGIC);
         out.extend_from_slice(&self.steps.to_le_bytes());
-        for v in &self.e {
+        for v in self.e.iter().chain(&self.p) {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out
     }
 
-    /// Restore from [`save_state`] bytes.
+    /// Magic header identifying the current (v2) state format.
+    pub const STATE_MAGIC: &'static [u8; 4] = b"EFS2";
+
+    /// Restore from [`save_state`](Self::save_state) bytes. Rejects
+    /// unversioned (v1) blobs and size mismatches with a clear error.
     pub fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        if bytes.len() != 8 + self.e.len() * 4 {
+        let d = self.e.len();
+        if bytes.len() < 4 || &bytes[..4] != Self::STATE_MAGIC {
             return Err(format!(
-                "state size {} does not match dim {}",
-                bytes.len(),
-                self.e.len()
+                "unversioned or foreign error-feedback state (expected {:?} header): \
+                 v1 blobs lack the corrected gradient p and cannot be restored; \
+                 re-create the checkpoint",
+                Self::STATE_MAGIC
             ));
         }
-        self.steps = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        let body = &bytes[4..];
+        if body.len() != 8 + d * 8 {
+            return Err(format!(
+                "state body is {} bytes after the 4-byte header, but dim {} needs {}",
+                body.len(),
+                d,
+                8 + d * 8
+            ));
+        }
+        self.steps = u64::from_le_bytes(body[..8].try_into().unwrap());
         for (i, v) in self.e.iter_mut().enumerate() {
             let off = 8 + i * 4;
-            *v = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            *v = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+        }
+        for (i, v) in self.p.iter_mut().enumerate() {
+            let off = 8 + (d + i) * 4;
+            *v = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
         }
         Ok(())
     }
@@ -247,9 +284,36 @@ mod tests {
         let mut restored = ErrorFeedback::new(d, Box::new(ScaledSign));
         restored.load_state(&saved).unwrap();
         assert_eq!(restored.error(), ef.error());
+        // the corrected gradient survives the round trip (checkpoint bug fix)
+        assert_eq!(restored.corrected(), ef.corrected());
+        assert!(restored.corrected().iter().any(|v| *v != 0.0));
         assert_eq!(restored.steps(), ef.steps());
         // wrong size rejected
-        assert!(restored.load_state(&saved[1..]).is_err());
+        assert!(restored.load_state(&saved[..saved.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_state_rejected_with_clear_error() {
+        let d = 16;
+        let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
+        // v1 layout: steps u64 + d raw f32 residuals, no magic header
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&3u64.to_le_bytes());
+        v1.extend_from_slice(&vec![0u8; d * 4]);
+        let err = ef.load_state(&v1).unwrap_err();
+        assert!(err.contains("corrected gradient"), "got: {err}");
+    }
+
+    #[test]
+    fn set_state_restores_corrected() {
+        let d = 8;
+        let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
+        let e: Vec<f32> = (0..d).map(|i| i as f32 * 0.1).collect();
+        let p: Vec<f32> = (0..d).map(|i| -(i as f32) * 0.2).collect();
+        ef.set_state(5, &e, &p);
+        assert_eq!(ef.steps(), 5);
+        assert_eq!(ef.error(), e.as_slice());
+        assert_eq!(ef.corrected(), p.as_slice());
     }
 
     #[test]

@@ -31,10 +31,17 @@ impl BitWriter {
     }
 
     /// Push the low `n` bits of `value`, LSB first.
+    pub fn push_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        self.push_bits64(value as u64, n);
+    }
+
+    /// Push the low `n` bits of a 64-bit `value`, LSB first.
     /// Fast path: when the cursor is byte-aligned and n is a whole number
     /// of bytes, append bytes directly (the codecs below keep their fields
     /// byte-aligned so this is the common case).
-    pub fn push_bits(&mut self, value: u32, n: u32) {
+    pub fn push_bits64(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
         if self.bits % 8 == 0 && n % 8 == 0 {
             for i in 0..(n / 8) {
                 self.bytes.push((value >> (8 * i)) as u8);
@@ -94,22 +101,30 @@ impl<'a> BitReader<'a> {
     }
 
     pub fn read_bits(&mut self, n: u32) -> Option<u32> {
-        // fast path: byte-aligned whole-byte reads (the codecs keep their
-        // multi-bit fields byte-aligned)
+        debug_assert!(n <= 32);
+        self.read_bits64(n).map(|v| v as u32)
+    }
+
+    /// Read `n` bits (LSB first) into a 64-bit word — the counterpart of
+    /// [`BitWriter::push_bits64`].
+    /// Fast path: byte-aligned whole-byte reads (the codecs keep their
+    /// multi-bit fields byte-aligned).
+    pub fn read_bits64(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
         if self.pos % 8 == 0 && n % 8 == 0 {
             let start = (self.pos / 8) as usize;
             let nbytes = (n / 8) as usize;
             if start + nbytes > self.bytes.len() {
                 return None;
             }
-            let mut v = 0u32;
+            let mut v = 0u64;
             for (i, b) in self.bytes[start..start + nbytes].iter().enumerate() {
-                v |= (*b as u32) << (8 * i);
+                v |= (*b as u64) << (8 * i);
             }
             self.pos += n as u64;
             return Some(v);
         }
-        let mut v = 0u32;
+        let mut v = 0u64;
         for i in 0..n {
             if self.read_bit()? {
                 v |= 1 << i;
@@ -146,13 +161,24 @@ pub enum Format {
     Ternary,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("payload truncated")]
     Truncated,
-    #[error("format mismatch: expected {0:?}, got {1:?}")]
     Format(Format, Format),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "payload truncated"),
+            WireError::Format(want, got) => {
+                write!(f, "format mismatch: expected {want:?}, got {got:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 // ------------------------------------------------------------- dense f32
 
@@ -189,25 +215,25 @@ pub fn decode_dense(e: &Encoded) -> Result<Vec<f32>, WireError> {
 /// `d + 32` bits total — the `Σ_i (d_i + 32)` accounting of §6.1.
 pub fn encode_scaled_sign(p: &[f32]) -> Encoded {
     let scale = super::ScaledSign::scale(p);
-    // Byte-wise sign packing (hot path): the scale occupies exactly 4
-    // bytes, so sign bits start byte-aligned and pack 8 at a time,
-    // branch-free via the IEEE sign bit.
+    // Word-packed sign encoding (hot path): the scale occupies exactly 4
+    // bytes, so sign bits start byte-aligned; 64 coordinates pack into one
+    // u64 at a time, branch-free, with a byte-wise tail for d % 64.
     let d = p.len();
     let mut bytes = Vec::with_capacity(4 + d.div_ceil(8));
     bytes.extend_from_slice(&scale.to_bits().to_le_bytes());
-    let mut chunks = p.chunks_exact(8);
+    let mut chunks = p.chunks_exact(64);
     for c in &mut chunks {
-        let mut byte = 0u8;
+        let mut word = 0u64;
         for (j, x) in c.iter().enumerate() {
             // bit = 1 for x >= 0 (and for -0.0, matching `*x >= 0.0`)
-            byte |= u8::from(*x >= 0.0) << j;
+            word |= u64::from(*x >= 0.0) << j;
         }
-        bytes.push(byte);
+        bytes.extend_from_slice(&word.to_le_bytes());
     }
     let rem = chunks.remainder();
-    if !rem.is_empty() {
+    for sub in rem.chunks(8) {
         let mut byte = 0u8;
-        for (j, x) in rem.iter().enumerate() {
+        for (j, x) in sub.iter().enumerate() {
             byte |= u8::from(*x >= 0.0) << j;
         }
         bytes.push(byte);
@@ -232,24 +258,22 @@ fn sign_payload(e: &Encoded) -> Result<(f32, &[u8]), WireError> {
     Ok((scale, &e.bytes[4..]))
 }
 
-/// Decode to the dense update vector `scale * sign` (byte-wise unpack into
-/// a preallocated buffer; branch-free lane fill).
+/// Decode to the dense update vector `scale * sign` (word-wise unpack into
+/// a preallocated buffer; branch-free lane fill, 64 lanes per load).
 pub fn decode_scaled_sign(e: &Encoded) -> Result<Vec<f32>, WireError> {
     let (scale, body) = sign_payload(e)?;
     let mut out = vec![0.0f32; e.d];
-    let mut chunks = out.chunks_exact_mut(8);
+    let mut chunks = out.chunks_exact_mut(64);
     let mut bi = 0usize;
     for c in &mut chunks {
-        let byte = body[bi];
-        bi += 1;
+        let word = u64::from_le_bytes(body[bi..bi + 8].try_into().unwrap());
+        bi += 8;
         for (j, o) in c.iter_mut().enumerate() {
-            *o = if byte >> j & 1 == 1 { scale } else { -scale };
+            *o = if word >> j & 1 == 1 { scale } else { -scale };
         }
     }
-    let rem = chunks.into_remainder();
-    if !rem.is_empty() {
-        let byte = body[bi];
-        for (j, o) in rem.iter_mut().enumerate() {
+    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[bi..]) {
+        for (j, o) in sub.iter_mut().enumerate() {
             *o = if byte >> j & 1 == 1 { scale } else { -scale };
         }
     }
@@ -263,19 +287,17 @@ pub fn decode_scaled_sign_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireEr
     if acc.len() != e.d {
         return Err(WireError::Truncated);
     }
-    let mut chunks = acc.chunks_exact_mut(8);
+    let mut chunks = acc.chunks_exact_mut(64);
     let mut bi = 0usize;
     for c in &mut chunks {
-        let byte = body[bi];
-        bi += 1;
+        let word = u64::from_le_bytes(body[bi..bi + 8].try_into().unwrap());
+        bi += 8;
         for (j, a) in c.iter_mut().enumerate() {
-            *a += if byte >> j & 1 == 1 { scale } else { -scale };
+            *a += if word >> j & 1 == 1 { scale } else { -scale };
         }
     }
-    let rem = chunks.into_remainder();
-    if !rem.is_empty() {
-        let byte = body[bi];
-        for (j, a) in rem.iter_mut().enumerate() {
+    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[bi..]) {
+        for (j, a) in sub.iter_mut().enumerate() {
             *a += if byte >> j & 1 == 1 { scale } else { -scale };
         }
     }
@@ -507,5 +529,89 @@ mod tests {
         let mut e = encode_scaled_sign(&p);
         e.bytes.truncate(4);
         assert!(matches!(decode_scaled_sign(&e), Err(WireError::Truncated)));
+    }
+
+    /// Mixed push_bit / push_bits / push_bits64 sequences at non-byte-
+    /// aligned cursors round-trip exactly (regression guard for the
+    /// aligned fast paths taking over mid-stream).
+    #[test]
+    fn prop_bitio_roundtrip_unaligned_cursors() {
+        use crate::propcheck::UsizeRange;
+        propcheck::check_with(
+            &propcheck::Config {
+                cases: 200,
+                ..Default::default()
+            },
+            &UsizeRange(1, 10_000),
+            |&seed| {
+                let mut rng = Pcg64::seeded(seed as u64);
+                // Script a random mix of writes, remember (value, width).
+                let mut script: Vec<(u64, u32)> = Vec::new();
+                let mut w = BitWriter::new();
+                for _ in 0..40 {
+                    match rng.below(3) {
+                        0 => {
+                            let bit = rng.next_u32() & 1;
+                            w.push_bit(bit == 1);
+                            script.push((bit as u64, 1));
+                        }
+                        1 => {
+                            let n = 1 + rng.below(32) as u32;
+                            let v = rng.next_u32() & (u32::MAX >> (32 - n));
+                            w.push_bits(v, n);
+                            script.push((v as u64, n));
+                        }
+                        _ => {
+                            let n = 1 + rng.below(64) as u32;
+                            let v = rng.next_u64() & (u64::MAX >> (64 - n));
+                            w.push_bits64(v, n);
+                            script.push((v, n));
+                        }
+                    }
+                }
+                let expect_bits: u64 = script.iter().map(|(_, n)| *n as u64).sum();
+                let (bytes, bits) = w.into_bytes();
+                if bits != expect_bits {
+                    return false;
+                }
+                let mut r = BitReader::new(&bytes);
+                script.iter().all(|&(v, n)| match n {
+                    1 => r.read_bit() == Some(v == 1),
+                    n if n <= 32 && v <= u32::MAX as u64 => {
+                        // read through the 64-bit path half the time to
+                        // cross-check both readers
+                        if n % 2 == 0 {
+                            r.read_bits(n) == Some(v as u32)
+                        } else {
+                            r.read_bits64(n) == Some(v)
+                        }
+                    }
+                    _ => r.read_bits64(n) == Some(v),
+                })
+            },
+        );
+    }
+
+    /// The word-packed sign codec round-trips at every alignment class:
+    /// d spanning multiples of 64, multiples of 8, and ragged tails.
+    #[test]
+    fn packed_sign_roundtrip_all_alignments() {
+        let mut rng = Pcg64::seeded(7);
+        for d in [1, 2, 7, 8, 9, 63, 64, 65, 127, 128, 129, 200, 1000] {
+            let mut p = vec![0.0f32; d];
+            rng.fill_normal(&mut p, 0.0, 1.0);
+            let e = encode_scaled_sign(&p);
+            assert_eq!(e.bits, d as u64 + 32);
+            assert_eq!(e.bytes.len(), 4 + d.div_ceil(8));
+            let scale = ScaledSign::scale(&p);
+            let dec = decode_scaled_sign(&e).unwrap();
+            let mut acc = vec![1.5f32; d];
+            decode_scaled_sign_add(&e, &mut acc).unwrap();
+            for i in 0..d {
+                let want = if p[i] >= 0.0 { scale } else { -scale };
+                assert_eq!(dec[i], want, "d={d} i={i}");
+                assert!((acc[i] - (1.5 + want)).abs() < 1e-6, "d={d} i={i}");
+            }
+        }
     }
 }

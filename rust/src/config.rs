@@ -8,20 +8,41 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error at line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing required key '{0}'")]
     Missing(String),
-    #[error("key '{0}' has wrong type (expected {1})")]
     Type(String, &'static str),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("unknown value '{1}' for '{0}'")]
+    Io(std::io::Error),
     BadValue(String, String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "config parse error at line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing required key '{key}'"),
+            ConfigError::Type(key, want) => write!(f, "key '{key}' has wrong type (expected {want})"),
+            ConfigError::Io(e) => write!(f, "io error: {e}"),
+            ConfigError::BadValue(key, value) => write!(f, "unknown value '{value}' for '{key}'"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 /// A parsed scalar value.
@@ -270,6 +291,8 @@ pub struct TrainConfig {
     /// Model config name in the artifact manifest ("tiny", "small").
     pub model: String,
     pub workers: usize,
+    /// Worker-pool threads for the coordinator (1 = sequential).
+    pub threads: usize,
     pub steps: usize,
     pub lr: f64,
     pub momentum: f64,
@@ -295,6 +318,7 @@ impl Default for TrainConfig {
         TrainConfig {
             model: "tiny".into(),
             workers: 1,
+            threads: 1,
             steps: 100,
             lr: 0.1,
             momentum: 0.0,
@@ -326,6 +350,7 @@ impl TrainConfig {
         Ok(TrainConfig {
             model: m.str_or("model.name", &d.model),
             workers: m.usize_or("training.workers", d.workers),
+            threads: m.usize_or("training.threads", d.threads),
             steps: m.usize_or("training.steps", d.steps),
             lr: m.f64_or("training.lr", d.lr),
             momentum: m.f64_or("training.momentum", d.momentum),

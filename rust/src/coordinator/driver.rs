@@ -1,7 +1,14 @@
-//! The training driver: the leader's event loop gluing workers, fabric,
-//! aggregation, LR schedule, checkpointing and metrics.
+//! The training driver: the leader's event loop gluing the worker pool,
+//! fabric, aggregation, LR schedule, checkpointing and metrics.
+//!
+//! The leader never touches a `Worker` directly: workers live on the
+//! [`WorkerPool`] threads and everything flows through channels and the
+//! shared fabric. Gathers and reports are ordered by worker id, which
+//! makes the training trajectory bit-identical for any thread count (see
+//! the module docs of [`crate::coordinator`]).
 
 use super::aggregate::Aggregation;
+use super::pool::{WorkerPool, WorkerState};
 use super::round::{LrSchedule, RoundClock};
 use super::state::{CheckpointStore, Snapshot};
 use super::worker::Worker;
@@ -9,6 +16,7 @@ use crate::collectives::ParameterServer;
 use crate::compress::wire;
 use crate::metrics::Recorder;
 use crate::net::{Fabric, LinkModel, Payload, TrafficStats};
+use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,6 +39,8 @@ pub struct DriverConfig {
     pub update_rule: UpdateRule,
     pub weight_decay: f32,
     pub link: LinkModel,
+    /// Worker-pool threads (clamped to 1..=workers; 1 = sequential).
+    pub threads: usize,
     pub log_every: usize,
     pub eval_every: usize,
     /// Save a checkpoint every N rounds (0 = never).
@@ -47,6 +57,7 @@ impl Default for DriverConfig {
             update_rule: UpdateRule::ApplyAggregate,
             weight_decay: 0.0,
             link: LinkModel::default(),
+            threads: 1,
             log_every: 0,
             eval_every: 0,
             checkpoint_every: 0,
@@ -66,9 +77,9 @@ pub struct TrainOutcome {
 /// The coordinator driver.
 pub struct TrainDriver {
     cfg: DriverConfig,
-    workers: Vec<Worker>,
+    pool: WorkerPool,
     theta: Vec<f32>,
-    fabric: Fabric,
+    fabric: Arc<Fabric>,
     ps: ParameterServer,
     clock: RoundClock,
     momentum: Vec<f32>,
@@ -81,13 +92,14 @@ impl TrainDriver {
         let d = workers[0].dim();
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
-        let fabric = Fabric::new(workers.len() + 1, cfg.link);
+        let fabric = Arc::new(Fabric::new(workers.len() + 1, cfg.link));
         let ps = ParameterServer::new(&fabric);
+        let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
         TrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
             cfg,
-            workers,
+            pool,
             theta: theta0,
             fabric,
             ps,
@@ -99,23 +111,51 @@ impl TrainDriver {
         &self.theta
     }
 
-    pub fn workers(&self) -> &[Worker] {
-        &self.workers
+    pub fn rounds(&self) -> u64 {
+        self.clock.current()
     }
 
-    /// Resume from a checkpoint: restores theta and per-worker residuals.
+    /// Snapshot of the fabric's traffic accounting so far.
+    pub fn traffic(&self) -> TrafficStats {
+        self.fabric.stats()
+    }
+
+    /// Per-worker EF states (fetched from the pool threads), by worker id.
+    pub fn worker_states(&self) -> Vec<WorkerState> {
+        self.pool.export_states()
+    }
+
+    /// Full coordinator snapshot (what [`restore`](Self::restore) takes).
+    pub fn snapshot(&self) -> Snapshot {
+        let states = self.pool.export_states();
+        Snapshot {
+            round: self.clock.current(),
+            theta: self.theta.clone(),
+            worker_errors: states.iter().map(|s| s.error.clone()).collect(),
+            worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
+        }
+    }
+
+    /// Resume from a checkpoint: restores theta and per-worker EF state
+    /// (residual `e` and corrected gradient `p`).
     pub fn restore(&mut self, snap: &Snapshot) {
         assert_eq!(snap.theta.len(), self.theta.len());
-        assert_eq!(snap.worker_errors.len(), self.workers.len());
+        assert_eq!(snap.worker_errors.len(), self.pool.n_workers());
+        assert_eq!(snap.worker_corrected.len(), self.pool.n_workers());
         self.theta.copy_from_slice(&snap.theta);
-        for (w, e) in self.workers.iter_mut().zip(&snap.worker_errors) {
-            let mut bytes = Vec::with_capacity(8 + e.len() * 4);
-            bytes.extend_from_slice(&snap.round.to_le_bytes());
-            for v in e {
-                bytes.extend_from_slice(&v.to_le_bytes());
-            }
-            w.ef_state_mut().load_state(&bytes).expect("restore EF");
-        }
+        let states: Vec<WorkerState> = snap
+            .worker_errors
+            .iter()
+            .zip(&snap.worker_corrected)
+            .enumerate()
+            .map(|(id, (e, p))| WorkerState {
+                id,
+                steps: snap.round,
+                error: e.clone(),
+                corrected: p.clone(),
+            })
+            .collect();
+        self.pool.restore_states(states);
         while self.clock.current() < snap.round {
             self.clock.advance();
         }
@@ -126,53 +166,36 @@ impl TrainDriver {
             return;
         };
         let store = CheckpointStore::new(dir).expect("checkpoint dir");
-        let snap = Snapshot {
-            round: self.clock.current(),
-            theta: self.theta.clone(),
-            worker_errors: self
-                .workers
-                .iter()
-                .map(|w| w.ef_state().error().to_vec())
-                .collect(),
-        };
-        store.save(&snap).expect("checkpoint save");
+        store.save(&self.snapshot()).expect("checkpoint save");
     }
 
     /// One synchronous round. Returns the mean worker training loss.
     pub fn round(&mut self, recorder: &mut Recorder) -> f64 {
         let step = self.clock.current();
         let lr = self.cfg.schedule.lr(step as usize) as f32;
-        let d = self.theta.len();
+        let n = self.pool.n_workers();
 
-        // 1. broadcast parameters (accounted) — workers drain their queues.
+        // 1. broadcast parameters (accounted).
         self.ps.broadcast_params(&self.fabric, step, &self.theta);
-        for w in 0..self.workers.len() {
-            let _ = self.ps.recv_params(&self.fabric, w);
-        }
 
-        // 2-3. workers compute + compress + push.
-        let mut losses = 0.0f64;
-        for w in self.workers.iter_mut() {
-            // decoupled weight decay: g ← g + wd·x happens inside the
-            // worker via theta, approximated leader-side for simplicity:
-            // we pass theta and let the EF step handle γg; wd is applied
-            // to the aggregate below (equivalent for these experiments).
-            let enc = w.step_encode(&self.theta, lr);
-            losses += w.last_loss;
-            self.ps.push_grad(&self.fabric, w.id, step, enc);
-        }
-        let mean_loss = losses / self.workers.len() as f64;
+        // 2-3. pool: every worker drains its broadcast, computes, EF-
+        // compresses, and pushes its encoded frame to the leader.
+        let reports = self.pool.round(step, lr);
+        let mean_loss = reports.iter().map(|r| r.loss).sum::<f64>() / n as f64;
 
-        // 4. leader: gather, decode, aggregate, update.
-        let msgs = self.fabric.recv_all(self.ps.leader);
-        let mut updates: Vec<Vec<f32>> = Vec::with_capacity(self.workers.len());
+        // 4. leader: gather, decode, aggregate, update. Messages are
+        // sorted by source so the f32 aggregation order is independent of
+        // thread scheduling.
+        let mut msgs = self.fabric.recv_all(self.ps.leader);
+        msgs.sort_by_key(|m| m.src);
+        let mut updates: Vec<Vec<f32>> = Vec::with_capacity(n);
         for msg in msgs {
             debug_assert_eq!(msg.round, step, "stale push");
             if let Payload::Grad(e) = msg.payload {
                 updates.push(wire::decode_any(&e).expect("decode push"));
             }
         }
-        assert_eq!(updates.len(), self.workers.len(), "missing worker push");
+        assert_eq!(updates.len(), n, "missing worker push");
         let agg = self.cfg.aggregation.combine(&updates);
 
         match self.cfg.update_rule {
@@ -196,27 +219,15 @@ impl TrainDriver {
             crate::tensor::axpy(-lr * self.cfg.weight_decay, &self.wd_buf, &mut self.theta);
         }
 
-        // instrumentation
+        // instrumentation (reports are sorted by worker id)
         recorder.record("train_loss", step, mean_loss);
         recorder.record("lr", step, lr as f64);
-        let mean_err: f64 = self
-            .workers
-            .iter()
-            .map(|w| w.error_norm())
-            .sum::<f64>()
-            / self.workers.len() as f64;
+        let mean_err = reports.iter().map(|r| r.error_norm).sum::<f64>() / n as f64;
         recorder.record("error_norm", step, mean_err);
-        let mean_phi: f64 = self.workers.iter().map(|w| w.last_phi).sum::<f64>()
-            / self.workers.len() as f64;
+        let mean_phi = reports.iter().map(|r| r.phi).sum::<f64>() / n as f64;
         recorder.record("phi_corrected", step, mean_phi);
-        let mean_phi_g: f64 = self
-            .workers
-            .iter()
-            .map(|w| w.last_grad_density)
-            .sum::<f64>()
-            / self.workers.len() as f64;
+        let mean_phi_g = reports.iter().map(|r| r.grad_density).sum::<f64>() / n as f64;
         recorder.record("phi_grad", step, mean_phi_g);
-        let _ = d;
 
         self.clock.advance();
         mean_loss
@@ -236,10 +247,7 @@ impl TrainDriver {
             }
             if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
                 // eval through worker 0's source
-                let theta = self.theta.clone();
-                let w0 = &mut self.workers[0];
-                let el = w0.eval_loss(&theta);
-                let ea = w0.eval_acc(&theta);
+                let (el, ea) = self.pool.eval(0, &self.theta);
                 if el.is_finite() {
                     recorder.record("eval_loss", step as u64, el);
                 }
@@ -365,16 +373,7 @@ mod tests {
     #[test]
     fn checkpoint_restore_resumes_identically() {
         let d = 32;
-        let mk = || {
-            let workers =
-                quadratic_workers(2, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
-            DriverConfig {
-                steps: 10,
-                schedule: LrSchedule::constant(0.1),
-                ..Default::default()
-            };
-            workers
-        };
+        let mk = || quadratic_workers(2, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
         // run A: 20 straight rounds
         let cfg_a = DriverConfig {
             steps: 20,
@@ -394,15 +393,8 @@ mod tests {
         for _ in 0..10 {
             drv.round(&mut rec);
         }
-        let snap = Snapshot {
-            round: drv.clock.current(),
-            theta: drv.theta.clone(),
-            worker_errors: drv
-                .workers
-                .iter()
-                .map(|w| w.ef_state().error().to_vec())
-                .collect(),
-        };
+        let snap = drv.snapshot();
+        assert_eq!(snap.round, 10);
         let cfg_b2 = DriverConfig {
             steps: 0,
             schedule: LrSchedule::constant(0.1),
@@ -416,7 +408,7 @@ mod tests {
         }
         // NOTE: worker RNG streams are reconstructed from seeds, and the
         // quadratic grad is deterministic (noise 0), so trajectories match.
-        for (a, b) in out_a.theta.iter().zip(&drv2.theta) {
+        for (a, b) in out_a.theta.iter().zip(drv2.theta()) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
     }

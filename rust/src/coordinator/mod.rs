@@ -12,20 +12,50 @@
 //!    the update.
 //!
 //! The per-worker residual `e_t` is first-class coordinator state: it is
-//! owned by [`worker::Worker`], checkpointed by [`state::CheckpointStore`],
-//! and its norm is exported as a metric (Lemma 3 instrumentation).
+//! owned by [`worker::Worker`], checkpointed by [`state::CheckpointStore`]
+//! together with the corrected gradient `p_t`, and its norm is exported as
+//! a metric (Lemma 3 instrumentation).
 //!
-//! PJRT handles are not `Send`, so the event loop is single-threaded and
-//! deterministic; worker compute "parallelism" and all communication costs
-//! live in the fabric's simulated clock.
+//! # Threading model
+//!
+//! Worker compute runs on a persistent [`pool::WorkerPool`] of actor
+//! threads (`DriverConfig::threads`, CLI `--threads`). Workers are moved
+//! onto the pool at driver construction and stay there for the run; the
+//! leader's event loop talks to them over channels and never touches a
+//! `Worker` directly. All communication still flows through the shared
+//! [`crate::net::Fabric`], whose mutex-guarded queues and accounting make
+//! interleaved sends/recvs from many threads safe and exact.
+//!
+//! # Determinism guarantee
+//!
+//! For a fixed seed, the trained parameters, every worker's EF residual,
+//! and the fabric's bit totals are **identical for any `--threads` value**:
+//!
+//! * each worker owns its RNG and data shard, so per-worker compute does
+//!   not depend on which thread hosts it;
+//! * every pool reply carries the worker id and the leader sorts gathers
+//!   and reports by id before aggregating, so f32 reduction order is
+//!   schedule-independent;
+//! * bit accounting is a commutative sum of exact per-message counts.
+//!
+//! (Simulated *time* aggregates are f64 sums whose addition order may vary
+//! across thread counts; bit counts never do.) The guarantee is enforced
+//! by the `threads_are_bit_deterministic` integration test.
+//!
+//! When the gradient source wraps non-`Send` device handles (real PJRT),
+//! share the session behind the usual `Arc` facade only if the bindings
+//! allow it; otherwise run `--threads 1`, which keeps all workers on a
+//! single pool thread.
 
 pub mod aggregate;
 pub mod driver;
+pub mod pool;
 pub mod round;
 pub mod state;
 pub mod worker;
 
 pub use aggregate::Aggregation;
 pub use driver::{TrainDriver, TrainOutcome};
+pub use pool::{RoundReport, WorkerPool, WorkerState};
 pub use round::LrSchedule;
 pub use worker::{GradSource, ObjectiveSource, Worker, WorkerMode};

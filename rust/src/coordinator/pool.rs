@@ -1,0 +1,386 @@
+//! The worker pool: a persistent set of actor threads that own the
+//! [`Worker`]s for the lifetime of a training run.
+//!
+//! The driver (leader) talks to the pool over channels:
+//!
+//! * [`WorkerPool::round`] — dispatch one training round; every actor
+//!   drains its workers' parameter broadcasts from the fabric, runs the
+//!   gradient + EF-compress step, pushes the encoded frame to the leader
+//!   through the shared [`Fabric`] (so bit accounting is exact and
+//!   centralized), and reports per-worker instrumentation back.
+//! * [`WorkerPool::eval`] — run held-out eval on one worker's data shard.
+//! * [`WorkerPool::export_states`] — snapshot every worker's EF state
+//!   (steps, residual `e`, corrected `p`) for checkpointing.
+//! * [`WorkerPool::restore_states`] — load those states back after a
+//!   restart.
+//!
+//! Workers are assigned to threads in contiguous id blocks; every reply
+//! carries the worker id, and the pool sorts collected replies by id, so
+//! the driver's view is independent of thread scheduling. Each worker owns
+//! its RNG and data shard, which makes per-worker computation identical
+//! across any thread count — determinism is asserted by the
+//! `threads_are_bit_deterministic` integration test.
+
+use super::worker::Worker;
+use crate::collectives::ParameterServer;
+use crate::net::Fabric;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-worker instrumentation from one round.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub id: usize,
+    pub loss: f64,
+    pub phi: f64,
+    pub grad_density: f64,
+    pub error_norm: f64,
+}
+
+/// One worker's serializable EF state (see `ErrorFeedback::set_state`).
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    pub id: usize,
+    pub steps: u64,
+    pub error: Vec<f32>,
+    pub corrected: Vec<f32>,
+}
+
+enum Command {
+    Round { round: u64, lr: f32 },
+    Eval { worker: usize, theta: Arc<Vec<f32>> },
+    Export,
+    Restore { states: Arc<Vec<WorkerState>> },
+    Shutdown,
+}
+
+enum Reply {
+    Round(RoundReport),
+    Eval { loss: f64, acc: f64 },
+    Export(WorkerState),
+    Restored,
+}
+
+/// Persistent thread pool owning the workers of one training run.
+pub struct WorkerPool {
+    command_txs: Vec<Sender<Command>>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    n_workers: usize,
+    /// worker id -> thread index (for routing eval requests).
+    owner: Vec<usize>,
+}
+
+impl WorkerPool {
+    /// Move `workers` onto `threads` actor threads (clamped to
+    /// `1..=workers.len()`), all sharing `fabric` for communication.
+    pub fn spawn(workers: Vec<Worker>, fabric: Arc<Fabric>, threads: usize) -> WorkerPool {
+        let n_workers = workers.len();
+        assert!(n_workers > 0, "pool needs at least one worker");
+        let threads = threads.clamp(1, n_workers);
+        let ps = ParameterServer::new(&fabric);
+        let (reply_tx, reply_rx) = channel();
+
+        // Contiguous block assignment: thread t owns workers
+        // [t*⌈n/threads⌉ .. ), ascending by id within a thread.
+        let per_thread = n_workers.div_ceil(threads);
+        let mut owner = vec![0usize; n_workers];
+        let mut command_txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        let mut workers = workers.into_iter();
+        for t in 0..threads {
+            let block: Vec<Worker> = workers.by_ref().take(per_thread).collect();
+            for w in &block {
+                owner[w.id] = t;
+            }
+            let (tx, rx) = channel();
+            command_txs.push(tx);
+            let fabric = fabric.clone();
+            let ps = ps.clone();
+            let reply_tx = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                actor_loop(block, fabric, ps, rx, reply_tx);
+            }));
+        }
+        debug_assert_eq!(workers.len(), 0);
+        WorkerPool {
+            command_txs,
+            reply_rx,
+            handles,
+            n_workers,
+            owner,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn threads(&self) -> usize {
+        self.command_txs.len()
+    }
+
+    /// Wait for one reply, surfacing actor-thread death as a panic instead
+    /// of blocking forever. (During normal operation no actor returns, so
+    /// a finished handle means one panicked — with ≥2 threads the survivors
+    /// keep the reply channel open and a plain `recv` would hang.)
+    fn recv_reply(&self) -> Reply {
+        loop {
+            match self.reply_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(reply) => return reply,
+                Err(RecvTimeoutError::Timeout) => {
+                    assert!(
+                        !self.handles.iter().any(|h| h.is_finished()),
+                        "worker pool thread died while replies were pending"
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("all worker pool threads died");
+                }
+            }
+        }
+    }
+
+    /// Run one round on every worker; returns per-worker reports sorted by
+    /// worker id. The caller must have broadcast the round's parameters on
+    /// the fabric first; on return every worker's gradient push is on the
+    /// leader's queue.
+    pub fn round(&self, round: u64, lr: f32) -> Vec<RoundReport> {
+        for tx in &self.command_txs {
+            tx.send(Command::Round { round, lr }).expect("pool thread died");
+        }
+        let mut reports = Vec::with_capacity(self.n_workers);
+        for _ in 0..self.n_workers {
+            match self.recv_reply() {
+                Reply::Round(r) => reports.push(r),
+                _ => unreachable!("unexpected pool reply during round"),
+            }
+        }
+        reports.sort_by_key(|r| r.id);
+        reports
+    }
+
+    /// Held-out eval (loss, accuracy) through one worker's grad source.
+    pub fn eval(&self, worker: usize, theta: &[f32]) -> (f64, f64) {
+        let tx = &self.command_txs[self.owner[worker]];
+        tx.send(Command::Eval {
+            worker,
+            theta: Arc::new(theta.to_vec()),
+        })
+        .expect("pool thread died");
+        match self.recv_reply() {
+            Reply::Eval { loss, acc } => (loss, acc),
+            _ => unreachable!("unexpected pool reply during eval"),
+        }
+    }
+
+    /// Snapshot every worker's EF state, sorted by worker id.
+    pub fn export_states(&self) -> Vec<WorkerState> {
+        for tx in &self.command_txs {
+            tx.send(Command::Export).expect("pool thread died");
+        }
+        let mut states = Vec::with_capacity(self.n_workers);
+        for _ in 0..self.n_workers {
+            match self.recv_reply() {
+                Reply::Export(s) => states.push(s),
+                _ => unreachable!("unexpected pool reply during export"),
+            }
+        }
+        states.sort_by_key(|s| s.id);
+        states
+    }
+
+    /// Restore worker EF states (each thread applies the entries for the
+    /// workers it owns).
+    pub fn restore_states(&self, states: Vec<WorkerState>) {
+        let states = Arc::new(states);
+        for tx in &self.command_txs {
+            tx.send(Command::Restore {
+                states: states.clone(),
+            })
+            .expect("pool thread died");
+        }
+        for _ in 0..self.command_txs.len() {
+            match self.recv_reply() {
+                Reply::Restored => {}
+                _ => unreachable!("unexpected pool reply during restore"),
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.command_txs {
+            // the thread may already be gone; that's fine
+            let _ = tx.send(Command::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The actor body: owns a block of workers until shutdown.
+fn actor_loop(
+    mut workers: Vec<Worker>,
+    fabric: Arc<Fabric>,
+    ps: ParameterServer,
+    rx: Receiver<Command>,
+    tx: Sender<Reply>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Round { round, lr } => {
+                for w in workers.iter_mut() {
+                    let params = ps
+                        .recv_params(&fabric, w.id)
+                        .expect("parameter broadcast missing for worker");
+                    let enc = w.step_encode(&params, lr);
+                    ps.push_grad(&fabric, w.id, round, enc);
+                    let report = RoundReport {
+                        id: w.id,
+                        loss: w.last_loss,
+                        phi: w.last_phi,
+                        grad_density: w.last_grad_density,
+                        error_norm: w.error_norm(),
+                    };
+                    if tx.send(Reply::Round(report)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Command::Eval { worker, theta } => {
+                let w = workers
+                    .iter_mut()
+                    .find(|w| w.id == worker)
+                    .expect("eval routed to wrong pool thread");
+                let loss = w.eval_loss(&theta);
+                let acc = w.eval_acc(&theta);
+                if tx.send(Reply::Eval { loss, acc }).is_err() {
+                    return;
+                }
+            }
+            Command::Export => {
+                for w in &workers {
+                    let ef = w.ef_state();
+                    let state = WorkerState {
+                        id: w.id,
+                        steps: ef.steps(),
+                        error: ef.error().to_vec(),
+                        corrected: ef.corrected().to_vec(),
+                    };
+                    if tx.send(Reply::Export(state)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Command::Restore { states } => {
+                for w in workers.iter_mut() {
+                    if let Some(s) = states.iter().find(|s| s.id == w.id) {
+                        w.ef_state_mut().set_state(s.steps, &s.error, &s.corrected);
+                    }
+                }
+                if tx.send(Reply::Restored).is_err() {
+                    return;
+                }
+            }
+            Command::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompressorKind;
+    use crate::coordinator::worker::{ObjectiveSource, WorkerMode};
+    use crate::model::toy::SparseNoiseQuadratic;
+    use crate::net::LinkModel;
+    use crate::util::Pcg64;
+
+    fn make_workers(n: usize, d: usize) -> Vec<Worker> {
+        (0..n)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 0.0),
+                        Pcg64::seeded(100 + id as u64),
+                    )),
+                    WorkerMode::ErrorFeedback,
+                    CompressorKind::ScaledSign,
+                    4,
+                    4,
+                    Pcg64::seeded(id as u64),
+                )
+            })
+            .collect()
+    }
+
+    fn run_round(pool: &WorkerPool, fabric: &Fabric, theta: &[f32]) -> Vec<RoundReport> {
+        let ps = ParameterServer::new(fabric);
+        ps.broadcast_params(fabric, 0, theta);
+        let reports = pool.round(0, 0.1);
+        // drain the leader queue so the fabric ends the round empty
+        let msgs = fabric.recv_all(ps.leader);
+        assert_eq!(msgs.len(), pool.n_workers());
+        reports
+    }
+
+    #[test]
+    fn round_reports_sorted_and_complete() {
+        let d = 32;
+        let n = 5;
+        for threads in [1usize, 2, 3, 8] {
+            let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+            let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), threads);
+            assert_eq!(pool.threads(), threads.min(n));
+            let reports = run_round(&pool, &fabric, &vec![1.0f32; d]);
+            let ids: Vec<usize> = reports.iter().map(|r| r.id).collect();
+            assert_eq!(ids, (0..n).collect::<Vec<_>>());
+            assert!(reports.iter().all(|r| r.loss.is_finite()));
+        }
+    }
+
+    #[test]
+    fn export_restore_roundtrip() {
+        let d = 16;
+        let n = 4;
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 2);
+        run_round(&pool, &fabric, &vec![1.0f32; d]);
+        let states = pool.export_states();
+        assert_eq!(states.len(), n);
+        assert!(states.iter().all(|s| s.steps == 1));
+        assert!(states.iter().all(|s| s.corrected.iter().any(|v| *v != 0.0)));
+
+        // restore into a fresh pool; exported states must match exactly
+        let fabric2 = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool2 = WorkerPool::spawn(make_workers(n, d), fabric2, 3);
+        pool2.restore_states(states.clone());
+        let restored = pool2.export_states();
+        for (a, b) in states.iter().zip(&restored) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.error, b.error);
+            assert_eq!(a.corrected, b.corrected);
+        }
+    }
+
+    #[test]
+    fn eval_routes_to_owning_thread() {
+        let d = 8;
+        let n = 4;
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric, 2);
+        let theta = vec![0.5f32; d];
+        for w in 0..n {
+            let (loss, _acc) = pool.eval(w, &theta);
+            // quadratic loss of 0.5*||x||^2 at x = 0.5·1 is d/8
+            assert!(loss.is_finite());
+        }
+    }
+}

@@ -1,24 +1,58 @@
 //! Checkpointing: the coordinator's durable state is (round, theta,
-//! per-worker EF residuals). Losing `e_t` silently degrades EF-SGD back to
-//! plain compression, so residuals are part of the checkpoint, not an
-//! optimization cache.
+//! per-worker EF residuals `e_t`, per-worker corrected gradients `p_t`).
+//! Losing `e_t` silently degrades EF-SGD back to plain compression, and
+//! losing `p_t` makes `ErrorFeedback::corrected()` read zeros after a
+//! restore — so both are part of the checkpoint, not optimization caches.
 //!
-//! Format: `meta.json` + raw little-endian f32 blobs, one per tensor.
+//! Format (`ef-sgd-checkpoint-v2`): `meta.json` + raw little-endian f32
+//! blobs, one per tensor. v1 checkpoints (which lacked `p_t`) are rejected
+//! with a clear error rather than half-restored.
 
 use crate::util::json::{num, obj, s, Json};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("corrupt checkpoint: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Corrupt(String),
 }
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::Json(e) => write!(f, "json: {e}"),
+            CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            CheckpointError::Json(e) => Some(e),
+            CheckpointError::Corrupt(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for CheckpointError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        CheckpointError::Json(e)
+    }
+}
+
+/// On-disk format tag written to (and required in) `meta.json`.
+pub const CHECKPOINT_FORMAT: &str = "ef-sgd-checkpoint-v2";
 
 pub struct CheckpointStore {
     dir: PathBuf,
@@ -53,7 +87,12 @@ fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, CheckpointError> {
 pub struct Snapshot {
     pub round: u64,
     pub theta: Vec<f32>,
+    /// Per-worker EF residuals `e_t`.
     pub worker_errors: Vec<Vec<f32>>,
+    /// Per-worker corrected gradients `p_t = γg + e` of the last completed
+    /// round (what the scaled-sign wire encoder reads for its ‖p‖₁/d
+    /// scale). Same length/order as `worker_errors`.
+    pub worker_corrected: Vec<Vec<f32>>,
 }
 
 impl CheckpointStore {
@@ -65,15 +104,23 @@ impl CheckpointStore {
     }
 
     pub fn save(&self, snap: &Snapshot) -> Result<(), CheckpointError> {
+        assert_eq!(
+            snap.worker_errors.len(),
+            snap.worker_corrected.len(),
+            "snapshot residuals/corrected out of sync"
+        );
         write_f32(&self.dir.join("theta.f32"), &snap.theta)?;
         for (w, e) in snap.worker_errors.iter().enumerate() {
             write_f32(&self.dir.join(format!("error_{w}.f32")), e)?;
+        }
+        for (w, p) in snap.worker_corrected.iter().enumerate() {
+            write_f32(&self.dir.join(format!("corrected_{w}.f32")), p)?;
         }
         let meta = obj(vec![
             ("round", num(snap.round as f64)),
             ("d", num(snap.theta.len() as f64)),
             ("workers", num(snap.worker_errors.len() as f64)),
-            ("format", s("ef-sgd-checkpoint-v1")),
+            ("format", s(CHECKPOINT_FORMAT)),
         ]);
         // write meta last: its presence marks the checkpoint complete
         std::fs::write(self.dir.join("meta.json"), meta.to_string_compact())?;
@@ -83,6 +130,17 @@ impl CheckpointStore {
     pub fn load(&self) -> Result<Snapshot, CheckpointError> {
         let meta_text = std::fs::read_to_string(self.dir.join("meta.json"))?;
         let meta = Json::parse(&meta_text)?;
+        let format = meta
+            .get("format")
+            .and_then(|v| v.as_str().map(|s| s.to_string()))
+            .unwrap_or_default();
+        if format != CHECKPOINT_FORMAT {
+            return Err(CheckpointError::Corrupt(format!(
+                "checkpoint format '{format}' unsupported (expected '{CHECKPOINT_FORMAT}'): \
+                 pre-v2 checkpoints lack the corrected gradients and cannot be \
+                 restored losslessly; re-create the checkpoint"
+            )));
+        }
         let d = meta
             .get("d")
             .and_then(|v| v.as_usize())
@@ -96,10 +154,14 @@ impl CheckpointStore {
         let worker_errors = (0..workers)
             .map(|w| read_f32(&self.dir.join(format!("error_{w}.f32")), d))
             .collect::<Result<Vec<_>, _>>()?;
+        let worker_corrected = (0..workers)
+            .map(|w| read_f32(&self.dir.join(format!("corrected_{w}.f32")), d))
+            .collect::<Result<Vec<_>, _>>()?;
         Ok(Snapshot {
             round,
             theta,
             worker_errors,
+            worker_corrected,
         })
     }
 
@@ -127,6 +189,7 @@ mod tests {
             round: 42,
             theta: vec![1.0, -2.0, 3.0],
             worker_errors: vec![vec![0.1, 0.2, 0.3], vec![-0.1, 0.0, 0.5]],
+            worker_corrected: vec![vec![1.1, 1.2, 1.3], vec![-1.1, 0.0, -0.5]],
         };
         store.save(&snap).unwrap();
         assert!(store.exists());
@@ -134,6 +197,7 @@ mod tests {
         assert_eq!(loaded.round, 42);
         assert_eq!(loaded.theta, snap.theta);
         assert_eq!(loaded.worker_errors, snap.worker_errors);
+        assert_eq!(loaded.worker_corrected, snap.worker_corrected);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -145,6 +209,7 @@ mod tests {
             round: 1,
             theta: vec![1.0; 8],
             worker_errors: vec![vec![0.0; 8]],
+            worker_corrected: vec![vec![0.0; 8]],
         };
         store.save(&snap).unwrap();
         // truncate a blob
@@ -153,6 +218,39 @@ mod tests {
             store.load(),
             Err(CheckpointError::Corrupt(_))
         ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_format_rejected_with_clear_error() {
+        let dir = tmpdir("v1");
+        let store = CheckpointStore::new(&dir).unwrap();
+        let snap = Snapshot {
+            round: 2,
+            theta: vec![1.0; 4],
+            worker_errors: vec![vec![0.0; 4]],
+            worker_corrected: vec![vec![0.0; 4]],
+        };
+        store.save(&snap).unwrap();
+        // rewrite meta as a v1 checkpoint (no corrected gradients)
+        let meta = obj(vec![
+            ("round", num(2.0)),
+            ("d", num(4.0)),
+            ("workers", num(1.0)),
+            ("format", s("ef-sgd-checkpoint-v1")),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string_compact()).unwrap();
+        let err = match store.load() {
+            Err(e) => e,
+            Ok(_) => panic!("v1 checkpoint must be rejected"),
+        };
+        match err {
+            CheckpointError::Corrupt(msg) => {
+                assert!(msg.contains("ef-sgd-checkpoint-v1"), "msg: {msg}");
+                assert!(msg.contains("re-create"), "msg: {msg}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,7 +9,11 @@ use crate::util::Pcg64;
 
 /// Where a worker's gradients come from: a native objective or the PJRT
 /// transformer session. Implementations own their data shard and RNG.
-pub trait GradSource {
+///
+/// `Send` is required so workers can be moved onto the coordinator's
+/// worker-pool threads ([`crate::coordinator::pool`]); shared pieces
+/// (model, corpus, compiled session) go behind `Arc`.
+pub trait GradSource: Send {
     fn dim(&self) -> usize;
 
     /// Compute a stochastic gradient of the shard loss at `theta` into
@@ -39,7 +43,7 @@ impl<O: StochasticObjective> ObjectiveSource<O> {
     }
 }
 
-impl<O: StochasticObjective> GradSource for ObjectiveSource<O> {
+impl<O: StochasticObjective + Send> GradSource for ObjectiveSource<O> {
     fn dim(&self) -> usize {
         self.obj.dim()
     }

@@ -4,15 +4,25 @@
 //! vectors (Theorem IV's distance-to-gradient-span metric).
 
 use crate::tensor::Matrix;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("dimension mismatch: {0}")]
     Shape(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            LinalgError::Shape(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 /// Cholesky factorization A = L L^T for symmetric positive definite A
 /// (computed in f64 internally for stability). Returns lower-triangular L.

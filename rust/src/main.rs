@@ -13,7 +13,7 @@ use ef_sgd::metrics::sparkline;
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     ef_sgd::logging::init();
@@ -96,10 +96,11 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 }
 
 /// A GradSource backed by the PJRT LM session. Each worker shares the
-/// compiled session (Rc) but owns its token stream (its data shard).
+/// compiled session (Arc, so workers can live on pool threads) but owns
+/// its token stream (its data shard).
 struct LmWorkerSource {
-    session: Rc<LmSession>,
-    corpus: Rc<MarkovCorpus>,
+    session: Arc<LmSession>,
+    corpus: Arc<MarkovCorpus>,
     rng: Pcg64,
     eval_rng: Pcg64,
 }
@@ -141,6 +142,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(w) = args.opt_usize("workers") {
         cfg.workers = w;
     }
+    if let Some(t) = args.opt_usize("threads") {
+        cfg.threads = t;
+    }
     if let Some(s) = args.opt_usize("steps") {
         cfg.steps = s;
     }
@@ -156,9 +160,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     log::info!(
-        "train: model={} workers={} steps={} lr={} compressor={} ef={}",
+        "train: model={} workers={} threads={} steps={} lr={} compressor={} ef={}",
         cfg.model,
         cfg.workers,
+        cfg.threads,
         cfg.steps,
         cfg.lr,
         cfg.compressor.name(),
@@ -168,9 +173,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::load(Path::new(&cfg.artifacts_dir)).context(
         "loading artifacts (run `make artifacts` first, or pass --artifacts <dir>)",
     )?;
-    let session = Rc::new(LmSession::open(&rt, &cfg.model)?);
+    let session = Arc::new(LmSession::open(&rt, &cfg.model)?);
     let theta0 = rt.init_params(&session.model).map_err(|e| anyhow!("{e}"))?;
-    let corpus = Rc::new(MarkovCorpus::new(session.model.vocab, 4, cfg.seed));
+    let corpus = Arc::new(MarkovCorpus::new(session.model.vocab, 4, cfg.seed));
 
     let mode = match (cfg.compressor, cfg.error_feedback) {
         (CompressorKind::None, _) => WorkerMode::DenseGrad,
@@ -210,6 +215,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("bad aggregation '{}'", cfg.aggregation))?,
         update_rule,
         weight_decay: cfg.weight_decay as f32,
+        threads: cfg.threads.max(1),
         log_every: cfg.log_every.max(1),
         eval_every: cfg.eval_every,
         ..Default::default()

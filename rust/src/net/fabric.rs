@@ -1,19 +1,31 @@
 //! The in-process fabric: N nodes, per-message routing with exact bit
-//! accounting and link-model timing. Deterministic (single-threaded
-//! simulation): messages are delivered through per-destination FIFO queues.
+//! accounting and link-model timing. Concurrency-safe: every queue is a
+//! `Mutex<VecDeque>` with a `Condvar`, so sends and receives may be issued
+//! from any thread (the coordinator's worker pool and the threaded
+//! collectives interleave through the same accounting layer). Delivery is
+//! per-destination FIFO, which — together with each node's messages being
+//! produced by a single peer per collective step — keeps threaded runs
+//! bit-deterministic.
 
 use super::accounting::TrafficStats;
 use super::link::LinkModel;
 use super::message::Message;
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::sync::{Condvar, Mutex};
+
+/// One node's inbox.
+#[derive(Default)]
+struct Inbox {
+    queue: Mutex<VecDeque<Message>>,
+    ready: Condvar,
+}
 
 /// The shared fabric connecting `n` nodes.
 pub struct Fabric {
     n: usize,
     link: LinkModel,
-    queues: Vec<Mutex<VecDeque<Message>>>,
-    stats: Arc<Mutex<TrafficStats>>,
+    inboxes: Vec<Inbox>,
+    stats: Mutex<TrafficStats>,
 }
 
 impl Fabric {
@@ -21,8 +33,8 @@ impl Fabric {
         Fabric {
             n,
             link,
-            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
-            stats: Arc::new(Mutex::new(TrafficStats::default())),
+            inboxes: (0..n).map(|_| Inbox::default()).collect(),
+            stats: Mutex::new(TrafficStats::default()),
         }
     }
 
@@ -44,23 +56,63 @@ impl Fabric {
             .lock()
             .unwrap()
             .record(msg.src, msg.dst, msg.kind, bits, time);
-        self.queues[msg.dst].lock().unwrap().push_back(msg);
+        let inbox = &self.inboxes[msg.dst];
+        inbox.queue.lock().unwrap().push_back(msg);
+        inbox.ready.notify_one();
     }
 
     /// Receive the next message queued at `node` (FIFO), if any.
     pub fn recv(&self, node: usize) -> Option<Message> {
-        self.queues[node].lock().unwrap().pop_front()
+        self.inboxes[node].queue.lock().unwrap().pop_front()
+    }
+
+    /// Receive the next message queued at `node`, blocking until one
+    /// arrives (used by the threaded collectives, where the matching send
+    /// happens on another worker thread).
+    pub fn recv_blocking(&self, node: usize) -> Message {
+        let inbox = &self.inboxes[node];
+        let mut q = inbox.queue.lock().unwrap();
+        loop {
+            if let Some(msg) = q.pop_front() {
+                return msg;
+            }
+            q = inbox.ready.wait(q).unwrap();
+        }
+    }
+
+    /// Like [`recv_blocking`](Self::recv_blocking) but gives up after
+    /// `timeout`, returning `None`. Lets threaded callers interleave the
+    /// wait with liveness checks on their peers instead of parking forever
+    /// when a peer died.
+    pub fn recv_timeout(&self, node: usize, timeout: std::time::Duration) -> Option<Message> {
+        let inbox = &self.inboxes[node];
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = inbox.queue.lock().unwrap();
+        loop {
+            if let Some(msg) = q.pop_front() {
+                return Some(msg);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timed_out) = inbox.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
     }
 
     /// Receive all currently queued messages at `node`.
     pub fn recv_all(&self, node: usize) -> Vec<Message> {
-        let mut q = self.queues[node].lock().unwrap();
+        let mut q = self.inboxes[node].queue.lock().unwrap();
         q.drain(..).collect()
     }
 
     /// Number of undelivered messages across the fabric.
     pub fn in_flight(&self) -> usize {
-        self.queues.iter().map(|q| q.lock().unwrap().len()).sum()
+        self.inboxes
+            .iter()
+            .map(|i| i.queue.lock().unwrap().len())
+            .sum()
     }
 
     /// Snapshot of the traffic statistics.
@@ -124,5 +176,37 @@ mod tests {
         }
         assert_eq!(f.recv_all(1).len(), 5);
         assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn recv_blocking_wakes_on_cross_thread_send() {
+        let f = Fabric::new(2, LinkModel::default());
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| f.recv_blocking(1));
+            // give the receiver a moment to block first
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            f.send(ctrl(0, 1, 8));
+            let msg = handle.join().unwrap();
+            assert_eq!(msg.src, 0);
+        });
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_sends_account_exactly() {
+        let f = Fabric::new(5, LinkModel::default());
+        std::thread::scope(|scope| {
+            for src in 0..4usize {
+                let f = &f;
+                scope.spawn(move || {
+                    for _ in 0..100 {
+                        f.send(ctrl(src, 4, 8));
+                    }
+                });
+            }
+        });
+        let s = f.stats();
+        assert_eq!(s.total_bits, 400 * (8 + FRAME_OVERHEAD_BITS));
+        assert_eq!(f.recv_all(4).len(), 400);
     }
 }

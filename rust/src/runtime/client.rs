@@ -5,15 +5,14 @@
 use super::artifact::{Manifest, ManifestError, ModelEntry};
 use super::executable::Execution;
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Execution>>>,
+    cache: Mutex<HashMap<String, Arc<Execution>>>,
 }
 
 impl Runtime {
@@ -30,7 +29,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
         })
     }
 
@@ -51,11 +50,11 @@ impl Runtime {
 
     /// Get (compiling and caching on first use) the executable for
     /// `<artifact>_<model>`.
-    pub fn executable(&self, model: &ModelEntry, artifact: &str) -> Result<Rc<Execution>> {
+    pub fn executable(&self, model: &ModelEntry, artifact: &str) -> Result<Arc<Execution>> {
         let spec = model
             .artifact(artifact)
             .ok_or_else(|| anyhow!("artifact '{artifact}' not in config '{}'", model.name))?;
-        if let Some(hit) = self.cache.borrow().get(&spec.name) {
+        if let Some(hit) = self.cache.lock().unwrap().get(&spec.name) {
             return Ok(hit.clone());
         }
         let path = self.manifest.dir.join(&spec.file);
@@ -74,18 +73,19 @@ impl Runtime {
             spec.name,
             t.elapsed().as_secs_f64()
         );
-        let execution = Rc::new(Execution {
+        let execution = Arc::new(Execution {
             spec: spec.clone(),
             exe,
         });
         self.cache
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .insert(spec.name.clone(), execution.clone());
         Ok(execution)
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }
 

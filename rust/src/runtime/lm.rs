@@ -5,17 +5,17 @@
 use super::client::Runtime;
 use super::executable::{ArgValue, Execution};
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub struct LmSession {
     pub model: super::artifact::ModelEntry,
-    lm_step: Rc<Execution>,
-    lm_eval: Rc<Execution>,
-    lm_step_ef: Rc<Execution>,
-    ef_sign: Rc<Execution>,
-    ef_topk: Rc<Execution>,
-    apply_update: Rc<Execution>,
-    density: Rc<Execution>,
+    lm_step: Arc<Execution>,
+    lm_eval: Arc<Execution>,
+    lm_step_ef: Arc<Execution>,
+    ef_sign: Arc<Execution>,
+    ef_topk: Arc<Execution>,
+    apply_update: Arc<Execution>,
+    density: Arc<Execution>,
 }
 
 impl LmSession {

@@ -7,9 +7,11 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
 //!
-//! PJRT handle types are not `Send`; the runtime is used from the
-//! single-threaded coordinator event loop (worker parallelism is simulated;
-//! communication is accounted by the fabric).
+//! Sessions are shared across the coordinator's worker-pool threads via
+//! `Arc<LmSession>` with a mutex-guarded compile cache. With the real
+//! PJRT bindings the handle types are not `Send`; in that configuration
+//! run the coordinator with `--threads 1`, which keeps every worker on a
+//! single pool thread (communication is still accounted by the fabric).
 
 pub mod artifact;
 pub mod client;

@@ -40,11 +40,8 @@ fn ef_sign_artifact_matches_rust_reference() {
 
     // rust-native reference: p = gamma g + e; delta = scaled_sign(p); e' = p - delta
     let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
-    ef.load_state(
-        &[0u64.to_le_bytes().to_vec(), e.iter().flat_map(|v| v.to_le_bytes()).collect()]
-            .concat(),
-    )
-    .unwrap();
+    let p0 = vec![0.0f32; d];
+    ef.set_state(0, &e, &p0);
     let mut rng = Pcg64::seeded(0);
     let delta_ref = {
         let mut out = vec![0.0f32; d];

@@ -1,0 +1,196 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is unreachable in this build environment, so this vendored
+//! crate provides the subset of the `anyhow` API the workspace uses: the
+//! [`Error`] type with context chaining, the [`Context`] extension trait,
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Result`] alias. Display
+//! semantics match upstream: `{}` prints the outermost message, `{:#}`
+//! prints the whole chain separated by `: `, and `{:?}` prints the
+//! message followed by a `Caused by:` list.
+
+use std::fmt;
+
+/// A dynamically typed error with a chain of context messages.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.cause;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.cause;
+        }
+        out
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.cause;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = &self.cause;
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = &e.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Matches upstream anyhow: every std error converts into `Error` with its
+// source chain captured. `Error` itself deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        fn capture(src: Option<&(dyn std::error::Error + 'static)>) -> Option<Box<Error>> {
+            src.map(|s| {
+                Box::new(Error {
+                    msg: s.to_string(),
+                    cause: capture(s.source()),
+                })
+            })
+        }
+        Error {
+            msg: e.to_string(),
+            cause: capture(e.source()),
+        }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.chain(), vec!["outer", "missing file"]);
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails() -> Result<()> {
+            bail!("bad value {}", 7);
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "bad value 7");
+        let e2 = anyhow!("plain");
+        assert_eq!(e2.root_cause(), "plain");
+    }
+
+    #[test]
+    fn debug_shows_cause_list() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+}

@@ -1,0 +1,252 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate links against `xla_extension` (PJRT CPU client),
+//! which cannot be fetched or built in this offline environment. This stub
+//! keeps the `runtime` layer compiling with the same API surface; every
+//! device entry point returns a descriptive error, so `Runtime::load`
+//! fails cleanly and all artifact-dependent tests and experiments skip,
+//! exactly as they do when `make artifacts` has not been run.
+//!
+//! [`Literal`] is implemented for real (host-side typed buffers), since
+//! argument marshalling and its unit tests do not need a device. All types
+//! here are plain data and therefore `Send + Sync`, which is what lets the
+//! coordinator share sessions across worker threads; swap in the real
+//! bindings and the non-`Send` PJRT handles must stay on one thread (the
+//! `--threads 1` path).
+
+use std::fmt;
+
+/// Stub error type: always a plain message.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "XLA/PJRT unavailable: {what} (offline `xla` stub — link the real \
+         xla_extension bindings to enable the PJRT runtime)"
+    ))
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + sealed::Sealed {
+    fn into_data(v: Vec<Self>) -> Data;
+    fn slice(data: &Data) -> Option<&[Self]>;
+}
+
+/// Typed storage backing a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn slice(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn slice(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side typed tensor (the only fully functional stub type).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::into_data(v.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: vec![],
+            data: T::into_data(vec![v]),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: literal has {} elements, target shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("literal dtype mismatch or empty".to_string()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    /// Unpack a tuple literal. The stub never produces tuples (no device
+    /// execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (stub: creation always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructible).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (stub: never constructible).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, -2.0, 3.5]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_and_first() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.element_count(), 1);
+        let v: i32 = l.get_first_element().unwrap();
+        assert_eq!(v, 7);
+        assert!(l.shape().is_empty());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
