@@ -1,0 +1,110 @@
+//! Leader hot-path benchmark: full synchronous rounds at n ∈ {4, 16}
+//! workers, separating the leader's decode+aggregate wall-clock (via
+//! [`LeaderProfile`]) from whole-round throughput, for the scaled-sign and
+//! Elias-packed QSGD wire formats. Emits `results/BENCH_leader.json`
+//! (rounds/sec, bytes/round) so the perf trajectory of the
+//! gather→decode→aggregate path is tracked from this PR onward.
+
+use ef_sgd::bench::{quick_mode, Bench};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::MessageKind;
+use ef_sgd::util::Pcg64;
+
+fn make_driver(n: usize, d: usize, kind: CompressorKind, threads: usize) -> TrainDriver {
+    let workers: Vec<Worker> = (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                kind,
+                64,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: 0, // rounds are driven manually below
+        schedule: LrSchedule::constant(0.01),
+        threads,
+        ..Default::default()
+    };
+    TrainDriver::new(cfg, workers, vec![0.5f32; d])
+}
+
+struct Row {
+    workers: usize,
+    threads: usize,
+    d: usize,
+    compressor: &'static str,
+    rounds_per_sec: f64,
+    leader_agg_ms_per_round: f64,
+    push_bytes_per_round: f64,
+    push_mean_frame_bits: f64,
+}
+
+fn main() {
+    let d = if quick_mode() { 16_384 } else { 262_144 };
+    let mut b = Bench::new(&format!("leader decode+aggregate (d = {d})"));
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &(n, threads) in &[(4usize, 4usize), (16, 8)] {
+        for kind in [CompressorKind::ScaledSign, CompressorKind::Qsgd] {
+            let mut driver = make_driver(n, d, kind, threads);
+            let mut rec = Recorder::new();
+            let name = format!("round n={n} threads={threads} {}", kind.name());
+            let res = b.bench_elems(&name, n as u64, || {
+                driver.round(&mut rec);
+            });
+            let rounds = driver.rounds();
+            let profile = driver.profile().clone();
+            let stats = driver.traffic();
+            let push_bits = stats.bits_of_kind(MessageKind::GradPush);
+            rows.push(Row {
+                workers: n,
+                threads,
+                d,
+                compressor: kind.name(),
+                rounds_per_sec: 1.0 / res.mean.as_secs_f64(),
+                leader_agg_ms_per_round: profile.mean_round_s() * 1e3,
+                push_bytes_per_round: push_bits as f64 / 8.0 / rounds as f64,
+                push_mean_frame_bits: stats.mean_msg_bits(MessageKind::GradPush),
+            });
+        }
+    }
+    b.finish();
+
+    // hand-rolled JSON (no serde offline); one object per config row
+    let mut json = String::from("{\n  \"bench\": \"leader_decode_aggregate\",\n");
+    json.push_str(&format!("  \"quick\": {},\n  \"configs\": [\n", quick_mode()));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"threads\": {}, \"d\": {}, \"compressor\": \"{}\", \
+             \"rounds_per_sec\": {:.3}, \"leader_agg_ms_per_round\": {:.4}, \
+             \"push_bytes_per_round\": {:.1}, \"push_mean_frame_bits\": {:.1}}}{}\n",
+            r.workers,
+            r.threads,
+            r.d,
+            r.compressor,
+            r.rounds_per_sec,
+            r.leader_agg_ms_per_round,
+            r.push_bytes_per_round,
+            r.push_mean_frame_bits,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    let path = "results/BENCH_leader.json";
+    std::fs::write(path, &json).expect("write BENCH_leader.json");
+    println!("wrote {path}");
+}

@@ -3,7 +3,7 @@
 
 use ef_sgd::bench::{black_box, Bench};
 use ef_sgd::compress::wire;
-use ef_sgd::compress::{Compressor, TernGrad, TopK};
+use ef_sgd::compress::{Compressor, Qsgd, TernGrad, TopK};
 use ef_sgd::util::Pcg64;
 
 fn main() {
@@ -38,6 +38,22 @@ fn main() {
     let tern = TernGrad.compress_vec(&p, &mut Pcg64::seeded(2));
     b.bench_bytes("encode_ternary", 4 * d as u64, || {
         black_box(wire::encode_ternary(black_box(&tern)));
+    });
+    let qsgd = Qsgd::new(4).compress_vec(&p, &mut Pcg64::seeded(3));
+    let qnorm = ef_sgd::tensor::norm2(&p) as f32;
+    b.bench_bytes("encode_qsgd (s = 4, Elias pack)", 4 * d as u64, || {
+        black_box(wire::encode_qsgd(black_box(&qsgd), qnorm, 4));
+    });
+    let enc_qsgd = wire::encode_qsgd(&qsgd, qnorm, 4);
+    println!(
+        "  (qsgd frame: {:.2} bits/coord vs 32 dense)",
+        enc_qsgd.bits as f64 / d as f64
+    );
+    b.bench_bytes("decode_qsgd", 4 * d as u64, || {
+        black_box(wire::decode_qsgd(black_box(&enc_qsgd)).unwrap());
+    });
+    b.bench_bytes("decode_qsgd_add (PS hot path)", 4 * d as u64, || {
+        wire::decode_qsgd_add(black_box(&enc_qsgd), black_box(&mut acc)).unwrap();
     });
     b.finish();
 }

@@ -3,7 +3,7 @@
 //! back. This is the communication pattern of the paper's experiments and
 //! of 1-bit SGD (Seide et al. 2014).
 
-use crate::compress::wire::{self, Encoded, Format};
+use crate::compress::wire::{self, Encoded};
 use crate::net::{Fabric, Message, MessageKind, Payload};
 
 /// The leader endpoint of a parameter-server round. `Clone` so each
@@ -53,23 +53,9 @@ impl ParameterServer {
         for msg in msgs {
             assert_eq!(msg.round, round, "stale message in PS gather");
             if let Payload::Grad(e) = msg.payload {
-                match e.format {
-                    Format::SignScaled => {
-                        wire::decode_scaled_sign_add(&e, &mut acc).expect("decode")
-                    }
-                    Format::DenseF32 => {
-                        let v = wire::decode_dense(&e).expect("decode");
-                        crate::tensor::add_assign(&mut acc, &v);
-                    }
-                    Format::SparseIdxVal => {
-                        let v = wire::decode_sparse(&e).expect("decode");
-                        crate::tensor::add_assign(&mut acc, &v);
-                    }
-                    Format::Ternary => {
-                        let v = wire::decode_ternary(&e).expect("decode");
-                        crate::tensor::add_assign(&mut acc, &v);
-                    }
-                }
+                // fused decode-into-accumulator for every wire format: no
+                // per-worker dense materialization on the leader
+                wire::decode_any_add(&e, &mut acc).expect("decode");
                 got += 1;
             }
         }
@@ -128,6 +114,25 @@ mod tests {
         ps.push_grad(&fabric, 1, 0, encode_sparse(&[0.0, 0.0, 5.0, 0.0]));
         let mean = ps.gather_mean(&fabric, 0, 4);
         assert_eq!(mean, vec![1.0, -1.0, 3.5, 1.0]);
+    }
+
+    #[test]
+    fn gather_mean_qsgd_frames() {
+        use crate::compress::{Compressor, Qsgd};
+        let d = 64;
+        let mut rng = Pcg64::seeded(5);
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let q = Qsgd::new(4).compress_vec(&p, &mut rng);
+        let norm = crate::tensor::norm2(&p) as f32;
+        let fabric = Fabric::new(3, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        ps.push_grad(&fabric, 0, 0, crate::compress::wire::encode_qsgd(&q, norm, 4));
+        ps.push_grad(&fabric, 1, 0, encode_dense(&vec![0.0f32; d]));
+        let mean = ps.gather_mean(&fabric, 0, d);
+        for i in 0..d {
+            assert!((mean[i] - q[i] / 2.0).abs() < 1e-6, "i={i}");
+        }
     }
 
     #[test]

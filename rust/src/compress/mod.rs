@@ -37,9 +37,13 @@ pub trait Compressor: Send + Sync {
     /// randomized schemes.
     fn compress(&self, p: &[f32], out: &mut [f32], rng: &mut Pcg64);
 
-    /// Exact wire size in bits for transmitting `C(p)` with this scheme's
-    /// codec for a length-`d` vector (the paper's communication accounting,
-    /// e.g. `d + 32` for scaled sign).
+    /// Wire size in bits for transmitting `C(p)` with this scheme's codec
+    /// for a length-`d` vector (the paper's communication accounting, e.g.
+    /// `d + 32` for scaled sign). Exact for fixed-length codecs; for
+    /// data-dependent codecs (QSGD's Elias pack) this is the worst-case
+    /// bound — the fabric always accounts the exact per-frame
+    /// `wire::Encoded::bits`, and `wire::qsgd_wire_bits` gives the exact
+    /// size of a concrete vector.
     fn wire_bits(&self, d: usize) -> u64;
 
     /// True if `E[C(p)] = p`.

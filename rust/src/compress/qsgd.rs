@@ -54,9 +54,14 @@ impl Compressor for Qsgd {
     }
 
     fn wire_bits(&self, d: usize) -> u64 {
-        // sign + level index per coordinate, plus the 32-bit norm.
-        let bits_per = 1 + u64::from(32 - (self.levels + 1).leading_zeros());
-        bits_per * d as u64 + 32
+        // Worst case of the Elias-gamma wire pack (`wire::encode_qsgd`):
+        // every coordinate at the top level s costs γ(s+1) = 2⌊log₂(s+1)⌋+1
+        // bits plus a sign bit, after a 32-bit norm + 8-bit level-count
+        // header. Real frames are far smaller (mostly level 0 at 1 bit);
+        // the fabric accounts the exact per-frame `Encoded::bits`, and
+        // `wire::qsgd_wire_bits` gives the exact size for a given vector.
+        let gamma_top = 2 * u64::from(31 - (self.levels + 1).leading_zeros()) + 1;
+        (gamma_top + 1) * d as u64 + 32 + 8
     }
 
     fn unbiased(&self) -> bool {
@@ -222,7 +227,34 @@ mod tests {
     #[test]
     fn wire_bits_reasonable() {
         assert_eq!(TernGrad.wire_bits(100), 232);
-        let q = Qsgd::new(4); // levels 0..=4 -> 3 bits + sign = 4 bits
-        assert_eq!(q.wire_bits(100), 4 * 100 + 32);
+        // s = 4: worst coordinate = γ(5) (5 bits) + sign = 6 bits; header
+        // is norm (32) + level count (8).
+        let q = Qsgd::new(4);
+        assert_eq!(q.wire_bits(100), 6 * 100 + 40);
+        // s = 1: worst coordinate = γ(2) (3 bits) + sign = 4 bits
+        assert_eq!(Qsgd::new(1).wire_bits(100), 4 * 100 + 40);
+    }
+
+    /// The trait-level estimate upper-bounds every actual Elias-packed
+    /// frame (the exact size is data-dependent and always smaller on
+    /// non-degenerate inputs).
+    #[test]
+    fn wire_bits_bounds_actual_frames() {
+        use crate::compress::wire;
+        let mut rng = Pcg64::seeded(8);
+        let mut p = vec![0.0f32; 4096];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        for s in [1u32, 4, 16] {
+            let q = Qsgd::new(s);
+            let v = q.compress_vec(&p, &mut rng);
+            let norm = tensor::norm2(&p) as f32;
+            let e = wire::encode_qsgd(&v, norm, s);
+            assert!(
+                e.bits <= q.wire_bits(p.len()),
+                "s={s}: frame {} bits exceeds bound {}",
+                e.bits,
+                q.wire_bits(p.len())
+            );
+        }
     }
 }

@@ -62,6 +62,22 @@ impl BitWriter {
         self.bits += 8;
     }
 
+    /// Push a positive integer in Elias-gamma code: `⌊log₂ x⌋` zeros, then
+    /// the binary of `x` MSB-first — `2⌊log₂ x⌋ + 1` bits total. Small
+    /// integers are cheap (1 → 1 bit, 2..3 → 3 bits, 4..7 → 5 bits), which
+    /// is what makes the QSGD level stream compact: most levels are 0,
+    /// coded as γ(1).
+    pub fn push_elias_gamma(&mut self, x: u64) {
+        debug_assert!(x >= 1, "Elias gamma codes integers >= 1");
+        let nbits = 64 - x.leading_zeros();
+        for _ in 0..nbits - 1 {
+            self.push_bit(false);
+        }
+        for i in (0..nbits).rev() {
+            self.push_bit((x >> i) & 1 == 1);
+        }
+    }
+
     pub fn push_f32(&mut self, v: f32) {
         self.push_bits(v.to_bits(), 32);
     }
@@ -133,6 +149,23 @@ impl<'a> BitReader<'a> {
         Some(v)
     }
 
+    /// Read one Elias-gamma-coded positive integer — the counterpart of
+    /// [`BitWriter::push_elias_gamma`].
+    pub fn read_elias_gamma(&mut self) -> Option<u64> {
+        let mut zeros = 0u32;
+        while !self.read_bit()? {
+            zeros += 1;
+            if zeros > 63 {
+                return None; // not a valid gamma code for a u64
+            }
+        }
+        let mut x = 1u64;
+        for _ in 0..zeros {
+            x = (x << 1) | u64::from(self.read_bit()?);
+        }
+        Some(x)
+    }
+
     pub fn read_f32(&mut self) -> Option<f32> {
         self.read_bits(32).map(f32::from_bits)
     }
@@ -159,6 +192,8 @@ pub enum Format {
     SignScaled,
     SparseIdxVal,
     Ternary,
+    /// QSGD: f32 ℓ₂-norm + u8 level count + Elias-gamma level stream.
+    Qsgd,
 }
 
 #[derive(Debug)]
@@ -206,6 +241,20 @@ pub fn decode_dense(e: &Encoded) -> Result<Vec<f32>, WireError> {
     Ok((0..e.d)
         .map(|i| f32::from_le_bytes(e.bytes[i * 4..i * 4 + 4].try_into().unwrap()))
         .collect())
+}
+
+/// Decode dense straight into a sum accumulator (fused leader hot path).
+pub fn decode_dense_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    if e.format != Format::DenseF32 {
+        return Err(WireError::Format(Format::DenseF32, e.format));
+    }
+    if e.bytes.len() < e.d * 4 || acc.len() != e.d {
+        return Err(WireError::Truncated);
+    }
+    for (a, chunk) in acc.iter_mut().zip(e.bytes.chunks_exact(4)) {
+        *a += f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
 }
 
 // --------------------------------------------------------- scaled sign
@@ -348,6 +397,28 @@ pub fn decode_sparse(e: &Encoded) -> Result<Vec<f32>, WireError> {
     Ok(out)
 }
 
+/// Decode sparse straight into a sum accumulator: only the stored non-zeros
+/// are touched, so a top-k frame costs O(k), not O(d), to aggregate.
+pub fn decode_sparse_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    if e.format != Format::SparseIdxVal {
+        return Err(WireError::Format(Format::SparseIdxVal, e.format));
+    }
+    if acc.len() != e.d {
+        return Err(WireError::Truncated);
+    }
+    let mut r = BitReader::new(&e.bytes);
+    let count = r.read_u32().ok_or(WireError::Truncated)? as usize;
+    for _ in 0..count {
+        let i = r.read_u32().ok_or(WireError::Truncated)? as usize;
+        let x = r.read_f32().ok_or(WireError::Truncated)?;
+        if i >= e.d {
+            return Err(WireError::Truncated);
+        }
+        acc[i] += x;
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------- ternary
 
 /// TernGrad encoding: one 32-bit scale + 2 bits/coordinate
@@ -393,6 +464,160 @@ pub fn decode_ternary(e: &Encoded) -> Result<Vec<f32>, WireError> {
     Ok(out)
 }
 
+/// Decode ternary straight into a sum accumulator (fused leader hot path).
+pub fn decode_ternary_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    if e.format != Format::Ternary {
+        return Err(WireError::Format(Format::Ternary, e.format));
+    }
+    if acc.len() != e.d {
+        return Err(WireError::Truncated);
+    }
+    let mut r = BitReader::new(&e.bytes);
+    let m = r.read_f32().ok_or(WireError::Truncated)?;
+    for a in acc.iter_mut() {
+        let code = r.read_bits(2).ok_or(WireError::Truncated)?;
+        match code {
+            0 => {}
+            1 => *a += m,
+            _ => *a -= m,
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- qsgd
+
+/// Reconstruct the QSGD level integer of a quantized coordinate. The
+/// quantizer stored `sign · norm · l / s`; dividing back out recovers `l`
+/// exactly (the accumulated rounding error is ~2⁻²² relative, far below
+/// the 0.5 needed to flip the nearest integer for `s ≤ 255`).
+#[inline]
+fn qsgd_level(x: f32, norm: f32, s: u32) -> u32 {
+    if x == 0.0 || norm == 0.0 {
+        0
+    } else {
+        ((x.abs() / norm * s as f32).round() as u32).min(s)
+    }
+}
+
+/// Number of bits in the Elias-gamma code of `x` (= 2⌊log₂ x⌋ + 1).
+#[inline]
+fn elias_gamma_bits(x: u64) -> u64 {
+    debug_assert!(x >= 1);
+    2 * (63 - u64::from(x.leading_zeros())) + 1
+}
+
+/// QSGD wire format (the Elias-coded scheme of Alistarh et al. 2017):
+/// one f32 ℓ₂-norm + one u8 level count `s`, then per coordinate the
+/// Elias-gamma code of `level + 1` followed by a single sign bit for
+/// non-zero levels. Gaussian-ish gradients have mostly level-0 coordinates
+/// (1 bit each), so the frame is far below the dense 32 bits/coordinate —
+/// exactly the regime where QSGD claims its communication advantage.
+///
+/// `v` must be a QSGD-quantized vector and `norm` the exact f32 norm the
+/// quantizer used (`tensor::norm2(p) as f32` of the *pre-quantization*
+/// vector): levels then reconstruct exactly and [`decode_qsgd`] is
+/// bit-faithful to `v`.
+pub fn encode_qsgd(v: &[f32], norm: f32, levels: u32) -> Encoded {
+    assert!(
+        (1..=u8::MAX as u32).contains(&levels),
+        "qsgd level count must fit a u8"
+    );
+    let mut w = BitWriter::new();
+    w.push_f32(norm);
+    w.push_bits(levels, 8);
+    for x in v {
+        let l = qsgd_level(*x, norm, levels);
+        w.push_elias_gamma(u64::from(l) + 1);
+        if l > 0 {
+            w.push_bit(*x < 0.0);
+        }
+    }
+    let (bytes, bits) = w.into_bytes();
+    Encoded {
+        bytes,
+        bits,
+        format: Format::Qsgd,
+        d: v.len(),
+    }
+}
+
+/// Exact wire size in bits of [`encode_qsgd`] for this vector, computed
+/// without building the frame. Guaranteed (and tested) to equal the
+/// encoder's actual `bit_len`.
+pub fn qsgd_wire_bits(v: &[f32], norm: f32, levels: u32) -> u64 {
+    let mut bits = 32 + 8u64;
+    for x in v {
+        let l = qsgd_level(*x, norm, levels);
+        bits += elias_gamma_bits(u64::from(l) + 1) + u64::from(l > 0);
+    }
+    bits
+}
+
+/// Parse + validate the QSGD frame header; returns (norm, levels, reader
+/// positioned at the level stream).
+fn qsgd_header(e: &Encoded) -> Result<(f32, u32, BitReader<'_>), WireError> {
+    if e.format != Format::Qsgd {
+        return Err(WireError::Format(Format::Qsgd, e.format));
+    }
+    let mut r = BitReader::new(&e.bytes);
+    let norm = r.read_f32().ok_or(WireError::Truncated)?;
+    let s = r.read_bits(8).ok_or(WireError::Truncated)?;
+    if s == 0 {
+        return Err(WireError::Truncated);
+    }
+    Ok((norm, s, r))
+}
+
+/// Decode a QSGD frame to the dense quantized vector. Reconstruction uses
+/// the quantizer's exact expression order (`±(norm · l) / s`), so the
+/// output is bit-identical to the vector that was encoded.
+pub fn decode_qsgd(e: &Encoded) -> Result<Vec<f32>, WireError> {
+    let (norm, s, mut r) = qsgd_header(e)?;
+    let s_f = s as f32;
+    let mut out = vec![0.0f32; e.d];
+    for o in out.iter_mut() {
+        let l = r.read_elias_gamma().ok_or(WireError::Truncated)? - 1;
+        if l > u64::from(s) {
+            return Err(WireError::Truncated);
+        }
+        if l > 0 {
+            let mag = norm * l as f32 / s_f;
+            *o = if r.read_bit().ok_or(WireError::Truncated)? {
+                -mag
+            } else {
+                mag
+            };
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a QSGD frame straight into a sum accumulator: level-0
+/// coordinates (the vast majority) cost one bit-read and no write.
+pub fn decode_qsgd_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    let (norm, s, mut r) = qsgd_header(e)?;
+    if acc.len() != e.d {
+        return Err(WireError::Truncated);
+    }
+    let s_f = s as f32;
+    for a in acc.iter_mut() {
+        let l = r.read_elias_gamma().ok_or(WireError::Truncated)? - 1;
+        if l > u64::from(s) {
+            return Err(WireError::Truncated);
+        }
+        if l > 0 {
+            let mag = norm * l as f32 / s_f;
+            if r.read_bit().ok_or(WireError::Truncated)? {
+                *a -= mag;
+            } else {
+                *a += mag;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Decode any payload format to a dense vector.
 pub fn decode_any(e: &Encoded) -> Result<Vec<f32>, WireError> {
     match e.format {
@@ -400,6 +625,20 @@ pub fn decode_any(e: &Encoded) -> Result<Vec<f32>, WireError> {
         Format::SignScaled => decode_scaled_sign(e),
         Format::SparseIdxVal => decode_sparse(e),
         Format::Ternary => decode_ternary(e),
+        Format::Qsgd => decode_qsgd(e),
+    }
+}
+
+/// Decode any payload straight into a sum accumulator — the leader's fused
+/// aggregation path: one partial-sum buffer instead of a dense `Vec<f32>`
+/// per worker frame.
+pub fn decode_any_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+    match e.format {
+        Format::DenseF32 => decode_dense_add(e, acc),
+        Format::SignScaled => decode_scaled_sign_add(e, acc),
+        Format::SparseIdxVal => decode_sparse_add(e, acc),
+        Format::Ternary => decode_ternary_add(e, acc),
+        Format::Qsgd => decode_qsgd_add(e, acc),
     }
 }
 
@@ -411,7 +650,7 @@ pub fn compression_ratio(e: &Encoded) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Compressor, ScaledSign, TernGrad, TopK};
+    use crate::compress::{Compressor, Qsgd, ScaledSign, TernGrad, TopK};
     use crate::propcheck::{self, VecF32};
     use crate::util::Pcg64;
 
@@ -590,6 +829,214 @@ mod tests {
                 })
             },
         );
+    }
+
+    /// Elias-gamma round-trips exact values at deliberately unaligned
+    /// cursors (interleaved single bits shift every code off byte
+    /// boundaries), and its bit cost matches the analytic 2⌊log₂x⌋+1.
+    #[test]
+    fn prop_elias_gamma_roundtrip_unaligned() {
+        use crate::propcheck::UsizeRange;
+        propcheck::check_with(
+            &propcheck::Config {
+                cases: 200,
+                ..Default::default()
+            },
+            &UsizeRange(1, 1_000_000),
+            |&seed| {
+                let mut rng = Pcg64::seeded(seed as u64);
+                let mut script: Vec<u64> = Vec::new();
+                let mut w = BitWriter::new();
+                for _ in 0..50 {
+                    // skew small (the QSGD regime) but cover large too
+                    let x: u64 = match rng.below(4) {
+                        0 => 1 + rng.below(3) as u64,
+                        1 => 1 + rng.below(64) as u64,
+                        2 => 1 + rng.below(1 << 20) as u64,
+                        _ => 1 + rng.next_u64() % (1 << 40),
+                    };
+                    let before = w.bit_len();
+                    w.push_elias_gamma(x);
+                    if w.bit_len() - before != elias_gamma_bits(x) {
+                        return false;
+                    }
+                    // misalign the cursor between codes
+                    let pad = rng.next_u32() & 1 == 1;
+                    w.push_bit(pad);
+                    script.push(x);
+                    script.push(u64::from(pad));
+                }
+                let (bytes, _) = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                script.chunks(2).all(|pair| {
+                    r.read_elias_gamma() == Some(pair[0])
+                        && r.read_bit() == Some(pair[1] == 1)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn elias_gamma_known_codewords() {
+        // gamma(1) = "1", gamma(2) = "010", gamma(5) = "00101" (MSB first)
+        let mut w = BitWriter::new();
+        w.push_elias_gamma(1);
+        w.push_elias_gamma(2);
+        w.push_elias_gamma(5);
+        let (bytes, bits) = w.into_bytes();
+        assert_eq!(bits, 1 + 3 + 5);
+        let expected_bits = [1, 0, 1, 0, 0, 0, 1, 0, 1]; // LSB-first stream
+        for (i, want) in expected_bits.iter().enumerate() {
+            assert_eq!((bytes[i / 8] >> (i % 8)) & 1, *want, "bit {i}");
+        }
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_elias_gamma(), Some(1));
+        assert_eq!(r.read_elias_gamma(), Some(2));
+        assert_eq!(r.read_elias_gamma(), Some(5));
+    }
+
+    /// QSGD frames round-trip bit-exactly at every byte-alignment class
+    /// (ragged d) and level count s ∈ {1, 4, 16}; `qsgd_wire_bits` always
+    /// equals the encoder's actual bit length; decode_add fuses correctly.
+    #[test]
+    fn qsgd_roundtrip_all_alignments_and_levels() {
+        let mut rng = Pcg64::seeded(11);
+        for s in [1u32, 4, 16] {
+            let q = Qsgd::new(s);
+            for d in [1usize, 2, 7, 8, 9, 63, 64, 65, 127, 129, 200, 1000] {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                let v = q.compress_vec(&p, &mut Pcg64::seeded(d as u64));
+                let norm = crate::tensor::norm2(&p) as f32;
+                let e = encode_qsgd(&v, norm, s);
+                assert_eq!(e.format, Format::Qsgd);
+                assert_eq!(e.d, d);
+                assert_eq!(
+                    e.bits,
+                    qsgd_wire_bits(&v, norm, s),
+                    "size formula drifted from encoder at d={d} s={s}"
+                );
+                let dec = decode_qsgd(&e).unwrap();
+                for i in 0..d {
+                    assert_eq!(dec[i], v[i], "d={d} s={s} i={i}");
+                }
+                let mut acc = vec![1.5f32; d];
+                decode_qsgd_add(&e, &mut acc).unwrap();
+                for i in 0..d {
+                    assert!((acc[i] - (1.5 + v[i])).abs() < 1e-6, "d={d} s={s} i={i}");
+                }
+                // decode_any dispatches to the qsgd decoder
+                assert_eq!(decode_any(&e).unwrap(), dec);
+            }
+        }
+    }
+
+    /// Property test: on random gaussian inputs the analytic size formula
+    /// equals the encoder exactly, for every levels setting.
+    #[test]
+    fn prop_qsgd_wire_bits_matches_encoder() {
+        propcheck::check(&VecF32::new(1, 400), |p| {
+            for s in [1u32, 4, 16] {
+                let v = Qsgd::new(s).compress_vec(p, &mut Pcg64::seeded(9));
+                let norm = crate::tensor::norm2(p) as f32;
+                let e = encode_qsgd(&v, norm, s);
+                if e.bits != qsgd_wire_bits(&v, norm, s) {
+                    return false;
+                }
+                // frames are never wastefully padded beyond the last byte
+                if e.bytes.len() as u64 != e.bits.div_ceil(8) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    /// The acceptance bar from the PR issue: at s=1 and d=65536 the QSGD
+    /// frame must be at most a quarter of the dense f32 payload. (It is in
+    /// fact ~1 bit/coordinate ≈ 1/32 of dense; 1/4 leaves slack for
+    /// adversarial level distributions.)
+    #[test]
+    fn qsgd_frame_quarter_of_dense_at_s1() {
+        let d = 65_536;
+        let mut rng = Pcg64::seeded(13);
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let v = Qsgd::new(1).compress_vec(&p, &mut rng);
+        let norm = crate::tensor::norm2(&p) as f32;
+        let e = encode_qsgd(&v, norm, 1);
+        let dense = encode_dense(&v);
+        assert!(
+            e.bytes.len() * 4 <= dense.bytes.len(),
+            "qsgd frame {} bytes vs dense {} bytes",
+            e.bytes.len(),
+            dense.bytes.len()
+        );
+        assert!(e.bits * 4 <= dense.bits);
+        // and it still decodes exactly
+        let dec = decode_qsgd(&e).unwrap();
+        for i in 0..d {
+            assert_eq!(dec[i], v[i]);
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_vector_and_degenerate_frames() {
+        // all-zero vector: norm 0, every level 0, 1 bit per coordinate
+        let v = vec![0.0f32; 100];
+        let e = encode_qsgd(&v, 0.0, 4);
+        assert_eq!(e.bits, 32 + 8 + 100);
+        assert_eq!(decode_qsgd(&e).unwrap(), v);
+        // truncation rejected
+        let mut t = e.clone();
+        t.bytes.truncate(4);
+        assert!(matches!(decode_qsgd(&t), Err(WireError::Truncated)));
+        // format mismatch rejected
+        let dense = encode_dense(&v);
+        assert!(matches!(decode_qsgd(&dense), Err(WireError::Format(..))));
+        let mut acc = vec![0.0f32; 100];
+        assert!(matches!(
+            decode_qsgd_add(&dense, &mut acc),
+            Err(WireError::Format(..))
+        ));
+    }
+
+    /// Every fused `decode_*_add` matches decode-then-add for its format.
+    #[test]
+    fn fused_add_decoders_match_decode_then_add() {
+        let d = 257; // ragged on purpose
+        let mut rng = Pcg64::seeded(17);
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        let sparse_v = TopK::count(d / 4).compress_vec(&p, &mut Pcg64::seeded(1));
+        let tern_v = TernGrad.compress_vec(&p, &mut Pcg64::seeded(2));
+        let qsgd_v = Qsgd::new(4).compress_vec(&p, &mut Pcg64::seeded(3));
+        let norm = crate::tensor::norm2(&p) as f32;
+        let frames = [
+            encode_dense(&p),
+            encode_scaled_sign(&p),
+            encode_sparse(&sparse_v),
+            encode_ternary(&tern_v),
+            encode_qsgd(&qsgd_v, norm, 4),
+        ];
+        for e in &frames {
+            let dec = decode_any(e).unwrap();
+            let mut acc: Vec<f32> = (0..d).map(|i| (i as f32 * 0.13).cos()).collect();
+            let mut want = acc.clone();
+            decode_any_add(e, &mut acc).unwrap();
+            for (w, x) in want.iter_mut().zip(&dec) {
+                *w += x;
+            }
+            for i in 0..d {
+                assert!(
+                    (acc[i] - want[i]).abs() < 1e-6,
+                    "{:?} i={i}: {} vs {}",
+                    e.format,
+                    acc[i],
+                    want[i]
+                );
+            }
+        }
     }
 
     /// The word-packed sign codec round-trips at every alignment class:

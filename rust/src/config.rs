@@ -347,6 +347,15 @@ impl TrainConfig {
             Some(Value::Arr(items)) => items.iter().filter_map(|v| v.as_f64()).collect(),
             _ => d.lr_decay_at.clone(),
         };
+        // The QSGD wire pack stores the level count in a u8; reject bad
+        // settings at load time instead of panicking mid-training.
+        let qsgd_levels = m.usize_or("training.qsgd_levels", d.qsgd_levels as usize);
+        if !(1..=u8::MAX as usize).contains(&qsgd_levels) {
+            return Err(ConfigError::BadValue(
+                "training.qsgd_levels".into(),
+                format!("{qsgd_levels} (must be 1..=255: the wire format's level count is a u8)"),
+            ));
+        }
         Ok(TrainConfig {
             model: m.str_or("model.name", &d.model),
             workers: m.usize_or("training.workers", d.workers),
@@ -358,7 +367,7 @@ impl TrainConfig {
             compressor,
             error_feedback: m.bool_or("training.error_feedback", d.error_feedback),
             k_frac: m.usize_or("training.k_frac", d.k_frac),
-            qsgd_levels: m.usize_or("training.qsgd_levels", d.qsgd_levels as usize) as u32,
+            qsgd_levels: qsgd_levels as u32,
             seed: m.usize_or("training.seed", d.seed as usize) as u64,
             aggregation: m.str_or("training.aggregation", &d.aggregation),
             lr_decay_at,
@@ -423,6 +432,22 @@ artifacts = "artifacts"
         let tc = TrainConfig::from_map(&m).unwrap();
         assert_eq!(tc.workers, 8);
         assert_eq!(tc.compressor, CompressorKind::TopK);
+    }
+
+    #[test]
+    fn rejects_qsgd_levels_beyond_u8() {
+        // the QSGD wire pack's level count travels as a u8 — bad settings
+        // must fail at config load, not panic mid-training in the encoder
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        m.set_kv("training.qsgd_levels=256").unwrap();
+        assert!(matches!(
+            TrainConfig::from_map(&m),
+            Err(ConfigError::BadValue(..))
+        ));
+        m.set_kv("training.qsgd_levels=0").unwrap();
+        assert!(TrainConfig::from_map(&m).is_err());
+        m.set_kv("training.qsgd_levels=255").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().qsgd_levels, 255);
     }
 
     #[test]

@@ -1,6 +1,35 @@
-//! Leader-side aggregation rules.
+//! Leader-side aggregation rules, including the fused
+//! decode-and-accumulate fast path over the worker pool's threads.
 
+use super::pool::WorkerPool;
 use crate::collectives::majority_vote;
+use crate::compress::wire::Encoded;
+use std::sync::Arc;
+
+/// Fixed fan-out width of the leader's parallel frame decode. The `n`
+/// worker frames are partitioned into at most this many contiguous groups;
+/// each group is decoded (fused) into one partial sum and the partials are
+/// merged in worker-id order. The partition depends only on `n` — never on
+/// the thread count — so the f32 reduction tree, and therefore every bit
+/// of the trained parameters, is identical for any `--threads` value.
+pub const DECODE_LANES: usize = 8;
+
+/// The fixed decode partition: contiguous groups of ⌈n / DECODE_LANES⌉
+/// frames. For n ≤ DECODE_LANES this is one group per worker, which makes
+/// the blocked reduction identical to the historical strictly-sequential
+/// per-worker sum.
+pub fn decode_groups(n: usize) -> Vec<(usize, usize)> {
+    assert!(n > 0);
+    let size = n.div_ceil(DECODE_LANES);
+    let mut groups = Vec::with_capacity(n.div_ceil(size));
+    let mut start = 0;
+    while start < n {
+        let end = (start + size).min(n);
+        groups.push((start, end));
+        start = end;
+    }
+    groups
+}
 
 /// How the leader combines per-worker updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,6 +55,37 @@ impl Aggregation {
         match self {
             Aggregation::Mean => "mean",
             Aggregation::MajorityVote => "majority_vote",
+        }
+    }
+
+    /// Decode + combine encoded worker frames (sorted by worker id) on the
+    /// leader, fanning the per-frame decode out across the pool threads.
+    ///
+    /// * `Mean` uses the fused path: each fixed group of frames is decoded
+    ///   straight into one partial-sum buffer (`decode_*_add`, no dense
+    ///   `Vec<f32>` per worker), and the partials are merged in worker-id
+    ///   order before the 1/n scale.
+    /// * `MajorityVote` needs the individual updates, so frames are
+    ///   decoded densely in parallel and voted as before.
+    pub fn combine_frames(&self, frames: Vec<Encoded>, d: usize, pool: &WorkerPool) -> Vec<f32> {
+        assert!(!frames.is_empty());
+        let n = frames.len();
+        let frames = Arc::new(frames);
+        match self {
+            Aggregation::Mean => {
+                let groups = decode_groups(n);
+                let partials = pool.decode_partials(&frames, d, &groups);
+                let mut out = vec![0.0f32; d];
+                for p in &partials {
+                    crate::tensor::add_assign(&mut out, p);
+                }
+                crate::tensor::scale(1.0 / n as f32, &mut out);
+                out
+            }
+            Aggregation::MajorityVote => {
+                let updates = pool.decode_dense(&frames);
+                self.combine(&updates)
+            }
         }
     }
 
@@ -75,6 +135,81 @@ mod tests {
         let out = Aggregation::MajorityVote.combine(&updates);
         // votes: +,-,- ; mean scale = 2
         assert_eq!(out, vec![2.0, -2.0, -2.0]);
+    }
+
+    #[test]
+    fn decode_groups_partition_is_fixed_and_complete() {
+        // n <= DECODE_LANES: one group per frame (historical sum order)
+        assert_eq!(decode_groups(1), vec![(0, 1)]);
+        assert_eq!(
+            decode_groups(4),
+            vec![(0, 1), (1, 2), (2, 3), (3, 4)]
+        );
+        // n = 16: 8 groups of 2
+        let g16 = decode_groups(16);
+        assert_eq!(g16.len(), 8);
+        assert!(g16.iter().all(|(s, e)| e - s == 2));
+        // ragged n: contiguous, complete, <= DECODE_LANES groups
+        for n in [5usize, 9, 17, 23, 64, 100] {
+            let g = decode_groups(n);
+            assert!(g.len() <= DECODE_LANES, "n={n}: {} groups", g.len());
+            assert_eq!(g[0].0, 0);
+            assert_eq!(g.last().unwrap().1, n);
+            for w in g.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap in partition at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn combine_frames_matches_dense_combine() {
+        use crate::compress::wire;
+        use crate::config::CompressorKind;
+        use crate::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+        use crate::model::toy::SparseNoiseQuadratic;
+        use crate::net::{Fabric, LinkModel};
+        use crate::util::Pcg64;
+
+        let d = 33;
+        let n = 4;
+        let workers: Vec<Worker> = (0..n)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 0.0),
+                        Pcg64::seeded(id as u64),
+                    )),
+                    WorkerMode::ErrorFeedback,
+                    CompressorKind::ScaledSign,
+                    4,
+                    4,
+                    Pcg64::seeded(50 + id as u64),
+                )
+            })
+            .collect();
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(workers, fabric, 2);
+
+        let mut rng = Pcg64::seeded(77);
+        let frames: Vec<wire::Encoded> = (0..n)
+            .map(|_| {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                wire::encode_scaled_sign(&p)
+            })
+            .collect();
+        let updates: Vec<Vec<f32>> = frames
+            .iter()
+            .map(|e| wire::decode_any(e).unwrap())
+            .collect();
+        for agg in [Aggregation::Mean, Aggregation::MajorityVote] {
+            let fused = agg.combine_frames(frames.clone(), d, &pool);
+            let dense = agg.combine(&updates);
+            // n <= DECODE_LANES, so the fused reduction replays the dense
+            // per-worker order exactly
+            assert_eq!(fused, dense, "{}", agg.name());
+        }
     }
 
     #[test]

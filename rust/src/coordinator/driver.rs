@@ -9,7 +9,7 @@
 
 use super::aggregate::Aggregation;
 use super::pool::{WorkerPool, WorkerState};
-use super::round::{LrSchedule, RoundClock};
+use super::round::{LeaderProfile, LrSchedule, RoundClock};
 use super::state::{CheckpointStore, Snapshot};
 use super::worker::Worker;
 use crate::collectives::ParameterServer;
@@ -72,6 +72,8 @@ pub struct TrainOutcome {
     pub recorder: Recorder,
     pub traffic: TrafficStats,
     pub rounds: u64,
+    /// Wall-clock profile of the leader's decode+aggregate hot path.
+    pub profile: LeaderProfile,
 }
 
 /// The coordinator driver.
@@ -84,6 +86,7 @@ pub struct TrainDriver {
     clock: RoundClock,
     momentum: Vec<f32>,
     wd_buf: Vec<f32>,
+    profile: LeaderProfile,
 }
 
 impl TrainDriver {
@@ -104,6 +107,7 @@ impl TrainDriver {
             fabric,
             ps,
             clock: RoundClock::default(),
+            profile: LeaderProfile::default(),
         }
     }
 
@@ -118,6 +122,11 @@ impl TrainDriver {
     /// Snapshot of the fabric's traffic accounting so far.
     pub fn traffic(&self) -> TrafficStats {
         self.fabric.stats()
+    }
+
+    /// Wall-clock profile of the leader's decode+aggregate hot path.
+    pub fn profile(&self) -> &LeaderProfile {
+        &self.profile
     }
 
     /// Per-worker EF states (fetched from the pool threads), by worker id.
@@ -185,18 +194,26 @@ impl TrainDriver {
 
         // 4. leader: gather, decode, aggregate, update. Messages are
         // sorted by source so the f32 aggregation order is independent of
-        // thread scheduling.
+        // thread scheduling; the per-frame decode then fans out across the
+        // pool threads in fixed worker-id groups (see
+        // [`super::aggregate::decode_groups`]), fused straight into
+        // partial-sum buffers — no dense `Vec<f32>` per worker.
         let mut msgs = self.fabric.recv_all(self.ps.leader);
         msgs.sort_by_key(|m| m.src);
-        let mut updates: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut frames: Vec<wire::Encoded> = Vec::with_capacity(n);
         for msg in msgs {
             debug_assert_eq!(msg.round, step, "stale push");
             if let Payload::Grad(e) = msg.payload {
-                updates.push(wire::decode_any(&e).expect("decode push"));
+                frames.push(e);
             }
         }
-        assert_eq!(updates.len(), n, "missing worker push");
-        let agg = self.cfg.aggregation.combine(&updates);
+        assert_eq!(frames.len(), n, "missing worker push");
+        let t_agg = std::time::Instant::now();
+        let agg = self
+            .cfg
+            .aggregation
+            .combine_frames(frames, self.theta.len(), &self.pool);
+        self.profile.record(t_agg.elapsed().as_secs_f64());
 
         match self.cfg.update_rule {
             UpdateRule::ApplyAggregate => {
@@ -207,10 +224,17 @@ impl TrainDriver {
             }
             UpdateRule::ServerMomentum { beta_millis } => {
                 let beta = beta_millis as f32 / 1000.0;
-                for (m, g) in self.momentum.iter_mut().zip(&agg) {
+                // fused momentum update + apply: one pass, no clone of the
+                // full parameter-sized momentum vector per step
+                for ((t, m), g) in self
+                    .theta
+                    .iter_mut()
+                    .zip(self.momentum.iter_mut())
+                    .zip(&agg)
+                {
                     *m = g + beta * *m;
+                    *t -= lr * *m;
                 }
-                crate::tensor::axpy(-lr, &self.momentum.clone(), &mut self.theta);
             }
         }
         // decoupled weight decay on the iterate
@@ -267,6 +291,7 @@ impl TrainDriver {
             recorder,
             traffic: self.fabric.stats(),
             rounds: self.clock.current(),
+            profile: self.profile,
         }
     }
 }

@@ -26,6 +26,13 @@
 //! [`crate::net::Fabric`], whose mutex-guarded queues and accounting make
 //! interleaved sends/recvs from many threads safe and exact.
 //!
+//! The leader's own hot path — decoding every worker's wire frame and
+//! aggregating — also fans out over the same pool threads between rounds:
+//! frames are partitioned into fixed worker-id groups
+//! ([`aggregate::decode_groups`]) and each group is decoded straight into
+//! one partial-sum buffer (`wire::decode_any_add`), so aggregation never
+//! materializes a dense `Vec<f32>` per worker.
+//!
 //! # Determinism guarantee
 //!
 //! For a fixed seed, the trained parameters, every worker's EF residual,
@@ -36,6 +43,9 @@
 //! * every pool reply carries the worker id and the leader sorts gathers
 //!   and reports by id before aggregating, so f32 reduction order is
 //!   schedule-independent;
+//! * the parallel decode's partial-sum partition is a function of the
+//!   worker count only (never of the thread count), and partials merge in
+//!   worker-id order, so the f32 reduction tree is fixed;
 //! * bit accounting is a commutative sum of exact per-message counts.
 //!
 //! (Simulated *time* aggregates are f64 sums whose addition order may vary

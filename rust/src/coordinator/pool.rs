@@ -23,6 +23,7 @@
 
 use super::worker::Worker;
 use crate::collectives::ParameterServer;
+use crate::compress::wire::{self, Encoded};
 use crate::net::Fabric;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -53,6 +54,24 @@ enum Command {
     Eval { worker: usize, theta: Arc<Vec<f32>> },
     Export,
     Restore { states: Arc<Vec<WorkerState>> },
+    /// Leader decode fan-out: decode `frames[start..end]` (one fixed group
+    /// of worker frames, in index order) into a fresh length-`d` partial
+    /// sum and send it back tagged with the group index.
+    DecodeAccum {
+        frames: Arc<Vec<Encoded>>,
+        d: usize,
+        group: usize,
+        start: usize,
+        end: usize,
+    },
+    /// Leader decode fan-out, dense flavour: decode each of
+    /// `frames[start..end]` to its own dense vector (majority vote needs
+    /// the per-worker updates, not their sum).
+    DecodeDense {
+        frames: Arc<Vec<Encoded>>,
+        start: usize,
+        end: usize,
+    },
     Shutdown,
 }
 
@@ -61,6 +80,8 @@ enum Reply {
     Eval { loss: f64, acc: f64 },
     Export(WorkerState),
     Restored,
+    Partial { group: usize, acc: Vec<f32> },
+    Decoded { idx: usize, v: Vec<f32> },
 }
 
 /// Persistent thread pool owning the workers of one training run.
@@ -192,6 +213,77 @@ impl WorkerPool {
         states
     }
 
+    /// Fan frame decoding out over the pool threads, fused with
+    /// accumulation: each `(start, end)` group of frames is decoded — in
+    /// index order — straight into one partial-sum buffer via
+    /// [`wire::decode_any_add`]. Groups are distributed round-robin over
+    /// the threads; since every partial depends only on its own group's
+    /// frames, the returned partials (sorted by group index) are
+    /// bit-identical for any thread count.
+    pub fn decode_partials(
+        &self,
+        frames: &Arc<Vec<Encoded>>,
+        d: usize,
+        groups: &[(usize, usize)],
+    ) -> Vec<Vec<f32>> {
+        let threads = self.command_txs.len();
+        for (g, &(start, end)) in groups.iter().enumerate() {
+            self.command_txs[g % threads]
+                .send(Command::DecodeAccum {
+                    frames: frames.clone(),
+                    d,
+                    group: g,
+                    start,
+                    end,
+                })
+                .expect("pool thread died");
+        }
+        let mut partials: Vec<Option<Vec<f32>>> = vec![None; groups.len()];
+        for _ in 0..groups.len() {
+            match self.recv_reply() {
+                Reply::Partial { group, acc } => partials[group] = Some(acc),
+                _ => unreachable!("unexpected pool reply during decode"),
+            }
+        }
+        partials
+            .into_iter()
+            .map(|p| p.expect("missing decode partial"))
+            .collect()
+    }
+
+    /// Fan frame decoding out over the pool threads, one dense vector per
+    /// frame (contiguous blocks per thread); returns the decoded updates
+    /// sorted by frame index.
+    pub fn decode_dense(&self, frames: &Arc<Vec<Encoded>>) -> Vec<Vec<f32>> {
+        let n = frames.len();
+        let threads = self.command_txs.len();
+        let per = n.div_ceil(threads);
+        let mut start = 0usize;
+        let mut t = 0usize;
+        while start < n {
+            let end = (start + per).min(n);
+            self.command_txs[t]
+                .send(Command::DecodeDense {
+                    frames: frames.clone(),
+                    start,
+                    end,
+                })
+                .expect("pool thread died");
+            start = end;
+            t += 1;
+        }
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; n];
+        for _ in 0..n {
+            match self.recv_reply() {
+                Reply::Decoded { idx, v } => out[idx] = Some(v),
+                _ => unreachable!("unexpected pool reply during decode"),
+            }
+        }
+        out.into_iter()
+            .map(|v| v.expect("missing decoded frame"))
+            .collect()
+    }
+
     /// Restore worker EF states (each thread applies the entries for the
     /// workers it owns).
     pub fn restore_states(&self, states: Vec<WorkerState>) {
@@ -273,6 +365,29 @@ fn actor_loop(
                         corrected: ef.corrected().to_vec(),
                     };
                     if tx.send(Reply::Export(state)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Command::DecodeAccum {
+                frames,
+                d,
+                group,
+                start,
+                end,
+            } => {
+                let mut acc = vec![0.0f32; d];
+                for e in &frames[start..end] {
+                    wire::decode_any_add(e, &mut acc).expect("leader frame decode");
+                }
+                if tx.send(Reply::Partial { group, acc }).is_err() {
+                    return;
+                }
+            }
+            Command::DecodeDense { frames, start, end } => {
+                for (i, e) in frames[start..end].iter().enumerate() {
+                    let v = wire::decode_any(e).expect("leader frame decode");
+                    if tx.send(Reply::Decoded { idx: start + i, v }).is_err() {
                         return;
                     }
                 }
@@ -367,6 +482,65 @@ mod tests {
             assert_eq!(a.steps, b.steps);
             assert_eq!(a.error, b.error);
             assert_eq!(a.corrected, b.corrected);
+        }
+    }
+
+    /// Decode fan-out is bit-deterministic: the same fixed groups produce
+    /// byte-identical partials regardless of how many threads decode them.
+    #[test]
+    fn decode_partials_identical_across_thread_counts() {
+        let d = 97; // ragged on purpose
+        let n = 6;
+        let mut rng = Pcg64::seeded(31);
+        let frames: Arc<Vec<_>> = Arc::new(
+            (0..n)
+                .map(|_| {
+                    let mut p = vec![0.0f32; d];
+                    rng.fill_normal(&mut p, 0.0, 1.0);
+                    crate::compress::wire::encode_scaled_sign(&p)
+                })
+                .collect(),
+        );
+        let groups = [(0usize, 2usize), (2, 4), (4, 6)];
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 3] {
+            let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+            let pool = WorkerPool::spawn(make_workers(n, d), fabric, threads);
+            runs.push(pool.decode_partials(&frames, d, &groups));
+        }
+        for r in &runs[1..] {
+            assert_eq!(&runs[0], r);
+        }
+        // each partial equals the in-order fused sum of its group
+        for (g, &(s, e)) in groups.iter().enumerate() {
+            let mut want = vec![0.0f32; d];
+            for f in &frames[s..e] {
+                crate::compress::wire::decode_any_add(f, &mut want).unwrap();
+            }
+            assert_eq!(runs[0][g], want);
+        }
+    }
+
+    #[test]
+    fn decode_dense_returns_frames_in_index_order() {
+        let d = 16;
+        let n = 5;
+        let mut rng = Pcg64::seeded(37);
+        let frames: Arc<Vec<_>> = Arc::new(
+            (0..n)
+                .map(|_| {
+                    let mut p = vec![0.0f32; d];
+                    rng.fill_normal(&mut p, 0.0, 1.0);
+                    crate::compress::wire::encode_dense(&p)
+                })
+                .collect(),
+        );
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric, 3);
+        let decoded = pool.decode_dense(&frames);
+        assert_eq!(decoded.len(), n);
+        for (v, f) in decoded.iter().zip(frames.iter()) {
+            assert_eq!(v, &crate::compress::wire::decode_any(f).unwrap());
         }
     }
 

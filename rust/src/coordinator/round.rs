@@ -36,6 +36,44 @@ impl LrSchedule {
     }
 }
 
+/// Leader hot-path profile: wall-clock spent in the gather → decode →
+/// aggregate section, accumulated across rounds. This is the serial
+/// chokepoint the parallel decode fan-out attacks, so the driver keeps an
+/// exact running account of it; `bench_leader` serializes it into
+/// `BENCH_leader.json` to track the perf trajectory across PRs.
+#[derive(Clone, Debug, Default)]
+pub struct LeaderProfile {
+    /// Total seconds spent decoding + aggregating worker frames.
+    pub decode_agg_s: f64,
+    /// Rounds accounted.
+    pub rounds: u64,
+}
+
+impl LeaderProfile {
+    pub fn record(&mut self, seconds: f64) {
+        self.decode_agg_s += seconds;
+        self.rounds += 1;
+    }
+
+    /// Mean decode+aggregate seconds per round.
+    pub fn mean_round_s(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.decode_agg_s / self.rounds as f64
+        }
+    }
+
+    /// Leader aggregation throughput in rounds/sec (0 before any round).
+    pub fn rounds_per_sec(&self) -> f64 {
+        if self.decode_agg_s > 0.0 {
+            self.rounds as f64 / self.decode_agg_s
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Round counter with monotonicity checks — the leader uses this to detect
 /// stale gradient pushes (the gather asserts all messages carry the current
 /// round).
@@ -74,6 +112,18 @@ mod tests {
         let s = LrSchedule::constant(0.1);
         assert_eq!(s.lr(0), 0.1);
         assert_eq!(s.lr(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn leader_profile_accumulates() {
+        let mut p = LeaderProfile::default();
+        assert_eq!(p.rounds_per_sec(), 0.0);
+        assert_eq!(p.mean_round_s(), 0.0);
+        p.record(0.5);
+        p.record(0.5);
+        assert_eq!(p.rounds, 2);
+        assert!((p.mean_round_s() - 0.5).abs() < 1e-12);
+        assert!((p.rounds_per_sec() - 2.0).abs() < 1e-12);
     }
 
     #[test]

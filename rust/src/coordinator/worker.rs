@@ -78,6 +78,7 @@ pub struct Worker {
     source: Box<dyn GradSource>,
     ef: ErrorFeedback,
     kind: CompressorKind,
+    qsgd_levels: u32,
     rng: Pcg64,
     grad_buf: Vec<f32>,
     delta_buf: Vec<f32>,
@@ -115,6 +116,7 @@ impl Worker {
             source,
             ef,
             kind,
+            qsgd_levels,
             rng,
             grad_buf: vec![0.0; d],
             delta_buf: vec![0.0; d],
@@ -172,11 +174,28 @@ impl Worker {
                     wire::encode_sparse(&self.delta_buf)
                 }
                 CompressorKind::TernGrad => wire::encode_ternary(&self.delta_buf),
-                // QSGD and identity travel dense (a tighter QSGD pack is a
-                // known TODO; dense is the conservative upper bound).
-                CompressorKind::Qsgd | CompressorKind::None => {
-                    wire::encode_dense(&self.delta_buf)
+                // QSGD travels as the Elias-gamma level pack. The codec
+                // needs the exact f32 norm the quantizer used; that is
+                // ‖p‖₂ of the error-corrected gradient the compressor saw
+                // (`corrected()` is valid in both EF and plain modes).
+                CompressorKind::Qsgd => {
+                    let norm = crate::tensor::norm2(self.ef.corrected()) as f32;
+                    let enc = wire::encode_qsgd(&self.delta_buf, norm, self.qsgd_levels);
+                    // The pack reconstructs levels by dividing the delta
+                    // back out by `norm`, which is only exact because the
+                    // quantizer computed the identical `norm2(p) as f32`
+                    // over `corrected()`. Guard that contract (e.g. against
+                    // a future blocked/SIMD norm2 or a rescaling wrapper)
+                    // where drift would otherwise corrupt training silently.
+                    debug_assert!(
+                        wire::decode_qsgd(&enc)
+                            .map(|dec| dec == self.delta_buf)
+                            .unwrap_or(false),
+                        "qsgd wire pack is not bit-faithful to the quantized delta"
+                    );
+                    enc
                 }
+                CompressorKind::None => wire::encode_dense(&self.delta_buf),
             },
         }
     }
@@ -254,6 +273,21 @@ mod tests {
         // all-positive grad: decode ≈ +1 each
         for d in &decoded {
             assert!((d - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn qsgd_worker_encodes_elias_pack_exactly() {
+        let mut w = make_worker(WorkerMode::ErrorFeedback, CompressorKind::Qsgd);
+        let theta: Vec<f32> = (0..32).map(|i| 0.3 + (i as f32 * 0.17).sin()).collect();
+        let enc = w.step_encode(&theta, 0.1);
+        assert_eq!(enc.format, wire::Format::Qsgd);
+        // far below the 32*d dense payload
+        assert!(enc.bits < 32 * 32);
+        // the decode is bit-faithful to the quantized delta the EF state saw
+        let decoded = wire::decode_any(&enc).unwrap();
+        for (d, e) in decoded.iter().zip(&w.delta_buf) {
+            assert_eq!(*d, *e);
         }
     }
 

@@ -54,6 +54,24 @@ impl TrafficStats {
         self.per_kind.get(&kind).copied().unwrap_or(0)
     }
 
+    /// Number of messages of `kind` seen so far.
+    pub fn count_of_kind(&self, kind: MessageKind) -> u64 {
+        self.msg_count.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Mean on-wire bits per message of `kind` (0 if none were sent) —
+    /// with variable-length codecs (QSGD's Elias pack) the per-frame cost
+    /// is data-dependent, so benchmarks report this measured mean rather
+    /// than an analytic constant.
+    pub fn mean_msg_bits(&self, kind: MessageKind) -> f64 {
+        let n = self.count_of_kind(kind);
+        if n == 0 {
+            0.0
+        } else {
+            self.bits_of_kind(kind) as f64 / n as f64
+        }
+    }
+
     /// Max simulated busy-time over nodes — a lower bound on the wall-clock
     /// communication time of the round set.
     pub fn critical_path_s(&self) -> f64 {
@@ -98,6 +116,9 @@ mod tests {
         assert_eq!(t.received_by(0), 2000);
         assert_eq!(t.bits_of_kind(MessageKind::GradPush), 1500);
         assert_eq!(t.msg_count[&MessageKind::GradPush], 2);
+        assert_eq!(t.count_of_kind(MessageKind::GradPush), 2);
+        assert!((t.mean_msg_bits(MessageKind::GradPush) - 750.0).abs() < 1e-12);
+        assert_eq!(t.mean_msg_bits(MessageKind::Control), 0.0);
         assert!((t.critical_path_s() - 0.85).abs() < 1e-12);
         assert!(t.summary().contains("grad_push"));
     }

@@ -169,33 +169,38 @@ fn checkpoint_to_disk_and_restore() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// The parallel engine is bit-deterministic: with a fixed seed, final
-/// parameters, every EF residual, and the fabric's bit totals are
-/// identical for any `threads` value (the `--threads` CLI knob).
-#[test]
-fn threads_are_bit_deterministic() {
-    let run = |threads: usize| {
-        let (workers, theta0, ..) =
-            setup(4, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
-        let steps = 40;
-        let cfg = DriverConfig {
-            steps,
-            schedule: LrSchedule::new(0.05, steps, vec![0.5]),
-            threads,
-            ..Default::default()
-        };
-        let mut driver = TrainDriver::new(cfg, workers, theta0);
-        let mut rec = ef_sgd::metrics::Recorder::new();
-        for _ in 0..steps {
-            driver.round(&mut rec);
-        }
-        let snap = driver.snapshot();
-        let states = driver.worker_states();
-        (snap.theta, states, driver_traffic(&driver))
+/// One fixed-seed run at a given thread count; returns everything the
+/// bit-determinism contract covers (theta, EF states, fabric bit totals).
+fn deterministic_run(
+    kind: CompressorKind,
+    steps: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<ef_sgd::coordinator::WorkerState>, (u64, u64, u64)) {
+    let (workers, theta0, ..) = setup(4, WorkerMode::ErrorFeedback, kind);
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::new(0.05, steps, vec![0.5]),
+        threads,
+        ..Default::default()
     };
-    let (theta1, states1, bits1) = run(1);
+    let mut driver = TrainDriver::new(cfg, workers, theta0);
+    let mut rec = ef_sgd::metrics::Recorder::new();
+    for _ in 0..steps {
+        driver.round(&mut rec);
+    }
+    let snap = driver.snapshot();
+    let states = driver.worker_states();
+    (snap.theta, states, driver_traffic(&driver))
+}
+
+/// Assert bit-identity of a compressor's training run across thread
+/// counts — this covers both the worker pool AND the leader's parallel
+/// decode fan-out (the fixed-group partial-sum reduction must not depend
+/// on how many threads decoded the frames).
+fn assert_threads_bit_deterministic(kind: CompressorKind, steps: usize) {
+    let (theta1, states1, bits1) = deterministic_run(kind, steps, 1);
     for threads in [2usize, 4] {
-        let (theta_n, states_n, bits_n) = run(threads);
+        let (theta_n, states_n, bits_n) = deterministic_run(kind, steps, threads);
         // exact equality, not tolerance: the engine promises bit-identity
         assert_eq!(theta1, theta_n, "theta differs at threads={threads}");
         assert_eq!(bits1, bits_n, "bit totals differ at threads={threads}");
@@ -208,6 +213,54 @@ fn threads_are_bit_deterministic() {
             );
         }
     }
+}
+
+/// The parallel engine is bit-deterministic: with a fixed seed, final
+/// parameters, every EF residual, and the fabric's bit totals are
+/// identical for any `threads` value (the `--threads` CLI knob).
+#[test]
+fn threads_are_bit_deterministic() {
+    assert_threads_bit_deterministic(CompressorKind::ScaledSign, 40);
+}
+
+/// Same contract with the QSGD compressor, whose Elias-packed frames are
+/// variable-length: parallel decode + fused accumulation must reproduce
+/// theta, residuals, AND the exact wire bit totals at any thread count.
+/// (Fewer steps than the scaled-sign run: EF around an *unscaled*
+/// unbiased quantizer grows the residual geometrically — Remark 5 is why
+/// the 1/k scaling exists — and the test must stay far from f32 range.)
+#[test]
+fn qsgd_threads_are_bit_deterministic() {
+    assert_threads_bit_deterministic(CompressorKind::Qsgd, 20);
+}
+
+/// QSGD's Elias wire pack is dramatically smaller than the dense f32
+/// frames it used to travel in (the comm experiment's QSGD rows are now
+/// honest): push traffic is at least 4x below an identical run with
+/// dense-encoded identity compression.
+#[test]
+fn qsgd_push_traffic_beats_dense_by_4x() {
+    let run = |mode, kind| {
+        let (workers, theta0, ..) = setup(2, mode, kind);
+        let cfg = DriverConfig {
+            steps: 6,
+            schedule: LrSchedule::constant(0.05),
+            update_rule: if mode == WorkerMode::DenseGrad {
+                UpdateRule::ScaleByLr
+            } else {
+                UpdateRule::ApplyAggregate
+            },
+            ..Default::default()
+        };
+        TrainDriver::new(cfg, workers, theta0)
+            .run()
+            .traffic
+            .bits_of_kind(MessageKind::GradPush)
+    };
+    let dense = run(WorkerMode::DenseGrad, CompressorKind::None);
+    let qsgd = run(WorkerMode::ErrorFeedback, CompressorKind::Qsgd);
+    let ratio = dense as f64 / qsgd as f64;
+    assert!(ratio > 4.0, "qsgd push compression ratio {ratio}");
 }
 
 fn driver_traffic(driver: &TrainDriver) -> (u64, u64, u64) {
