@@ -1,0 +1,109 @@
+//! Async engine benchmark: bounded-staleness rounds under lognormal
+//! stragglers at n ∈ {4, 16} workers, full vs half quorum, measuring the
+//! host-side throughput of the discrete-event loop (rounds/sec), the
+//! virtual-clock time per round, and how much staleness the schedule
+//! actually produced. Emits `results/BENCH_async.json` so the async
+//! engine's perf trajectory is tracked from this PR onward.
+
+use ef_sgd::bench::{quick_mode, Bench};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::async_driver::AsyncTrainDriver;
+use ef_sgd::coordinator::driver::DriverConfig;
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::{StragglerModel, StragglerSchedule};
+use ef_sgd::util::Pcg64;
+
+fn make_driver(n: usize, d: usize, quorum: usize, staleness: u64, threads: usize) -> AsyncTrainDriver {
+    let workers: Vec<Worker> = (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::ScaledSign,
+                64,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: usize::MAX, // rounds are driven manually below
+        schedule: LrSchedule::constant(0.01),
+        straggler: StragglerSchedule::new(1e-3, StragglerModel::LogNormal { sigma: 1.0 }, 7),
+        threads,
+        ..Default::default()
+    };
+    AsyncTrainDriver::new(cfg, quorum, staleness, workers, vec![0.5f32; d])
+}
+
+struct Row {
+    workers: usize,
+    quorum: usize,
+    staleness_bound: u64,
+    d: usize,
+    rounds_per_sec: f64,
+    sim_ms_per_round: f64,
+    stale_frac: f64,
+    mean_batch: f64,
+}
+
+fn main() {
+    let d = if quick_mode() { 16_384 } else { 262_144 };
+    let mut b = Bench::new(&format!("async bounded-staleness engine (d = {d})"));
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &(n, quorum, bound, threads) in
+        &[(4usize, 4usize, 0u64, 4usize), (4, 2, 2, 4), (16, 8, 3, 8)]
+    {
+        let mut driver = make_driver(n, d, quorum, bound, threads);
+        let mut rec = Recorder::new();
+        let name = format!("fold n={n} K={quorum} S={bound}");
+        let res = b.bench_elems(&name, n as u64, || {
+            driver.step_round(&mut rec);
+        });
+        let rounds = driver.rounds();
+        rows.push(Row {
+            workers: n,
+            quorum,
+            staleness_bound: bound,
+            d,
+            rounds_per_sec: 1.0 / res.mean.as_secs_f64(),
+            sim_ms_per_round: driver.sim_time_s() * 1e3 / rounds as f64,
+            stale_frac: driver.staleness().stale_fraction(),
+            mean_batch: driver.staleness().mean_batch(),
+        });
+    }
+    b.finish();
+
+    // hand-rolled JSON (no serde offline); one object per config row
+    let mut json = String::from("{\n  \"bench\": \"async_engine\",\n");
+    json.push_str(&format!("  \"quick\": {},\n  \"configs\": [\n", quick_mode()));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"quorum\": {}, \"max_staleness\": {}, \"d\": {}, \
+             \"rounds_per_sec\": {:.3}, \"sim_ms_per_round\": {:.4}, \
+             \"stale_frac\": {:.4}, \"mean_batch\": {:.2}}}{}\n",
+            r.workers,
+            r.quorum,
+            r.staleness_bound,
+            r.d,
+            r.rounds_per_sec,
+            r.sim_ms_per_round,
+            r.stale_frac,
+            r.mean_batch,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    let path = "results/BENCH_async.json";
+    std::fs::write(path, &json).expect("write BENCH_async.json");
+    println!("wrote {path}");
+}

@@ -93,6 +93,11 @@ fn takes_value(key: &str) -> bool {
             | "levels"
             | "repeats"
             | "filter"
+            | "quorum"
+            | "max-staleness"
+            | "straggler"
+            | "compute-ms"
+            | "link"
     )
 }
 
@@ -106,7 +111,7 @@ SUBCOMMANDS:
     train        Run distributed training via the PJRT runtime
                  (--config configs/<f>.toml, --set k=v overrides, --quick)
     exp <id>     Run a paper experiment: ce1 ce2 ce3 thm1 fig2 fig3 fig4
-                 fig5 fig7 table2 rem5 comm lemma3 all
+                 fig5 fig7 table2 rem5 comm lemma3 ablation staleness all
                  (--quick for reduced sizes, --out results/ for CSV/JSON)
     artifacts    Print the artifact manifest summary
     list         List available experiments
@@ -119,6 +124,17 @@ COMMON OPTIONS:
     --threads <n>        Worker-pool threads for `train` (default 1;
                          results are bit-identical for any value)
     --artifacts <dir>    Artifact directory (default: artifacts)
+
+ASYNC TRAINING (train):
+    --async              Bounded-staleness rounds over the virtual clock
+    --quorum <k>         Fold once k worker frames arrive (default: all)
+    --max-staleness <s>  Frames may fold up to s rounds late (default 0;
+                         with --quorum n this reproduces sync bit-for-bit)
+    --straggler <m>      constant | uniform[:J] | lognormal[:SIGMA] |
+                         failslow:NODE[:FACTOR]   (default constant)
+    --compute-ms <t>     Base per-step compute time on the virtual clock
+    --link <preset>      Fabric link: 10gbe | 1gbe | ib | wan
+    --toy                Train on the toy quadratic (no PJRT artifacts)
 ";
 
 #[cfg(test)]

@@ -64,17 +64,27 @@ impl ParameterServer {
         acc
     }
 
+    /// Leader side: send the parameter vector (dense) to one worker.
+    /// Returns the simulated arrival time at the worker (the async
+    /// driver's per-worker dispatch primitive).
+    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
+        fabric.send(Message {
+            src: self.leader,
+            dst: worker,
+            round,
+            kind: MessageKind::ParamBroadcast,
+            payload: Payload::Params(params.to_vec()),
+        })
+    }
+
     /// Leader side: broadcast the parameter vector (dense) to all workers.
-    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) {
+    /// Returns the latest simulated arrival time over the recipients.
+    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) -> f64 {
+        let mut latest = 0.0f64;
         for &w in &self.workers {
-            fabric.send(Message {
-                src: self.leader,
-                dst: w,
-                round,
-                kind: MessageKind::ParamBroadcast,
-                payload: Payload::Params(params.to_vec()),
-            });
+            latest = latest.max(self.send_params(fabric, w, round, params));
         }
+        latest
     }
 
     /// Worker side: receive the broadcast parameters.

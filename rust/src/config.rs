@@ -311,6 +311,19 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub log_every: usize,
     pub artifacts_dir: String,
+    /// Bounded-staleness async rounds instead of lock-step (CLI `--async`).
+    pub async_mode: bool,
+    /// Async quorum: fold once this many frames arrive (0 = all workers).
+    pub quorum: usize,
+    /// Async staleness bound in rounds (0 = no stale folds ≡ synchronous).
+    pub max_staleness: u64,
+    /// Straggler model spec (`constant`, `uniform[:J]`, `lognormal[:S]`,
+    /// `failslow:NODE[:F]`) — parsed by `net::StragglerModel::parse`.
+    pub straggler: String,
+    /// Base worker compute time per step in milliseconds (virtual clock).
+    pub compute_ms: f64,
+    /// Link preset for the fabric (`10gbe`, `1gbe`, `ib`, `wan`).
+    pub link: String,
 }
 
 impl Default for TrainConfig {
@@ -333,6 +346,12 @@ impl Default for TrainConfig {
             eval_every: 0,
             log_every: 10,
             artifacts_dir: "artifacts".into(),
+            async_mode: false,
+            quorum: 0,
+            max_staleness: 0,
+            straggler: "constant".into(),
+            compute_ms: 1.0,
+            link: "10gbe".into(),
         }
     }
 }
@@ -356,6 +375,16 @@ impl TrainConfig {
                 format!("{qsgd_levels} (must be 1..=255: the wire format's level count is a u8)"),
             ));
         }
+        // straggler / link specs are validated here so a typo fails at
+        // config load, not mid-run
+        let straggler = m.str_or("training.straggler", &d.straggler);
+        if crate::net::StragglerModel::parse(&straggler).is_none() {
+            return Err(ConfigError::BadValue("training.straggler".into(), straggler));
+        }
+        let link = m.str_or("training.link", &d.link);
+        if crate::net::LinkModel::preset(&link).is_none() {
+            return Err(ConfigError::BadValue("training.link".into(), link));
+        }
         Ok(TrainConfig {
             model: m.str_or("model.name", &d.model),
             workers: m.usize_or("training.workers", d.workers),
@@ -374,6 +403,12 @@ impl TrainConfig {
             eval_every: m.usize_or("training.eval_every", d.eval_every),
             log_every: m.usize_or("training.log_every", d.log_every),
             artifacts_dir: m.str_or("paths.artifacts", &d.artifacts_dir),
+            async_mode: m.bool_or("training.async", d.async_mode),
+            quorum: m.usize_or("training.quorum", d.quorum),
+            max_staleness: m.usize_or("training.max_staleness", d.max_staleness as usize) as u64,
+            straggler,
+            compute_ms: m.f64_or("training.compute_ms", d.compute_ms),
+            link,
         })
     }
 }
@@ -448,6 +483,31 @@ artifacts = "artifacts"
         assert!(TrainConfig::from_map(&m).is_err());
         m.set_kv("training.qsgd_levels=255").unwrap();
         assert_eq!(TrainConfig::from_map(&m).unwrap().qsgd_levels, 255);
+    }
+
+    #[test]
+    fn async_keys_parse_and_validate() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        m.set_kv("training.async=true").unwrap();
+        m.set_kv("training.quorum=3").unwrap();
+        m.set_kv("training.max_staleness=2").unwrap();
+        m.set_kv("training.straggler=\"lognormal:1.5\"").unwrap();
+        m.set_kv("training.link=\"wan\"").unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert!(tc.async_mode);
+        assert_eq!(tc.quorum, 3);
+        assert_eq!(tc.max_staleness, 2);
+        assert_eq!(tc.straggler, "lognormal:1.5");
+        assert_eq!(tc.link, "wan");
+        // bad straggler / link specs fail at load time
+        m.set_kv("training.straggler=\"bogus\"").unwrap();
+        assert!(matches!(
+            TrainConfig::from_map(&m),
+            Err(ConfigError::BadValue(..))
+        ));
+        m.set_kv("training.straggler=\"constant\"").unwrap();
+        m.set_kv("training.link=\"dialup\"").unwrap();
+        assert!(TrainConfig::from_map(&m).is_err());
     }
 
     #[test]

@@ -1,0 +1,502 @@
+//! Bounded-staleness asynchronous training driver.
+//!
+//! The synchronous [`TrainDriver`](super::driver::TrainDriver) is a
+//! lock-step barrier: every round waits for every worker. This driver
+//! replaces the barrier with a **quorum + bounded staleness** rule driven
+//! by the virtual clock (see `docs/ASYNC.md` for the full semantics):
+//!
+//! * Workers always have exactly one frame in flight: on receiving
+//!   parameters of leader round `r_w` they compute (consuming simulated
+//!   time from the [`crate::net::StragglerSchedule`]) and push; the
+//!   push's virtual arrival feeds the leader's [`crate::net::EventQueue`].
+//! * The leader pops arrivals in deterministic `(time, node, seq)` order.
+//!   Arrivals sharing one virtual timestamp form a single logical instant
+//!   and are drained together before the trigger is evaluated.
+//! * **Trigger:** fold as soon as (a) at least `quorum` frames are
+//!   pending AND (b) advancing would leave every still-in-flight worker
+//!   within `max_staleness` rounds (`r + 1 ≤ r_w + S`). Condition (b) is
+//!   the SSP bound: the leader *blocks* on a straggler rather than let any
+//!   frame exceed `S` rounds of staleness, so every folded frame satisfies
+//!   `staleness ≤ S` by induction.
+//! * **Fold:** ALL pending frames — fresh and stale alike — are combined
+//!   (sorted by worker id, same fixed-group parallel decode as the sync
+//!   leader), the update rule applies, the folded workers get fresh
+//!   parameters, and the cycle continues. A late frame is therefore never
+//!   dropped: its contribution (which, under EF, carries the worker's
+//!   residual-corrected delta) always lands within the staleness bound.
+//!
+//! With `--quorum n --max-staleness 0` the trigger degenerates to "all
+//! frames, all fresh": the driver replays the synchronous schedule and is
+//! **bit-identical** to `TrainDriver` on the same seed (shared
+//! [`apply_update`] and [`super::Aggregation::combine_frames`] paths;
+//! asserted by `staleness_zero_matches_sync_driver`). Determinism across `--threads`
+//! holds for any quorum: arrival times are pure functions of the straggler
+//! schedule and link model, never of wall-clock thread interleaving.
+
+use super::driver::{apply_update, DriverConfig, TrainOutcome};
+use super::pool::{RoundReport, WorkerPool};
+use super::round::{LeaderProfile, StalenessStats};
+use super::state::Snapshot;
+use super::worker::Worker;
+use crate::collectives::ParameterServer;
+use crate::compress::wire::Encoded;
+use crate::metrics::Recorder;
+use crate::net::{EventQueue, Fabric, Payload, SimClock, TrafficStats};
+use std::sync::Arc;
+
+/// One worker frame travelling through virtual time.
+struct Inflight {
+    worker: usize,
+    /// Leader round whose parameters the frame was computed on.
+    round: u64,
+    frame: Encoded,
+    report: RoundReport,
+}
+
+/// The bounded-staleness coordinator driver.
+pub struct AsyncTrainDriver {
+    cfg: DriverConfig,
+    /// Fold as soon as this many frames are pending (clamped to 1..=n).
+    quorum: usize,
+    /// Maximum rounds a frame may lag when folded (SSP bound).
+    max_staleness: u64,
+    pool: WorkerPool,
+    theta: Vec<f32>,
+    fabric: Arc<Fabric>,
+    sim_clock: Arc<SimClock>,
+    ps: ParameterServer,
+    round: u64,
+    momentum: Vec<f32>,
+    wd_buf: Vec<f32>,
+    profile: LeaderProfile,
+    staleness: StalenessStats,
+    queue: EventQueue<Inflight>,
+    pending: Vec<Inflight>,
+    /// Per worker: leader round whose params it is computing on.
+    worker_round: Vec<u64>,
+    /// Per worker: number of compute steps taken (straggler cell index).
+    worker_steps: Vec<u64>,
+    /// Per worker: true while its frame sits in `pending`.
+    in_pending: Vec<bool>,
+    sim_time: f64,
+    started: bool,
+}
+
+impl AsyncTrainDriver {
+    /// `quorum = 0` (or ≥ n) means "all workers"; `max_staleness = 0`
+    /// forbids stale folds entirely (synchronous behaviour).
+    pub fn new(
+        cfg: DriverConfig,
+        quorum: usize,
+        max_staleness: u64,
+        workers: Vec<Worker>,
+        theta0: Vec<f32>,
+    ) -> Self {
+        assert!(!workers.is_empty());
+        let n = workers.len();
+        let d = workers[0].dim();
+        assert!(workers.iter().all(|w| w.dim() == d));
+        assert_eq!(theta0.len(), d);
+        let quorum = if quorum == 0 { n } else { quorum.min(n) };
+        let sim_clock = Arc::new(SimClock::new(n + 1));
+        let fabric = Arc::new(Fabric::with_clock(n + 1, cfg.link, sim_clock.clone()));
+        let ps = ParameterServer::new(&fabric);
+        let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
+        AsyncTrainDriver {
+            momentum: vec![0.0; d],
+            wd_buf: vec![0.0; d],
+            cfg,
+            quorum,
+            max_staleness,
+            pool,
+            theta: theta0,
+            fabric,
+            sim_clock,
+            ps,
+            round: 0,
+            profile: LeaderProfile::default(),
+            staleness: StalenessStats::default(),
+            queue: EventQueue::new(),
+            pending: Vec::new(),
+            worker_round: vec![0; n],
+            worker_steps: vec![0; n],
+            in_pending: vec![false; n],
+            sim_time: 0.0,
+            started: false,
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Completed folds (async rounds).
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    pub fn traffic(&self) -> TrafficStats {
+        self.fabric.stats()
+    }
+
+    pub fn profile(&self) -> &LeaderProfile {
+        &self.profile
+    }
+
+    pub fn staleness(&self) -> &StalenessStats {
+        &self.staleness
+    }
+
+    /// The leader's current virtual time.
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// Full coordinator snapshot — same shape as the synchronous driver's,
+    /// so `--max-staleness 0 --quorum n` runs can be compared byte for
+    /// byte.
+    pub fn snapshot(&self) -> Snapshot {
+        let states = self.pool.export_states();
+        Snapshot {
+            round: self.round,
+            theta: self.theta.clone(),
+            worker_errors: states.iter().map(|s| s.error.clone()).collect(),
+            worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
+        }
+    }
+
+    /// Send fresh parameters to `ids`, run their compute steps on the
+    /// pool, and schedule the resulting frames' virtual arrivals.
+    fn dispatch(&mut self, ids: &[usize]) {
+        debug_assert!(!ids.is_empty());
+        let r = self.round;
+        let lr = self.cfg.schedule.lr(r as usize) as f32;
+        self.sim_clock.set_node_time(self.ps.leader, self.sim_time);
+        for &w in ids {
+            // params depart the leader now; the worker's push will depart
+            // at params-arrival + compute-time, so pre-set its node time
+            // before the pool thread issues the send
+            let params_arrival = self.ps.send_params(&self.fabric, w, r, &self.theta);
+            let finish = params_arrival + self.cfg.straggler.compute_time(w, self.worker_steps[w]);
+            self.sim_clock.set_node_time(w, finish);
+            self.worker_round[w] = r;
+            self.worker_steps[w] += 1;
+        }
+        let mut reports = self.pool.step_workers(ids, r, lr);
+        let mut msgs = self.fabric.recv_all_timed(self.ps.leader);
+        msgs.sort_by_key(|(m, _)| m.src);
+        assert_eq!(msgs.len(), ids.len(), "dispatched frame missing");
+        for (msg, arrival) in msgs {
+            let idx = reports
+                .iter()
+                .position(|rep| rep.id == msg.src)
+                .expect("report missing for dispatched worker");
+            let report = reports.swap_remove(idx);
+            if let Payload::Grad(frame) = msg.payload {
+                self.queue.schedule(
+                    arrival,
+                    msg.src,
+                    Inflight {
+                        worker: msg.src,
+                        round: msg.round,
+                        frame,
+                        report,
+                    },
+                );
+            } else {
+                panic!("non-gradient message in async gather");
+            }
+        }
+    }
+
+    fn arrive(&mut self, ev: crate::net::Event<Inflight>) {
+        self.sim_time = self.sim_time.max(ev.time);
+        self.in_pending[ev.payload.worker] = true;
+        self.pending.push(ev.payload);
+    }
+
+    /// The quorum + bounded-staleness trigger (see module docs).
+    fn trigger(&self) -> bool {
+        if self.pending.len() < self.quorum {
+            return false;
+        }
+        self.worker_round
+            .iter()
+            .enumerate()
+            .all(|(w, &rw)| self.in_pending[w] || self.round + 1 <= rw + self.max_staleness)
+    }
+
+    /// Fold all pending frames into one parameter update.
+    fn fold(&mut self, recorder: &mut Recorder) -> f64 {
+        let step = self.round;
+        let lr = self.cfg.schedule.lr(step as usize) as f32;
+        let mut batch = std::mem::take(&mut self.pending);
+        batch.sort_by_key(|b| b.worker);
+        let m = batch.len();
+        self.staleness.record_fold(m);
+        let mut frames = Vec::with_capacity(m);
+        let mut folded = Vec::with_capacity(m);
+        let mut mean_loss = 0.0f64;
+        let mut mean_err = 0.0f64;
+        let mut mean_phi = 0.0f64;
+        let mut mean_stale = 0.0f64;
+        for b in batch {
+            let stale = step - b.round;
+            debug_assert!(
+                stale <= self.max_staleness,
+                "frame folded beyond the staleness bound"
+            );
+            self.staleness.record_frame(stale);
+            mean_stale += stale as f64;
+            mean_loss += b.report.loss;
+            mean_err += b.report.error_norm;
+            mean_phi += b.report.phi;
+            self.in_pending[b.worker] = false;
+            folded.push(b.worker);
+            frames.push(b.frame);
+        }
+        mean_loss /= m as f64;
+        mean_err /= m as f64;
+        mean_phi /= m as f64;
+        mean_stale /= m as f64;
+
+        let t_agg = std::time::Instant::now();
+        let agg = self
+            .cfg
+            .aggregation
+            .combine_frames(frames, self.theta.len(), &self.pool);
+        self.profile.record(t_agg.elapsed().as_secs_f64());
+        apply_update(
+            self.cfg.update_rule,
+            lr,
+            self.cfg.weight_decay,
+            &agg,
+            &mut self.theta,
+            &mut self.momentum,
+            &mut self.wd_buf,
+        );
+
+        recorder.record("train_loss", step, mean_loss);
+        recorder.record("lr", step, lr as f64);
+        recorder.record("error_norm", step, mean_err);
+        recorder.record("phi_corrected", step, mean_phi);
+        recorder.record("batch_size", step, m as f64);
+        recorder.record("staleness", step, mean_stale);
+        recorder.record("sim_time_s", step, self.sim_time);
+
+        self.round += 1;
+        if self.cfg.eval_every > 0 && self.round % self.cfg.eval_every as u64 == 0 {
+            let (el, ea) = self.pool.eval(0, &self.theta);
+            if el.is_finite() {
+                recorder.record("eval_loss", step, el);
+            }
+            if ea.is_finite() {
+                recorder.record("eval_acc", step, ea);
+            }
+        }
+        if self.cfg.checkpoint_every > 0 && self.round % self.cfg.checkpoint_every as u64 == 0 {
+            super::driver::save_checkpoint(self.cfg.checkpoint_dir.as_deref(), &self.snapshot());
+        }
+        // the folded workers pull fresh params and start their next step
+        if self.round < self.cfg.steps as u64 {
+            self.dispatch(&folded);
+        }
+        mean_loss
+    }
+
+    /// Advance the simulation until exactly one fold completes; returns
+    /// the fold's mean worker loss. (The benches drive this directly.)
+    pub fn step_round(&mut self, recorder: &mut Recorder) -> f64 {
+        if !self.started {
+            self.started = true;
+            let all: Vec<usize> = (0..self.pool.n_workers()).collect();
+            self.dispatch(&all);
+        }
+        loop {
+            let ev = self
+                .queue
+                .pop()
+                .expect("async event queue empty with rounds remaining");
+            let instant = ev.time;
+            self.arrive(ev);
+            // drain the whole tie group: frames landing at the identical
+            // virtual time form one logical instant (with a constant
+            // straggler model this is what recovers the synchronous
+            // schedule instead of an artificial staleness-1 resonance)
+            while self.queue.peek_time() == Some(instant) {
+                let tied = self.queue.pop().expect("peeked event vanished");
+                self.arrive(tied);
+            }
+            if self.trigger() {
+                return self.fold(recorder);
+            }
+        }
+    }
+
+    /// Run the configured number of rounds (folds).
+    pub fn run(mut self) -> TrainOutcome {
+        let mut recorder = Recorder::new();
+        let steps = self.cfg.steps as u64;
+        while self.round < steps {
+            let loss = self.step_round(&mut recorder);
+            let done = self.round;
+            if self.cfg.log_every > 0 && (done - 1) % self.cfg.log_every as u64 == 0 {
+                log::info!(
+                    "async round {}: loss {loss:.4}  sim {:.3}s  stale {:.0}%",
+                    done - 1,
+                    self.sim_time,
+                    100.0 * self.staleness.stale_fraction()
+                );
+            }
+        }
+        recorder.record("final_loss", self.round, recorder.last("train_loss"));
+        let bits = self.fabric.stats().total_bits;
+        recorder.record("total_bits", self.round, bits as f64);
+        TrainOutcome {
+            theta: self.theta,
+            recorder,
+            traffic: self.fabric.stats(),
+            rounds: self.round,
+            profile: self.profile,
+            sim_time_s: self.sim_time,
+            staleness: self.staleness,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompressorKind;
+    use crate::coordinator::driver::TrainDriver;
+    use crate::coordinator::round::LrSchedule;
+    use crate::coordinator::worker::{ObjectiveSource, WorkerMode};
+    use crate::model::toy::SparseNoiseQuadratic;
+    use crate::net::{StragglerModel, StragglerSchedule};
+    use crate::util::Pcg64;
+
+    fn quadratic_workers(n: usize, d: usize) -> Vec<Worker> {
+        (0..n)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 0.5),
+                        Pcg64::seeded(100 + id as u64),
+                    )),
+                    WorkerMode::ErrorFeedback,
+                    CompressorKind::ScaledSign,
+                    4,
+                    4,
+                    Pcg64::seeded(id as u64),
+                )
+            })
+            .collect()
+    }
+
+    fn lognormal(sigma: f64) -> StragglerSchedule {
+        StragglerSchedule::new(1e-3, StragglerModel::LogNormal { sigma }, 42)
+    }
+
+    #[test]
+    fn full_quorum_zero_staleness_equals_sync() {
+        let d = 32;
+        let steps = 25;
+        let cfg = || DriverConfig {
+            steps,
+            schedule: LrSchedule::new(0.1, steps, vec![0.5]),
+            straggler: lognormal(1.0),
+            ..Default::default()
+        };
+        let mut sync = TrainDriver::new(cfg(), quadratic_workers(4, d), vec![1.0f32; d]);
+        let mut rec = Recorder::new();
+        for _ in 0..steps {
+            sync.round(&mut rec);
+        }
+        let mut asynch = AsyncTrainDriver::new(cfg(), 4, 0, quadratic_workers(4, d), vec![1.0f32; d]);
+        let mut rec2 = Recorder::new();
+        for _ in 0..steps {
+            asynch.step_round(&mut rec2);
+        }
+        let a = sync.snapshot();
+        let b = asynch.snapshot();
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.worker_errors, b.worker_errors);
+        assert_eq!(a.worker_corrected, b.worker_corrected);
+        // with S = 0 nothing stale was ever folded, in full batches
+        assert_eq!(asynch.staleness().stale_frames, 0);
+        assert_eq!(asynch.staleness().max_batch, 4);
+    }
+
+    #[test]
+    fn quorum_runs_make_progress_and_respect_bound() {
+        let d = 32;
+        let steps = 60;
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(0.1),
+            straggler: lognormal(1.5),
+            ..Default::default()
+        };
+        let out = AsyncTrainDriver::new(cfg, 2, 3, quadratic_workers(5, d), vec![1.0f32; d]).run();
+        assert_eq!(out.rounds, steps as u64);
+        assert_eq!(out.staleness.folds, steps as u64);
+        // the SSP bound held at every fold
+        assert!(out.staleness.max_staleness_seen <= 3);
+        // heavy-tail stragglers + partial quorum actually produced
+        // staleness (otherwise this test tests nothing)
+        assert!(out.staleness.stale_frames > 0, "no staleness exercised");
+        // virtual time advanced monotonically and is positive
+        assert!(out.sim_time_s > 0.0);
+        // descent happened despite stale folds
+        let losses = &out.recorder.get("train_loss").unwrap().values;
+        assert!(losses.last().unwrap() < &(losses.first().unwrap() * 0.5));
+    }
+
+    #[test]
+    fn constant_stragglers_fold_full_batches() {
+        // equal compute times ⇒ every fold is one logical instant with all
+        // n frames, regardless of quorum: the tie-group drain recovers the
+        // synchronous schedule
+        let d = 16;
+        let cfg = DriverConfig {
+            steps: 10,
+            schedule: LrSchedule::constant(0.1),
+            straggler: StragglerSchedule::new(1e-3, StragglerModel::Constant, 0),
+            ..Default::default()
+        };
+        let out = AsyncTrainDriver::new(cfg, 2, 4, quadratic_workers(4, d), vec![1.0f32; d]).run();
+        assert_eq!(out.staleness.max_batch, 4);
+        assert_eq!(out.staleness.stale_frames, 0);
+        assert!((out.staleness.mean_batch() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failslow_node_is_bounded_not_dropped() {
+        let d = 16;
+        let n = 4;
+        let steps = 40;
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(0.05),
+            straggler: StragglerSchedule::new(
+                1e-3,
+                StragglerModel::FailSlow {
+                    node: 1,
+                    factor: 16.0,
+                },
+                0,
+            ),
+            ..Default::default()
+        };
+        let out =
+            AsyncTrainDriver::new(cfg, n - 1, 2, quadratic_workers(n, d), vec![1.0f32; d]).run();
+        // the slow node stayed within the staleness bound...
+        assert!(out.staleness.max_staleness_seen <= 2);
+        // ...and still contributed frames (bounded staleness blocks the
+        // leader rather than abandoning the straggler)
+        assert!(out.staleness.stale_frames > 0);
+        assert_eq!(out.rounds, steps as u64);
+    }
+}

@@ -9,13 +9,13 @@
 
 use super::aggregate::Aggregation;
 use super::pool::{WorkerPool, WorkerState};
-use super::round::{LeaderProfile, LrSchedule, RoundClock};
+use super::round::{LeaderProfile, LrSchedule, RoundClock, StalenessStats};
 use super::state::{CheckpointStore, Snapshot};
 use super::worker::Worker;
 use crate::collectives::ParameterServer;
 use crate::compress::wire;
 use crate::metrics::Recorder;
-use crate::net::{Fabric, LinkModel, Payload, TrafficStats};
+use crate::net::{Fabric, LinkModel, Payload, SimClock, StragglerSchedule, TrafficStats};
 use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
@@ -39,6 +39,11 @@ pub struct DriverConfig {
     pub update_rule: UpdateRule,
     pub weight_decay: f32,
     pub link: LinkModel,
+    /// Per-(worker, step) virtual compute-time model. The default charges
+    /// zero compute, which reproduces the historical engine where only
+    /// link time was priced; the async driver and the straggler sweeps
+    /// set a real base time.
+    pub straggler: StragglerSchedule,
     /// Worker-pool threads (clamped to 1..=workers; 1 = sequential).
     pub threads: usize,
     pub log_every: usize,
@@ -57,6 +62,7 @@ impl Default for DriverConfig {
             update_rule: UpdateRule::ApplyAggregate,
             weight_decay: 0.0,
             link: LinkModel::default(),
+            straggler: StragglerSchedule::none(),
             threads: 1,
             log_every: 0,
             eval_every: 0,
@@ -74,6 +80,59 @@ pub struct TrainOutcome {
     pub rounds: u64,
     /// Wall-clock profile of the leader's decode+aggregate hot path.
     pub profile: LeaderProfile,
+    /// Total simulated (virtual-clock) time of the run: broadcast +
+    /// compute + gather per round for the sync driver, the leader's final
+    /// local time for the async driver.
+    pub sim_time_s: f64,
+    /// Bounded-staleness accounting (all-zero for synchronous runs).
+    pub staleness: StalenessStats,
+}
+
+/// Apply the leader's parameter update for one aggregate. Shared verbatim
+/// between the synchronous and async drivers so `--max-staleness 0
+/// --quorum n` is bit-identical to the sync engine by construction (same
+/// f32 expressions, same order).
+pub(crate) fn apply_update(
+    rule: UpdateRule,
+    lr: f32,
+    weight_decay: f32,
+    agg: &[f32],
+    theta: &mut [f32],
+    momentum: &mut [f32],
+    wd_buf: &mut [f32],
+) {
+    match rule {
+        UpdateRule::ApplyAggregate => {
+            crate::tensor::sub_assign(theta, agg);
+        }
+        UpdateRule::ScaleByLr => {
+            crate::tensor::axpy(-lr, agg, theta);
+        }
+        UpdateRule::ServerMomentum { beta_millis } => {
+            let beta = beta_millis as f32 / 1000.0;
+            // fused momentum update + apply: one pass, no clone of the
+            // full parameter-sized momentum vector per step
+            for ((t, m), g) in theta.iter_mut().zip(momentum.iter_mut()).zip(agg) {
+                *m = g + beta * *m;
+                *t -= lr * *m;
+            }
+        }
+    }
+    // decoupled weight decay on the iterate
+    if weight_decay > 0.0 {
+        wd_buf.copy_from_slice(theta);
+        crate::tensor::axpy(-lr * weight_decay, wd_buf, theta);
+    }
+}
+
+/// Persist a snapshot to `dir` if checkpointing is configured (shared by
+/// the sync and async drivers).
+pub(crate) fn save_checkpoint(dir: Option<&std::path::Path>, snap: &Snapshot) {
+    let Some(dir) = dir else {
+        return;
+    };
+    let store = CheckpointStore::new(dir).expect("checkpoint dir");
+    store.save(snap).expect("checkpoint save");
 }
 
 /// The coordinator driver.
@@ -82,11 +141,13 @@ pub struct TrainDriver {
     pool: WorkerPool,
     theta: Vec<f32>,
     fabric: Arc<Fabric>,
+    sim_clock: Arc<SimClock>,
     ps: ParameterServer,
     clock: RoundClock,
     momentum: Vec<f32>,
     wd_buf: Vec<f32>,
     profile: LeaderProfile,
+    sim_time: f64,
 }
 
 impl TrainDriver {
@@ -95,7 +156,12 @@ impl TrainDriver {
         let d = workers[0].dim();
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
-        let fabric = Arc::new(Fabric::new(workers.len() + 1, cfg.link));
+        let sim_clock = Arc::new(SimClock::new(workers.len() + 1));
+        let fabric = Arc::new(Fabric::with_clock(
+            workers.len() + 1,
+            cfg.link,
+            sim_clock.clone(),
+        ));
         let ps = ParameterServer::new(&fabric);
         let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
         TrainDriver {
@@ -105,9 +171,11 @@ impl TrainDriver {
             pool,
             theta: theta0,
             fabric,
+            sim_clock,
             ps,
             clock: RoundClock::default(),
             profile: LeaderProfile::default(),
+            sim_time: 0.0,
         }
     }
 
@@ -127,6 +195,13 @@ impl TrainDriver {
     /// Wall-clock profile of the leader's decode+aggregate hot path.
     pub fn profile(&self) -> &LeaderProfile {
         &self.profile
+    }
+
+    /// Total simulated time consumed so far (virtual clock): per round,
+    /// the parameter broadcast, the slowest worker's compute (per the
+    /// straggler schedule), and its gradient push all happen in sequence.
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time
     }
 
     /// Per-worker EF states (fetched from the pool threads), by worker id.
@@ -171,11 +246,7 @@ impl TrainDriver {
     }
 
     fn checkpoint(&self) {
-        let Some(dir) = &self.cfg.checkpoint_dir else {
-            return;
-        };
-        let store = CheckpointStore::new(dir).expect("checkpoint dir");
-        store.save(&self.snapshot()).expect("checkpoint save");
+        save_checkpoint(self.cfg.checkpoint_dir.as_deref(), &self.snapshot());
     }
 
     /// One synchronous round. Returns the mean worker training loss.
@@ -184,8 +255,17 @@ impl TrainDriver {
         let lr = self.cfg.schedule.lr(step as usize) as f32;
         let n = self.pool.n_workers();
 
-        // 1. broadcast parameters (accounted).
-        self.ps.broadcast_params(&self.fabric, step, &self.theta);
+        // 1. broadcast parameters (accounted; arrivals stamped from the
+        // leader's virtual time).
+        self.sim_clock.set_node_time(self.ps.leader, self.sim_time);
+        let params_arrival = self.ps.broadcast_params(&self.fabric, step, &self.theta);
+        // each worker's push departs once its (straggler-model) compute
+        // finishes, so the frames the pool is about to send get stamped
+        // with honest virtual arrival times
+        for w in 0..n {
+            let finish = params_arrival + self.cfg.straggler.compute_time(w, step);
+            self.sim_clock.set_node_time(w, finish);
+        }
 
         // 2-3. pool: every worker drains its broadcast, computes, EF-
         // compresses, and pushes its encoded frame to the leader.
@@ -198,16 +278,20 @@ impl TrainDriver {
         // pool threads in fixed worker-id groups (see
         // [`super::aggregate::decode_groups`]), fused straight into
         // partial-sum buffers — no dense `Vec<f32>` per worker.
-        let mut msgs = self.fabric.recv_all(self.ps.leader);
-        msgs.sort_by_key(|m| m.src);
+        let mut msgs = self.fabric.recv_all_timed(self.ps.leader);
+        msgs.sort_by_key(|(m, _)| m.src);
         let mut frames: Vec<wire::Encoded> = Vec::with_capacity(n);
-        for msg in msgs {
+        let mut round_end = self.sim_time;
+        for (msg, arrival) in msgs {
             debug_assert_eq!(msg.round, step, "stale push");
             if let Payload::Grad(e) = msg.payload {
                 frames.push(e);
+                round_end = round_end.max(arrival);
             }
         }
         assert_eq!(frames.len(), n, "missing worker push");
+        // the synchronous barrier: the round ends when the last frame lands
+        self.sim_time = round_end;
         let t_agg = std::time::Instant::now();
         let agg = self
             .cfg
@@ -215,33 +299,15 @@ impl TrainDriver {
             .combine_frames(frames, self.theta.len(), &self.pool);
         self.profile.record(t_agg.elapsed().as_secs_f64());
 
-        match self.cfg.update_rule {
-            UpdateRule::ApplyAggregate => {
-                crate::tensor::sub_assign(&mut self.theta, &agg);
-            }
-            UpdateRule::ScaleByLr => {
-                crate::tensor::axpy(-lr, &agg, &mut self.theta);
-            }
-            UpdateRule::ServerMomentum { beta_millis } => {
-                let beta = beta_millis as f32 / 1000.0;
-                // fused momentum update + apply: one pass, no clone of the
-                // full parameter-sized momentum vector per step
-                for ((t, m), g) in self
-                    .theta
-                    .iter_mut()
-                    .zip(self.momentum.iter_mut())
-                    .zip(&agg)
-                {
-                    *m = g + beta * *m;
-                    *t -= lr * *m;
-                }
-            }
-        }
-        // decoupled weight decay on the iterate
-        if self.cfg.weight_decay > 0.0 {
-            self.wd_buf.copy_from_slice(&self.theta);
-            crate::tensor::axpy(-lr * self.cfg.weight_decay, &self.wd_buf, &mut self.theta);
-        }
+        apply_update(
+            self.cfg.update_rule,
+            lr,
+            self.cfg.weight_decay,
+            &agg,
+            &mut self.theta,
+            &mut self.momentum,
+            &mut self.wd_buf,
+        );
 
         // instrumentation (reports are sorted by worker id)
         recorder.record("train_loss", step, mean_loss);
@@ -292,6 +358,8 @@ impl TrainDriver {
             traffic: self.fabric.stats(),
             rounds: self.clock.current(),
             profile: self.profile,
+            sim_time_s: self.sim_time,
+            staleness: StalenessStats::default(),
         }
     }
 }
@@ -393,6 +461,43 @@ mod tests {
         let signed = run(WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
         let ratio = dense as f64 / signed as f64;
         assert!(ratio > 25.0, "push compression ratio {ratio}");
+    }
+
+    #[test]
+    fn sim_time_integrates_broadcast_compute_and_push() {
+        use crate::net::message::FRAME_OVERHEAD_BITS;
+        use crate::net::{StragglerModel, StragglerSchedule};
+        let d = 64;
+        let steps = 5u64;
+        let base = 2e-3;
+        let workers = quadratic_workers(3, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+        let link = LinkModel::ten_gbe();
+        let cfg = DriverConfig {
+            steps: steps as usize,
+            schedule: LrSchedule::constant(0.05),
+            straggler: StragglerSchedule::new(base, StragglerModel::Constant, 0),
+            link,
+            ..Default::default()
+        };
+        let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
+        // per round: params broadcast + constant compute + sign push, in
+        // sequence on the virtual clock
+        let t_params = link.transfer_time(32 * d as u64 + FRAME_OVERHEAD_BITS);
+        let t_push = link.transfer_time(d as u64 + 32 + FRAME_OVERHEAD_BITS);
+        let expect = steps as f64 * (t_params + base + t_push);
+        assert!(
+            (out.sim_time_s - expect).abs() < 1e-9 * expect,
+            "sim {} vs expect {}",
+            out.sim_time_s,
+            expect
+        );
+        // satellite: the traffic layer's per-kind simulated time must
+        // equal the same link-model arithmetic, message by message
+        let push_total = out.traffic.sim_time_of_kind(crate::net::MessageKind::GradPush);
+        let expect_push = steps as f64 * 3.0 * t_push;
+        assert!((push_total - expect_push).abs() < 1e-9 * expect_push);
+        // sync runs report zero staleness
+        assert_eq!(out.staleness.frames, 0);
     }
 
     #[test]

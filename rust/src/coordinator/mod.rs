@@ -56,8 +56,21 @@
 //! share the session behind the usual `Arc` facade only if the bindings
 //! allow it; otherwise run `--threads 1`, which keeps all workers on a
 //! single pool thread.
+//!
+//! # Asynchronous mode
+//!
+//! [`async_driver::AsyncTrainDriver`] replaces the lock-step barrier with
+//! quorum + bounded-staleness rounds over the fabric's discrete-event
+//! virtual clock ([`crate::net::simclock`]): the leader folds an update as
+//! soon as `--quorum K` frames are pending, late frames (≤ `--max-staleness
+//! S` rounds) still fold in, and per-worker compute time comes from a
+//! seeded [`crate::net::StragglerSchedule`]. Event-queue semantics, the
+//! staleness bound, and how EF residuals interact with late frames are
+//! documented in `docs/ASYNC.md`. `--quorum n --max-staleness 0`
+//! reproduces [`TrainDriver`] bit for bit.
 
 pub mod aggregate;
+pub mod async_driver;
 pub mod driver;
 pub mod pool;
 pub mod round;
@@ -65,7 +78,8 @@ pub mod state;
 pub mod worker;
 
 pub use aggregate::Aggregation;
+pub use async_driver::AsyncTrainDriver;
 pub use driver::{TrainDriver, TrainOutcome};
 pub use pool::{RoundReport, WorkerPool, WorkerState};
-pub use round::LrSchedule;
+pub use round::{LrSchedule, StalenessStats};
 pub use worker::{GradSource, ObjectiveSource, Worker, WorkerMode};

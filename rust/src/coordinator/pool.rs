@@ -51,6 +51,10 @@ pub struct WorkerState {
 
 enum Command {
     Round { round: u64, lr: f32 },
+    /// Run one gradient + compress + push step for a single worker (the
+    /// async driver's dispatch unit: only the quorum's workers recompute
+    /// after a fold, the rest stay in flight).
+    StepOne { worker: usize, round: u64, lr: f32 },
     Eval { worker: usize, theta: Arc<Vec<f32>> },
     Export,
     Restore { states: Arc<Vec<WorkerState>> },
@@ -177,6 +181,31 @@ impl WorkerPool {
             match self.recv_reply() {
                 Reply::Round(r) => reports.push(r),
                 _ => unreachable!("unexpected pool reply during round"),
+            }
+        }
+        reports.sort_by_key(|r| r.id);
+        reports
+    }
+
+    /// Run one step on a subset of workers (each drains its parameter
+    /// message from the fabric, computes, EF-compresses, and pushes its
+    /// frame to the leader); returns their reports sorted by worker id.
+    /// The caller must have sent each listed worker its parameters first.
+    pub fn step_workers(&self, ids: &[usize], round: u64, lr: f32) -> Vec<RoundReport> {
+        for &w in ids {
+            self.command_txs[self.owner[w]]
+                .send(Command::StepOne {
+                    worker: w,
+                    round,
+                    lr,
+                })
+                .expect("pool thread died");
+        }
+        let mut reports = Vec::with_capacity(ids.len());
+        for _ in 0..ids.len() {
+            match self.recv_reply() {
+                Reply::Round(r) => reports.push(r),
+                _ => unreachable!("unexpected pool reply during step"),
             }
         }
         reports.sort_by_key(|r| r.id);
@@ -342,6 +371,27 @@ fn actor_loop(
                     if tx.send(Reply::Round(report)).is_err() {
                         return;
                     }
+                }
+            }
+            Command::StepOne { worker, round, lr } => {
+                let w = workers
+                    .iter_mut()
+                    .find(|w| w.id == worker)
+                    .expect("step routed to wrong pool thread");
+                let params = ps
+                    .recv_params(&fabric, w.id)
+                    .expect("parameter message missing for stepped worker");
+                let enc = w.step_encode(&params, lr);
+                ps.push_grad(&fabric, w.id, round, enc);
+                let report = RoundReport {
+                    id: w.id,
+                    loss: w.last_loss,
+                    phi: w.last_phi,
+                    grad_density: w.last_grad_density,
+                    error_norm: w.error_norm(),
+                };
+                if tx.send(Reply::Round(report)).is_err() {
+                    return;
                 }
             }
             Command::Eval { worker, theta } => {
@@ -542,6 +592,29 @@ mod tests {
         for (v, f) in decoded.iter().zip(frames.iter()) {
             assert_eq!(v, &crate::compress::wire::decode_any(f).unwrap());
         }
+    }
+
+    #[test]
+    fn step_workers_runs_only_the_subset() {
+        let d = 16;
+        let n = 5;
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 2);
+        let ps = ParameterServer::new(&fabric);
+        let subset = [3usize, 0, 4];
+        let theta = vec![1.0f32; d];
+        for &w in &subset {
+            ps.send_params(&fabric, w, 0, &theta);
+        }
+        let reports = pool.step_workers(&subset, 0, 0.1);
+        let ids: Vec<usize> = reports.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 3, 4]); // sorted by worker id
+        assert!(reports.iter().all(|r| r.loss.is_finite()));
+        // exactly the subset's frames are on the leader queue
+        let msgs = fabric.recv_all(ps.leader);
+        let mut srcs: Vec<usize> = msgs.iter().map(|m| m.src).collect();
+        srcs.sort_unstable();
+        assert_eq!(srcs, vec![0, 3, 4]);
     }
 
     #[test]

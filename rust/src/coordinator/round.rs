@@ -74,6 +74,73 @@ impl LeaderProfile {
     }
 }
 
+/// Bounded-staleness accounting for the async driver: how many frames
+/// folded, how late they were, and how big the quorum batches ran. The
+/// invariant `max_staleness_seen ≤ --max-staleness` is asserted by the
+/// async integration tests; the staleness experiment reports the mean.
+#[derive(Clone, Debug, Default)]
+pub struct StalenessStats {
+    /// Number of aggregate applications (async rounds).
+    pub folds: u64,
+    /// Total worker frames folded.
+    pub frames: u64,
+    /// Frames folded with staleness ≥ 1 round.
+    pub stale_frames: u64,
+    /// Sum of per-frame staleness (rounds late), for the mean.
+    pub staleness_sum: u64,
+    /// Largest staleness observed at fold time.
+    pub max_staleness_seen: u64,
+    /// Largest fold batch.
+    pub max_batch: u64,
+}
+
+impl StalenessStats {
+    pub fn record_frame(&mut self, staleness: u64) {
+        self.frames += 1;
+        self.staleness_sum += staleness;
+        if staleness > 0 {
+            self.stale_frames += 1;
+        }
+        if staleness > self.max_staleness_seen {
+            self.max_staleness_seen = staleness;
+        }
+    }
+
+    pub fn record_fold(&mut self, batch: usize) {
+        self.folds += 1;
+        if batch as u64 > self.max_batch {
+            self.max_batch = batch as u64;
+        }
+    }
+
+    /// Mean staleness over folded frames (0 before any fold).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.frames as f64
+        }
+    }
+
+    /// Fraction of folded frames that were stale.
+    pub fn stale_fraction(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.stale_frames as f64 / self.frames as f64
+        }
+    }
+
+    /// Mean fold batch size (0 before any fold).
+    pub fn mean_batch(&self) -> f64 {
+        if self.folds == 0 {
+            0.0
+        } else {
+            self.frames as f64 / self.folds as f64
+        }
+    }
+}
+
 /// Round counter with monotonicity checks — the leader uses this to detect
 /// stale gradient pushes (the gather asserts all messages carry the current
 /// round).
@@ -124,6 +191,28 @@ mod tests {
         assert_eq!(p.rounds, 2);
         assert!((p.mean_round_s() - 0.5).abs() < 1e-12);
         assert!((p.rounds_per_sec() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_stats_aggregate() {
+        let mut s = StalenessStats::default();
+        assert_eq!(s.mean_staleness(), 0.0);
+        assert_eq!(s.stale_fraction(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+        s.record_frame(0);
+        s.record_frame(2);
+        s.record_frame(1);
+        s.record_fold(3);
+        s.record_frame(0);
+        s.record_fold(1);
+        assert_eq!(s.folds, 2);
+        assert_eq!(s.frames, 4);
+        assert_eq!(s.stale_frames, 2);
+        assert_eq!(s.max_staleness_seen, 2);
+        assert_eq!(s.max_batch, 3);
+        assert!((s.mean_staleness() - 0.75).abs() < 1e-12);
+        assert!((s.stale_fraction() - 0.5).abs() < 1e-12);
+        assert!((s.mean_batch() - 2.0).abs() < 1e-12);
     }
 
     #[test]

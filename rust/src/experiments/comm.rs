@@ -126,14 +126,13 @@ pub fn comm(ctx: &ExpContext) -> Result<ExpResult> {
             },
             ..Default::default()
         };
-        TrainDriver::new(cfg, workers, vec![1.0f32; d])
-            .run()
-            .traffic
+        let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
+        (out.traffic, out.sim_time_s)
     };
-    let dense = run(WorkerMode::DenseGrad, CompressorKind::None);
-    let signd = run(WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
-    let topk = run(WorkerMode::ErrorFeedback, CompressorKind::TopK);
-    let qsgd = run(WorkerMode::ErrorFeedback, CompressorKind::Qsgd);
+    let (dense, _) = run(WorkerMode::DenseGrad, CompressorKind::None);
+    let (signd, sign_sim_s) = run(WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+    let (topk, _) = run(WorkerMode::ErrorFeedback, CompressorKind::TopK);
+    let (qsgd, _) = run(WorkerMode::ErrorFeedback, CompressorKind::Qsgd);
     let push_dense = dense.bits_of_kind(MessageKind::GradPush);
     let push_sign = signd.bits_of_kind(MessageKind::GradPush);
     let push_topk = topk.bits_of_kind(MessageKind::GradPush);
@@ -150,6 +149,39 @@ pub fn comm(ctx: &ExpContext) -> Result<ExpResult> {
     ));
     rec.record("measured_sign_ratio", 0, push_dense as f64 / push_sign as f64);
     rec.record("measured_qsgd_ratio", 0, push_dense as f64 / push_qsgd as f64);
+
+    // (b') the reported round time must equal the simclock's totals: the
+    // sign run's per-round wall time on the virtual clock is one dense
+    // parameter broadcast followed by one (d + 32)-bit push, and the
+    // accounting layer's per-kind simulated time must integrate the same
+    // link-model arithmetic message by message. Asserted, not just
+    // printed, so the timing model can never drift from the link model.
+    {
+        use crate::net::message::FRAME_OVERHEAD_BITS;
+        let link = crate::net::LinkModel::default();
+        let t_params = link.transfer_time(32 * d as u64 + FRAME_OVERHEAD_BITS);
+        let t_push = link.transfer_time(d as u64 + 32 + FRAME_OVERHEAD_BITS);
+        let per_round = t_params + t_push; // compute is free in this run
+        let expect_total = steps as f64 * per_round;
+        assert!(
+            (sign_sim_s - expect_total).abs() <= 1e-9 * expect_total,
+            "simclock total {sign_sim_s} != reported round time x rounds {expect_total}"
+        );
+        let push_sim = signd.sim_time_of_kind(MessageKind::GradPush);
+        let expect_push = steps as f64 * 4.0 * t_push; // 4 workers
+        assert!(
+            (push_sim - expect_push).abs() <= 1e-9 * expect_push,
+            "per-kind sim time {push_sim} != analytic push time {expect_push}"
+        );
+        lines.push(format!(
+            "  simclock: sign round = {:.4} ms (broadcast {:.4} + push {:.4}), total {:.2} ms over {steps} rounds — matches TrafficStats::sim_time_of_kind exactly",
+            per_round * 1e3,
+            t_params * 1e3,
+            t_push * 1e3,
+            sign_sim_s * 1e3
+        ));
+        rec.record("sign_round_sim_ms", 0, per_round * 1e3);
+    }
 
     // (c) simulated wall-clock effect of compression on a 1 GbE link
     let link = crate::net::LinkModel::one_gbe();

@@ -15,6 +15,7 @@ pub mod genspan;
 pub mod lr_tuning;
 pub mod qsgd_ef;
 pub mod sparse_noise;
+pub mod staleness;
 
 use crate::metrics::Recorder;
 use anyhow::{bail, Result};
@@ -74,7 +75,7 @@ impl ExpResult {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "ce1", "ce2", "ce3", "thm1", "fig2", "fig3", "fig4", "fig5", "fig7", "table2", "rem5",
-    "comm", "lemma3", "ablation",
+    "comm", "lemma3", "ablation", "staleness",
 ];
 
 /// Run an experiment by id (prints the summary and writes results).
@@ -94,6 +95,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpResult> {
         "comm" => comm::comm(ctx),
         "lemma3" => error_bound::lemma3(ctx),
         "ablation" => ablation::ablation(ctx),
+        "staleness" => staleness::staleness(ctx),
         other => bail!("unknown experiment '{other}'; known: {}", ALL.join(" ")),
     };
     let result = result?;

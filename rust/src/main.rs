@@ -5,11 +5,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use ef_sgd::cli::{Args, USAGE};
 use ef_sgd::config::{CompressorKind, ConfigMap, TrainConfig};
 use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
-use ef_sgd::coordinator::worker::{GradSource, Worker, WorkerMode};
-use ef_sgd::coordinator::{Aggregation, LrSchedule};
+use ef_sgd::coordinator::worker::{GradSource, ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::{Aggregation, AsyncTrainDriver, LrSchedule, TrainOutcome};
 use ef_sgd::data::tokens::MarkovCorpus;
 use ef_sgd::experiments::{self, ExpContext};
 use ef_sgd::metrics::sparkline;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::{LinkModel, StragglerModel, StragglerSchedule};
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
 use std::path::{Path, PathBuf};
@@ -155,51 +157,91 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.compressor =
             CompressorKind::parse(c).ok_or_else(|| anyhow!("bad compressor '{c}'"))?;
     }
+    if args.flag("async") {
+        cfg.async_mode = true;
+    }
+    if let Some(q) = args.opt_usize("quorum") {
+        cfg.quorum = q;
+    }
+    if let Some(s) = args.opt_usize("max-staleness") {
+        cfg.max_staleness = s as u64;
+    }
+    if let Some(m) = args.opt("straggler") {
+        cfg.straggler = m.to_string();
+    }
+    if let Some(c) = args.opt_f64("compute-ms") {
+        cfg.compute_ms = c;
+    }
+    if let Some(l) = args.opt("link") {
+        cfg.link = l.to_string();
+    }
     if args.flag("quick") {
         cfg.steps = cfg.steps.min(20);
     }
 
     log::info!(
-        "train: model={} workers={} threads={} steps={} lr={} compressor={} ef={}",
+        "train: model={} workers={} threads={} steps={} lr={} compressor={} ef={} async={}",
         cfg.model,
         cfg.workers,
         cfg.threads,
         cfg.steps,
         cfg.lr,
         cfg.compressor.name(),
-        cfg.error_feedback
+        cfg.error_feedback,
+        cfg.async_mode
     );
-
-    let rt = Runtime::load(Path::new(&cfg.artifacts_dir)).context(
-        "loading artifacts (run `make artifacts` first, or pass --artifacts <dir>)",
-    )?;
-    let session = Arc::new(LmSession::open(&rt, &cfg.model)?);
-    let theta0 = rt.init_params(&session.model).map_err(|e| anyhow!("{e}"))?;
-    let corpus = Arc::new(MarkovCorpus::new(session.model.vocab, 4, cfg.seed));
 
     let mode = match (cfg.compressor, cfg.error_feedback) {
         (CompressorKind::None, _) => WorkerMode::DenseGrad,
         (_, true) => WorkerMode::ErrorFeedback,
         (_, false) => WorkerMode::PlainCompress,
     };
-    let workers: Vec<Worker> = (0..cfg.workers)
-        .map(|id| {
-            Worker::new(
-                id,
-                Box::new(LmWorkerSource {
+    let mk_worker = |id: usize, source: Box<dyn GradSource>, cfg: &TrainConfig| {
+        Worker::new(
+            id,
+            source,
+            mode,
+            cfg.compressor,
+            cfg.k_frac,
+            cfg.qsgd_levels,
+            Pcg64::new(cfg.seed, id as u64),
+        )
+    };
+    // --toy trains on the Appendix A.1 quadratic: no PJRT artifacts
+    // needed, which is what the CI smoke invocations use
+    let (workers, theta0): (Vec<Worker>, Vec<f32>) = if args.flag("toy") {
+        let d = 4096;
+        let workers = (0..cfg.workers)
+            .map(|id| {
+                let src = Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 1.0),
+                    Pcg64::new(cfg.seed, 1000 + id as u64),
+                ));
+                mk_worker(id, src, &cfg)
+            })
+            .collect();
+        (workers, vec![1.0f32; d])
+    } else {
+        let rt = Runtime::load(Path::new(&cfg.artifacts_dir)).context(
+            "loading artifacts (run `make artifacts` first, pass --artifacts <dir>, \
+             or use --toy for the artifact-free quadratic)",
+        )?;
+        let session = Arc::new(LmSession::open(&rt, &cfg.model)?);
+        let theta0 = rt.init_params(&session.model).map_err(|e| anyhow!("{e}"))?;
+        let corpus = Arc::new(MarkovCorpus::new(session.model.vocab, 4, cfg.seed));
+        let workers = (0..cfg.workers)
+            .map(|id| {
+                let src = Box::new(LmWorkerSource {
                     session: session.clone(),
                     corpus: corpus.clone(),
                     rng: Pcg64::new(cfg.seed, 1000 + id as u64),
                     eval_rng: Pcg64::new(cfg.seed, 5000 + id as u64),
-                }),
-                mode,
-                cfg.compressor,
-                cfg.k_frac,
-                cfg.qsgd_levels,
-                Pcg64::new(cfg.seed, id as u64),
-            )
-        })
-        .collect();
+                });
+                mk_worker(id, src, &cfg)
+            })
+            .collect();
+        (workers, theta0)
+    };
 
     let update_rule = if mode == WorkerMode::DenseGrad {
         UpdateRule::ServerMomentum {
@@ -208,6 +250,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         UpdateRule::ApplyAggregate
     };
+    let straggler_model = StragglerModel::parse(&cfg.straggler)
+        .ok_or_else(|| anyhow!("bad straggler spec '{}'", cfg.straggler))?;
+    let link = LinkModel::preset(&cfg.link)
+        .ok_or_else(|| anyhow!("unknown link preset '{}'", cfg.link))?;
     let dcfg = DriverConfig {
         steps: cfg.steps,
         schedule: LrSchedule::new(cfg.lr, cfg.steps, cfg.lr_decay_at.clone()),
@@ -215,17 +261,34 @@ fn cmd_train(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("bad aggregation '{}'", cfg.aggregation))?,
         update_rule,
         weight_decay: cfg.weight_decay as f32,
+        link,
+        straggler: StragglerSchedule::new(cfg.compute_ms * 1e-3, straggler_model, cfg.seed),
         threads: cfg.threads.max(1),
         log_every: cfg.log_every.max(1),
         eval_every: cfg.eval_every,
         ..Default::default()
     };
-    let driver = TrainDriver::new(dcfg, workers, theta0);
-    let outcome = driver.run();
+    let outcome: TrainOutcome = if cfg.async_mode {
+        AsyncTrainDriver::new(dcfg, cfg.quorum, cfg.max_staleness, workers, theta0).run()
+    } else {
+        TrainDriver::new(dcfg, workers, theta0).run()
+    };
 
     let losses = &outcome.recorder.get("train_loss").unwrap().values;
     println!("\n== training summary ==");
     println!("  rounds:        {}", outcome.rounds);
+    println!("  sim time:      {:.4} s (virtual clock)", outcome.sim_time_s);
+    if cfg.async_mode {
+        println!(
+            "  staleness:     mean {:.2} rounds, {:.1}% stale frames, mean batch {:.1}/{} (quorum {}, bound {})",
+            outcome.staleness.mean_staleness(),
+            100.0 * outcome.staleness.stale_fraction(),
+            outcome.staleness.mean_batch(),
+            cfg.workers,
+            if cfg.quorum == 0 { cfg.workers } else { cfg.quorum },
+            cfg.max_staleness
+        );
+    }
     println!(
         "  loss:          {:.4} -> {:.4}   {}",
         losses.first().unwrap(),

@@ -15,6 +15,12 @@ pub struct TrafficStats {
     pub msg_count: BTreeMap<MessageKind, u64>,
     /// Simulated busy-time per node (seconds of link occupancy).
     pub node_time_s: BTreeMap<usize, f64>,
+    /// Total simulated transfer time per message kind (seconds).
+    pub sim_time_per_kind: BTreeMap<MessageKind, f64>,
+    /// Latest simulated arrival timestamp seen per message kind (seconds
+    /// on the fabric's virtual clock; equals the transfer time when no
+    /// clock is attached).
+    pub last_arrival_per_kind: BTreeMap<MessageKind, f64>,
     /// Total bits over all links.
     pub total_bits: u64,
     /// Total simulated communication time if all transfers were serial.
@@ -22,12 +28,25 @@ pub struct TrafficStats {
 }
 
 impl TrafficStats {
-    pub fn record(&mut self, src: usize, dst: usize, kind: MessageKind, bits: u64, time_s: f64) {
+    pub fn record(
+        &mut self,
+        src: usize,
+        dst: usize,
+        kind: MessageKind,
+        bits: u64,
+        time_s: f64,
+        arrival_s: f64,
+    ) {
         *self.per_link.entry((src, dst)).or_default() += bits;
         *self.per_kind.entry(kind).or_default() += bits;
         *self.msg_count.entry(kind).or_default() += 1;
         *self.node_time_s.entry(src).or_default() += time_s;
         *self.node_time_s.entry(dst).or_default() += time_s;
+        *self.sim_time_per_kind.entry(kind).or_default() += time_s;
+        let last = self.last_arrival_per_kind.entry(kind).or_default();
+        if arrival_s > *last {
+            *last = arrival_s;
+        }
         self.total_bits += bits;
         self.serial_time_s += time_s;
     }
@@ -57,6 +76,20 @@ impl TrafficStats {
     /// Number of messages of `kind` seen so far.
     pub fn count_of_kind(&self, kind: MessageKind) -> u64 {
         self.msg_count.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Total simulated transfer time spent on messages of `kind` — the
+    /// virtual seconds the link model charged them, integrated. The comm
+    /// experiment asserts its reported per-round time against this total,
+    /// so wire-time accounting can never silently drift from the link
+    /// model.
+    pub fn sim_time_of_kind(&self, kind: MessageKind) -> f64 {
+        self.sim_time_per_kind.get(&kind).copied().unwrap_or(0.0)
+    }
+
+    /// Latest simulated arrival timestamp among messages of `kind`.
+    pub fn last_arrival_of_kind(&self, kind: MessageKind) -> f64 {
+        self.last_arrival_per_kind.get(&kind).copied().unwrap_or(0.0)
     }
 
     /// Mean on-wire bits per message of `kind` (0 if none were sent) —
@@ -108,9 +141,9 @@ mod tests {
     #[test]
     fn records_and_aggregates() {
         let mut t = TrafficStats::default();
-        t.record(0, 1, MessageKind::GradPush, 1000, 0.5);
-        t.record(1, 0, MessageKind::ParamBroadcast, 2000, 0.25);
-        t.record(0, 2, MessageKind::GradPush, 500, 0.1);
+        t.record(0, 1, MessageKind::GradPush, 1000, 0.5, 0.5);
+        t.record(1, 0, MessageKind::ParamBroadcast, 2000, 0.25, 0.25);
+        t.record(0, 2, MessageKind::GradPush, 500, 0.1, 0.6);
         assert_eq!(t.total_bits, 3500);
         assert_eq!(t.sent_by(0), 1500);
         assert_eq!(t.received_by(0), 2000);
@@ -124,11 +157,31 @@ mod tests {
     }
 
     #[test]
+    fn sim_time_and_arrival_per_kind() {
+        let mut t = TrafficStats::default();
+        t.record(0, 2, MessageKind::GradPush, 100, 0.5, 1.5);
+        t.record(1, 2, MessageKind::GradPush, 100, 0.25, 0.75);
+        t.record(2, 0, MessageKind::ParamBroadcast, 400, 0.1, 2.0);
+        assert!((t.sim_time_of_kind(MessageKind::GradPush) - 0.75).abs() < 1e-12);
+        assert!((t.sim_time_of_kind(MessageKind::ParamBroadcast) - 0.1).abs() < 1e-12);
+        assert_eq!(t.sim_time_of_kind(MessageKind::Control), 0.0);
+        // latest arrival per kind is a max, not a sum
+        assert!((t.last_arrival_of_kind(MessageKind::GradPush) - 1.5).abs() < 1e-12);
+        assert!((t.last_arrival_of_kind(MessageKind::ParamBroadcast) - 2.0).abs() < 1e-12);
+        assert_eq!(t.last_arrival_of_kind(MessageKind::Control), 0.0);
+        // per-kind sim times partition the serial total
+        let split = t.sim_time_of_kind(MessageKind::GradPush)
+            + t.sim_time_of_kind(MessageKind::ParamBroadcast);
+        assert!((split - t.serial_time_s).abs() < 1e-12);
+    }
+
+    #[test]
     fn reset_clears() {
         let mut t = TrafficStats::default();
-        t.record(0, 1, MessageKind::Control, 10, 0.1);
+        t.record(0, 1, MessageKind::Control, 10, 0.1, 0.1);
         t.reset();
         assert_eq!(t.total_bits, 0);
         assert!(t.per_link.is_empty());
+        assert!(t.sim_time_per_kind.is_empty());
     }
 }

@@ -6,17 +6,35 @@
 //! per-destination FIFO, which — together with each node's messages being
 //! produced by a single peer per collective step — keeps threaded runs
 //! bit-deterministic.
+//!
+//! # Virtual time
+//!
+//! A fabric can carry a [`SimClock`] (see [`Fabric::with_clock`]). Every
+//! send then stamps the message's **simulated arrival time**:
+//!
+//! ```text
+//! arrival = clock.node_time(src) + link.transfer_time(wire_bits)
+//! ```
+//!
+//! The driver is responsible for setting each node's local time before
+//! that node sends (leader: at fold time; worker: at its compute-finish
+//! time), so delivery *consumes* simulated time instead of being
+//! implicitly free. Without a clock, the stamp degenerates to the bare
+//! transfer time (departure 0), which keeps the synchronous collectives'
+//! accounting unchanged. Arrival stamps ride alongside the messages
+//! ([`Fabric::recv_all_timed`]) and feed the async driver's event queue.
 
 use super::accounting::TrafficStats;
 use super::link::LinkModel;
 use super::message::Message;
+use super::simclock::SimClock;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// One node's inbox.
+/// One node's inbox; each entry carries its simulated arrival stamp.
 #[derive(Default)]
 struct Inbox {
-    queue: Mutex<VecDeque<Message>>,
+    queue: Mutex<VecDeque<(Message, f64)>>,
     ready: Condvar,
 }
 
@@ -26,6 +44,7 @@ pub struct Fabric {
     link: LinkModel,
     inboxes: Vec<Inbox>,
     stats: Mutex<TrafficStats>,
+    clock: Option<Arc<SimClock>>,
 }
 
 impl Fabric {
@@ -35,7 +54,17 @@ impl Fabric {
             link,
             inboxes: (0..n).map(|_| Inbox::default()).collect(),
             stats: Mutex::new(TrafficStats::default()),
+            clock: None,
         }
+    }
+
+    /// A fabric whose sends stamp arrivals against `clock` (see module
+    /// docs). `clock` must cover at least `n` nodes.
+    pub fn with_clock(n: usize, link: LinkModel, clock: Arc<SimClock>) -> Self {
+        assert!(clock.nodes() >= n, "clock smaller than fabric");
+        let mut f = Fabric::new(n, link);
+        f.clock = Some(clock);
+        f
     }
 
     pub fn nodes(&self) -> usize {
@@ -46,24 +75,42 @@ impl Fabric {
         self.link
     }
 
+    /// The attached virtual clock, if any.
+    pub fn clock(&self) -> Option<&Arc<SimClock>> {
+        self.clock.as_ref()
+    }
+
     /// Send a message: accounts bits + simulated time, enqueues at `dst`.
-    pub fn send(&self, msg: Message) {
+    /// Returns the message's simulated arrival time (departure = the
+    /// sender's clock time, or 0 when no clock is attached).
+    pub fn send(&self, msg: Message) -> f64 {
         assert!(msg.src < self.n && msg.dst < self.n, "bad route");
         assert_ne!(msg.src, msg.dst, "self-send not allowed");
         let bits = msg.wire_bits();
         let time = self.link.transfer_time(bits);
+        let depart = self
+            .clock
+            .as_ref()
+            .map_or(0.0, |c| c.node_time(msg.src));
+        let arrival = depart + time;
         self.stats
             .lock()
             .unwrap()
-            .record(msg.src, msg.dst, msg.kind, bits, time);
+            .record(msg.src, msg.dst, msg.kind, bits, time, arrival);
         let inbox = &self.inboxes[msg.dst];
-        inbox.queue.lock().unwrap().push_back(msg);
+        inbox.queue.lock().unwrap().push_back((msg, arrival));
         inbox.ready.notify_one();
+        arrival
     }
 
     /// Receive the next message queued at `node` (FIFO), if any.
     pub fn recv(&self, node: usize) -> Option<Message> {
-        self.inboxes[node].queue.lock().unwrap().pop_front()
+        self.inboxes[node]
+            .queue
+            .lock()
+            .unwrap()
+            .pop_front()
+            .map(|(m, _)| m)
     }
 
     /// Receive the next message queued at `node`, blocking until one
@@ -73,7 +120,7 @@ impl Fabric {
         let inbox = &self.inboxes[node];
         let mut q = inbox.queue.lock().unwrap();
         loop {
-            if let Some(msg) = q.pop_front() {
+            if let Some((msg, _)) = q.pop_front() {
                 return msg;
             }
             q = inbox.ready.wait(q).unwrap();
@@ -89,7 +136,7 @@ impl Fabric {
         let deadline = std::time::Instant::now() + timeout;
         let mut q = inbox.queue.lock().unwrap();
         loop {
-            if let Some(msg) = q.pop_front() {
+            if let Some((msg, _)) = q.pop_front() {
                 return Some(msg);
             }
             let now = std::time::Instant::now();
@@ -103,6 +150,13 @@ impl Fabric {
 
     /// Receive all currently queued messages at `node`.
     pub fn recv_all(&self, node: usize) -> Vec<Message> {
+        let mut q = self.inboxes[node].queue.lock().unwrap();
+        q.drain(..).map(|(m, _)| m).collect()
+    }
+
+    /// Receive all currently queued messages at `node` together with their
+    /// simulated arrival stamps (the async driver's gather primitive).
+    pub fn recv_all_timed(&self, node: usize) -> Vec<(Message, f64)> {
         let mut q = self.inboxes[node].queue.lock().unwrap();
         q.drain(..).collect()
     }
@@ -176,6 +230,34 @@ mod tests {
         }
         assert_eq!(f.recv_all(1).len(), 5);
         assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn clockless_send_stamps_bare_transfer_time() {
+        let link = LinkModel::new(1e6, 1e-3);
+        let f = Fabric::new(2, link);
+        let arrival = f.send(ctrl(0, 1, 1000));
+        let expect = link.transfer_time(1000 + FRAME_OVERHEAD_BITS);
+        assert!((arrival - expect).abs() < 1e-15);
+        let timed = f.recv_all_timed(1);
+        assert_eq!(timed.len(), 1);
+        assert!((timed[0].1 - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn clocked_send_stamps_departure_plus_transfer() {
+        let link = LinkModel::new(1e6, 1e-3);
+        let clock = Arc::new(SimClock::new(2));
+        let f = Fabric::with_clock(2, link, clock.clone());
+        clock.set_node_time(0, 5.0);
+        let arrival = f.send(ctrl(0, 1, 1000));
+        let expect = 5.0 + link.transfer_time(1000 + FRAME_OVERHEAD_BITS);
+        assert!((arrival - expect).abs() < 1e-12);
+        // the stamp rides with the message and into the stats
+        let timed = f.recv_all_timed(1);
+        assert!((timed[0].1 - expect).abs() < 1e-12);
+        let stats = f.stats();
+        assert!((stats.last_arrival_of_kind(MessageKind::Control) - expect).abs() < 1e-12);
     }
 
     #[test]

@@ -39,6 +39,24 @@ impl LinkModel {
         LinkModel::new(100e9, 2e-6)
     }
 
+    /// 100 Mbps WAN with 20 ms latency (geo-distributed / federated
+    /// regime): latency dominates small frames, so this is where the
+    /// compression × latency crossover of the staleness experiment lives.
+    pub fn wan() -> Self {
+        LinkModel::new(100e6, 20e-3)
+    }
+
+    /// Preset by name (the CLI's `--link` values).
+    pub fn preset(name: &str) -> Option<Self> {
+        Some(match name {
+            "10gbe" | "ten_gbe" => LinkModel::ten_gbe(),
+            "1gbe" | "one_gbe" => LinkModel::one_gbe(),
+            "infiniband" | "ib" => LinkModel::infiniband(),
+            "wan" => LinkModel::wan(),
+            _ => return None,
+        })
+    }
+
     /// Transfer time for a message of `bits`.
     pub fn transfer_time(&self, bits: u64) -> f64 {
         self.latency_s + bits as f64 / self.bandwidth_bps
@@ -75,5 +93,24 @@ mod tests {
             LinkModel::infiniband().transfer_time(bits) < LinkModel::ten_gbe().transfer_time(bits)
         );
         assert!(LinkModel::ten_gbe().transfer_time(bits) < LinkModel::one_gbe().transfer_time(bits));
+        assert!(LinkModel::one_gbe().transfer_time(bits) < LinkModel::wan().transfer_time(bits));
+    }
+
+    #[test]
+    fn wan_is_latency_dominated_for_small_frames() {
+        // a scaled-sign frame of d=4096 is ~4 kbit: on the WAN preset the
+        // 20 ms latency is >99% of the cost
+        let l = LinkModel::wan();
+        let t = l.transfer_time(4128);
+        assert!(l.latency_s / t > 0.99, "latency share {}", l.latency_s / t);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert_eq!(LinkModel::preset("wan"), Some(LinkModel::wan()));
+        assert_eq!(LinkModel::preset("10gbe"), Some(LinkModel::ten_gbe()));
+        assert_eq!(LinkModel::preset("1gbe"), Some(LinkModel::one_gbe()));
+        assert_eq!(LinkModel::preset("ib"), Some(LinkModel::infiniband()));
+        assert_eq!(LinkModel::preset("dialup"), None);
     }
 }

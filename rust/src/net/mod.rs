@@ -9,12 +9,24 @@
 //! clock per node. The collectives and the coordinator route all gradient
 //! traffic through this fabric — nothing is exchanged "for free".
 
+//!
+//! Time is simulated, not just priced: [`simclock::SimClock`] tracks a
+//! virtual timestamp per node and [`Fabric::with_clock`] stamps every
+//! message's arrival as `sender_time + transfer_time`, so the async
+//! coordinator can consume link and compute time through a deterministic
+//! discrete-event queue ([`simclock::EventQueue`]). Worker compute cost
+//! comes from the seeded [`straggler::StragglerSchedule`] models.
+
 pub mod accounting;
 pub mod fabric;
 pub mod link;
 pub mod message;
+pub mod simclock;
+pub mod straggler;
 
 pub use accounting::TrafficStats;
 pub use fabric::Fabric;
 pub use link::LinkModel;
 pub use message::{Message, MessageKind, Payload};
+pub use simclock::{Event, EventQueue, SimClock};
+pub use straggler::{StragglerModel, StragglerSchedule};

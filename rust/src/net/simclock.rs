@@ -1,0 +1,241 @@
+//! Discrete-event virtual clock: per-node local times plus a deterministic
+//! event queue.
+//!
+//! The fabric's link model prices every message in simulated seconds, but
+//! until now nothing *consumed* that time — rounds were implicitly free and
+//! the engine could only run lock-step. This module supplies the two
+//! primitives the asynchronous coordinator needs:
+//!
+//! * [`SimClock`] — one virtual timestamp per fabric node. The driver sets
+//!   a node's local time before the node sends (leader: at fold time;
+//!   worker: at compute-finish time), and [`crate::net::Fabric::send`]
+//!   stamps each message's arrival as `local_time(src) + transfer_time`.
+//! * [`EventQueue`] — a priority queue of scheduled events ordered by the
+//!   total key `(time, node, seq)`. Times are compared with
+//!   `f64::total_cmp`, `node` breaks time ties, and the monotone sequence
+//!   number breaks the (never observed in practice) remainder, so the pop
+//!   order is a pure function of what was scheduled — never of thread
+//!   scheduling or hash state. This is what makes the async engine
+//!   bit-deterministic for any `--threads` value.
+//!
+//! Simultaneity is meaningful: with a constant straggler model every
+//! worker's frame lands on the leader at the *identical* f64 timestamp.
+//! The async driver treats equal timestamps as one logical instant (it
+//! drains the whole tie group before evaluating its quorum trigger), which
+//! is what makes `--quorum n --max-staleness 0` degenerate to the exact
+//! synchronous schedule. [`EventQueue::peek_time`] exists for that drain.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+/// Per-node virtual times, shared between the driver and the fabric.
+///
+/// Thread-safe: the worker-pool threads read their node's time through
+/// `Fabric::send` while the driver owns the schedule. The driver only
+/// mutates a node's entry when no send from that node can be in flight
+/// (times are set *before* the pool round is dispatched), so readers
+/// always observe the intended timestamp.
+#[derive(Debug)]
+pub struct SimClock {
+    node_time: Mutex<Vec<f64>>,
+}
+
+impl SimClock {
+    pub fn new(nodes: usize) -> Self {
+        SimClock {
+            node_time: Mutex::new(vec![0.0; nodes]),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_time.lock().unwrap().len()
+    }
+
+    /// The node's current local time.
+    pub fn node_time(&self, node: usize) -> f64 {
+        self.node_time.lock().unwrap()[node]
+    }
+
+    /// Set a node's local time (the driver's scheduling hook).
+    pub fn set_node_time(&self, node: usize, t: f64) {
+        self.node_time.lock().unwrap()[node] = t;
+    }
+
+    /// Advance a node's local time to at least `t` (no-op if already past).
+    pub fn advance_node(&self, node: usize, t: f64) {
+        let mut times = self.node_time.lock().unwrap();
+        if t > times[node] {
+            times[node] = t;
+        }
+    }
+
+    /// Latest local time over all nodes.
+    pub fn max_time(&self) -> f64 {
+        self.node_time
+            .lock()
+            .unwrap()
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+    }
+}
+
+/// One scheduled event.
+#[derive(Clone, Debug)]
+pub struct Event<T> {
+    /// Virtual time at which the event fires.
+    pub time: f64,
+    /// Node the event belongs to (tie-break after time).
+    pub node: usize,
+    /// Monotone schedule order (final tie-break).
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T> Event<T> {
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.node.cmp(&other.node))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Event<T> {}
+
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed so the std max-heap pops the EARLIEST event first
+        other.key_cmp(self)
+    }
+}
+
+/// Deterministic discrete-event queue: pops strictly in `(time, node, seq)`
+/// order, independent of insertion interleaving.
+#[derive(Debug, Default)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `payload` at virtual `time` on `node`; returns the assigned
+    /// sequence number.
+    pub fn schedule(&mut self, time: f64, node: usize, payload: T) -> u64 {
+        assert!(time.is_finite(), "scheduled event at non-finite time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event {
+            time,
+            node,
+            seq,
+            payload,
+        });
+        seq
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop()
+    }
+
+    /// Fire time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_set_advance_max() {
+        let c = SimClock::new(3);
+        assert_eq!(c.node_time(1), 0.0);
+        c.set_node_time(1, 2.5);
+        assert_eq!(c.node_time(1), 2.5);
+        c.advance_node(1, 1.0); // no-op: behind
+        assert_eq!(c.node_time(1), 2.5);
+        c.advance_node(2, 4.0);
+        assert_eq!(c.max_time(), 4.0);
+        assert_eq!(c.nodes(), 3);
+    }
+
+    #[test]
+    fn queue_pops_in_time_order() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.schedule(3.0, 0, "c");
+        q.schedule(1.0, 5, "a");
+        q.schedule(2.0, 1, "b");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_time(), Some(1.0));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_node_then_seq() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(1.0, 2, 20);
+        q.schedule(1.0, 0, 0);
+        q.schedule(1.0, 1, 11);
+        q.schedule(1.0, 1, 12); // same time+node: seq decides
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec![0, 11, 12, 20]);
+    }
+
+    #[test]
+    fn pop_order_independent_of_insertion_order() {
+        let events = [(2.0, 1usize), (1.0, 3), (1.0, 0), (5.0, 2), (2.0, 0)];
+        let mut forward: EventQueue<usize> = EventQueue::new();
+        for (i, &(t, n)) in events.iter().enumerate() {
+            forward.schedule(t, n, i);
+        }
+        let mut backward: EventQueue<usize> = EventQueue::new();
+        for (i, &(t, n)) in events.iter().enumerate().rev() {
+            backward.schedule(t, n, i);
+        }
+        let a: Vec<(usize, f64)> =
+            std::iter::from_fn(|| forward.pop().map(|e| (e.node, e.time))).collect();
+        let b: Vec<(usize, f64)> =
+            std::iter::from_fn(|| backward.pop().map(|e| (e.node, e.time))).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_times() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.schedule(f64::NAN, 0, ());
+    }
+}

@@ -1,0 +1,235 @@
+//! Straggler models: how long a worker's compute step takes in virtual
+//! time.
+//!
+//! The async engine's whole point is measuring EF-SGD's robustness to
+//! *when* frames arrive, so compute time is a first-class model, not a
+//! constant. Four scenarios cover the systems literature:
+//!
+//! * `constant` — every step costs the base time (the homogeneous cluster).
+//! * `uniform:J` — base · (1 + U[0, J]) jitter (OS noise, co-tenancy).
+//! * `lognormal:σ` — base · exp(σ·N(0,1)), the heavy-tail regime reported
+//!   for large clusters; σ is the severity knob of the staleness sweep.
+//! * `failslow:K:F` — node K runs F× slower than everyone (the classic
+//!   fail-slow fault: a degraded disk/NIC on one host).
+//!
+//! Sampling is a pure function of `(seed, worker, step)`: every cell gets
+//! its own [`Pcg64`] stream, so the drawn times do not depend on the order
+//! in which the engine asks for them — a prerequisite for the async
+//! engine's bit-determinism across `--threads` values.
+
+use crate::util::Pcg64;
+
+/// The compute-time distribution (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StragglerModel {
+    Constant,
+    UniformJitter { jitter: f64 },
+    LogNormal { sigma: f64 },
+    FailSlow { node: usize, factor: f64 },
+}
+
+impl StragglerModel {
+    /// Parse a CLI spec: `constant`, `uniform[:J]`, `lognormal[:SIGMA]`,
+    /// `failslow:NODE[:FACTOR]`.
+    pub fn parse(s: &str) -> Option<StragglerModel> {
+        let mut parts = s.split(':');
+        let name = parts.next()?;
+        let model = match name {
+            "constant" | "none" => StragglerModel::Constant,
+            "uniform" => {
+                let jitter = match parts.next() {
+                    Some(p) => p.parse().ok()?,
+                    None => 0.5,
+                };
+                StragglerModel::UniformJitter { jitter }
+            }
+            "lognormal" => {
+                let sigma = match parts.next() {
+                    Some(p) => p.parse().ok()?,
+                    None => 1.0,
+                };
+                StragglerModel::LogNormal { sigma }
+            }
+            "failslow" => {
+                let node = parts.next()?.parse().ok()?;
+                let factor = match parts.next() {
+                    Some(p) => p.parse().ok()?,
+                    None => 8.0,
+                };
+                StragglerModel::FailSlow { node, factor }
+            }
+            _ => return None,
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(model)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerModel::Constant => "constant",
+            StragglerModel::UniformJitter { .. } => "uniform",
+            StragglerModel::LogNormal { .. } => "lognormal",
+            StragglerModel::FailSlow { .. } => "failslow",
+        }
+    }
+}
+
+/// A seeded straggler model with a base compute time: the driver's
+/// per-(worker, step) compute-time oracle.
+#[derive(Clone, Debug)]
+pub struct StragglerSchedule {
+    /// Base compute time per step in seconds (0 = compute is free, the
+    /// historical synchronous-engine behaviour).
+    pub base_s: f64,
+    pub model: StragglerModel,
+    pub seed: u64,
+}
+
+impl StragglerSchedule {
+    pub fn new(base_s: f64, model: StragglerModel, seed: u64) -> Self {
+        assert!(base_s >= 0.0 && base_s.is_finite());
+        StragglerSchedule {
+            base_s,
+            model,
+            seed,
+        }
+    }
+
+    /// Free compute: every step takes zero simulated time.
+    pub fn none() -> Self {
+        StragglerSchedule::new(0.0, StragglerModel::Constant, 0)
+    }
+
+    /// Compute time of `worker`'s `step`-th gradient step, in seconds.
+    /// Deterministic in `(seed, worker, step)` — never in call order.
+    pub fn compute_time(&self, worker: usize, step: u64) -> f64 {
+        if self.base_s == 0.0 {
+            return 0.0;
+        }
+        match self.model {
+            StragglerModel::Constant => self.base_s,
+            StragglerModel::UniformJitter { jitter } => {
+                self.base_s * (1.0 + jitter * self.cell_rng(worker, step).uniform())
+            }
+            StragglerModel::LogNormal { sigma } => {
+                self.base_s * (sigma * self.cell_rng(worker, step).normal()).exp()
+            }
+            StragglerModel::FailSlow { node, factor } => {
+                if worker == node {
+                    self.base_s * factor
+                } else {
+                    self.base_s
+                }
+            }
+        }
+    }
+
+    fn cell_rng(&self, worker: usize, step: u64) -> Pcg64 {
+        // one independent stream per (worker, step) cell
+        let mix = (worker as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(
+            self.seed ^ step.wrapping_mul(0xd1b5_4a32_d192_ed03),
+            mix ^ step,
+        )
+    }
+}
+
+impl Default for StragglerSchedule {
+    fn default() -> Self {
+        StragglerSchedule::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(StragglerModel::parse("constant"), Some(StragglerModel::Constant));
+        assert_eq!(
+            StragglerModel::parse("uniform:0.25"),
+            Some(StragglerModel::UniformJitter { jitter: 0.25 })
+        );
+        assert_eq!(
+            StragglerModel::parse("lognormal:1.5"),
+            Some(StragglerModel::LogNormal { sigma: 1.5 })
+        );
+        assert_eq!(
+            StragglerModel::parse("lognormal"),
+            Some(StragglerModel::LogNormal { sigma: 1.0 })
+        );
+        assert_eq!(
+            StragglerModel::parse("failslow:2:16"),
+            Some(StragglerModel::FailSlow {
+                node: 2,
+                factor: 16.0
+            })
+        );
+        assert_eq!(
+            StragglerModel::parse("failslow:3"),
+            Some(StragglerModel::FailSlow {
+                node: 3,
+                factor: 8.0
+            })
+        );
+        assert_eq!(StragglerModel::parse("failslow"), None);
+        assert_eq!(StragglerModel::parse("bogus"), None);
+        assert_eq!(StragglerModel::parse("constant:1:2"), None);
+    }
+
+    #[test]
+    fn deterministic_per_cell_not_per_call_order() {
+        let s = StragglerSchedule::new(1e-3, StragglerModel::LogNormal { sigma: 1.0 }, 7);
+        let a = s.compute_time(3, 10);
+        let _ = s.compute_time(0, 0); // interleave another cell
+        let b = s.compute_time(3, 10);
+        assert_eq!(a, b);
+        // different cells draw different times
+        assert_ne!(s.compute_time(3, 10), s.compute_time(3, 11));
+        assert_ne!(s.compute_time(3, 10), s.compute_time(4, 10));
+    }
+
+    #[test]
+    fn constant_and_none() {
+        let z = StragglerSchedule::none();
+        assert_eq!(z.compute_time(0, 0), 0.0);
+        let c = StragglerSchedule::new(2e-3, StragglerModel::Constant, 0);
+        assert_eq!(c.compute_time(5, 9), 2e-3);
+    }
+
+    #[test]
+    fn failslow_slows_one_node() {
+        let s = StragglerSchedule::new(
+            1e-3,
+            StragglerModel::FailSlow {
+                node: 1,
+                factor: 10.0,
+            },
+            0,
+        );
+        assert_eq!(s.compute_time(0, 0), 1e-3);
+        assert_eq!(s.compute_time(1, 0), 1e-2);
+    }
+
+    #[test]
+    fn lognormal_zero_sigma_is_constant() {
+        let s = StragglerSchedule::new(1e-3, StragglerModel::LogNormal { sigma: 0.0 }, 3);
+        for w in 0..4 {
+            assert_eq!(s.compute_time(w, 5), 1e-3);
+        }
+    }
+
+    #[test]
+    fn uniform_jitter_within_bounds() {
+        let s = StragglerSchedule::new(1e-3, StragglerModel::UniformJitter { jitter: 0.5 }, 11);
+        for w in 0..8 {
+            for k in 0..8 {
+                let t = s.compute_time(w, k);
+                assert!((1e-3..1.5e-3).contains(&t), "t={t}");
+            }
+        }
+    }
+}
