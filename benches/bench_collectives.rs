@@ -41,7 +41,7 @@ fn main() {
             for w in 0..n {
                 ps.push_grad(&fabric, w, 0, wire::encode_scaled_sign(&template[w]));
             }
-            black_box(ps.gather_mean(&fabric, 0, d));
+            black_box(ps.gather_mean(&fabric, 0, d).expect("ps gather"));
         });
     }
     b.finish();

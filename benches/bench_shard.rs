@@ -1,0 +1,129 @@
+//! Sharded parameter-server benchmark: the leader's decode+aggregate
+//! critical path (the slowest shard leader per round, from
+//! `LeaderProfile`) and whole-round throughput as the shard count grows,
+//! at n = 16 workers with Elias-packed QSGD frames. Emits
+//! `results/BENCH_shard.json`; the acceptance bar is the S=4 critical
+//! path landing ≥ 2x below S=1 (the per-shard decode work is ~d/S).
+
+use ef_sgd::bench::quick_mode;
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::MessageKind;
+use ef_sgd::util::Pcg64;
+
+fn make_driver(n: usize, d: usize, shards: usize, threads: usize) -> TrainDriver {
+    let workers: Vec<Worker> = (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::Qsgd,
+                64,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: 0, // rounds are driven manually below
+        schedule: LrSchedule::constant(0.01),
+        threads,
+        shards,
+        ..Default::default()
+    };
+    TrainDriver::new(cfg, workers, vec![0.5f32; d])
+}
+
+struct Row {
+    shards: usize,
+    rounds_per_sec: f64,
+    leader_crit_ms: f64,
+    leader_total_ms: f64,
+    push_bytes_per_round: f64,
+}
+
+fn main() {
+    let d = if quick_mode() { 32_768 } else { 262_144 };
+    let n = 16;
+    let threads = 4;
+    let rounds = if quick_mode() { 6 } else { 20 };
+    println!("\n== bench group: sharded PS leader critical path (d = {d}, n = {n}, qsgd) ==");
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &s in &[1usize, 2, 4, 8] {
+        let mut driver = make_driver(n, d, s, threads);
+        let mut rec = Recorder::new();
+        // warm the caches + allocator before the measured rounds, and
+        // take the profile as a delta past the warm-up so the cold round
+        // never skews the recorded critical path
+        driver.round(&mut rec);
+        let warm = driver.profile().clone();
+        let t = std::time::Instant::now();
+        for _ in 0..rounds {
+            driver.round(&mut rec);
+        }
+        let wall = t.elapsed().as_secs_f64();
+        let profile = driver.profile().clone();
+        let stats = driver.traffic();
+        let total_rounds = driver.rounds();
+        let measured = rounds as f64;
+        let row = Row {
+            shards: s,
+            rounds_per_sec: measured / wall,
+            leader_crit_ms: (profile.critical_s - warm.critical_s) / measured * 1e3,
+            leader_total_ms: (profile.decode_agg_s - warm.decode_agg_s) / measured * 1e3,
+            push_bytes_per_round: stats.bits_of_kind(MessageKind::GradPush) as f64
+                / 8.0
+                / total_rounds as f64,
+        };
+        println!(
+            "  S={:<2} rounds/s {:>8.2}  leader critical {:>8.4} ms  leader total {:>8.4} ms  push {:>10.0} B/round",
+            row.shards, row.rounds_per_sec, row.leader_crit_ms, row.leader_total_ms,
+            row.push_bytes_per_round
+        );
+        rows.push(row);
+    }
+
+    let crit1 = rows[0].leader_crit_ms;
+    let crit4 = rows
+        .iter()
+        .find(|r| r.shards == 4)
+        .map(|r| r.leader_crit_ms)
+        .unwrap_or(f64::NAN);
+    let speedup = crit1 / crit4;
+    println!("  critical-path speedup S=4 vs S=1: {speedup:.2}x (acceptance bar: >= 2x)");
+    println!("== end group ==");
+
+    // hand-rolled JSON (no serde offline); one object per shard row
+    let mut json = String::from("{\n  \"bench\": \"shard_leader_critical_path\",\n");
+    json.push_str(&format!(
+        "  \"quick\": {},\n  \"workers\": {n},\n  \"threads\": {threads},\n  \"d\": {d},\n  \
+         \"compressor\": \"qsgd\",\n  \"crit_speedup_s4_vs_s1\": {speedup:.3},\n  \"configs\": [\n",
+        quick_mode()
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shards\": {}, \"rounds_per_sec\": {:.3}, \"leader_crit_ms_per_round\": {:.4}, \
+             \"leader_total_ms_per_round\": {:.4}, \"push_bytes_per_round\": {:.1}}}{}\n",
+            r.shards,
+            r.rounds_per_sec,
+            r.leader_crit_ms,
+            r.leader_total_ms,
+            r.push_bytes_per_round,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    let path = "results/BENCH_shard.json";
+    std::fs::write(path, &json).expect("write BENCH_shard.json");
+    println!("wrote {path}");
+}

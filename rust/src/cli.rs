@@ -98,6 +98,7 @@ fn takes_value(key: &str) -> bool {
             | "straggler"
             | "compute-ms"
             | "link"
+            | "shards"
     )
 }
 
@@ -123,6 +124,10 @@ COMMON OPTIONS:
     --seed <n>           Base RNG seed
     --threads <n>        Worker-pool threads for `train` (default 1;
                          results are bit-identical for any value)
+    --shards <s>         Parameter-server shards: the model vector splits
+                         into s contiguous blocks, each with its own
+                         leader node (default 1 = the single-leader
+                         engine, byte-identical to the unsharded driver)
     --artifacts <dir>    Artifact directory (default: artifacts)
 
 ASYNC TRAINING (train):

@@ -2,6 +2,10 @@
 //!
 //! * [`ps`]: parameter-server push/aggregate/broadcast — the topology the
 //!   paper's experiments use (compressed gradient push, dense broadcast).
+//! * [`shard`]: the sharded parameter server — the model vector split into
+//!   `S` contiguous coordinate shards, each with its own leader node, so
+//!   leader decode+aggregate stops being a single-node bottleneck
+//!   (`docs/SHARDING.md`).
 //! * [`ring`]: ring all-reduce (reduce-scatter + all-gather) of dense
 //!   vectors — the uncompressed baseline collective.
 //! * [`majority`]: coordinate-wise majority vote over sign vectors
@@ -15,7 +19,9 @@
 pub mod majority;
 pub mod ps;
 pub mod ring;
+pub mod shard;
 
 pub use majority::majority_vote;
 pub use ps::ParameterServer;
 pub use ring::{ring_allgather, ring_allreduce, ring_allreduce_parallel};
+pub use shard::{GatherError, ShardPlan, ShardedParameterServer};

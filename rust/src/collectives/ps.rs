@@ -3,6 +3,7 @@
 //! back. This is the communication pattern of the paper's experiments and
 //! of 1-bit SGD (Seide et al. 2014).
 
+use super::shard::GatherError;
 use crate::compress::wire::{self, Encoded};
 use crate::net::{Fabric, Message, MessageKind, Payload};
 
@@ -38,20 +39,28 @@ impl ParameterServer {
     }
 
     /// Leader side: collect one pushed gradient per worker for `round`,
-    /// decode, and return the *mean* as a dense vector.
-    /// Panics if a worker's message is missing (the scheduler guarantees
-    /// all pushes happen before the gather in the simulated loop).
+    /// decode, and return the *mean* as a dense vector. A stale or missing
+    /// frame comes back as a typed [`GatherError`] (naming the round and
+    /// source that mismatched) instead of an `assert_eq!` abort, so async
+    /// and sharded callers can surface or recover from the exact fault.
     ///
     /// Messages are accumulated in worker order regardless of arrival
     /// order, so the f32 sum is bit-identical whether the pushes came from
     /// one thread or many.
-    pub fn gather_mean(&self, fabric: &Fabric, round: u64, d: usize) -> Vec<f32> {
+    pub fn gather_mean(&self, fabric: &Fabric, round: u64, d: usize) -> Result<Vec<f32>, GatherError> {
         let mut acc = vec![0.0f32; d];
         let mut msgs = fabric.recv_all(self.leader);
         msgs.sort_by_key(|m| m.src);
         let mut got = 0usize;
         for msg in msgs {
-            assert_eq!(msg.round, round, "stale message in PS gather");
+            if msg.round != round {
+                return Err(GatherError::Stale {
+                    shard: 0,
+                    src: msg.src,
+                    expected: round,
+                    got: msg.round,
+                });
+            }
             if let Payload::Grad(e) = msg.payload {
                 // fused decode-into-accumulator for every wire format: no
                 // per-worker dense materialization on the leader
@@ -59,9 +68,15 @@ impl ParameterServer {
                 got += 1;
             }
         }
-        assert_eq!(got, self.workers.len(), "missing worker gradients");
+        if got != self.workers.len() {
+            return Err(GatherError::Missing {
+                shard: 0,
+                expected: self.workers.len(),
+                got,
+            });
+        }
         crate::tensor::scale(1.0 / got as f32, &mut acc);
-        acc
+        Ok(acc)
     }
 
     /// Leader side: send the parameter vector (dense) to one worker.
@@ -111,7 +126,7 @@ mod tests {
         let ps = ParameterServer::new(&fabric);
         ps.push_grad(&fabric, 0, 0, encode_dense(&[1.0, 2.0]));
         ps.push_grad(&fabric, 1, 0, encode_dense(&[3.0, -2.0]));
-        let mean = ps.gather_mean(&fabric, 0, 2);
+        let mean = ps.gather_mean(&fabric, 0, 2).unwrap();
         assert_eq!(mean, vec![2.0, 0.0]);
     }
 
@@ -122,7 +137,7 @@ mod tests {
         let p = [4.0f32, -2.0, 1.0, 1.0]; // scale 2.0
         ps.push_grad(&fabric, 0, 0, encode_scaled_sign(&p));
         ps.push_grad(&fabric, 1, 0, encode_sparse(&[0.0, 0.0, 5.0, 0.0]));
-        let mean = ps.gather_mean(&fabric, 0, 4);
+        let mean = ps.gather_mean(&fabric, 0, 4).unwrap();
         assert_eq!(mean, vec![1.0, -1.0, 3.5, 1.0]);
     }
 
@@ -139,7 +154,7 @@ mod tests {
         let ps = ParameterServer::new(&fabric);
         ps.push_grad(&fabric, 0, 0, crate::compress::wire::encode_qsgd(&q, norm, 4));
         ps.push_grad(&fabric, 1, 0, encode_dense(&vec![0.0f32; d]));
-        let mean = ps.gather_mean(&fabric, 0, d);
+        let mean = ps.gather_mean(&fabric, 0, d).unwrap();
         for i in 0..d {
             assert!((mean[i] - q[i] / 2.0).abs() < 1e-6, "i={i}");
         }
@@ -157,12 +172,39 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "missing worker gradients")]
-    fn gather_detects_missing_worker() {
+    fn gather_detects_missing_worker_as_typed_error() {
         let fabric = Fabric::new(3, LinkModel::default());
         let ps = ParameterServer::new(&fabric);
         ps.push_grad(&fabric, 0, 0, encode_dense(&[1.0]));
-        let _ = ps.gather_mean(&fabric, 0, 1);
+        let err = ps.gather_mean(&fabric, 0, 1).unwrap_err();
+        assert_eq!(
+            err,
+            GatherError::Missing {
+                shard: 0,
+                expected: 2,
+                got: 1
+            }
+        );
+        assert!(err.to_string().contains("1 of 2"));
+    }
+
+    #[test]
+    fn gather_detects_stale_round_as_typed_error() {
+        let fabric = Fabric::new(3, LinkModel::default());
+        let ps = ParameterServer::new(&fabric);
+        ps.push_grad(&fabric, 0, 4, encode_dense(&[1.0]));
+        ps.push_grad(&fabric, 1, 5, encode_dense(&[2.0]));
+        let err = ps.gather_mean(&fabric, 5, 1).unwrap_err();
+        assert_eq!(
+            err,
+            GatherError::Stale {
+                shard: 0,
+                src: 0,
+                expected: 5,
+                got: 4
+            }
+        );
+        assert!(err.to_string().contains("round 5"));
     }
 
     #[test]
@@ -174,7 +216,7 @@ mod tests {
         let fabric = Fabric::new(2, LinkModel::default());
         let ps = ParameterServer::new(&fabric);
         ps.push_grad(&fabric, 0, 0, encode_scaled_sign(&g));
-        let _ = ps.gather_mean(&fabric, 0, d);
+        let _ = ps.gather_mean(&fabric, 0, d).unwrap();
         ps.broadcast_params(&fabric, 0, &g);
         let stats = fabric.stats();
         use crate::net::MessageKind::*;

@@ -1,0 +1,448 @@
+//! Sharded parameter server: the model vector is partitioned into `S`
+//! contiguous coordinate shards, each owned by its own leader node on the
+//! fabric. Workers push one wire frame **per shard** (tagged with the
+//! shard id + start coordinate, see `compress::wire::ShardTag`), shard
+//! leaders decode and aggregate only their slice, and the broadcast comes
+//! back as per-shard parameter slices that workers reassemble.
+//!
+//! This breaks the single-aggregator bottleneck of the classic
+//! majority-vote/EF parameter server (Bernstein et al. 2018; Seide et al.
+//! 2014): the leader-side decode+aggregate cost becomes
+//! `max`-over-shards instead of the full-vector total. Blockwise error
+//! feedback (Zheng et al. 2019) makes the worker side partition cleanly —
+//! each shard carries its own compressor state, EF residual, and norms.
+//!
+//! # Determinism contract
+//!
+//! * The split points of [`ShardPlan`] are a pure function of `(d, S)`.
+//! * Shard leaders sort their gathers by worker id and reduce with the
+//!   same fixed worker-id grouping as the unsharded leader, so any
+//!   `(shards, threads)` combination is bit-deterministic.
+//! * With `S = 1` the topology, payloads, and bit accounting are exactly
+//!   the historical single-leader parameter server: frames carry no shard
+//!   tag and the broadcast is one dense `Params` message per worker.
+//!
+//! See `docs/SHARDING.md` for the full topology and timing model.
+
+use crate::compress::wire::Encoded;
+use crate::net::{Fabric, Message, MessageKind, Payload};
+use std::ops::Range;
+
+/// Deterministic partition of `d` coordinates into `S` contiguous shards.
+/// Split points are balanced: the first `d % S` shards get `⌈d/S⌉`
+/// coordinates, the rest `⌊d/S⌋` — a pure function of `(d, S)`, so every
+/// node (and every restart) derives the identical plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    d: usize,
+    /// `S + 1` monotone split points; `bounds[0] = 0`, `bounds[S] = d`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Build the plan for `d` coordinates over `shards` leaders. Clamped
+    /// to `1..=min(d, u16::MAX)`: every shard owns at least one
+    /// coordinate, and every shard id fits the wire tag's 16-bit field
+    /// (so per-shard accounting can never alias through truncation).
+    pub fn new(d: usize, shards: usize) -> Self {
+        assert!(d > 0, "empty model vector");
+        let s = shards.clamp(1, d).min(u16::MAX as usize);
+        let base = d / s;
+        let rem = d % s;
+        let mut bounds = Vec::with_capacity(s + 1);
+        bounds.push(0);
+        let mut at = 0usize;
+        for i in 0..s {
+            at += base + usize::from(i < rem);
+            bounds.push(at);
+        }
+        debug_assert_eq!(*bounds.last().unwrap(), d);
+        ShardPlan { d, bounds }
+    }
+
+    /// The degenerate single-shard plan (the unsharded topology).
+    pub fn single(d: usize) -> Self {
+        ShardPlan::new(d, 1)
+    }
+
+    /// Total model dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Coordinate range of shard `s` in the full model vector.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Number of coordinates owned by shard `s`.
+    pub fn len_of(&self, s: usize) -> usize {
+        self.bounds[s + 1] - self.bounds[s]
+    }
+
+    /// Start coordinate of shard `s`.
+    pub fn start(&self, s: usize) -> usize {
+        self.bounds[s]
+    }
+}
+
+/// Typed gather failure: which shard saw what, instead of an
+/// `assert_eq!` abort deep in the hot path. Async and sharded callers can
+/// surface (or recover from) the exact mismatch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GatherError {
+    /// A frame from `src` carried round `got` instead of `expected`.
+    Stale {
+        shard: usize,
+        src: usize,
+        expected: u64,
+        got: u64,
+    },
+    /// Fewer gradient frames than workers arrived for this shard's round.
+    Missing {
+        shard: usize,
+        expected: usize,
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for GatherError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GatherError::Stale {
+                shard,
+                src,
+                expected,
+                got,
+            } => write!(
+                f,
+                "stale message in PS gather: shard {shard} expected round {expected}, \
+                 got round {got} from worker {src}"
+            ),
+            GatherError::Missing {
+                shard,
+                expected,
+                got,
+            } => write!(
+                f,
+                "missing worker gradients: shard {shard} gathered {got} of {expected} frames"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GatherError {}
+
+/// The multi-leader parameter-server topology: workers `0..n`, one leader
+/// node per shard at `n..n+S` (ascending by shard id; with `S = 1` the
+/// leader is node `n`, exactly the historical convention). `Clone` so each
+/// worker-pool thread can hold its own copy of the (cheap) topology.
+#[derive(Clone, Debug)]
+pub struct ShardedParameterServer {
+    pub plan: ShardPlan,
+    /// Fabric node id of each shard's leader, indexed by shard.
+    pub leaders: Vec<usize>,
+    pub workers: Vec<usize>,
+}
+
+impl ShardedParameterServer {
+    /// Derive the topology from the fabric size: the last
+    /// `plan.num_shards()` nodes are the shard leaders, the rest workers.
+    pub fn new(fabric: &Fabric, plan: ShardPlan) -> Self {
+        let s = plan.num_shards();
+        let n = fabric.nodes();
+        assert!(n >= s + 1, "need at least 1 worker + {s} shard leaders");
+        ShardedParameterServer {
+            leaders: (n - s..n).collect(),
+            workers: (0..n - s).collect(),
+            plan,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.plan.num_shards()
+    }
+
+    /// Worker side: push one round's per-shard frames (in shard order) to
+    /// their shard leaders. With `S = 1` this is a single untagged frame
+    /// to the single leader — byte-identical to the unsharded push.
+    pub fn push_frames(&self, fabric: &Fabric, worker: usize, round: u64, frames: Vec<Encoded>) {
+        assert_eq!(frames.len(), self.num_shards(), "one frame per shard");
+        for (s, frame) in frames.into_iter().enumerate() {
+            fabric.send(Message {
+                src: worker,
+                dst: self.leaders[s],
+                round,
+                kind: MessageKind::GradPush,
+                payload: Payload::Grad(frame),
+            });
+        }
+    }
+
+    /// Leader side: send one worker its parameters — a single dense
+    /// `Params` message when unsharded (byte-identical to the historical
+    /// driver), one `ParamSlice` per shard leader otherwise. Returns the
+    /// latest simulated arrival over the slices.
+    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
+        assert_eq!(params.len(), self.plan.dim());
+        if self.num_shards() == 1 {
+            return fabric.send(Message {
+                src: self.leaders[0],
+                dst: worker,
+                round,
+                kind: MessageKind::ParamBroadcast,
+                payload: Payload::Params(params.to_vec()),
+            });
+        }
+        let mut latest = 0.0f64;
+        for s in 0..self.num_shards() {
+            let r = self.plan.range(s);
+            let arrival = fabric.send(Message {
+                src: self.leaders[s],
+                dst: worker,
+                round,
+                kind: MessageKind::ParamBroadcast,
+                payload: Payload::ParamSlice {
+                    shard: s as u16,
+                    start: r.start as u32,
+                    vals: params[r].to_vec(),
+                },
+            });
+            latest = latest.max(arrival);
+        }
+        latest
+    }
+
+    /// Leader side: broadcast the parameters to every worker. Returns the
+    /// latest simulated arrival over all recipients and slices.
+    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) -> f64 {
+        let mut latest = 0.0f64;
+        for &w in &self.workers {
+            latest = latest.max(self.send_params(fabric, w, round, params));
+        }
+        latest
+    }
+
+    /// Worker side: receive one round's parameters into `buf`, assembling
+    /// per-shard slices when sharded. Returns `false` if the broadcast is
+    /// missing from the worker's inbox.
+    pub fn recv_params_into(&self, fabric: &Fabric, worker: usize, buf: &mut Vec<f32>) -> bool {
+        let s_total = self.num_shards();
+        if s_total == 1 {
+            while let Some(msg) = fabric.recv(worker) {
+                if let Payload::Params(p) = msg.payload {
+                    *buf = p;
+                    return true;
+                }
+            }
+            return false;
+        }
+        buf.resize(self.plan.dim(), 0.0);
+        // track distinct shards, not message counts: a duplicated slice
+        // must not mask a missing one (the hole would silently keep the
+        // previous round's values in a reused buffer)
+        let mut seen = vec![false; s_total];
+        let mut got = 0usize;
+        while got < s_total {
+            let Some(msg) = fabric.recv(worker) else {
+                return false;
+            };
+            if let Payload::ParamSlice { shard, start, vals } = msg.payload {
+                let shard = shard as usize;
+                assert!(
+                    shard < s_total && !seen[shard],
+                    "duplicate or out-of-range parameter slice for shard {shard}"
+                );
+                seen[shard] = true;
+                let start = start as usize;
+                buf[start..start + vals.len()].copy_from_slice(&vals);
+                got += 1;
+            }
+        }
+        true
+    }
+
+    /// Leader side: drain shard `s`'s inbox for `round`. Returns the
+    /// gathered frames sorted by worker id together with the latest
+    /// simulated arrival, or a typed [`GatherError`] naming the shard and
+    /// the mismatched round/count.
+    pub fn gather_shard_timed(
+        &self,
+        fabric: &Fabric,
+        round: u64,
+        s: usize,
+    ) -> Result<(Vec<Encoded>, f64), GatherError> {
+        let mut msgs = fabric.recv_all_timed(self.leaders[s]);
+        msgs.sort_by_key(|(m, _)| m.src);
+        let mut frames = Vec::with_capacity(self.workers.len());
+        let mut latest = 0.0f64;
+        for (msg, arrival) in msgs {
+            if msg.round != round {
+                return Err(GatherError::Stale {
+                    shard: s,
+                    src: msg.src,
+                    expected: round,
+                    got: msg.round,
+                });
+            }
+            if let Payload::Grad(e) = msg.payload {
+                // tagged frames must agree with the leader they landed on
+                // (untagged single-shard frames carry no tag to check)
+                if let Some(tag) = e.shard {
+                    assert_eq!(
+                        tag.shard as usize, s,
+                        "frame routed to the wrong shard leader"
+                    );
+                }
+                frames.push(e);
+                latest = latest.max(arrival);
+            }
+        }
+        if frames.len() != self.workers.len() {
+            return Err(GatherError::Missing {
+                shard: s,
+                expected: self.workers.len(),
+                got: frames.len(),
+            });
+        }
+        Ok((frames, latest))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::wire::{encode_dense, encode_scaled_sign};
+    use crate::net::LinkModel;
+
+    #[test]
+    fn plan_partition_is_contiguous_complete_and_balanced() {
+        for (d, s) in [(10, 1), (10, 3), (97, 4), (64, 8), (5, 8), (1, 1)] {
+            let plan = ShardPlan::new(d, s);
+            let eff = plan.num_shards();
+            assert!(eff <= s && eff >= 1 && eff <= d);
+            assert_eq!(plan.start(0), 0);
+            assert_eq!(plan.range(eff - 1).end, d);
+            let mut total = 0usize;
+            for i in 0..eff {
+                let r = plan.range(i);
+                assert_eq!(r.start, plan.start(i));
+                assert_eq!(r.len(), plan.len_of(i));
+                total += r.len();
+                if i > 0 {
+                    assert_eq!(plan.range(i - 1).end, r.start, "gap at shard {i}");
+                }
+                // balanced: sizes differ by at most one
+                assert!(r.len() >= d / eff && r.len() <= d / eff + 1);
+            }
+            assert_eq!(total, d);
+        }
+        // same (d, S) always derives the same plan
+        assert_eq!(ShardPlan::new(97, 4), ShardPlan::new(97, 4));
+        assert_eq!(ShardPlan::single(12), ShardPlan::new(12, 1));
+        // shard ids must fit the 16-bit wire tag: the plan clamps there
+        let wide = ShardPlan::new(100_000, 70_000);
+        assert_eq!(wide.num_shards(), u16::MAX as usize);
+    }
+
+    #[test]
+    fn sharded_roundtrip_push_gather_broadcast() {
+        let plan = ShardPlan::new(6, 2);
+        // 2 workers + 2 shard leaders
+        let fabric = Fabric::new(4, LinkModel::default());
+        let ps = ShardedParameterServer::new(&fabric, plan);
+        assert_eq!(ps.workers, vec![0, 1]);
+        assert_eq!(ps.leaders, vec![2, 3]);
+
+        // broadcast slices reassemble on the worker
+        let params: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        ps.broadcast_params(&fabric, 0, &params);
+        for w in 0..2 {
+            let mut buf = Vec::new();
+            assert!(ps.recv_params_into(&fabric, w, &mut buf));
+            assert_eq!(buf, params);
+        }
+
+        // per-shard push lands on the right leader, sorted gather works
+        for w in 0..2usize {
+            let v: Vec<f32> = (0..6).map(|i| (w * 10 + i) as f32).collect();
+            let frames: Vec<Encoded> = (0..2)
+                .map(|s| {
+                    let r = ps.plan.range(s);
+                    encode_dense(&v[r.clone()]).with_shard(s as u16, r.start as u32)
+                })
+                .collect();
+            ps.push_frames(&fabric, w, 3, frames);
+        }
+        for s in 0..2 {
+            let (frames, _latest) = ps.gather_shard_timed(&fabric, 3, s).unwrap();
+            assert_eq!(frames.len(), 2);
+            assert!(frames.iter().all(|e| e.d == 3));
+            assert!(frames
+                .iter()
+                .all(|e| e.shard.map(|t| t.shard as usize) == Some(s)));
+        }
+    }
+
+    #[test]
+    fn gather_reports_stale_and_missing_with_shard_context() {
+        let plan = ShardPlan::new(4, 2);
+        let fabric = Fabric::new(3, LinkModel::default()); // 1 worker + 2 leaders
+        let ps = ShardedParameterServer::new(&fabric, plan);
+        // wrong round on shard 1
+        ps.push_frames(
+            &fabric,
+            0,
+            7,
+            vec![
+                encode_scaled_sign(&[1.0, -1.0]).with_shard(0, 0),
+                encode_scaled_sign(&[1.0, -1.0]).with_shard(1, 2),
+            ],
+        );
+        let err = ps.gather_shard_timed(&fabric, 8, 1).unwrap_err();
+        assert_eq!(
+            err,
+            GatherError::Stale {
+                shard: 1,
+                src: 0,
+                expected: 8,
+                got: 7
+            }
+        );
+        assert!(err.to_string().contains("shard 1"));
+        // nothing pushed on a fresh fabric => Missing with counts
+        let fabric2 = Fabric::new(3, LinkModel::default());
+        let ps2 = ShardedParameterServer::new(&fabric2, ShardPlan::new(4, 2));
+        let err = ps2.gather_shard_timed(&fabric2, 8, 0).unwrap_err();
+        assert_eq!(
+            err,
+            GatherError::Missing {
+                shard: 0,
+                expected: 1,
+                got: 0
+            }
+        );
+        assert!(err.to_string().contains("0 of 1"));
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_the_classic_topology() {
+        let plan = ShardPlan::single(8);
+        let fabric = Fabric::new(4, LinkModel::default()); // 3 workers + leader
+        let ps = ShardedParameterServer::new(&fabric, plan);
+        assert_eq!(ps.leaders, vec![3]);
+        assert_eq!(ps.workers, vec![0, 1, 2]);
+        let params = vec![0.5f32; 8];
+        ps.send_params(&fabric, 1, 0, &params);
+        // the unsharded broadcast is a plain dense Params payload
+        let msg = fabric.recv(1).unwrap();
+        match msg.payload {
+            Payload::Params(p) => assert_eq!(p, params),
+            other => panic!("expected Params, got {other:?}"),
+        }
+    }
+}

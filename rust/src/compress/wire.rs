@@ -175,15 +175,45 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Shard routing header carried by sharded wire frames (see docs/WIRE.md):
+/// a 16-bit shard id plus the 32-bit start coordinate of the slice in the
+/// full model vector. The slice length is the frame's own `d`, so the
+/// coordinate range is `start .. start + d`. Unsharded frames carry no tag
+/// and cost no extra bits — the single-leader wire format is unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardTag {
+    pub shard: u16,
+    pub start: u32,
+}
+
+/// On-wire cost of a [`ShardTag`]: 16-bit shard id + 32-bit start.
+pub const SHARD_TAG_BITS: u64 = 48;
+
 /// An encoded gradient payload with exact size accounting.
 #[derive(Clone, Debug)]
 pub struct Encoded {
     pub bytes: Vec<u8>,
-    /// Exact payload size in bits (may be less than bytes.len()*8).
+    /// Exact payload size in bits (may be less than bytes.len()*8; includes
+    /// [`SHARD_TAG_BITS`] when a shard tag is attached).
     pub bits: u64,
     pub format: Format,
     /// Original vector length.
     pub d: usize,
+    /// Shard routing header for sharded parameter-server frames
+    /// (`None` = unsharded; the bytes/bits above are then exactly the
+    /// historical single-leader frame).
+    pub shard: Option<ShardTag>,
+}
+
+impl Encoded {
+    /// Attach the shard routing header (id + start coordinate), charging
+    /// its [`SHARD_TAG_BITS`] on the frame's exact size.
+    pub fn with_shard(mut self, shard: u16, start: u32) -> Self {
+        debug_assert!(self.shard.is_none(), "frame already shard-tagged");
+        self.shard = Some(ShardTag { shard, start });
+        self.bits += SHARD_TAG_BITS;
+        self
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -228,6 +258,7 @@ pub fn encode_dense(v: &[f32]) -> Encoded {
         bytes,
         format: Format::DenseF32,
         d: v.len(),
+        shard: None,
     }
 }
 
@@ -292,6 +323,7 @@ pub fn encode_scaled_sign(p: &[f32]) -> Encoded {
         bits: 32 + d as u64,
         format: Format::SignScaled,
         d,
+        shard: None,
     }
 }
 
@@ -376,6 +408,7 @@ pub fn encode_sparse(v: &[f32]) -> Encoded {
         bits,
         format: Format::SparseIdxVal,
         d: v.len(),
+        shard: None,
     }
 }
 
@@ -443,6 +476,7 @@ pub fn encode_ternary(v: &[f32]) -> Encoded {
         bits,
         format: Format::Ternary,
         d: v.len(),
+        shard: None,
     }
 }
 
@@ -539,6 +573,7 @@ pub fn encode_qsgd(v: &[f32], norm: f32, levels: u32) -> Encoded {
         bits,
         format: Format::Qsgd,
         d: v.len(),
+        shard: None,
     }
 }
 
@@ -1037,6 +1072,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The shard tag charges exactly `SHARD_TAG_BITS` on top of the payload
+    /// and leaves the payload bytes (and hence the decode) untouched.
+    #[test]
+    fn shard_tag_costs_exactly_its_header() {
+        let p = [1.0f32, -2.0, 3.0];
+        let plain = encode_scaled_sign(&p);
+        let tagged = encode_scaled_sign(&p).with_shard(3, 128);
+        assert_eq!(tagged.bits, plain.bits + SHARD_TAG_BITS);
+        assert_eq!(tagged.bytes, plain.bytes);
+        assert_eq!(tagged.shard, Some(ShardTag { shard: 3, start: 128 }));
+        assert_eq!(
+            decode_scaled_sign(&tagged).unwrap(),
+            decode_scaled_sign(&plain).unwrap()
+        );
+        assert!(plain.shard.is_none());
     }
 
     /// The word-packed sign codec round-trips at every alignment class:

@@ -293,6 +293,8 @@ pub struct TrainConfig {
     pub workers: usize,
     /// Worker-pool threads for the coordinator (1 = sequential).
     pub threads: usize,
+    /// Parameter-server shards (1 = the single-leader topology).
+    pub shards: usize,
     pub steps: usize,
     pub lr: f64,
     pub momentum: f64,
@@ -332,6 +334,7 @@ impl Default for TrainConfig {
             model: "tiny".into(),
             workers: 1,
             threads: 1,
+            shards: 1,
             steps: 100,
             lr: 0.1,
             momentum: 0.0,
@@ -385,10 +388,20 @@ impl TrainConfig {
         if crate::net::LinkModel::preset(&link).is_none() {
             return Err(ConfigError::BadValue("training.link".into(), link));
         }
+        // shards = 0 is meaningless (the driver clamps to 1..=d, but a
+        // zero in the config is a typo worth failing loudly on)
+        let shards = m.usize_or("training.shards", d.shards);
+        if shards == 0 {
+            return Err(ConfigError::BadValue(
+                "training.shards".into(),
+                "0 (must be >= 1)".into(),
+            ));
+        }
         Ok(TrainConfig {
             model: m.str_or("model.name", &d.model),
             workers: m.usize_or("training.workers", d.workers),
             threads: m.usize_or("training.threads", d.threads),
+            shards,
             steps: m.usize_or("training.steps", d.steps),
             lr: m.f64_or("training.lr", d.lr),
             momentum: m.f64_or("training.momentum", d.momentum),
@@ -508,6 +521,19 @@ artifacts = "artifacts"
         m.set_kv("training.straggler=\"constant\"").unwrap();
         m.set_kv("training.link=\"dialup\"").unwrap();
         assert!(TrainConfig::from_map(&m).is_err());
+    }
+
+    #[test]
+    fn shards_parse_and_validate() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().shards, 1);
+        m.set_kv("training.shards=4").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().shards, 4);
+        m.set_kv("training.shards=0").unwrap();
+        assert!(matches!(
+            TrainConfig::from_map(&m),
+            Err(ConfigError::BadValue(..))
+        ));
     }
 
     #[test]

@@ -32,24 +32,38 @@
 //! asserted by `staleness_zero_matches_sync_driver`). Determinism across `--threads`
 //! holds for any quorum: arrival times are pure functions of the straggler
 //! schedule and link model, never of wall-clock thread interleaving.
+//!
+//! Under a sharded parameter server (`DriverConfig::shards > 1`, see
+//! `docs/SHARDING.md`) each in-flight worker carries one frame per shard;
+//! its logical arrival is the max over its shard frames, the quorum still
+//! counts workers, and the fold aggregates each shard's slice with the
+//! same fixed-group reduction. The shard leaders' measured decode cost is
+//! added to the *reported* `sim_time_s` only — pricing it into the event
+//! schedule would make the fold order depend on wall-clock decode speed
+//! and break `--threads` bit-determinism.
 
 use super::driver::{apply_update, DriverConfig, TrainOutcome};
 use super::pool::{RoundReport, WorkerPool};
 use super::round::{LeaderProfile, StalenessStats};
 use super::state::Snapshot;
 use super::worker::Worker;
-use crate::collectives::ParameterServer;
+use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
 use crate::net::{EventQueue, Fabric, Payload, SimClock, TrafficStats};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// One worker frame travelling through virtual time.
+/// One worker's round of frames travelling through virtual time (one wire
+/// frame per parameter-server shard; a single frame when unsharded). The
+/// worker's logical arrival at the distributed leader is the max over its
+/// shard frames' arrivals.
 struct Inflight {
     worker: usize,
-    /// Leader round whose parameters the frame was computed on.
+    /// Leader round whose parameters the frames were computed on.
     round: u64,
-    frame: Encoded,
+    /// Per-shard frames in shard order.
+    frames: Vec<Encoded>,
     report: RoundReport,
 }
 
@@ -64,11 +78,17 @@ pub struct AsyncTrainDriver {
     theta: Vec<f32>,
     fabric: Arc<Fabric>,
     sim_clock: Arc<SimClock>,
-    ps: ParameterServer,
+    ps: ShardedParameterServer,
     round: u64,
     momentum: Vec<f32>,
     wd_buf: Vec<f32>,
     profile: LeaderProfile,
+    /// Accumulated measured leader decode+aggregate critical path. Charged
+    /// on the reported total only, never on the event schedule: the
+    /// schedule must stay a pure function of the seeded models so
+    /// `--threads` remains bit-deterministic (wall-clock decode speed
+    /// varies with the thread count).
+    leader_time_s: f64,
     staleness: StalenessStats,
     queue: EventQueue<Inflight>,
     pending: Vec<Inflight>,
@@ -89,7 +109,7 @@ impl AsyncTrainDriver {
         cfg: DriverConfig,
         quorum: usize,
         max_staleness: u64,
-        workers: Vec<Worker>,
+        mut workers: Vec<Worker>,
         theta0: Vec<f32>,
     ) -> Self {
         assert!(!workers.is_empty());
@@ -98,9 +118,7 @@ impl AsyncTrainDriver {
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
         let quorum = if quorum == 0 { n } else { quorum.min(n) };
-        let sim_clock = Arc::new(SimClock::new(n + 1));
-        let fabric = Arc::new(Fabric::with_clock(n + 1, cfg.link, sim_clock.clone()));
-        let ps = ParameterServer::new(&fabric);
+        let (sim_clock, fabric, ps) = super::driver::build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
         AsyncTrainDriver {
             momentum: vec![0.0; d],
@@ -115,6 +133,7 @@ impl AsyncTrainDriver {
             ps,
             round: 0,
             profile: LeaderProfile::default(),
+            leader_time_s: 0.0,
             staleness: StalenessStats::default(),
             queue: EventQueue::new(),
             pending: Vec::new(),
@@ -147,9 +166,17 @@ impl AsyncTrainDriver {
         &self.staleness
     }
 
-    /// The leader's current virtual time.
+    /// The leader's current virtual time (the event schedule's clock; the
+    /// measured leader decode cost is reported separately via
+    /// [`TrainOutcome::sim_time_s`] so the schedule stays bit-deterministic
+    /// across thread counts).
     pub fn sim_time_s(&self) -> f64 {
         self.sim_time
+    }
+
+    /// Accumulated measured leader decode+aggregate critical path.
+    pub fn leader_time_s(&self) -> f64 {
+        self.leader_time_s
     }
 
     /// Full coordinator snapshot — same shape as the synchronous driver's,
@@ -159,6 +186,7 @@ impl AsyncTrainDriver {
         let states = self.pool.export_states();
         Snapshot {
             round: self.round,
+            shards: self.ps.num_shards(),
             theta: self.theta.clone(),
             worker_errors: states.iter().map(|s| s.error.clone()).collect(),
             worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
@@ -171,11 +199,13 @@ impl AsyncTrainDriver {
         debug_assert!(!ids.is_empty());
         let r = self.round;
         let lr = self.cfg.schedule.lr(r as usize) as f32;
-        self.sim_clock.set_node_time(self.ps.leader, self.sim_time);
+        for &l in &self.ps.leaders {
+            self.sim_clock.set_node_time(l, self.sim_time);
+        }
         for &w in ids {
-            // params depart the leader now; the worker's push will depart
+            // params depart the leaders now; the worker's pushes depart
             // at params-arrival + compute-time, so pre-set its node time
-            // before the pool thread issues the send
+            // before the pool thread issues the sends
             let params_arrival = self.ps.send_params(&self.fabric, w, r, &self.theta);
             let finish = params_arrival + self.cfg.straggler.compute_time(w, self.worker_steps[w]);
             self.sim_clock.set_node_time(w, finish);
@@ -183,29 +213,48 @@ impl AsyncTrainDriver {
             self.worker_steps[w] += 1;
         }
         let mut reports = self.pool.step_workers(ids, r, lr);
-        let mut msgs = self.fabric.recv_all_timed(self.ps.leader);
-        msgs.sort_by_key(|(m, _)| m.src);
-        assert_eq!(msgs.len(), ids.len(), "dispatched frame missing");
-        for (msg, arrival) in msgs {
+        // collect each dispatched worker's per-shard frames from all the
+        // shard-leader inboxes; the worker's logical arrival is the max
+        // over its shard frames (the fold needs every slice). BTreeMap
+        // iteration is src-ordered, so scheduling stays deterministic.
+        let s_total = self.ps.num_shards();
+        // src -> (round, per-shard frames, latest shard arrival)
+        let mut per_worker = BTreeMap::new();
+        for (s, &leader) in self.ps.leaders.iter().enumerate() {
+            for (msg, arrival) in self.fabric.recv_all_timed(leader) {
+                if let Payload::Grad(frame) = msg.payload {
+                    let entry = per_worker
+                        .entry(msg.src)
+                        .or_insert_with(|| (msg.round, vec![None; s_total], 0.0));
+                    assert_eq!(entry.0, msg.round, "worker pushed mixed rounds");
+                    entry.1[s] = Some(frame);
+                    entry.2 = entry.2.max(arrival);
+                } else {
+                    panic!("non-gradient message in async gather");
+                }
+            }
+        }
+        assert_eq!(per_worker.len(), ids.len(), "dispatched frame missing");
+        for (src, (round, frames, arrival)) in per_worker {
             let idx = reports
                 .iter()
-                .position(|rep| rep.id == msg.src)
+                .position(|rep| rep.id == src)
                 .expect("report missing for dispatched worker");
             let report = reports.swap_remove(idx);
-            if let Payload::Grad(frame) = msg.payload {
-                self.queue.schedule(
-                    arrival,
-                    msg.src,
-                    Inflight {
-                        worker: msg.src,
-                        round: msg.round,
-                        frame,
-                        report,
-                    },
-                );
-            } else {
-                panic!("non-gradient message in async gather");
-            }
+            let frames: Vec<Encoded> = frames
+                .into_iter()
+                .map(|f| f.expect("missing shard frame for dispatched worker"))
+                .collect();
+            self.queue.schedule(
+                arrival,
+                src,
+                Inflight {
+                    worker: src,
+                    round,
+                    frames,
+                    report,
+                },
+            );
         }
     }
 
@@ -234,7 +283,9 @@ impl AsyncTrainDriver {
         batch.sort_by_key(|b| b.worker);
         let m = batch.len();
         self.staleness.record_fold(m);
-        let mut frames = Vec::with_capacity(m);
+        let s_total = self.ps.num_shards();
+        let mut frames_by_shard: Vec<Vec<Encoded>> =
+            (0..s_total).map(|_| Vec::with_capacity(m)).collect();
         let mut folded = Vec::with_capacity(m);
         let mut mean_loss = 0.0f64;
         let mut mean_err = 0.0f64;
@@ -253,19 +304,23 @@ impl AsyncTrainDriver {
             mean_phi += b.report.phi;
             self.in_pending[b.worker] = false;
             folded.push(b.worker);
-            frames.push(b.frame);
+            for (s, f) in b.frames.into_iter().enumerate() {
+                frames_by_shard[s].push(f);
+            }
         }
         mean_loss /= m as f64;
         mean_err /= m as f64;
         mean_phi /= m as f64;
         mean_stale /= m as f64;
 
-        let t_agg = std::time::Instant::now();
-        let agg = self
-            .cfg
-            .aggregation
-            .combine_frames(frames, self.theta.len(), &self.pool);
-        self.profile.record(t_agg.elapsed().as_secs_f64());
+        let (agg, shard_times) =
+            self.cfg
+                .aggregation
+                .combine_frames_sharded(frames_by_shard, &self.ps.plan, &self.pool);
+        // price the shard leaders' decode on the reported total (critical
+        // path = the slowest shard leader); see `leader_time_s` for why it
+        // never feeds the event schedule
+        self.leader_time_s += self.profile.record_shards(&shard_times);
         apply_update(
             self.cfg.update_rule,
             lr,
@@ -358,7 +413,10 @@ impl AsyncTrainDriver {
             traffic: self.fabric.stats(),
             rounds: self.round,
             profile: self.profile,
-            sim_time_s: self.sim_time,
+            // schedule time + the leaders' measured decode cost (the
+            // "leader compute is no longer free" pricing; kept out of the
+            // event schedule for thread-count determinism)
+            sim_time_s: self.sim_time + self.leader_time_s,
             staleness: self.staleness,
         }
     }
@@ -470,6 +528,28 @@ mod tests {
         assert_eq!(out.staleness.max_batch, 4);
         assert_eq!(out.staleness.stale_frames, 0);
         assert!((out.staleness.mean_batch() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_async_quorum_descends_and_respects_bound() {
+        let d = 48;
+        let steps = 40;
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(0.1),
+            straggler: lognormal(1.5),
+            shards: 3,
+            ..Default::default()
+        };
+        let out = AsyncTrainDriver::new(cfg, 2, 3, quadratic_workers(5, d), vec![1.0f32; d]).run();
+        assert_eq!(out.rounds, steps as u64);
+        assert!(out.staleness.max_staleness_seen <= 3);
+        // every fold priced all three shard leaders
+        assert_eq!(out.profile.per_shard_s.len(), 3);
+        // reported time = schedule + measured leader cost
+        assert!(out.sim_time_s > 0.0);
+        let losses = &out.recorder.get("train_loss").unwrap().values;
+        assert!(losses.last().unwrap() < &(losses.first().unwrap() * 0.5));
     }
 
     #[test]

@@ -12,10 +12,9 @@ use super::pool::{WorkerPool, WorkerState};
 use super::round::{LeaderProfile, LrSchedule, RoundClock, StalenessStats};
 use super::state::{CheckpointStore, Snapshot};
 use super::worker::Worker;
-use crate::collectives::ParameterServer;
-use crate::compress::wire;
+use crate::collectives::{ShardPlan, ShardedParameterServer};
 use crate::metrics::Recorder;
-use crate::net::{Fabric, LinkModel, Payload, SimClock, StragglerSchedule, TrafficStats};
+use crate::net::{Fabric, LinkModel, SimClock, StragglerSchedule, TrafficStats};
 use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
@@ -46,6 +45,11 @@ pub struct DriverConfig {
     pub straggler: StragglerSchedule,
     /// Worker-pool threads (clamped to 1..=workers; 1 = sequential).
     pub threads: usize,
+    /// Parameter-server shards: the model vector splits into this many
+    /// contiguous coordinate blocks, each with its own leader node
+    /// (clamped to 1..=d). 1 = the single-leader topology, byte-identical
+    /// to the historical engine.
+    pub shards: usize,
     pub log_every: usize,
     pub eval_every: usize,
     /// Save a checkpoint every N rounds (0 = never).
@@ -64,6 +68,7 @@ impl Default for DriverConfig {
             link: LinkModel::default(),
             straggler: StragglerSchedule::none(),
             threads: 1,
+            shards: 1,
             log_every: 0,
             eval_every: 0,
             checkpoint_every: 0,
@@ -81,8 +86,10 @@ pub struct TrainOutcome {
     /// Wall-clock profile of the leader's decode+aggregate hot path.
     pub profile: LeaderProfile,
     /// Total simulated (virtual-clock) time of the run: broadcast +
-    /// compute + gather per round for the sync driver, the leader's final
-    /// local time for the async driver.
+    /// compute + gather + the leaders' measured decode+aggregate critical
+    /// path per round for the sync driver; for the async driver, the
+    /// leader's final local time plus the accumulated leader decode cost
+    /// (kept out of the event schedule so it stays bit-deterministic).
     pub sim_time_s: f64,
     /// Bounded-staleness accounting (all-zero for synchronous runs).
     pub staleness: StalenessStats,
@@ -125,6 +132,34 @@ pub(crate) fn apply_update(
     }
 }
 
+/// Build the (possibly sharded) topology shared verbatim by the sync and
+/// async drivers: derive the shard plan (the plan's clamp to
+/// `1..=min(d, u16::MAX)` is the single source of truth for the effective
+/// shard count), re-partition the workers' compressor/EF state when
+/// sharded, and size the clock + fabric at `workers + shards` nodes. Kept
+/// in one place so the two engines can never desynchronize on layout —
+/// the async-degenerate-equals-sync contract depends on it.
+pub(crate) fn build_topology(
+    cfg: &DriverConfig,
+    workers: &mut [Worker],
+) -> (Arc<SimClock>, Arc<Fabric>, ShardedParameterServer) {
+    let d = workers[0].dim();
+    let plan = ShardPlan::new(d, cfg.shards);
+    let shards = plan.num_shards();
+    if shards > 1 {
+        // blockwise compressor/EF state; untouched for the single shard
+        // so the historical pipeline stays byte-identical
+        for w in workers.iter_mut() {
+            w.set_shard_plan(plan.clone());
+        }
+    }
+    let nodes = workers.len() + shards;
+    let sim_clock = Arc::new(SimClock::new(nodes));
+    let fabric = Arc::new(Fabric::with_clock(nodes, cfg.link, sim_clock.clone()));
+    let ps = ShardedParameterServer::new(&fabric, plan);
+    (sim_clock, fabric, ps)
+}
+
 /// Persist a snapshot to `dir` if checkpointing is configured (shared by
 /// the sync and async drivers).
 pub(crate) fn save_checkpoint(dir: Option<&std::path::Path>, snap: &Snapshot) {
@@ -142,7 +177,7 @@ pub struct TrainDriver {
     theta: Vec<f32>,
     fabric: Arc<Fabric>,
     sim_clock: Arc<SimClock>,
-    ps: ParameterServer,
+    ps: ShardedParameterServer,
     clock: RoundClock,
     momentum: Vec<f32>,
     wd_buf: Vec<f32>,
@@ -151,18 +186,12 @@ pub struct TrainDriver {
 }
 
 impl TrainDriver {
-    pub fn new(cfg: DriverConfig, workers: Vec<Worker>, theta0: Vec<f32>) -> Self {
+    pub fn new(cfg: DriverConfig, mut workers: Vec<Worker>, theta0: Vec<f32>) -> Self {
         assert!(!workers.is_empty());
         let d = workers[0].dim();
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
-        let sim_clock = Arc::new(SimClock::new(workers.len() + 1));
-        let fabric = Arc::new(Fabric::with_clock(
-            workers.len() + 1,
-            cfg.link,
-            sim_clock.clone(),
-        ));
-        let ps = ParameterServer::new(&fabric);
+        let (sim_clock, fabric, ps) = build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
         TrainDriver {
             momentum: vec![0.0; d],
@@ -199,7 +228,10 @@ impl TrainDriver {
 
     /// Total simulated time consumed so far (virtual clock): per round,
     /// the parameter broadcast, the slowest worker's compute (per the
-    /// straggler schedule), and its gradient push all happen in sequence.
+    /// straggler schedule), its gradient push, and the slowest shard
+    /// leader's measured decode+aggregate all happen in sequence. The
+    /// leader term closes the ROADMAP "async leader compute cost" gap:
+    /// leader decode is no longer free in simulated time.
     pub fn sim_time_s(&self) -> f64 {
         self.sim_time
     }
@@ -214,6 +246,7 @@ impl TrainDriver {
         let states = self.pool.export_states();
         Snapshot {
             round: self.clock.current(),
+            shards: self.ps.num_shards(),
             theta: self.theta.clone(),
             worker_errors: states.iter().map(|s| s.error.clone()).collect(),
             worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
@@ -221,8 +254,15 @@ impl TrainDriver {
     }
 
     /// Resume from a checkpoint: restores theta and per-worker EF state
-    /// (residual `e` and corrected gradient `p`).
+    /// (residual `e` and corrected gradient `p`). The snapshot must come
+    /// from the same shard plan — blockwise EF state is only meaningful on
+    /// the split it was trained with.
     pub fn restore(&mut self, snap: &Snapshot) {
+        assert_eq!(
+            snap.shards,
+            self.ps.num_shards(),
+            "checkpoint was trained with a different shard count"
+        );
         assert_eq!(snap.theta.len(), self.theta.len());
         assert_eq!(snap.worker_errors.len(), self.pool.n_workers());
         assert_eq!(snap.worker_corrected.len(), self.pool.n_workers());
@@ -255,9 +295,12 @@ impl TrainDriver {
         let lr = self.cfg.schedule.lr(step as usize) as f32;
         let n = self.pool.n_workers();
 
-        // 1. broadcast parameters (accounted; arrivals stamped from the
-        // leader's virtual time).
-        self.sim_clock.set_node_time(self.ps.leader, self.sim_time);
+        // 1. broadcast parameters from every shard leader (accounted;
+        // arrivals stamped from the leaders' shared virtual time — the
+        // sync engine keeps all shard leaders in lock-step).
+        for &l in &self.ps.leaders {
+            self.sim_clock.set_node_time(l, self.sim_time);
+        }
         let params_arrival = self.ps.broadcast_params(&self.fabric, step, &self.theta);
         // each worker's push departs once its (straggler-model) compute
         // finishes, so the frames the pool is about to send get stamped
@@ -268,36 +311,38 @@ impl TrainDriver {
         }
 
         // 2-3. pool: every worker drains its broadcast, computes, EF-
-        // compresses, and pushes its encoded frame to the leader.
+        // compresses, and pushes one encoded frame per shard leader.
         let reports = self.pool.round(step, lr);
         let mean_loss = reports.iter().map(|r| r.loss).sum::<f64>() / n as f64;
 
-        // 4. leader: gather, decode, aggregate, update. Messages are
-        // sorted by source so the f32 aggregation order is independent of
-        // thread scheduling; the per-frame decode then fans out across the
-        // pool threads in fixed worker-id groups (see
+        // 4. shard leaders: gather, decode, aggregate, update. Each shard
+        // sorts its frames by source so the f32 aggregation order is
+        // independent of thread scheduling; the per-frame decode then fans
+        // out across the pool threads in fixed worker-id groups (see
         // [`super::aggregate::decode_groups`]), fused straight into
         // partial-sum buffers — no dense `Vec<f32>` per worker.
-        let mut msgs = self.fabric.recv_all_timed(self.ps.leader);
-        msgs.sort_by_key(|(m, _)| m.src);
-        let mut frames: Vec<wire::Encoded> = Vec::with_capacity(n);
+        let s_total = self.ps.num_shards();
+        let mut frames_by_shard = Vec::with_capacity(s_total);
         let mut round_end = self.sim_time;
-        for (msg, arrival) in msgs {
-            debug_assert_eq!(msg.round, step, "stale push");
-            if let Payload::Grad(e) = msg.payload {
-                frames.push(e);
-                round_end = round_end.max(arrival);
-            }
+        for s in 0..s_total {
+            let (frames, latest) = self
+                .ps
+                .gather_shard_timed(&self.fabric, step, s)
+                .unwrap_or_else(|e| panic!("PS gather failed: {e}"));
+            round_end = round_end.max(latest);
+            frames_by_shard.push(frames);
         }
-        assert_eq!(frames.len(), n, "missing worker push");
-        // the synchronous barrier: the round ends when the last frame lands
-        self.sim_time = round_end;
-        let t_agg = std::time::Instant::now();
-        let agg = self
-            .cfg
-            .aggregation
-            .combine_frames(frames, self.theta.len(), &self.pool);
-        self.profile.record(t_agg.elapsed().as_secs_f64());
+        // the synchronous barrier: every shard has every frame
+        let (agg, shard_times) =
+            self.cfg
+                .aggregation
+                .combine_frames_sharded(frames_by_shard, &self.ps.plan, &self.pool);
+        // leader compute is priced on the virtual clock: the shard leaders
+        // decode concurrently in the simulated deployment, so the round is
+        // extended by the slowest one (max over shards = the critical path
+        // the sharding shrinks)
+        let critical = self.profile.record_shards(&shard_times);
+        self.sim_time = round_end + critical;
 
         apply_update(
             self.cfg.update_rule,
@@ -480,17 +525,24 @@ mod tests {
             ..Default::default()
         };
         let out = TrainDriver::new(cfg, workers, vec![1.0f32; d]).run();
-        // per round: params broadcast + constant compute + sign push, in
-        // sequence on the virtual clock
+        // per round: params broadcast + constant compute + sign push + the
+        // leader's measured decode+aggregate, in sequence on the virtual
+        // clock. The comm terms are analytic; the leader term is exactly
+        // the profiled critical path, so subtracting it must recover the
+        // link-model arithmetic.
         let t_params = link.transfer_time(32 * d as u64 + FRAME_OVERHEAD_BITS);
         let t_push = link.transfer_time(d as u64 + 32 + FRAME_OVERHEAD_BITS);
         let expect = steps as f64 * (t_params + base + t_push);
+        let comm_time = out.sim_time_s - out.profile.critical_s;
         assert!(
-            (out.sim_time_s - expect).abs() < 1e-9 * expect,
-            "sim {} vs expect {}",
-            out.sim_time_s,
+            (comm_time - expect).abs() < 1e-9 * expect,
+            "sim-minus-leader {} vs expect {}",
+            comm_time,
             expect
         );
+        // the leader's decode genuinely consumed simulated time
+        assert!(out.profile.critical_s > 0.0);
+        assert!(out.sim_time_s > expect);
         // satellite: the traffic layer's per-kind simulated time must
         // equal the same link-model arithmetic, message by message
         let push_total = out.traffic.sim_time_of_kind(crate::net::MessageKind::GradPush);

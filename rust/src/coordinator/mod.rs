@@ -33,6 +33,21 @@
 //! one partial-sum buffer (`wire::decode_any_add`), so aggregation never
 //! materializes a dense `Vec<f32>` per worker.
 //!
+//! # Sharded parameter server
+//!
+//! With `DriverConfig::shards = S > 1` (CLI `--shards`) the model vector
+//! splits into `S` contiguous coordinate blocks
+//! ([`crate::collectives::ShardPlan`]), each with its own leader node on
+//! the fabric. Workers run blockwise error feedback (one compressor + EF
+//! residual per shard, per-shard scales/norms) and push one tagged wire
+//! frame per shard; each shard leader decodes and aggregates only its
+//! slice, and the broadcast returns per-shard parameter slices the
+//! workers reassemble. The leaders' measured decode+aggregate time is
+//! charged on the virtual clock as the max over shards — the critical
+//! path sharding shrinks. `--shards 1` is byte-identical to the
+//! historical single-leader engine; any `(shards, threads)` combination
+//! is bit-deterministic. Full topology + timing model: `docs/SHARDING.md`.
+//!
 //! # Determinism guarantee
 //!
 //! For a fixed seed, the trained parameters, every worker's EF residual,

@@ -22,7 +22,7 @@
 //! `threads_are_bit_deterministic` integration test.
 
 use super::worker::Worker;
-use crate::collectives::ParameterServer;
+use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::{self, Encoded};
 use crate::net::Fabric;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -100,12 +100,25 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Move `workers` onto `threads` actor threads (clamped to
-    /// `1..=workers.len()`), all sharing `fabric` for communication.
+    /// `1..=workers.len()`), all sharing `fabric` for communication. The
+    /// parameter-server topology (including the shard count) is derived
+    /// from the workers' shared [`crate::collectives::ShardPlan`]; the
+    /// fabric must be sized `workers + shards`.
     pub fn spawn(workers: Vec<Worker>, fabric: Arc<Fabric>, threads: usize) -> WorkerPool {
         let n_workers = workers.len();
         assert!(n_workers > 0, "pool needs at least one worker");
+        let plan = workers[0].shard_plan().clone();
+        assert!(
+            workers.iter().all(|w| w.shard_plan() == &plan),
+            "workers disagree on the shard plan"
+        );
         let threads = threads.clamp(1, n_workers);
-        let ps = ParameterServer::new(&fabric);
+        let ps = ShardedParameterServer::new(&fabric, plan);
+        assert_eq!(
+            ps.workers.len(),
+            n_workers,
+            "fabric sized for a different worker count (need workers + shards nodes)"
+        );
         let (reply_tx, reply_rx) = channel();
 
         // Contiguous block assignment: thread t owns workers
@@ -348,19 +361,22 @@ impl Drop for WorkerPool {
 fn actor_loop(
     mut workers: Vec<Worker>,
     fabric: Arc<Fabric>,
-    ps: ParameterServer,
+    ps: ShardedParameterServer,
     rx: Receiver<Command>,
     tx: Sender<Reply>,
 ) {
+    // reused parameter assembly buffer (per-shard slices scatter into it)
+    let mut params: Vec<f32> = Vec::new();
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Command::Round { round, lr } => {
                 for w in workers.iter_mut() {
-                    let params = ps
-                        .recv_params(&fabric, w.id)
-                        .expect("parameter broadcast missing for worker");
-                    let enc = w.step_encode(&params, lr);
-                    ps.push_grad(&fabric, w.id, round, enc);
+                    assert!(
+                        ps.recv_params_into(&fabric, w.id, &mut params),
+                        "parameter broadcast missing for worker"
+                    );
+                    let frames = w.step_encode_sharded(&params, lr);
+                    ps.push_frames(&fabric, w.id, round, frames);
                     let report = RoundReport {
                         id: w.id,
                         loss: w.last_loss,
@@ -378,11 +394,12 @@ fn actor_loop(
                     .iter_mut()
                     .find(|w| w.id == worker)
                     .expect("step routed to wrong pool thread");
-                let params = ps
-                    .recv_params(&fabric, w.id)
-                    .expect("parameter message missing for stepped worker");
-                let enc = w.step_encode(&params, lr);
-                ps.push_grad(&fabric, w.id, round, enc);
+                assert!(
+                    ps.recv_params_into(&fabric, w.id, &mut params),
+                    "parameter message missing for stepped worker"
+                );
+                let frames = w.step_encode_sharded(&params, lr);
+                ps.push_frames(&fabric, w.id, round, frames);
                 let report = RoundReport {
                     id: w.id,
                     loss: w.last_loss,
@@ -407,12 +424,14 @@ fn actor_loop(
             }
             Command::Export => {
                 for w in &workers {
-                    let ef = w.ef_state();
+                    // full-length tensors regardless of the shard plan:
+                    // contiguous shards concatenate, so the checkpoint
+                    // layout is plan-independent
                     let state = WorkerState {
                         id: w.id,
-                        steps: ef.steps(),
-                        error: ef.error().to_vec(),
-                        corrected: ef.corrected().to_vec(),
+                        steps: w.steps(),
+                        error: w.export_error(),
+                        corrected: w.export_corrected(),
                     };
                     if tx.send(Reply::Export(state)).is_err() {
                         return;
@@ -445,7 +464,7 @@ fn actor_loop(
             Command::Restore { states } => {
                 for w in workers.iter_mut() {
                     if let Some(s) = states.iter().find(|s| s.id == w.id) {
-                        w.ef_state_mut().set_state(s.steps, &s.error, &s.corrected);
+                        w.restore_ef_state(s.steps, &s.error, &s.corrected);
                     }
                 }
                 if tx.send(Reply::Restored).is_err() {
@@ -460,6 +479,7 @@ fn actor_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::ParameterServer;
     use crate::config::CompressorKind;
     use crate::coordinator::worker::{ObjectiveSource, WorkerMode};
     use crate::model::toy::SparseNoiseQuadratic;
@@ -615,6 +635,39 @@ mod tests {
         let mut srcs: Vec<usize> = msgs.iter().map(|m| m.src).collect();
         srcs.sort_unstable();
         assert_eq!(srcs, vec![0, 3, 4]);
+    }
+
+    #[test]
+    fn sharded_round_pushes_one_frame_per_shard() {
+        use crate::collectives::{ShardPlan, ShardedParameterServer};
+        let d = 33;
+        let n = 3;
+        let shards = 2;
+        let mut workers = make_workers(n, d);
+        let plan = ShardPlan::new(d, shards);
+        for w in workers.iter_mut() {
+            w.set_shard_plan(plan.clone());
+        }
+        let fabric = Arc::new(Fabric::new(n + shards, LinkModel::default()));
+        let pool = WorkerPool::spawn(workers, fabric.clone(), 2);
+        let ps = ShardedParameterServer::new(&fabric, plan.clone());
+        ps.broadcast_params(&fabric, 0, &vec![1.0f32; d]);
+        let reports = pool.round(0, 0.1);
+        assert_eq!(reports.len(), n);
+        for s in 0..shards {
+            let (frames, _latest) = ps.gather_shard_timed(&fabric, 0, s).unwrap();
+            assert_eq!(frames.len(), n);
+            assert!(frames.iter().all(|e| e.d == plan.len_of(s)));
+            assert!(frames
+                .iter()
+                .all(|e| e.shard.map(|t| t.shard as usize) == Some(s)));
+        }
+        // exported EF state is full-length regardless of the shard plan
+        let states = pool.export_states();
+        assert!(states
+            .iter()
+            .all(|st| st.error.len() == d && st.corrected.len() == d));
+        assert!(states.iter().all(|st| st.steps == 1));
     }
 
     #[test]

@@ -38,29 +38,74 @@ impl LrSchedule {
 
 /// Leader hot-path profile: wall-clock spent in the gather → decode →
 /// aggregate section, accumulated across rounds. This is the serial
-/// chokepoint the parallel decode fan-out attacks, so the driver keeps an
-/// exact running account of it; `bench_leader` serializes it into
-/// `BENCH_leader.json` to track the perf trajectory across PRs.
+/// chokepoint the parallel decode fan-out and the sharded parameter
+/// server attack, so the driver keeps an exact running account of it;
+/// `bench_leader` / `bench_shard` serialize it into `results/BENCH_*.json`
+/// to track the perf trajectory across PRs.
+///
+/// Under a sharded parameter server each shard leader is profiled
+/// separately: `decode_agg_s` stays the *total* CPU cost over all shard
+/// leaders, while `critical_s` is the simulated-deployment critical path
+/// (the slowest shard leader per round, summed over rounds) — the
+/// quantity the driver charges on the virtual clock. For a single shard
+/// the two are identical.
 #[derive(Clone, Debug, Default)]
 pub struct LeaderProfile {
-    /// Total seconds spent decoding + aggregating worker frames.
+    /// Total seconds spent decoding + aggregating worker frames, summed
+    /// over every shard leader.
     pub decode_agg_s: f64,
+    /// Per-round max-over-shard-leaders decode+aggregate time, summed
+    /// over rounds (== `decode_agg_s` when there is one shard).
+    pub critical_s: f64,
+    /// Total decode+aggregate seconds per shard leader (one entry per
+    /// shard; a single entry when unsharded).
+    pub per_shard_s: Vec<f64>,
     /// Rounds accounted.
     pub rounds: u64,
 }
 
 impl LeaderProfile {
+    /// Account one unsharded round.
     pub fn record(&mut self, seconds: f64) {
-        self.decode_agg_s += seconds;
-        self.rounds += 1;
+        self.record_shards(&[seconds]);
     }
 
-    /// Mean decode+aggregate seconds per round.
+    /// Account one round's per-shard-leader decode+aggregate times.
+    /// Returns the round's critical path (the slowest shard leader) — the
+    /// quantity the drivers charge on the virtual clock, computed here
+    /// once so the clock and the profile can never disagree.
+    pub fn record_shards(&mut self, times: &[f64]) -> f64 {
+        debug_assert!(!times.is_empty());
+        if self.per_shard_s.len() < times.len() {
+            self.per_shard_s.resize(times.len(), 0.0);
+        }
+        let mut slowest = 0.0f64;
+        for (s, t) in times.iter().enumerate() {
+            self.decode_agg_s += *t;
+            self.per_shard_s[s] += *t;
+            slowest = slowest.max(*t);
+        }
+        self.critical_s += slowest;
+        self.rounds += 1;
+        slowest
+    }
+
+    /// Mean decode+aggregate seconds per round (total over shard leaders).
     pub fn mean_round_s(&self) -> f64 {
         if self.rounds == 0 {
             0.0
         } else {
             self.decode_agg_s / self.rounds as f64
+        }
+    }
+
+    /// Mean per-round critical path — the slowest shard leader's
+    /// decode+aggregate time — in seconds.
+    pub fn mean_critical_s(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.critical_s / self.rounds as f64
         }
     }
 
@@ -191,6 +236,27 @@ mod tests {
         assert_eq!(p.rounds, 2);
         assert!((p.mean_round_s() - 0.5).abs() < 1e-12);
         assert!((p.rounds_per_sec() - 2.0).abs() < 1e-12);
+        // unsharded rounds: critical path == total
+        assert!((p.critical_s - p.decode_agg_s).abs() < 1e-12);
+        assert_eq!(p.per_shard_s.len(), 1);
+    }
+
+    #[test]
+    fn leader_profile_sharded_tracks_critical_path() {
+        let mut p = LeaderProfile::default();
+        // record_shards hands back each round's critical path
+        assert!((p.record_shards(&[0.1, 0.4, 0.2]) - 0.4).abs() < 1e-12);
+        assert!((p.record_shards(&[0.3, 0.1, 0.2]) - 0.3).abs() < 1e-12);
+        assert_eq!(p.rounds, 2);
+        // total CPU = sum over all shard leaders
+        assert!((p.decode_agg_s - 1.3).abs() < 1e-12);
+        // critical path = per-round max, summed: 0.4 + 0.3
+        assert!((p.critical_s - 0.7).abs() < 1e-12);
+        assert!((p.mean_critical_s() - 0.35).abs() < 1e-12);
+        assert_eq!(p.per_shard_s.len(), 3);
+        assert!((p.per_shard_s[0] - 0.4).abs() < 1e-12);
+        assert!((p.per_shard_s[1] - 0.5).abs() < 1e-12);
+        assert!((p.per_shard_s[2] - 0.4).abs() < 1e-12);
     }
 
     #[test]

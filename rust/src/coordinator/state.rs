@@ -86,8 +86,15 @@ fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, CheckpointError> {
 /// A full coordinator snapshot.
 pub struct Snapshot {
     pub round: u64,
+    /// Parameter-server shard count the run was trained with. Blockwise
+    /// EF state only restores losslessly onto the same shard plan (the
+    /// plan is a pure function of `(d, shards)`), so the driver's restore
+    /// path checks this. Checkpoints written before sharding existed load
+    /// as 1.
+    pub shards: usize,
     pub theta: Vec<f32>,
-    /// Per-worker EF residuals `e_t`.
+    /// Per-worker EF residuals `e_t` (full-length: contiguous shards
+    /// concatenate, so the tensor layout is plan-independent).
     pub worker_errors: Vec<Vec<f32>>,
     /// Per-worker corrected gradients `p_t = γg + e` of the last completed
     /// round (what the scaled-sign wire encoder reads for its ‖p‖₁/d
@@ -118,6 +125,7 @@ impl CheckpointStore {
         }
         let meta = obj(vec![
             ("round", num(snap.round as f64)),
+            ("shards", num(snap.shards as f64)),
             ("d", num(snap.theta.len() as f64)),
             ("workers", num(snap.worker_errors.len() as f64)),
             ("format", s(CHECKPOINT_FORMAT)),
@@ -150,6 +158,9 @@ impl CheckpointStore {
             .and_then(|v| v.as_usize())
             .ok_or_else(|| CheckpointError::Corrupt("missing workers".into()))?;
         let round = meta.get("round").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        // checkpoints from before the sharded parameter server carry no
+        // shard count; they were trained single-leader
+        let shards = meta.get("shards").and_then(|v| v.as_usize()).unwrap_or(1);
         let theta = read_f32(&self.dir.join("theta.f32"), d)?;
         let worker_errors = (0..workers)
             .map(|w| read_f32(&self.dir.join(format!("error_{w}.f32")), d))
@@ -159,6 +170,7 @@ impl CheckpointStore {
             .collect::<Result<Vec<_>, _>>()?;
         Ok(Snapshot {
             round,
+            shards,
             theta,
             worker_errors,
             worker_corrected,
@@ -187,6 +199,7 @@ mod tests {
         assert!(!store.exists());
         let snap = Snapshot {
             round: 42,
+            shards: 4,
             theta: vec![1.0, -2.0, 3.0],
             worker_errors: vec![vec![0.1, 0.2, 0.3], vec![-0.1, 0.0, 0.5]],
             worker_corrected: vec![vec![1.1, 1.2, 1.3], vec![-1.1, 0.0, -0.5]],
@@ -195,6 +208,7 @@ mod tests {
         assert!(store.exists());
         let loaded = store.load().unwrap();
         assert_eq!(loaded.round, 42);
+        assert_eq!(loaded.shards, 4);
         assert_eq!(loaded.theta, snap.theta);
         assert_eq!(loaded.worker_errors, snap.worker_errors);
         assert_eq!(loaded.worker_corrected, snap.worker_corrected);
@@ -207,6 +221,7 @@ mod tests {
         let store = CheckpointStore::new(&dir).unwrap();
         let snap = Snapshot {
             round: 1,
+            shards: 1,
             theta: vec![1.0; 8],
             worker_errors: vec![vec![0.0; 8]],
             worker_corrected: vec![vec![0.0; 8]],
@@ -227,6 +242,7 @@ mod tests {
         let store = CheckpointStore::new(&dir).unwrap();
         let snap = Snapshot {
             round: 2,
+            shards: 1,
             theta: vec![1.0; 4],
             worker_errors: vec![vec![0.0; 4]],
             worker_corrected: vec![vec![0.0; 4]],
@@ -251,6 +267,30 @@ mod tests {
             }
             other => panic!("expected Corrupt, got {other:?}"),
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_without_shards_loads_as_single_leader() {
+        let dir = tmpdir("noshard");
+        let store = CheckpointStore::new(&dir).unwrap();
+        let snap = Snapshot {
+            round: 3,
+            shards: 2,
+            theta: vec![1.0; 4],
+            worker_errors: vec![vec![0.0; 4]],
+            worker_corrected: vec![vec![0.0; 4]],
+        };
+        store.save(&snap).unwrap();
+        // rewrite meta without the shards key (a pre-sharding checkpoint)
+        let meta = obj(vec![
+            ("round", num(3.0)),
+            ("d", num(4.0)),
+            ("workers", num(1.0)),
+            ("format", s(CHECKPOINT_FORMAT)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string_compact()).unwrap();
+        assert_eq!(store.load().unwrap().shards, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,6 +1,14 @@
 //! The worker: owns a data shard (through its [`GradSource`]), its
 //! error-feedback state, and the wire encoding of its updates.
+//!
+//! Under a sharded parameter server (`collectives::shard`) the worker's
+//! compression pipeline partitions by coordinate blocks: one compressor +
+//! EF residual per shard, per-shard scales/norms, and one tagged wire
+//! frame per shard (blockwise error feedback, Zheng et al. 2019). The
+//! single-shard plan reproduces the historical full-vector pipeline byte
+//! for byte.
 
+use crate::collectives::ShardPlan;
 use crate::compress::wire::{self, Encoded};
 use crate::compress::{self, ErrorFeedback};
 use crate::config::CompressorKind;
@@ -71,13 +79,37 @@ pub enum WorkerMode {
     SignVote,
 }
 
+/// Build the EF state (compressor + residual) for one coordinate block.
+fn build_ef(
+    mode: WorkerMode,
+    kind: CompressorKind,
+    d: usize,
+    k_frac: usize,
+    qsgd_levels: u32,
+) -> ErrorFeedback {
+    let compressor = match mode {
+        WorkerMode::DenseGrad => compress::build(CompressorKind::None, d, k_frac, qsgd_levels),
+        WorkerMode::SignVote => compress::build(CompressorKind::Sign, d, k_frac, qsgd_levels),
+        _ => compress::build(kind, d, k_frac, qsgd_levels),
+    };
+    if mode == WorkerMode::ErrorFeedback {
+        ErrorFeedback::new(d, compressor)
+    } else {
+        ErrorFeedback::disabled(d, compressor)
+    }
+}
+
 /// One worker's full per-round pipeline.
 pub struct Worker {
     pub id: usize,
     pub mode: WorkerMode,
     source: Box<dyn GradSource>,
-    ef: ErrorFeedback,
+    /// One EF state per parameter-server shard (a single entry when
+    /// unsharded); entry `s` covers `plan.range(s)` of the model vector.
+    efs: Vec<ErrorFeedback>,
+    plan: ShardPlan,
     kind: CompressorKind,
+    k_frac: usize,
     qsgd_levels: u32,
     rng: Pcg64,
     grad_buf: Vec<f32>,
@@ -99,23 +131,16 @@ impl Worker {
         mut rng: Pcg64,
     ) -> Self {
         let d = source.dim();
-        let compressor = match mode {
-            WorkerMode::DenseGrad => compress::build(CompressorKind::None, d, k_frac, qsgd_levels),
-            WorkerMode::SignVote => compress::build(CompressorKind::Sign, d, k_frac, qsgd_levels),
-            _ => compress::build(kind, d, k_frac, qsgd_levels),
-        };
-        let ef = if mode == WorkerMode::ErrorFeedback {
-            ErrorFeedback::new(d, compressor)
-        } else {
-            ErrorFeedback::disabled(d, compressor)
-        };
+        let ef = build_ef(mode, kind, d, k_frac, qsgd_levels);
         let _ = rng.next_u64(); // decorrelate stream from the id-seed
         Worker {
             id,
             mode,
             source,
-            ef,
+            efs: vec![ef],
+            plan: ShardPlan::single(d),
             kind,
+            k_frac,
             qsgd_levels,
             rng,
             grad_buf: vec![0.0; d],
@@ -130,16 +155,99 @@ impl Worker {
         self.grad_buf.len()
     }
 
-    pub fn error_norm(&self) -> f64 {
-        self.ef.error_norm()
+    /// The shard plan this worker's compression pipeline is partitioned on.
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.plan
     }
 
+    /// Re-partition the compressor + EF state onto `plan`'s coordinate
+    /// shards (blockwise error feedback). Only valid before the first
+    /// step: residuals are all-zero then, so no state is lost by
+    /// re-slicing. Top-k/random-k keep counts and QSGD/sign scales become
+    /// per-shard quantities from here on.
+    pub fn set_shard_plan(&mut self, plan: ShardPlan) {
+        assert_eq!(plan.dim(), self.dim(), "shard plan dim mismatch");
+        assert!(
+            self.efs.iter().all(|ef| ef.steps() == 0),
+            "cannot re-shard a worker that has already stepped"
+        );
+        let mut efs = Vec::with_capacity(plan.num_shards());
+        for s in 0..plan.num_shards() {
+            let mut ef = build_ef(
+                self.mode,
+                self.kind,
+                plan.len_of(s),
+                self.k_frac,
+                self.qsgd_levels,
+            );
+            // phi(p) is recombined across shards by step_compress; skip
+            // the per-shard density pass inside each EF step
+            if plan.num_shards() > 1 {
+                ef.set_track_density(false);
+            }
+            efs.push(ef);
+        }
+        self.efs = efs;
+        self.plan = plan;
+    }
+
+    /// ℓ₂ norm of the full EF residual (recombined across shards).
+    pub fn error_norm(&self) -> f64 {
+        if self.efs.len() == 1 {
+            return self.efs[0].error_norm();
+        }
+        self.efs
+            .iter()
+            .map(|ef| crate::tensor::norm2_sq(ef.error()))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// EF steps taken (identical across this worker's shard states).
+    pub fn steps(&self) -> u64 {
+        self.efs[0].steps()
+    }
+
+    /// Full-length EF residual `e` — shards are contiguous, so per-shard
+    /// residuals concatenate to the model-length vector.
+    pub fn export_error(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dim());
+        for ef in &self.efs {
+            out.extend_from_slice(ef.error());
+        }
+        out
+    }
+
+    /// Full-length corrected gradient `p` of the last completed step.
+    pub fn export_corrected(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dim());
+        for ef in &self.efs {
+            out.extend_from_slice(ef.corrected());
+        }
+        out
+    }
+
+    /// Restore EF state from full-length vectors (the checkpoint path);
+    /// each shard takes its slice.
+    pub fn restore_ef_state(&mut self, steps: u64, error: &[f32], corrected: &[f32]) {
+        assert_eq!(error.len(), self.dim(), "residual dim mismatch");
+        assert_eq!(corrected.len(), self.dim(), "corrected dim mismatch");
+        for s in 0..self.efs.len() {
+            let r = self.plan.range(s);
+            self.efs[s].set_state(steps, &error[r.clone()], &corrected[r]);
+        }
+    }
+
+    /// The single-shard EF state (panics when sharded — use the
+    /// export/restore helpers, which work for any plan).
     pub fn ef_state(&self) -> &ErrorFeedback {
-        &self.ef
+        assert_eq!(self.efs.len(), 1, "ef_state() on a sharded worker");
+        &self.efs[0]
     }
 
     pub fn ef_state_mut(&mut self) -> &mut ErrorFeedback {
-        &mut self.ef
+        assert_eq!(self.efs.len(), 1, "ef_state_mut() on a sharded worker");
+        &mut self.efs[0]
     }
 
     pub fn source_mut(&mut self) -> &mut dyn GradSource {
@@ -147,8 +255,32 @@ impl Worker {
     }
 
     /// Run one round: compute gradient at `theta`, compress (per mode),
-    /// return the encoded wire message.
+    /// return the encoded wire message. Single-shard workers only; the
+    /// sharded pipeline is [`step_encode_sharded`](Self::step_encode_sharded).
     pub fn step_encode(&mut self, theta: &[f32], gamma: f32) -> Encoded {
+        assert_eq!(
+            self.plan.num_shards(),
+            1,
+            "sharded workers push one frame per shard: use step_encode_sharded"
+        );
+        self.step_compress(theta, gamma);
+        self.encode_shard(0)
+    }
+
+    /// Run one round under the sharded parameter server: compute the
+    /// gradient once, then per shard run Algorithm 2 on the slice and
+    /// encode one (tagged) wire frame. Returns the frames in shard order.
+    /// With a single-shard plan this is exactly [`step_encode`] in a vec.
+    pub fn step_encode_sharded(&mut self, theta: &[f32], gamma: f32) -> Vec<Encoded> {
+        self.step_compress(theta, gamma);
+        (0..self.plan.num_shards())
+            .map(|s| self.encode_shard(s))
+            .collect()
+    }
+
+    /// Gradient + per-shard EF compression for one round (shared by the
+    /// sharded and unsharded encode paths).
+    fn step_compress(&mut self, theta: &[f32], gamma: f32) {
         self.last_loss = self.source.grad(theta, &mut self.grad_buf);
         self.last_grad_density = crate::tensor::density(&self.grad_buf);
         // DenseGrad/SignVote push the raw (γ-free) transform of g.
@@ -156,31 +288,67 @@ impl Worker {
             WorkerMode::DenseGrad | WorkerMode::SignVote => 1.0,
             _ => gamma,
         };
-        self.last_phi =
-            self.ef
-                .step_into(step_gamma, &self.grad_buf, &mut self.delta_buf, &mut self.rng);
-        self.encode()
+        if self.efs.len() == 1 {
+            // single-shard fast path: byte-identical to the historical
+            // full-vector step
+            self.last_phi = self.efs[0].step_into(
+                step_gamma,
+                &self.grad_buf,
+                &mut self.delta_buf,
+                &mut self.rng,
+            );
+            return;
+        }
+        // blockwise EF: each shard runs Algorithm 2 lines 5-8 on its own
+        // coordinate slice (per-shard scales and norms). The worker RNG is
+        // consumed in shard order, so the stream is a pure function of the
+        // plan. phi(p) is recombined from the per-shard L1/L2 sums so it
+        // still describes the full corrected gradient.
+        let mut l1 = 0.0f64;
+        let mut l2 = 0.0f64;
+        for s in 0..self.efs.len() {
+            let r = self.plan.range(s);
+            let _ = self.efs[s].step_into(
+                step_gamma,
+                &self.grad_buf[r.clone()],
+                &mut self.delta_buf[r],
+                &mut self.rng,
+            );
+            let (sl1, sl2) = crate::tensor::norm1_norm2_sq(self.efs[s].corrected());
+            l1 += sl1;
+            l2 += sl2;
+        }
+        self.last_phi = if l2 == 0.0 {
+            1.0
+        } else {
+            l1 * l1 / (self.dim() as f64 * l2)
+        };
     }
 
-    /// Pick the wire format matching the compressor semantics.
-    fn encode(&self) -> Encoded {
-        match self.mode {
-            WorkerMode::DenseGrad => wire::encode_dense(&self.delta_buf),
-            WorkerMode::SignVote => wire::encode_scaled_sign(&self.delta_buf),
+    /// Encode shard `s`'s delta with the wire format matching the
+    /// compressor semantics; sharded frames carry the 48-bit shard tag,
+    /// single-shard frames stay untagged (the historical wire format).
+    fn encode_shard(&self, s: usize) -> Encoded {
+        let r = self.plan.range(s);
+        let delta = &self.delta_buf[r.clone()];
+        let ef = &self.efs[s];
+        let enc = match self.mode {
+            WorkerMode::DenseGrad => wire::encode_dense(delta),
+            WorkerMode::SignVote => wire::encode_scaled_sign(delta),
             _ => match self.kind {
-                CompressorKind::ScaledSign => wire::encode_scaled_sign(self.ef.corrected()),
-                CompressorKind::Sign => wire::encode_scaled_sign(&self.delta_buf),
-                CompressorKind::TopK | CompressorKind::RandomK => {
-                    wire::encode_sparse(&self.delta_buf)
-                }
-                CompressorKind::TernGrad => wire::encode_ternary(&self.delta_buf),
+                CompressorKind::ScaledSign => wire::encode_scaled_sign(ef.corrected()),
+                CompressorKind::Sign => wire::encode_scaled_sign(delta),
+                CompressorKind::TopK | CompressorKind::RandomK => wire::encode_sparse(delta),
+                CompressorKind::TernGrad => wire::encode_ternary(delta),
                 // QSGD travels as the Elias-gamma level pack. The codec
                 // needs the exact f32 norm the quantizer used; that is
                 // ‖p‖₂ of the error-corrected gradient the compressor saw
-                // (`corrected()` is valid in both EF and plain modes).
+                // (`corrected()` is valid in both EF and plain modes) —
+                // per shard, because the shard's quantizer only ever saw
+                // its own slice.
                 CompressorKind::Qsgd => {
-                    let norm = crate::tensor::norm2(self.ef.corrected()) as f32;
-                    let enc = wire::encode_qsgd(&self.delta_buf, norm, self.qsgd_levels);
+                    let norm = crate::tensor::norm2(ef.corrected()) as f32;
+                    let enc = wire::encode_qsgd(delta, norm, self.qsgd_levels);
                     // The pack reconstructs levels by dividing the delta
                     // back out by `norm`, which is only exact because the
                     // quantizer computed the identical `norm2(p) as f32`
@@ -189,14 +357,19 @@ impl Worker {
                     // where drift would otherwise corrupt training silently.
                     debug_assert!(
                         wire::decode_qsgd(&enc)
-                            .map(|dec| dec == self.delta_buf)
+                            .map(|dec| dec == delta)
                             .unwrap_or(false),
                         "qsgd wire pack is not bit-faithful to the quantized delta"
                     );
                     enc
                 }
-                CompressorKind::None => wire::encode_dense(&self.delta_buf),
+                CompressorKind::None => wire::encode_dense(delta),
             },
+        };
+        if self.plan.num_shards() == 1 {
+            enc
+        } else {
+            enc.with_shard(s as u16, r.start as u32)
         }
     }
 

@@ -147,6 +147,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(t) = args.opt_usize("threads") {
         cfg.threads = t;
     }
+    if let Some(s) = args.opt_usize("shards") {
+        if s == 0 {
+            bail!("--shards must be >= 1");
+        }
+        cfg.shards = s;
+    }
     if let Some(s) = args.opt_usize("steps") {
         cfg.steps = s;
     }
@@ -180,10 +186,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     log::info!(
-        "train: model={} workers={} threads={} steps={} lr={} compressor={} ef={} async={}",
+        "train: model={} workers={} threads={} shards={} steps={} lr={} compressor={} ef={} async={}",
         cfg.model,
         cfg.workers,
         cfg.threads,
+        cfg.shards,
         cfg.steps,
         cfg.lr,
         cfg.compressor.name(),
@@ -264,6 +271,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         link,
         straggler: StragglerSchedule::new(cfg.compute_ms * 1e-3, straggler_model, cfg.seed),
         threads: cfg.threads.max(1),
+        shards: cfg.shards.max(1),
         log_every: cfg.log_every.max(1),
         eval_every: cfg.eval_every,
         ..Default::default()
@@ -278,6 +286,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("\n== training summary ==");
     println!("  rounds:        {}", outcome.rounds);
     println!("  sim time:      {:.4} s (virtual clock)", outcome.sim_time_s);
+    // report the *effective* shard count (the plan clamps --shards to
+    // 1..=min(d, 65535)), read back from the per-shard profile
+    println!(
+        "  leader:        {:.4} ms/round decode+agg critical path over {} shard(s)",
+        outcome.profile.mean_critical_s() * 1e3,
+        outcome.profile.per_shard_s.len().max(1)
+    );
     if cfg.async_mode {
         println!(
             "  staleness:     mean {:.2} rounds, {:.1}% stale frames, mean batch {:.1}/{} (quorum {}, bound {})",

@@ -13,6 +13,10 @@ pub struct TrafficStats {
     pub per_kind: BTreeMap<MessageKind, u64>,
     /// Message count per kind.
     pub msg_count: BTreeMap<MessageKind, u64>,
+    /// Total bits per parameter-server shard (messages whose payload
+    /// carries a shard id: sharded grad pushes and parameter slices).
+    /// Empty for unsharded runs.
+    pub per_shard: BTreeMap<u32, u64>,
     /// Simulated busy-time per node (seconds of link occupancy).
     pub node_time_s: BTreeMap<usize, f64>,
     /// Total simulated transfer time per message kind (seconds).
@@ -28,11 +32,13 @@ pub struct TrafficStats {
 }
 
 impl TrafficStats {
+    #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
         src: usize,
         dst: usize,
         kind: MessageKind,
+        shard: Option<u32>,
         bits: u64,
         time_s: f64,
         arrival_s: f64,
@@ -40,6 +46,9 @@ impl TrafficStats {
         *self.per_link.entry((src, dst)).or_default() += bits;
         *self.per_kind.entry(kind).or_default() += bits;
         *self.msg_count.entry(kind).or_default() += 1;
+        if let Some(s) = shard {
+            *self.per_shard.entry(s).or_default() += bits;
+        }
         *self.node_time_s.entry(src).or_default() += time_s;
         *self.node_time_s.entry(dst).or_default() += time_s;
         *self.sim_time_per_kind.entry(kind).or_default() += time_s;
@@ -71,6 +80,12 @@ impl TrafficStats {
 
     pub fn bits_of_kind(&self, kind: MessageKind) -> u64 {
         self.per_kind.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Total bits attributed to one parameter-server shard (0 if the run
+    /// was unsharded or the shard saw no traffic).
+    pub fn bits_of_shard(&self, shard: u32) -> u64 {
+        self.per_shard.get(&shard).copied().unwrap_or(0)
     }
 
     /// Number of messages of `kind` seen so far.
@@ -141,9 +156,9 @@ mod tests {
     #[test]
     fn records_and_aggregates() {
         let mut t = TrafficStats::default();
-        t.record(0, 1, MessageKind::GradPush, 1000, 0.5, 0.5);
-        t.record(1, 0, MessageKind::ParamBroadcast, 2000, 0.25, 0.25);
-        t.record(0, 2, MessageKind::GradPush, 500, 0.1, 0.6);
+        t.record(0, 1, MessageKind::GradPush, None, 1000, 0.5, 0.5);
+        t.record(1, 0, MessageKind::ParamBroadcast, None, 2000, 0.25, 0.25);
+        t.record(0, 2, MessageKind::GradPush, None, 500, 0.1, 0.6);
         assert_eq!(t.total_bits, 3500);
         assert_eq!(t.sent_by(0), 1500);
         assert_eq!(t.received_by(0), 2000);
@@ -159,9 +174,9 @@ mod tests {
     #[test]
     fn sim_time_and_arrival_per_kind() {
         let mut t = TrafficStats::default();
-        t.record(0, 2, MessageKind::GradPush, 100, 0.5, 1.5);
-        t.record(1, 2, MessageKind::GradPush, 100, 0.25, 0.75);
-        t.record(2, 0, MessageKind::ParamBroadcast, 400, 0.1, 2.0);
+        t.record(0, 2, MessageKind::GradPush, None, 100, 0.5, 1.5);
+        t.record(1, 2, MessageKind::GradPush, None, 100, 0.25, 0.75);
+        t.record(2, 0, MessageKind::ParamBroadcast, None, 400, 0.1, 2.0);
         assert!((t.sim_time_of_kind(MessageKind::GradPush) - 0.75).abs() < 1e-12);
         assert!((t.sim_time_of_kind(MessageKind::ParamBroadcast) - 0.1).abs() < 1e-12);
         assert_eq!(t.sim_time_of_kind(MessageKind::Control), 0.0);
@@ -178,10 +193,27 @@ mod tests {
     #[test]
     fn reset_clears() {
         let mut t = TrafficStats::default();
-        t.record(0, 1, MessageKind::Control, 10, 0.1, 0.1);
+        t.record(0, 1, MessageKind::Control, None, 10, 0.1, 0.1);
         t.reset();
         assert_eq!(t.total_bits, 0);
         assert!(t.per_link.is_empty());
         assert!(t.sim_time_per_kind.is_empty());
+        assert!(t.per_shard.is_empty());
+    }
+
+    #[test]
+    fn per_shard_bits_partition_tagged_traffic() {
+        let mut t = TrafficStats::default();
+        t.record(0, 4, MessageKind::GradPush, Some(0), 100, 0.1, 0.1);
+        t.record(0, 5, MessageKind::GradPush, Some(1), 150, 0.1, 0.1);
+        t.record(1, 4, MessageKind::GradPush, Some(0), 100, 0.1, 0.1);
+        t.record(4, 0, MessageKind::ParamBroadcast, Some(0), 400, 0.1, 0.1);
+        t.record(2, 3, MessageKind::Control, None, 8, 0.1, 0.1);
+        assert_eq!(t.bits_of_shard(0), 600);
+        assert_eq!(t.bits_of_shard(1), 150);
+        assert_eq!(t.bits_of_shard(7), 0);
+        // tagged traffic partitions exactly; untagged stays out
+        let tagged: u64 = t.per_shard.values().sum();
+        assert_eq!(tagged, t.total_bits - 8);
     }
 }

@@ -96,7 +96,7 @@ impl Fabric {
         self.stats
             .lock()
             .unwrap()
-            .record(msg.src, msg.dst, msg.kind, bits, time, arrival);
+            .record(msg.src, msg.dst, msg.kind, msg.payload.shard(), bits, time, arrival);
         let inbox = &self.inboxes[msg.dst];
         inbox.queue.lock().unwrap().push_back((msg, arrival));
         inbox.ready.notify_one();

@@ -1,6 +1,6 @@
 //! Message framing for the simulated fabric.
 
-use crate::compress::wire::Encoded;
+use crate::compress::wire::{Encoded, SHARD_TAG_BITS};
 
 /// What a message carries.
 #[derive(Clone, Debug)]
@@ -9,6 +9,14 @@ pub enum Payload {
     Grad(Encoded),
     /// A dense parameter broadcast (raw f32).
     Params(Vec<f32>),
+    /// One shard leader's slice of the parameter vector: the shard id, the
+    /// slice's start coordinate in the full model vector, and the raw f32
+    /// values. Workers reassemble the slices before computing.
+    ParamSlice {
+        shard: u16,
+        start: u32,
+        vals: Vec<f32>,
+    },
     /// Control traffic (round barriers etc.) with a nominal size.
     Control(u64),
 }
@@ -19,7 +27,20 @@ impl Payload {
         match self {
             Payload::Grad(e) => e.bits,
             Payload::Params(v) => 32 * v.len() as u64,
+            // slice values + the same 48-bit shard header the grad frames pay
+            Payload::ParamSlice { vals, .. } => 32 * vals.len() as u64 + SHARD_TAG_BITS,
             Payload::Control(bits) => *bits,
+        }
+    }
+
+    /// Shard id this payload is routed for, if any (grad frames carry it
+    /// in their wire tag, parameter slices in their header). Drives the
+    /// per-shard traffic accounting.
+    pub fn shard(&self) -> Option<u32> {
+        match self {
+            Payload::Grad(e) => e.shard.map(|t| u32::from(t.shard)),
+            Payload::ParamSlice { shard, .. } => Some(u32::from(*shard)),
+            _ => None,
         }
     }
 }
@@ -74,6 +95,25 @@ mod tests {
         assert_eq!(Payload::Control(100).bits(), 100);
         let e = encode_scaled_sign(&vec![1.0f32; 64]);
         assert_eq!(Payload::Grad(e).bits(), 64 + 32);
+    }
+
+    #[test]
+    fn sharded_payloads_carry_shard_ids_and_header_bits() {
+        use crate::compress::wire::SHARD_TAG_BITS;
+        let slice = Payload::ParamSlice {
+            shard: 2,
+            start: 512,
+            vals: vec![0.0; 10],
+        };
+        assert_eq!(slice.bits(), 320 + SHARD_TAG_BITS);
+        assert_eq!(slice.shard(), Some(2));
+        let tagged = Payload::Grad(encode_scaled_sign(&[1.0f32; 64]).with_shard(5, 0));
+        assert_eq!(tagged.bits(), 64 + 32 + SHARD_TAG_BITS);
+        assert_eq!(tagged.shard(), Some(5));
+        // unsharded payloads attribute to no shard
+        assert_eq!(Payload::Params(vec![0.0; 4]).shard(), None);
+        assert_eq!(Payload::Grad(encode_scaled_sign(&[1.0f32; 8])).shard(), None);
+        assert_eq!(Payload::Control(8).shard(), None);
     }
 
     #[test]

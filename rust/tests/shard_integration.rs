@@ -1,0 +1,342 @@
+//! Integration: the sharded parameter server end to end — the `--shards 1`
+//! byte-identity contract against a reference replay of the historical
+//! single-leader algorithm, bit-determinism over (shards × threads),
+//! sharded checkpoint save/restore, and exact per-shard wire-bit
+//! accounting at both the codec and fabric levels.
+
+use ef_sgd::collectives::ShardPlan;
+use ef_sgd::compress::wire::{self, SHARD_TAG_BITS};
+use ef_sgd::compress::{Compressor, Qsgd};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::async_driver::AsyncTrainDriver;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::state::CheckpointStore;
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::{Aggregation, LrSchedule};
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::message::FRAME_OVERHEAD_BITS;
+use ef_sgd::net::MessageKind;
+use ef_sgd::util::Pcg64;
+
+fn quadratic_workers(n: usize, d: usize, kind: CompressorKind) -> Vec<Worker> {
+    (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::new(40, 100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                kind,
+                4,
+                4,
+                Pcg64::new(41, id as u64),
+            )
+        })
+        .collect()
+}
+
+/// Replay the pre-sharding single-leader algorithm directly: every worker
+/// steps + encodes its full-vector frame, the frames decode densely in
+/// worker order, the mean applies to theta. For n ≤ DECODE_LANES the
+/// driver's fixed-group fused reduction replays exactly this order, so
+/// this is a bit-faithful reference for the unsharded trajectory.
+fn reference_run(
+    mut workers: Vec<Worker>,
+    mut theta: Vec<f32>,
+    steps: usize,
+    lr: f32,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    for _ in 0..steps {
+        let frames: Vec<wire::Encoded> = workers
+            .iter_mut()
+            .map(|w| w.step_encode(&theta, lr))
+            .collect();
+        let updates: Vec<Vec<f32>> = frames
+            .iter()
+            .map(|e| wire::decode_any(e).unwrap())
+            .collect();
+        let agg = Aggregation::Mean.combine(&updates);
+        ef_sgd::tensor::sub_assign(&mut theta, &agg);
+    }
+    let errors = workers.iter().map(|w| w.export_error()).collect();
+    let corrected = workers.iter().map(|w| w.export_corrected()).collect();
+    (theta, errors, corrected)
+}
+
+/// `--shards 1` produces a byte-identical Snapshot to the pre-sharding
+/// driver: theta, every EF residual, and every corrected gradient match
+/// the reference replay exactly, for fixed-length (scaled-sign) and
+/// variable-length (QSGD) frames alike.
+#[test]
+fn shards_one_matches_unsharded() {
+    for kind in [CompressorKind::ScaledSign, CompressorKind::Qsgd] {
+        let d = 96;
+        let n = 4;
+        let steps = 12;
+        let lr = 0.05f32;
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(lr as f64),
+            shards: 1,
+            ..Default::default()
+        };
+        let mut driver = TrainDriver::new(cfg, quadratic_workers(n, d, kind), vec![1.0f32; d]);
+        let mut rec = Recorder::new();
+        for _ in 0..steps {
+            driver.round(&mut rec);
+        }
+        let snap = driver.snapshot();
+        assert_eq!(snap.shards, 1);
+        let (theta_ref, errs_ref, corr_ref) =
+            reference_run(quadratic_workers(n, d, kind), vec![1.0f32; d], steps, lr);
+        assert_eq!(snap.theta, theta_ref, "{kind:?}: theta diverged");
+        assert_eq!(snap.worker_errors, errs_ref, "{kind:?}: residuals diverged");
+        assert_eq!(
+            snap.worker_corrected, corr_ref,
+            "{kind:?}: corrected grads diverged"
+        );
+    }
+}
+
+fn sharded_run(
+    kind: CompressorKind,
+    shards: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>, u64, u64) {
+    let d = 97; // ragged split on purpose
+    let n = 5;
+    let steps = 12;
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::constant(0.05),
+        shards,
+        threads,
+        ..Default::default()
+    };
+    let mut driver = TrainDriver::new(cfg, quadratic_workers(n, d, kind), vec![1.0f32; d]);
+    let mut rec = Recorder::new();
+    for _ in 0..steps {
+        driver.round(&mut rec);
+    }
+    let snap = driver.snapshot();
+    let t = driver.traffic();
+    (
+        snap.theta,
+        snap.worker_errors,
+        snap.worker_corrected,
+        t.total_bits,
+        t.bits_of_kind(MessageKind::GradPush),
+    )
+}
+
+/// Any (shards, threads) combination is bit-deterministic: the trained
+/// parameters, every EF tensor, and the exact wire-bit totals are
+/// identical at 1 and 4 threads for S ∈ {1, 2, 4}, for both fixed- and
+/// variable-length wire formats.
+#[test]
+fn sharded_is_bit_deterministic() {
+    for kind in [CompressorKind::ScaledSign, CompressorKind::Qsgd] {
+        for shards in [1usize, 2, 4] {
+            let (theta1, errs1, corr1, bits1, push1) = sharded_run(kind, shards, 1);
+            let (theta4, errs4, corr4, bits4, push4) = sharded_run(kind, shards, 4);
+            assert_eq!(theta1, theta4, "{kind:?} S={shards}: theta differs");
+            assert_eq!(errs1, errs4, "{kind:?} S={shards}: residuals differ");
+            assert_eq!(corr1, corr4, "{kind:?} S={shards}: corrected differ");
+            assert_eq!(bits1, bits4, "{kind:?} S={shards}: total bits differ");
+            assert_eq!(push1, push4, "{kind:?} S={shards}: push bits differ");
+        }
+    }
+}
+
+/// Sharded checkpointing: a 4-shard run snapshotted at round 10, saved
+/// through the on-disk store, restored into a fresh 4-shard driver, and
+/// resumed for 10 more rounds lands exactly where the uninterrupted run
+/// does (blockwise EF state round-trips through the full-length tensors).
+#[test]
+fn sharded_checkpoint_restore_resumes_identically() {
+    let d = 64;
+    let shards = 4;
+    let n = 3;
+    let mk = || quadratic_workers(n, d, CompressorKind::ScaledSign);
+    let cfg = |steps: usize| DriverConfig {
+        steps,
+        schedule: LrSchedule::constant(0.1),
+        shards,
+        ..Default::default()
+    };
+
+    // run A: 20 straight rounds
+    let mut a = TrainDriver::new(cfg(20), mk(), vec![1.0f32; d]);
+    let mut rec = Recorder::new();
+    for _ in 0..20 {
+        a.round(&mut rec);
+    }
+
+    // run B: 10 rounds, snapshot through the on-disk store
+    let mut b = TrainDriver::new(cfg(10), mk(), vec![1.0f32; d]);
+    let mut recb = Recorder::new();
+    for _ in 0..10 {
+        b.round(&mut recb);
+    }
+    let snap = b.snapshot();
+    assert_eq!(snap.round, 10);
+    assert_eq!(snap.shards, shards);
+    let dir = std::env::temp_dir().join(format!("efsgd_shard_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CheckpointStore::new(&dir).unwrap();
+    store.save(&snap).unwrap();
+    let loaded = store.load().unwrap();
+    assert_eq!(loaded.shards, shards);
+    assert_eq!(loaded.theta, snap.theta);
+    assert_eq!(loaded.worker_errors, snap.worker_errors);
+    assert_eq!(loaded.worker_corrected, snap.worker_corrected);
+
+    // run C: fresh sharded driver, restore, 10 more rounds
+    let mut c = TrainDriver::new(cfg(0), mk(), vec![1.0f32; d]);
+    c.restore(&loaded);
+    let mut recc = Recorder::new();
+    for _ in 0..10 {
+        c.round(&mut recc);
+    }
+    let sa = a.snapshot();
+    let sc = c.snapshot();
+    assert_eq!(sa.round, sc.round);
+    assert_eq!(sa.theta, sc.theta, "restored run diverged");
+    assert_eq!(sa.worker_errors, sc.worker_errors);
+    assert_eq!(sa.worker_corrected, sc.worker_corrected);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Exact per-shard wire-bit accounting at the codec level: dense shard
+/// frames partition the unsharded payload exactly (plus one 48-bit shard
+/// tag each), and QSGD shard frames of one quantized vector cost the
+/// unsharded Elias stream plus one extra 40-bit qsgd header per extra
+/// shard plus the tags — i.e. ≤ unsharded + S·(header + tag).
+#[test]
+fn per_shard_wire_bits_account_exactly() {
+    const QSGD_HEADER_BITS: u64 = 32 + 8;
+    let d = 1000;
+    let s_count = 4;
+    let plan = ShardPlan::new(d, s_count);
+    let mut rng = Pcg64::seeded(3);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+
+    // dense: sum over shards == unsharded total (+ the tags)
+    let unsharded = wire::encode_dense(&v);
+    let total: u64 = (0..s_count)
+        .map(|s| {
+            let r = plan.range(s);
+            wire::encode_dense(&v[r.clone()])
+                .with_shard(s as u16, r.start as u32)
+                .bits
+        })
+        .sum();
+    assert_eq!(total, unsharded.bits + s_count as u64 * SHARD_TAG_BITS);
+    assert_eq!(total - s_count as u64 * SHARD_TAG_BITS, unsharded.bits);
+
+    // qsgd: slicing one quantized vector (same norm, same level count)
+    // reproduces the per-coordinate Elias codes exactly, so the sharded
+    // total is unsharded + (S-1) extra headers + S tags — within the
+    // S·(header + tag) bound
+    let levels = 4u32;
+    let q = Qsgd::new(levels).compress_vec(&v, &mut Pcg64::seeded(7));
+    let norm = ef_sgd::tensor::norm2(&v) as f32;
+    let un_q = wire::encode_qsgd(&q, norm, levels);
+    let total_q: u64 = (0..s_count)
+        .map(|s| {
+            let r = plan.range(s);
+            wire::encode_qsgd(&q[r.clone()], norm, levels)
+                .with_shard(s as u16, r.start as u32)
+                .bits
+        })
+        .sum();
+    assert_eq!(
+        total_q,
+        un_q.bits + (s_count as u64 - 1) * QSGD_HEADER_BITS + s_count as u64 * SHARD_TAG_BITS
+    );
+    assert!(total_q <= un_q.bits + s_count as u64 * (QSGD_HEADER_BITS + SHARD_TAG_BITS));
+}
+
+/// Exact per-shard accounting at the fabric level: in a sharded run every
+/// push and broadcast message is shard-attributed, the per-shard bit map
+/// partitions the push+broadcast totals exactly, and the scaled-sign push
+/// total matches the analytic formula to the bit.
+#[test]
+fn sharded_fabric_traffic_partitions_exactly() {
+    let d = 64u64;
+    let shards = 4u64;
+    let n = 3u64;
+    let steps = 4u64;
+    let cfg = DriverConfig {
+        steps: steps as usize,
+        schedule: LrSchedule::constant(0.05),
+        shards: shards as usize,
+        ..Default::default()
+    };
+    let out = TrainDriver::new(
+        cfg,
+        quadratic_workers(n as usize, d as usize, CompressorKind::ScaledSign),
+        vec![1.0f32; d as usize],
+    )
+    .run();
+    let push = out.traffic.bits_of_kind(MessageKind::GradPush);
+    // per worker per round: sum over shards of (d_s + 32) sign payload +
+    // 48-bit shard tag + 64-byte frame overhead per message
+    let expect = steps * n * (d + shards * (32 + SHARD_TAG_BITS + FRAME_OVERHEAD_BITS));
+    assert_eq!(push, expect);
+    // every shard saw traffic, and the shard map partitions push+broadcast
+    let bcast = out.traffic.bits_of_kind(MessageKind::ParamBroadcast);
+    let mut per_shard_sum = 0u64;
+    for s in 0..shards as u32 {
+        let bits = out.traffic.bits_of_shard(s);
+        assert!(bits > 0, "shard {s} unaccounted");
+        per_shard_sum += bits;
+    }
+    assert_eq!(per_shard_sum, push + bcast);
+}
+
+/// The degenerate async setting (`quorum = n`, `max-staleness = 0`) stays
+/// byte-identical to the synchronous driver under sharding too.
+#[test]
+fn async_sharded_degenerate_matches_sync_sharded() {
+    let d = 48;
+    let n = 4;
+    let steps = 15;
+    let cfg = || DriverConfig {
+        steps,
+        schedule: LrSchedule::constant(0.05),
+        shards: 2,
+        ..Default::default()
+    };
+    let mut sync = TrainDriver::new(
+        cfg(),
+        quadratic_workers(n, d, CompressorKind::ScaledSign),
+        vec![1.0f32; d],
+    );
+    let mut rec = Recorder::new();
+    for _ in 0..steps {
+        sync.round(&mut rec);
+    }
+    let mut asynch = AsyncTrainDriver::new(
+        cfg(),
+        n,
+        0,
+        quadratic_workers(n, d, CompressorKind::ScaledSign),
+        vec![1.0f32; d],
+    );
+    let mut rec2 = Recorder::new();
+    for _ in 0..steps {
+        asynch.step_round(&mut rec2);
+    }
+    let a = sync.snapshot();
+    let b = asynch.snapshot();
+    assert_eq!(a.shards, b.shards);
+    assert_eq!(a.theta, b.theta);
+    assert_eq!(a.worker_errors, b.worker_errors);
+    assert_eq!(a.worker_corrected, b.worker_corrected);
+    assert_eq!(sync.traffic().total_bits, asynch.traffic().total_bits);
+}
