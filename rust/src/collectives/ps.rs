@@ -6,6 +6,7 @@
 use super::shard::GatherError;
 use crate::compress::wire::{self, Encoded};
 use crate::net::{Fabric, Message, MessageKind, Payload};
+use std::sync::Arc;
 
 /// The leader endpoint of a parameter-server round. `Clone` so each
 /// worker-pool thread can hold its own copy of the (cheap) topology.
@@ -79,31 +80,48 @@ impl ParameterServer {
         Ok(acc)
     }
 
-    /// Leader side: send the parameter vector (dense) to one worker.
-    /// Returns the simulated arrival time at the worker (the async
-    /// driver's per-worker dispatch primitive).
-    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
+    /// Leader side: send an already-shared parameter vector to one worker —
+    /// a refcount bump, not a dense clone. The async driver and the
+    /// broadcast below dispatch through this.
+    pub fn send_params_shared(
+        &self,
+        fabric: &Fabric,
+        worker: usize,
+        round: u64,
+        params: &Arc<[f32]>,
+    ) -> f64 {
         fabric.send(Message {
             src: self.leader,
             dst: worker,
             round,
             kind: MessageKind::ParamBroadcast,
-            payload: Payload::Params(params.to_vec()),
+            payload: Payload::Params(params.clone()),
         })
     }
 
-    /// Leader side: broadcast the parameter vector (dense) to all workers.
-    /// Returns the latest simulated arrival time over the recipients.
+    /// Leader side: send the parameter vector (dense) to one worker.
+    /// Returns the simulated arrival time at the worker. Copies `params`
+    /// into a fresh shared buffer; batch callers should share one
+    /// `Arc<[f32]>` via [`send_params_shared`](Self::send_params_shared).
+    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
+        self.send_params_shared(fabric, worker, round, &Arc::from(params))
+    }
+
+    /// Leader side: broadcast the parameter vector (dense) to all workers:
+    /// one copy of `params` into a shared buffer, then one refcount bump
+    /// per recipient. Returns the latest simulated arrival time.
     pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) -> f64 {
+        let shared: Arc<[f32]> = Arc::from(params);
         let mut latest = 0.0f64;
         for &w in &self.workers {
-            latest = latest.max(self.send_params(fabric, w, round, params));
+            latest = latest.max(self.send_params_shared(fabric, w, round, &shared));
         }
         latest
     }
 
-    /// Worker side: receive the broadcast parameters.
-    pub fn recv_params(&self, fabric: &Fabric, worker: usize) -> Option<Vec<f32>> {
+    /// Worker side: receive the broadcast parameters (a view of the shared
+    /// broadcast buffer — no copy).
+    pub fn recv_params(&self, fabric: &Fabric, worker: usize) -> Option<Arc<[f32]>> {
         while let Some(msg) = fabric.recv(worker) {
             if let Payload::Params(p) = msg.payload {
                 return Some(p);
@@ -166,8 +184,13 @@ mod tests {
         let ps = ParameterServer::new(&fabric);
         let params = vec![1.0f32, -1.0, 0.5];
         ps.broadcast_params(&fabric, 7, &params);
-        for w in 0..3 {
-            assert_eq!(ps.recv_params(&fabric, w).unwrap(), params);
+        let first = ps.recv_params(&fabric, 0).unwrap();
+        assert_eq!(&first[..], params.as_slice());
+        for w in 1..3 {
+            let got = ps.recv_params(&fabric, w).unwrap();
+            assert_eq!(&got[..], params.as_slice());
+            // every recipient aliases the one shared broadcast buffer
+            assert!(std::sync::Arc::ptr_eq(&got, &first));
         }
     }
 
@@ -218,7 +241,7 @@ mod tests {
         ps.push_grad(&fabric, 0, 0, encode_scaled_sign(&g));
         let _ = ps.gather_mean(&fabric, 0, d).unwrap();
         ps.broadcast_params(&fabric, 0, &g);
-        let stats = fabric.stats();
+        let stats = fabric.snapshot_stats();
         use crate::net::MessageKind::*;
         // push = d+32 bits (+frame), broadcast = 32d (+frame)
         assert!(stats.bits_of_kind(GradPush) < stats.bits_of_kind(ParamBroadcast) / 20);

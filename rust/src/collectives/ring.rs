@@ -42,14 +42,16 @@ fn send_chunk(fabric: &Fabric, src: usize, dst: usize, round: u64, chunk: Vec<f3
         dst,
         round,
         kind: MessageKind::GradPush,
-        payload: Payload::Params(chunk),
+        // Chunk, not Params: ownership moves hop to hop (Params is the
+        // Arc-shared broadcast payload, which cannot be mutated in place)
+        payload: Payload::Chunk(chunk),
     });
 }
 
 fn take_chunk(msg: Message) -> Vec<f32> {
     match msg.payload {
-        Payload::Params(chunk) => chunk,
-        other => panic!("ring collective got non-params payload: {other:?}"),
+        Payload::Chunk(chunk) => chunk,
+        other => panic!("ring collective got non-chunk payload: {other:?}"),
     }
 }
 
@@ -295,8 +297,8 @@ mod tests {
             ring_allreduce_parallel(&fabric_par, &mut par, 0);
             assert_eq!(seq, par, "n={n} d={d}");
             assert_eq!(
-                fabric_seq.stats().total_bits,
-                fabric_par.stats().total_bits,
+                fabric_seq.snapshot_stats().total_bits,
+                fabric_par.snapshot_stats().total_bits,
                 "n={n} d={d}"
             );
             assert_eq!(fabric_par.in_flight(), 0);
@@ -311,7 +313,7 @@ mod tests {
         let mut buffers: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; d]).collect();
         let fabric = Fabric::new(n, LinkModel::default());
         ring_allreduce(&fabric, &mut buffers, 0);
-        let stats = fabric.stats();
+        let stats = fabric.snapshot_stats();
         let per_worker_payload = stats.sent_by(0) as f64
             - 2.0 * (n - 1) as f64 * crate::net::message::FRAME_OVERHEAD_BITS as f64;
         let expect = 2.0 * (n as f64 - 1.0) / n as f64 * d as f64 * 32.0;
@@ -339,6 +341,6 @@ mod tests {
         ring_allreduce(&fabric, &mut buffers, 0);
         ring_allreduce_parallel(&fabric, &mut buffers, 0);
         assert_eq!(buffers[0], vec![1.0, 2.0]);
-        assert_eq!(fabric.stats().total_bits, 0);
+        assert_eq!(fabric.snapshot_stats().total_bits, 0);
     }
 }

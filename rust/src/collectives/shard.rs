@@ -27,6 +27,7 @@
 use crate::compress::wire::Encoded;
 use crate::net::{Fabric, Message, MessageKind, Payload};
 use std::ops::Range;
+use std::sync::Arc;
 
 /// Deterministic partition of `d` coordinates into `S` contiguous shards.
 /// Split points are balanced: the first `d % S` shards get `⌈d/S⌉`
@@ -168,11 +169,13 @@ impl ShardedParameterServer {
     }
 
     /// Worker side: push one round's per-shard frames (in shard order) to
-    /// their shard leaders. With `S = 1` this is a single untagged frame
-    /// to the single leader — byte-identical to the unsharded push.
-    pub fn push_frames(&self, fabric: &Fabric, worker: usize, round: u64, frames: Vec<Encoded>) {
+    /// their shard leaders, draining `frames` (the caller's scratch vector
+    /// keeps its capacity for the next round). With `S = 1` this is a
+    /// single untagged frame to the single leader — byte-identical to the
+    /// unsharded push.
+    pub fn push_frames(&self, fabric: &Fabric, worker: usize, round: u64, frames: &mut Vec<Encoded>) {
         assert_eq!(frames.len(), self.num_shards(), "one frame per shard");
-        for (s, frame) in frames.into_iter().enumerate() {
+        for (s, frame) in frames.drain(..).enumerate() {
             fabric.send(Message {
                 src: worker,
                 dst: self.leaders[s],
@@ -183,24 +186,59 @@ impl ShardedParameterServer {
         }
     }
 
-    /// Leader side: send one worker its parameters — a single dense
-    /// `Params` message when unsharded (byte-identical to the historical
+    /// Refresh the shared broadcast slices from `params` **in place**: one
+    /// `Arc<[f32]>` per shard (the full vector when unsharded). In steady
+    /// state every receiver has dropped its reference from the previous
+    /// round by the time the leader folds, so `Arc::get_mut` succeeds and
+    /// the refresh is a plain `copy_from_slice` — no allocation; if a
+    /// reference is still live (or the plan changed), a fresh buffer is
+    /// allocated instead, which is always correct, just slower.
+    pub fn make_broadcast(&self, params: &[f32], slices: &mut Vec<Arc<[f32]>>) {
+        assert_eq!(params.len(), self.plan.dim());
+        let s_total = self.num_shards();
+        if slices.len() != s_total {
+            slices.clear();
+            for s in 0..s_total {
+                slices.push(Arc::from(&params[self.plan.range(s)]));
+            }
+            return;
+        }
+        for s in 0..s_total {
+            let r = self.plan.range(s);
+            match Arc::get_mut(&mut slices[s]) {
+                Some(dst) if dst.len() == r.len() => dst.copy_from_slice(&params[r]),
+                _ => slices[s] = Arc::from(&params[r]),
+            }
+        }
+    }
+
+    /// Leader side: send one worker its parameters from already-shared
+    /// slices (see [`make_broadcast`](Self::make_broadcast)) — one
+    /// refcount bump per shard, no dense copy. A single `Params` message
+    /// when unsharded (byte-identical accounting to the historical
     /// driver), one `ParamSlice` per shard leader otherwise. Returns the
     /// latest simulated arrival over the slices.
-    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
-        assert_eq!(params.len(), self.plan.dim());
+    pub fn send_params_shared(
+        &self,
+        fabric: &Fabric,
+        worker: usize,
+        round: u64,
+        slices: &[Arc<[f32]>],
+    ) -> f64 {
+        assert_eq!(slices.len(), self.num_shards(), "one slice per shard");
         if self.num_shards() == 1 {
+            debug_assert_eq!(slices[0].len(), self.plan.dim());
             return fabric.send(Message {
                 src: self.leaders[0],
                 dst: worker,
                 round,
                 kind: MessageKind::ParamBroadcast,
-                payload: Payload::Params(params.to_vec()),
+                payload: Payload::Params(slices[0].clone()),
             });
         }
         let mut latest = 0.0f64;
-        for s in 0..self.num_shards() {
-            let r = self.plan.range(s);
+        for (s, vals) in slices.iter().enumerate() {
+            debug_assert_eq!(vals.len(), self.plan.len_of(s));
             let arrival = fabric.send(Message {
                 src: self.leaders[s],
                 dst: worker,
@@ -208,8 +246,8 @@ impl ShardedParameterServer {
                 kind: MessageKind::ParamBroadcast,
                 payload: Payload::ParamSlice {
                     shard: s as u16,
-                    start: r.start as u32,
-                    vals: params[r].to_vec(),
+                    start: self.plan.start(s) as u32,
+                    vals: vals.clone(),
                 },
             });
             latest = latest.max(arrival);
@@ -217,35 +255,67 @@ impl ShardedParameterServer {
         latest
     }
 
-    /// Leader side: broadcast the parameters to every worker. Returns the
+    /// Leader side: send one worker its parameters, copying `params` into
+    /// fresh shared slices. One-shot convenience; round loops should
+    /// refresh a persistent slice set with
+    /// [`make_broadcast`](Self::make_broadcast) and dispatch through
+    /// [`send_params_shared`](Self::send_params_shared).
+    pub fn send_params(&self, fabric: &Fabric, worker: usize, round: u64, params: &[f32]) -> f64 {
+        let mut slices = Vec::new();
+        self.make_broadcast(params, &mut slices);
+        self.send_params_shared(fabric, worker, round, &slices)
+    }
+
+    /// Leader side: broadcast already-shared slices to every worker — `n`
+    /// refcount bumps per shard instead of `n` dense clones. Returns the
     /// latest simulated arrival over all recipients and slices.
-    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) -> f64 {
+    pub fn broadcast_shared(&self, fabric: &Fabric, round: u64, slices: &[Arc<[f32]>]) -> f64 {
         let mut latest = 0.0f64;
         for &w in &self.workers {
-            latest = latest.max(self.send_params(fabric, w, round, params));
+            latest = latest.max(self.send_params_shared(fabric, w, round, slices));
         }
         latest
     }
 
+    /// Leader side: broadcast the parameters to every worker (one copy of
+    /// `params` total, then refcount bumps). Returns the latest simulated
+    /// arrival over all recipients and slices.
+    pub fn broadcast_params(&self, fabric: &Fabric, round: u64, params: &[f32]) -> f64 {
+        let mut slices = Vec::new();
+        self.make_broadcast(params, &mut slices);
+        self.broadcast_shared(fabric, round, slices.as_slice())
+    }
+
     /// Worker side: receive one round's parameters into `buf`, assembling
-    /// per-shard slices when sharded. Returns `false` if the broadcast is
-    /// missing from the worker's inbox.
+    /// per-shard slices when sharded. Copies out of the shared broadcast
+    /// buffers into the worker's persistent scratch (and drops the
+    /// refcount, which is what lets the leader refresh the shared slices
+    /// in place next round). Returns `false` if the broadcast is missing
+    /// from the worker's inbox. Allocation-free once `buf` is warm.
     pub fn recv_params_into(&self, fabric: &Fabric, worker: usize, buf: &mut Vec<f32>) -> bool {
         let s_total = self.num_shards();
         if s_total == 1 {
             while let Some(msg) = fabric.recv(worker) {
                 if let Payload::Params(p) = msg.payload {
-                    *buf = p;
+                    buf.clear();
+                    buf.extend_from_slice(&p);
                     return true;
                 }
             }
             return false;
         }
         buf.resize(self.plan.dim(), 0.0);
-        // track distinct shards, not message counts: a duplicated slice
+        // Track distinct shards, not message counts: a duplicated slice
         // must not mask a missing one (the hole would silently keep the
-        // previous round's values in a reused buffer)
-        let mut seen = vec![false; s_total];
+        // previous round's values in a reused buffer). A stack bitmask
+        // covers up to 128 shards without allocating; wider (exotic) plans
+        // fall back to a heap mask.
+        let mut mask = [0u64; 2];
+        let mut wide = if s_total > 128 {
+            vec![false; s_total]
+        } else {
+            Vec::new()
+        };
         let mut got = 0usize;
         while got < s_total {
             let Some(msg) = fabric.recv(worker) else {
@@ -253,11 +323,17 @@ impl ShardedParameterServer {
             };
             if let Payload::ParamSlice { shard, start, vals } = msg.payload {
                 let shard = shard as usize;
-                assert!(
-                    shard < s_total && !seen[shard],
-                    "duplicate or out-of-range parameter slice for shard {shard}"
-                );
-                seen[shard] = true;
+                assert!(shard < s_total, "out-of-range parameter slice for shard {shard}");
+                let dup = if s_total > 128 {
+                    std::mem::replace(&mut wide[shard], true)
+                } else {
+                    let bit = 1u64 << (shard % 64);
+                    let cell = &mut mask[shard / 64];
+                    let d = (*cell & bit) != 0;
+                    *cell |= bit;
+                    d
+                };
+                assert!(!dup, "duplicate parameter slice for shard {shard}");
                 let start = start as usize;
                 buf[start..start + vals.len()].copy_from_slice(&vals);
                 got += 1;
@@ -266,21 +342,27 @@ impl ShardedParameterServer {
         true
     }
 
-    /// Leader side: drain shard `s`'s inbox for `round`. Returns the
-    /// gathered frames sorted by worker id together with the latest
-    /// simulated arrival, or a typed [`GatherError`] naming the shard and
-    /// the mismatched round/count.
-    pub fn gather_shard_timed(
+    /// Leader side: drain shard `s`'s inbox for `round` into the caller's
+    /// persistent scratch: `msgs` is the raw drain buffer, `frames`
+    /// receives the gathered frames sorted by worker id. Returns the
+    /// latest simulated arrival, or a typed [`GatherError`] naming the
+    /// shard and the mismatched round/count. Allocation-free once the
+    /// scratch vectors are warm.
+    pub fn gather_shard_into(
         &self,
         fabric: &Fabric,
         round: u64,
         s: usize,
-    ) -> Result<(Vec<Encoded>, f64), GatherError> {
-        let mut msgs = fabric.recv_all_timed(self.leaders[s]);
-        msgs.sort_by_key(|(m, _)| m.src);
-        let mut frames = Vec::with_capacity(self.workers.len());
+        msgs: &mut Vec<(Message, f64)>,
+        frames: &mut Vec<Encoded>,
+    ) -> Result<f64, GatherError> {
+        frames.clear();
+        fabric.recv_all_timed_into(self.leaders[s], msgs);
+        // worker ids are unique within a shard's round, so the unstable
+        // (allocation-free) sort is deterministic
+        msgs.sort_unstable_by_key(|(m, _)| m.src);
         let mut latest = 0.0f64;
-        for (msg, arrival) in msgs {
+        for (msg, arrival) in msgs.drain(..) {
             if msg.round != round {
                 return Err(GatherError::Stale {
                     shard: s,
@@ -309,6 +391,20 @@ impl ShardedParameterServer {
                 got: frames.len(),
             });
         }
+        Ok(latest)
+    }
+
+    /// Leader side: drain shard `s`'s inbox for `round`. Allocating
+    /// wrapper around [`gather_shard_into`](Self::gather_shard_into).
+    pub fn gather_shard_timed(
+        &self,
+        fabric: &Fabric,
+        round: u64,
+        s: usize,
+    ) -> Result<(Vec<Encoded>, f64), GatherError> {
+        let mut msgs = Vec::new();
+        let mut frames = Vec::new();
+        let latest = self.gather_shard_into(fabric, round, s, &mut msgs, &mut frames)?;
         Ok((frames, latest))
     }
 }
@@ -370,13 +466,15 @@ mod tests {
         // per-shard push lands on the right leader, sorted gather works
         for w in 0..2usize {
             let v: Vec<f32> = (0..6).map(|i| (w * 10 + i) as f32).collect();
-            let frames: Vec<Encoded> = (0..2)
+            let mut frames: Vec<Encoded> = (0..2)
                 .map(|s| {
                     let r = ps.plan.range(s);
                     encode_dense(&v[r.clone()]).with_shard(s as u16, r.start as u32)
                 })
                 .collect();
-            ps.push_frames(&fabric, w, 3, frames);
+            ps.push_frames(&fabric, w, 3, &mut frames);
+            // the scratch drains but keeps its capacity for the next round
+            assert!(frames.is_empty());
         }
         for s in 0..2 {
             let (frames, _latest) = ps.gather_shard_timed(&fabric, 3, s).unwrap();
@@ -398,7 +496,7 @@ mod tests {
             &fabric,
             0,
             7,
-            vec![
+            &mut vec![
                 encode_scaled_sign(&[1.0, -1.0]).with_shard(0, 0),
                 encode_scaled_sign(&[1.0, -1.0]).with_shard(1, 2),
             ],
@@ -441,8 +539,48 @@ mod tests {
         // the unsharded broadcast is a plain dense Params payload
         let msg = fabric.recv(1).unwrap();
         match msg.payload {
-            Payload::Params(p) => assert_eq!(p, params),
+            Payload::Params(p) => assert_eq!(&p[..], params.as_slice()),
             other => panic!("expected Params, got {other:?}"),
+        }
+    }
+
+    /// The steady-state broadcast refresh reuses the shared slice
+    /// allocations: once every receiver has dropped its reference,
+    /// `make_broadcast` updates the same buffers in place (same pointers),
+    /// and the recipients see the fresh values.
+    #[test]
+    fn make_broadcast_refreshes_slices_in_place() {
+        for shards in [1usize, 3] {
+            let plan = ShardPlan::new(9, shards);
+            let s_total = plan.num_shards();
+            let fabric = Fabric::new(2 + s_total, LinkModel::default()); // 2 workers
+            let ps = ShardedParameterServer::new(&fabric, plan);
+            let mut slices = Vec::new();
+            let round0: Vec<f32> = (0..9).map(|i| i as f32).collect();
+            ps.make_broadcast(&round0, &mut slices);
+            let ptrs: Vec<*const f32> = slices.iter().map(|a| a.as_ptr()).collect();
+            ps.broadcast_shared(&fabric, 0, &slices);
+            let mut buf = Vec::new();
+            for w in 0..2 {
+                assert!(ps.recv_params_into(&fabric, w, &mut buf));
+                assert_eq!(buf, round0);
+            }
+            // all receivers dropped their refs => in-place refresh
+            let round1: Vec<f32> = (0..9).map(|i| -(i as f32)).collect();
+            ps.make_broadcast(&round1, &mut slices);
+            let ptrs1: Vec<*const f32> = slices.iter().map(|a| a.as_ptr()).collect();
+            assert_eq!(ptrs, ptrs1, "shards={shards}: slice buffers were reallocated");
+            ps.broadcast_shared(&fabric, 1, &slices);
+            for w in 0..2 {
+                assert!(ps.recv_params_into(&fabric, w, &mut buf));
+                assert_eq!(buf, round1, "shards={shards}");
+            }
+            // a still-live reference forces (correct) reallocation instead
+            let hold = slices[0].clone();
+            let round2 = vec![7.0f32; 9];
+            ps.make_broadcast(&round2, &mut slices);
+            assert!(!Arc::ptr_eq(&hold, &slices[0]));
+            assert_eq!(&slices[0][..], &round2[ps.plan.range(0)]);
         }
     }
 }

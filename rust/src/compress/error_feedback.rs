@@ -87,11 +87,22 @@ impl ErrorFeedback {
     ///   p = gamma*g + e;  delta = C(p);  e <- p − delta.
     /// Writes delta into `delta` and returns the density φ(p) of the
     /// error-corrected gradient (the quantity Fig. 2 tracks).
+    ///
+    /// The enabled/disabled branch is hoisted out of the per-coordinate
+    /// loop: each specialization is a straight-line fused multiply-add
+    /// kernel the compiler can autovectorize, instead of a conditional
+    /// select evaluated d times.
     pub fn step_into(&mut self, gamma: f32, g: &[f32], delta: &mut [f32], rng: &mut Pcg64) -> f64 {
         assert_eq!(g.len(), self.e.len(), "gradient dim mismatch");
         assert_eq!(delta.len(), self.e.len());
-        for ((p, e), gi) in self.p.iter_mut().zip(&self.e).zip(g) {
-            *p = gamma * *gi + if self.enabled { *e } else { 0.0 };
+        if self.enabled {
+            for ((p, e), gi) in self.p.iter_mut().zip(&self.e).zip(g) {
+                *p = gamma * *gi + *e;
+            }
+        } else {
+            for (p, gi) in self.p.iter_mut().zip(g) {
+                *p = gamma * *gi;
+            }
         }
         let phi = if self.track_density {
             tensor::density(&self.p)
@@ -106,13 +117,6 @@ impl ErrorFeedback {
         }
         self.steps += 1;
         phi
-    }
-
-    /// Allocating wrapper.
-    pub fn step(&mut self, gamma: f32, g: &[f32], rng: &mut Pcg64) -> Vec<f32> {
-        let mut delta = vec![0.0f32; g.len()];
-        self.step_into(gamma, g, &mut delta, rng);
-        delta
     }
 
     /// Set the state directly (used by the coordinator restore path):
@@ -193,10 +197,11 @@ mod tests {
         let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
         let mut rng = Pcg64::seeded(0);
         let mut g = vec![0.0f32; d];
+        let mut delta = vec![0.0f32; d];
         for _ in 0..10 {
             rng.fill_normal(&mut g, 0.0, 1.0);
             let e_before = ef.error().to_vec();
-            let delta = ef.step(0.3, &g, &mut rng);
+            ef.step_into(0.3, &g, &mut delta, &mut rng);
             for i in 0..d {
                 let p = 0.3 * g[i] + e_before[i];
                 assert!((delta[i] + ef.error()[i] - p).abs() < 1e-6);
@@ -216,12 +221,13 @@ mod tests {
             let mut acc = vec![0.0f64; d];
             let gamma = 0.1f32;
             let mut g = vec![0.0f32; d];
+            let mut delta = vec![0.0f32; d];
             for _ in 0..15 {
                 rng.fill_normal(&mut g, 0.0, 1.0);
                 for (a, gi) in acc.iter_mut().zip(&g) {
                     *a += gamma as f64 * *gi as f64;
                 }
-                let delta = ef.step(gamma, &g, &mut rng);
+                ef.step_into(gamma, &g, &mut delta, &mut rng);
                 for (xi, di) in x.iter_mut().zip(&delta) {
                     *xi -= *di as f64;
                 }
@@ -239,8 +245,9 @@ mod tests {
         let mut ef = ErrorFeedback::disabled(d, Box::new(ScaledSign));
         let mut rng = Pcg64::seeded(1);
         let mut g = vec![0.0f32; d];
+        let mut delta = vec![0.0f32; d];
         rng.fill_normal(&mut g, 0.0, 1.0);
-        ef.step(0.1, &g, &mut rng);
+        ef.step_into(0.1, &g, &mut delta, &mut rng);
         assert_eq!(ef.error_norm(), 0.0);
     }
 
@@ -258,9 +265,10 @@ mod tests {
         let sigma_sq = d as f64; // E||g||^2 = d for unit gaussians
         let bound = 4.0 * (1.0 - delta_lb) * (gamma as f64).powi(2) * sigma_sq
             / (delta_lb * delta_lb);
+        let mut delta = vec![0.0f32; d];
         for _ in 0..200 {
             rng.fill_normal(&mut g, 0.0, 1.0);
-            ef.step(gamma, &g, &mut rng);
+            ef.step_into(gamma, &g, &mut delta, &mut rng);
             assert!(
                 ef.error_norm().powi(2) <= bound * 3.0,
                 "||e||^2 = {} vs bound {}",
@@ -276,9 +284,10 @@ mod tests {
         let mut ef = ErrorFeedback::new(d, Box::new(ScaledSign));
         let mut rng = Pcg64::seeded(3);
         let mut g = vec![0.0f32; d];
+        let mut delta = vec![0.0f32; d];
         for _ in 0..5 {
             rng.fill_normal(&mut g, 0.0, 1.0);
-            ef.step(0.2, &g, &mut rng);
+            ef.step_into(0.2, &g, &mut delta, &mut rng);
         }
         let saved = ef.save_state();
         let mut restored = ErrorFeedback::new(d, Box::new(ScaledSign));

@@ -4,7 +4,6 @@
 use super::pool::WorkerPool;
 use crate::collectives::{majority_vote, ShardPlan};
 use crate::compress::wire::Encoded;
-use std::sync::Arc;
 
 /// Fixed fan-out width of the leader's parallel frame decode. The `n`
 /// worker frames are partitioned into at most this many contiguous groups;
@@ -14,13 +13,23 @@ use std::sync::Arc;
 /// of the trained parameters, is identical for any `--threads` value.
 pub const DECODE_LANES: usize = 8;
 
+/// Frames per decode group for `n` worker frames — the single source of
+/// truth behind [`decode_groups`] and the allocation-free partition in
+/// [`Aggregation::combine_frames_into`]: both must derive the identical
+/// grouping or the f32 reduction tree (and with it bit-determinism)
+/// forks between the paths.
+pub fn decode_group_size(n: usize) -> usize {
+    debug_assert!(n > 0);
+    n.div_ceil(DECODE_LANES)
+}
+
 /// The fixed decode partition: contiguous groups of ⌈n / DECODE_LANES⌉
 /// frames. For n ≤ DECODE_LANES this is one group per worker, which makes
 /// the blocked reduction identical to the historical strictly-sequential
 /// per-worker sum.
 pub fn decode_groups(n: usize) -> Vec<(usize, usize)> {
     assert!(n > 0);
-    let size = n.div_ceil(DECODE_LANES);
+    let size = decode_group_size(n);
     let mut groups = Vec::with_capacity(n.div_ceil(size));
     let mut start = 0;
     while start < n {
@@ -29,6 +38,25 @@ pub fn decode_groups(n: usize) -> Vec<(usize, usize)> {
         start = end;
     }
     groups
+}
+
+/// Persistent scratch for the fused combine path: per-group frame
+/// containers, recycled partial-sum buffers, and the per-shard
+/// decode+aggregate timings of the last sharded combine. One instance
+/// lives in each driver; after round 1 nothing in here allocates (the
+/// zero-alloc steady state of docs/PERF.md).
+#[derive(Default)]
+pub struct DecodeScratch {
+    /// Per-group frame containers, moved through the pool's decode
+    /// commands and returned empty.
+    groups: Vec<Vec<Encoded>>,
+    /// Partial sums of the current combine, in group order.
+    partials: Vec<Vec<f32>>,
+    /// Recycle stack for partial-sum buffers.
+    spare: Vec<Vec<f32>>,
+    /// Seconds each shard leader spent in decode+aggregate during the
+    /// last [`Aggregation::combine_frames_sharded_into`] call.
+    pub shard_times: Vec<f64>,
 }
 
 /// How the leader combines per-worker updates.
@@ -59,78 +87,132 @@ impl Aggregation {
     }
 
     /// Decode + combine encoded worker frames (sorted by worker id) on the
-    /// leader, fanning the per-frame decode out across the pool threads.
+    /// leader, fanning the per-frame decode out across the pool threads,
+    /// into a caller-owned output buffer — the allocation-free hot path.
+    /// `frames` is drained (its container keeps its capacity) and every
+    /// decoded frame's byte buffer returns to the fabric's frame pool.
     ///
     /// * `Mean` uses the fused path: each fixed group of frames is decoded
-    ///   straight into one partial-sum buffer (`decode_*_add`, no dense
-    ///   `Vec<f32>` per worker), and the partials are merged in worker-id
-    ///   order before the 1/n scale.
+    ///   straight into one recycled partial-sum buffer (`decode_*_add`, no
+    ///   dense `Vec<f32>` per worker), and the partials are merged in
+    ///   worker-id order before the 1/n scale.
     /// * `MajorityVote` needs the individual updates, so frames are
-    ///   decoded densely in parallel and voted as before.
-    pub fn combine_frames(&self, frames: Vec<Encoded>, d: usize, pool: &WorkerPool) -> Vec<f32> {
+    ///   decoded densely in parallel and voted as before (this path
+    ///   allocates its per-worker vectors).
+    pub fn combine_frames_into(
+        &self,
+        frames: &mut Vec<Encoded>,
+        out: &mut [f32],
+        pool: &WorkerPool,
+        scratch: &mut DecodeScratch,
+    ) {
         assert!(!frames.is_empty());
         let n = frames.len();
-        let frames = Arc::new(frames);
+        let d = out.len();
         match self {
             Aggregation::Mean => {
-                let groups = decode_groups(n);
-                let partials = pool.decode_partials(&frames, d, &groups);
-                let mut out = vec![0.0f32; d];
-                for p in &partials {
-                    crate::tensor::add_assign(&mut out, p);
+                // the fixed partition of `decode_groups(n)`, computed
+                // without materializing the boundary list
+                let size = decode_group_size(n);
+                let ngroups = n.div_ceil(size);
+                if scratch.groups.len() < ngroups {
+                    scratch.groups.resize_with(ngroups, Vec::new);
                 }
-                crate::tensor::scale(1.0 / n as f32, &mut out);
-                out
+                {
+                    let mut it = frames.drain(..);
+                    for g in 0..ngroups {
+                        let take = size.min(n - g * size);
+                        scratch.groups[g].extend(it.by_ref().take(take));
+                    }
+                }
+                pool.decode_partials_pooled(
+                    &mut scratch.groups[..ngroups],
+                    d,
+                    &mut scratch.partials,
+                    &mut scratch.spare,
+                );
+                out.fill(0.0);
+                for p in &scratch.partials {
+                    crate::tensor::add_assign(out, p);
+                }
+                crate::tensor::scale(1.0 / n as f32, out);
+                // partial buffers go back on the recycle stack
+                scratch.spare.append(&mut scratch.partials);
             }
             Aggregation::MajorityVote => {
-                let updates = pool.decode_dense(&frames);
-                self.combine(&updates)
+                // drain, don't take: the caller's container keeps its
+                // capacity (the drained Vec itself is a fresh allocation,
+                // but this path is documented as allocating anyway)
+                let taken: Vec<Encoded> = frames.drain(..).collect();
+                let updates = pool.decode_dense(taken);
+                let combined = self.combine(&updates);
+                out.copy_from_slice(&combined);
             }
         }
     }
 
+    /// Allocating wrapper around [`combine_frames_into`](Self::combine_frames_into).
+    pub fn combine_frames(&self, mut frames: Vec<Encoded>, d: usize, pool: &WorkerPool) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        let mut scratch = DecodeScratch::default();
+        self.combine_frames_into(&mut frames, &mut out, pool, &mut scratch);
+        out
+    }
+
     /// Decode + combine per-shard frame sets into the full-length
-    /// aggregate, one shard leader at a time. Returns the aggregate and
-    /// each shard leader's measured decode+aggregate wall-clock — the
-    /// per-shard cost the driver charges on the virtual clock (the
-    /// simulated deployment runs the shard leaders concurrently, so the
-    /// round's leader cost is the max over shards).
+    /// caller-owned aggregate, one shard leader at a time; each shard's
+    /// result lands directly in its slice of `out` (no assembly copy).
+    /// `scratch.shard_times` receives each shard leader's measured
+    /// decode+aggregate wall-clock — the per-shard cost the driver charges
+    /// on the virtual clock (the simulated deployment runs the shard
+    /// leaders concurrently, so the round's leader cost is the max over
+    /// shards).
     ///
     /// Within each shard the reduction uses the same fixed worker-id
     /// grouping as [`combine_frames`](Self::combine_frames), so any
     /// `(shards, threads)` combination is bit-deterministic; the
     /// single-shard case computes exactly the unsharded aggregate.
+    pub fn combine_frames_sharded_into(
+        &self,
+        frames_by_shard: &mut [Vec<Encoded>],
+        plan: &ShardPlan,
+        pool: &WorkerPool,
+        out: &mut [f32],
+        scratch: &mut DecodeScratch,
+    ) {
+        assert_eq!(frames_by_shard.len(), plan.num_shards());
+        assert_eq!(out.len(), plan.dim());
+        // shard_times is detached while combine_frames_into borrows the
+        // rest of the scratch
+        let mut times = std::mem::take(&mut scratch.shard_times);
+        times.clear();
+        for (s, frames) in frames_by_shard.iter_mut().enumerate() {
+            let r = plan.range(s);
+            // only the decode+aggregate itself is timed — simulation
+            // plumbing around it is not shard-leader work and must not
+            // inflate the priced critical path (at S = 1 the measured
+            // section is identical to the historical single-leader
+            // profile)
+            let t = std::time::Instant::now();
+            self.combine_frames_into(frames, &mut out[r], pool, scratch);
+            times.push(t.elapsed().as_secs_f64());
+        }
+        scratch.shard_times = times;
+    }
+
+    /// Allocating wrapper around
+    /// [`combine_frames_sharded_into`](Self::combine_frames_sharded_into):
+    /// returns the aggregate and the per-shard decode+aggregate seconds.
     pub fn combine_frames_sharded(
         &self,
         mut frames_by_shard: Vec<Vec<Encoded>>,
         plan: &ShardPlan,
         pool: &WorkerPool,
     ) -> (Vec<f32>, Vec<f64>) {
-        assert_eq!(frames_by_shard.len(), plan.num_shards());
-        if plan.num_shards() == 1 {
-            // single-shard fast path: the combined vector IS the output —
-            // no assembly buffer, no extra d-length copy (the pre-sharding
-            // leader hot path, preserved exactly)
-            let frames = frames_by_shard.pop().expect("one shard");
-            let t = std::time::Instant::now();
-            let out = self.combine_frames(frames, plan.dim(), pool);
-            return (out, vec![t.elapsed().as_secs_f64()]);
-        }
         let mut out = vec![0.0f32; plan.dim()];
-        let mut times = Vec::with_capacity(plan.num_shards());
-        for (s, frames) in frames_by_shard.into_iter().enumerate() {
-            let r = plan.range(s);
-            // only the decode+aggregate itself is timed — the slice
-            // assembly below is simulation plumbing, not shard-leader
-            // work, and must not inflate the priced critical path (at
-            // S = 1 this keeps the measured section identical to the
-            // historical single-leader profile)
-            let t = std::time::Instant::now();
-            let agg = self.combine_frames(frames, r.len(), pool);
-            times.push(t.elapsed().as_secs_f64());
-            out[r].copy_from_slice(&agg);
-        }
-        (out, times)
+        let mut scratch = DecodeScratch::default();
+        self.combine_frames_sharded_into(&mut frames_by_shard, plan, pool, &mut out, &mut scratch);
+        (out, scratch.shard_times)
     }
 
     /// Combine decoded dense updates (one per worker).
@@ -161,6 +243,7 @@ impl Aggregation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn mean_combine() {

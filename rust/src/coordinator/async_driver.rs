@@ -42,6 +42,7 @@
 //! schedule would make the fold order depend on wall-clock decode speed
 //! and break `--threads` bit-determinism.
 
+use super::aggregate::DecodeScratch;
 use super::driver::{apply_update, DriverConfig, TrainOutcome};
 use super::pool::{RoundReport, WorkerPool};
 use super::round::{LeaderProfile, StalenessStats};
@@ -100,6 +101,16 @@ pub struct AsyncTrainDriver {
     in_pending: Vec<bool>,
     sim_time: f64,
     started: bool,
+    // --- persistent fold scratch (the same zero-copy/recycled-buffer
+    // treatment as the sync driver; see docs/PERF.md) ---
+    /// Shared broadcast slices, refreshed in place per dispatch.
+    bcast: Vec<Arc<[f32]>>,
+    /// Per-shard frame collection reused across folds.
+    frames_by_shard: Vec<Vec<Encoded>>,
+    /// The fold's aggregate.
+    agg: Vec<f32>,
+    /// Fused-decode scratch (groups, recycled partials, shard timings).
+    scratch: DecodeScratch,
 }
 
 impl AsyncTrainDriver {
@@ -120,9 +131,14 @@ impl AsyncTrainDriver {
         let quorum = if quorum == 0 { n } else { quorum.min(n) };
         let (sim_clock, fabric, ps) = super::driver::build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
+        let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
         AsyncTrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
+            bcast: Vec::new(),
+            frames_by_shard,
+            agg: vec![0.0; d],
+            scratch: DecodeScratch::default(),
             cfg,
             quorum,
             max_staleness,
@@ -155,7 +171,7 @@ impl AsyncTrainDriver {
     }
 
     pub fn traffic(&self) -> TrafficStats {
-        self.fabric.stats()
+        self.fabric.snapshot_stats()
     }
 
     pub fn profile(&self) -> &LeaderProfile {
@@ -202,11 +218,14 @@ impl AsyncTrainDriver {
         for &l in &self.ps.leaders {
             self.sim_clock.set_node_time(l, self.sim_time);
         }
+        // θ is fixed for the whole dispatch batch: refresh the shared
+        // slices once, then every recipient costs a refcount bump
+        self.ps.make_broadcast(&self.theta, &mut self.bcast);
         for &w in ids {
             // params depart the leaders now; the worker's pushes depart
             // at params-arrival + compute-time, so pre-set its node time
             // before the pool thread issues the sends
-            let params_arrival = self.ps.send_params(&self.fabric, w, r, &self.theta);
+            let params_arrival = self.ps.send_params_shared(&self.fabric, w, r, &self.bcast);
             let finish = params_arrival + self.cfg.straggler.compute_time(w, self.worker_steps[w]);
             self.sim_clock.set_node_time(w, finish);
             self.worker_round[w] = r;
@@ -283,9 +302,9 @@ impl AsyncTrainDriver {
         batch.sort_by_key(|b| b.worker);
         let m = batch.len();
         self.staleness.record_fold(m);
-        let s_total = self.ps.num_shards();
-        let mut frames_by_shard: Vec<Vec<Encoded>> =
-            (0..s_total).map(|_| Vec::with_capacity(m)).collect();
+        for v in self.frames_by_shard.iter_mut() {
+            v.clear();
+        }
         let mut folded = Vec::with_capacity(m);
         let mut mean_loss = 0.0f64;
         let mut mean_err = 0.0f64;
@@ -305,7 +324,7 @@ impl AsyncTrainDriver {
             self.in_pending[b.worker] = false;
             folded.push(b.worker);
             for (s, f) in b.frames.into_iter().enumerate() {
-                frames_by_shard[s].push(f);
+                self.frames_by_shard[s].push(f);
             }
         }
         mean_loss /= m as f64;
@@ -313,19 +332,23 @@ impl AsyncTrainDriver {
         mean_phi /= m as f64;
         mean_stale /= m as f64;
 
-        let (agg, shard_times) =
-            self.cfg
-                .aggregation
-                .combine_frames_sharded(frames_by_shard, &self.ps.plan, &self.pool);
+        self.cfg.aggregation.combine_frames_sharded_into(
+            &mut self.frames_by_shard,
+            &self.ps.plan,
+            &self.pool,
+            &mut self.agg,
+            &mut self.scratch,
+        );
         // price the shard leaders' decode on the reported total (critical
         // path = the slowest shard leader); see `leader_time_s` for why it
         // never feeds the event schedule
-        self.leader_time_s += self.profile.record_shards(&shard_times);
+        let critical = self.profile.record_shards(&self.scratch.shard_times);
+        self.leader_time_s += critical;
         apply_update(
             self.cfg.update_rule,
             lr,
             self.cfg.weight_decay,
-            &agg,
+            &self.agg,
             &mut self.theta,
             &mut self.momentum,
             &mut self.wd_buf,
@@ -405,12 +428,12 @@ impl AsyncTrainDriver {
             }
         }
         recorder.record("final_loss", self.round, recorder.last("train_loss"));
-        let bits = self.fabric.stats().total_bits;
+        let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.round, bits as f64);
         TrainOutcome {
             theta: self.theta,
             recorder,
-            traffic: self.fabric.stats(),
+            traffic: self.fabric.snapshot_stats(),
             rounds: self.round,
             profile: self.profile,
             // schedule time + the leaders' measured decode cost (the

@@ -7,14 +7,15 @@
 //! makes the training trajectory bit-identical for any thread count (see
 //! the module docs of [`crate::coordinator`]).
 
-use super::aggregate::Aggregation;
-use super::pool::{WorkerPool, WorkerState};
+use super::aggregate::{Aggregation, DecodeScratch};
+use super::pool::{RoundReport, WorkerPool, WorkerState};
 use super::round::{LeaderProfile, LrSchedule, RoundClock, StalenessStats};
 use super::state::{CheckpointStore, Snapshot};
 use super::worker::Worker;
 use crate::collectives::{ShardPlan, ShardedParameterServer};
+use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
-use crate::net::{Fabric, LinkModel, SimClock, StragglerSchedule, TrafficStats};
+use crate::net::{Fabric, LinkModel, Message, SimClock, StragglerSchedule, TrafficStats};
 use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
@@ -183,6 +184,22 @@ pub struct TrainDriver {
     wd_buf: Vec<f32>,
     profile: LeaderProfile,
     sim_time: f64,
+    // --- persistent round scratch (the zero-alloc steady state of
+    // docs/PERF.md: after round 1 every buffer below is warm and the
+    // round loop performs no heap allocation) ---
+    /// Shared broadcast slices, refreshed in place each round
+    /// (`ShardedParameterServer::make_broadcast`).
+    bcast: Vec<Arc<[f32]>>,
+    /// Per-worker round reports, refilled by `WorkerPool::round_into`.
+    reports: Vec<RoundReport>,
+    /// Raw gather drain buffer.
+    msgs: Vec<(Message, f64)>,
+    /// Per-shard gathered frames.
+    frames_by_shard: Vec<Vec<Encoded>>,
+    /// The round's aggregate.
+    agg: Vec<f32>,
+    /// Fused-decode scratch (groups, recycled partials, shard timings).
+    scratch: DecodeScratch,
 }
 
 impl TrainDriver {
@@ -193,6 +210,7 @@ impl TrainDriver {
         assert_eq!(theta0.len(), d);
         let (sim_clock, fabric, ps) = build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
+        let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
         TrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
@@ -205,6 +223,12 @@ impl TrainDriver {
             clock: RoundClock::default(),
             profile: LeaderProfile::default(),
             sim_time: 0.0,
+            bcast: Vec::new(),
+            reports: Vec::new(),
+            msgs: Vec::new(),
+            frames_by_shard,
+            agg: vec![0.0; d],
+            scratch: DecodeScratch::default(),
         }
     }
 
@@ -216,9 +240,11 @@ impl TrainDriver {
         self.clock.current()
     }
 
-    /// Snapshot of the fabric's traffic accounting so far.
+    /// Snapshot of the fabric's traffic accounting so far (deep clone —
+    /// end-of-run reporting; the round loop itself reads the lock-free
+    /// `Fabric::total_bits`).
     pub fn traffic(&self) -> TrafficStats {
-        self.fabric.stats()
+        self.fabric.snapshot_stats()
     }
 
     /// Wall-clock profile of the leader's decode+aggregate hot path.
@@ -290,6 +316,9 @@ impl TrainDriver {
     }
 
     /// One synchronous round. Returns the mean worker training loss.
+    /// Steady-state allocation-free: every buffer involved is persistent
+    /// driver scratch or cycles through a recycle pool (asserted by the
+    /// `alloc_regression` integration test).
     pub fn round(&mut self, recorder: &mut Recorder) -> f64 {
         let step = self.clock.current();
         let lr = self.cfg.schedule.lr(step as usize) as f32;
@@ -297,11 +326,15 @@ impl TrainDriver {
 
         // 1. broadcast parameters from every shard leader (accounted;
         // arrivals stamped from the leaders' shared virtual time — the
-        // sync engine keeps all shard leaders in lock-step).
+        // sync engine keeps all shard leaders in lock-step). The shared
+        // slices are refreshed in place: one copy of θ per round plus a
+        // refcount bump per (worker, shard) — never a dense clone per
+        // worker.
         for &l in &self.ps.leaders {
             self.sim_clock.set_node_time(l, self.sim_time);
         }
-        let params_arrival = self.ps.broadcast_params(&self.fabric, step, &self.theta);
+        self.ps.make_broadcast(&self.theta, &mut self.bcast);
+        let params_arrival = self.ps.broadcast_shared(&self.fabric, step, &self.bcast);
         // each worker's push departs once its (straggler-model) compute
         // finishes, so the frames the pool is about to send get stamped
         // with honest virtual arrival times
@@ -311,44 +344,52 @@ impl TrainDriver {
         }
 
         // 2-3. pool: every worker drains its broadcast, computes, EF-
-        // compresses, and pushes one encoded frame per shard leader.
-        let reports = self.pool.round(step, lr);
-        let mean_loss = reports.iter().map(|r| r.loss).sum::<f64>() / n as f64;
+        // compresses, and pushes one encoded frame per shard leader (the
+        // frame buffers come from the fabric's recycle pool).
+        self.pool.round_into(step, lr, &mut self.reports);
+        let mean_loss = self.reports.iter().map(|r| r.loss).sum::<f64>() / n as f64;
 
         // 4. shard leaders: gather, decode, aggregate, update. Each shard
         // sorts its frames by source so the f32 aggregation order is
         // independent of thread scheduling; the per-frame decode then fans
         // out across the pool threads in fixed worker-id groups (see
         // [`super::aggregate::decode_groups`]), fused straight into
-        // partial-sum buffers — no dense `Vec<f32>` per worker.
+        // recycled partial-sum buffers — no dense `Vec<f32>` per worker.
         let s_total = self.ps.num_shards();
-        let mut frames_by_shard = Vec::with_capacity(s_total);
         let mut round_end = self.sim_time;
         for s in 0..s_total {
-            let (frames, latest) = self
+            let latest = self
                 .ps
-                .gather_shard_timed(&self.fabric, step, s)
+                .gather_shard_into(
+                    &self.fabric,
+                    step,
+                    s,
+                    &mut self.msgs,
+                    &mut self.frames_by_shard[s],
+                )
                 .unwrap_or_else(|e| panic!("PS gather failed: {e}"));
             round_end = round_end.max(latest);
-            frames_by_shard.push(frames);
         }
         // the synchronous barrier: every shard has every frame
-        let (agg, shard_times) =
-            self.cfg
-                .aggregation
-                .combine_frames_sharded(frames_by_shard, &self.ps.plan, &self.pool);
+        self.cfg.aggregation.combine_frames_sharded_into(
+            &mut self.frames_by_shard,
+            &self.ps.plan,
+            &self.pool,
+            &mut self.agg,
+            &mut self.scratch,
+        );
         // leader compute is priced on the virtual clock: the shard leaders
         // decode concurrently in the simulated deployment, so the round is
         // extended by the slowest one (max over shards = the critical path
         // the sharding shrinks)
-        let critical = self.profile.record_shards(&shard_times);
+        let critical = self.profile.record_shards(&self.scratch.shard_times);
         self.sim_time = round_end + critical;
 
         apply_update(
             self.cfg.update_rule,
             lr,
             self.cfg.weight_decay,
-            &agg,
+            &self.agg,
             &mut self.theta,
             &mut self.momentum,
             &mut self.wd_buf,
@@ -357,11 +398,11 @@ impl TrainDriver {
         // instrumentation (reports are sorted by worker id)
         recorder.record("train_loss", step, mean_loss);
         recorder.record("lr", step, lr as f64);
-        let mean_err = reports.iter().map(|r| r.error_norm).sum::<f64>() / n as f64;
+        let mean_err = self.reports.iter().map(|r| r.error_norm).sum::<f64>() / n as f64;
         recorder.record("error_norm", step, mean_err);
-        let mean_phi = reports.iter().map(|r| r.phi).sum::<f64>() / n as f64;
+        let mean_phi = self.reports.iter().map(|r| r.phi).sum::<f64>() / n as f64;
         recorder.record("phi_corrected", step, mean_phi);
-        let mean_phi_g = reports.iter().map(|r| r.grad_density).sum::<f64>() / n as f64;
+        let mean_phi_g = self.reports.iter().map(|r| r.grad_density).sum::<f64>() / n as f64;
         recorder.record("phi_grad", step, mean_phi_g);
 
         self.clock.advance();
@@ -374,7 +415,8 @@ impl TrainDriver {
         for step in 0..self.cfg.steps {
             let loss = self.round(&mut recorder);
             if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
-                let bits = self.fabric.stats().total_bits;
+                // lock-free counter: no stats-map clone on the log path
+                let bits = self.fabric.total_bits();
                 log::info!(
                     "round {step}: loss {loss:.4}  comm {:.2} Mbit",
                     bits as f64 / 1e6
@@ -395,12 +437,12 @@ impl TrainDriver {
             }
         }
         recorder.record("final_loss", self.clock.current(), recorder.last("train_loss"));
-        let bits = self.fabric.stats().total_bits;
+        let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.clock.current(), bits as f64);
         TrainOutcome {
             theta: self.theta,
             recorder,
-            traffic: self.fabric.stats(),
+            traffic: self.fabric.snapshot_stats(),
             rounds: self.clock.current(),
             profile: self.profile,
             sim_time_s: self.sim_time,

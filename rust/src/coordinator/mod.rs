@@ -92,7 +92,7 @@ pub mod round;
 pub mod state;
 pub mod worker;
 
-pub use aggregate::Aggregation;
+pub use aggregate::{Aggregation, DecodeScratch};
 pub use async_driver::AsyncTrainDriver;
 pub use driver::{TrainDriver, TrainOutcome};
 pub use pool::{RoundReport, WorkerPool, WorkerState};

@@ -3,7 +3,7 @@
 //!
 //! The driver (leader) talks to the pool over channels:
 //!
-//! * [`WorkerPool::round`] — dispatch one training round; every actor
+//! * [`WorkerPool::round_into`] — dispatch one training round; every actor
 //!   drains its workers' parameter broadcasts from the fabric, runs the
 //!   gradient + EF-compress step, pushes the encoded frame to the leader
 //!   through the shared [`Fabric`] (so bit accounting is exact and
@@ -20,15 +20,78 @@
 //! its RNG and data shard, which makes per-worker computation identical
 //! across any thread count — determinism is asserted by the
 //! `threads_are_bit_deterministic` integration test.
+//!
+//! # Allocation-free steady state
+//!
+//! The channels are ring-buffer queues ([`Chan`]), not `std::sync::mpsc`
+//! (whose linked blocks allocate as the stream advances): once round 1 has
+//! sized the rings, command/reply traffic allocates nothing. The decode
+//! fan-out ([`WorkerPool::decode_partials_pooled`]) moves frame groups and
+//! recycled partial-sum buffers *through* the commands and gets them back
+//! in the replies, and each decoded frame's byte buffer returns to the
+//! fabric's [`crate::net::FramePool`] for the next round's encoders — the
+//! full architecture is documented in docs/PERF.md and enforced by the
+//! `alloc_regression` integration test.
 
 use super::worker::Worker;
 use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::{self, Encoded};
 use crate::net::Fabric;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+/// A tiny blocking MPSC queue over `Mutex<VecDeque>` + `Condvar`. The
+/// VecDeque's ring reuses its allocation, so steady-state traffic is
+/// allocation-free once the queue has grown to its per-round peak. There
+/// is no disconnect signalling: the pool shuts its actors down with an
+/// explicit [`Command::Shutdown`], and reply-side liveness is covered by
+/// [`WorkerPool::recv_reply`]'s thread-death check.
+struct Chan<T> {
+    q: Mutex<VecDeque<T>>,
+    ready: Condvar,
+}
+
+impl<T> Chan<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Chan {
+            q: Mutex::new(VecDeque::with_capacity(32)),
+            ready: Condvar::new(),
+        })
+    }
+
+    fn send(&self, t: T) {
+        self.q.lock().unwrap().push_back(t);
+        self.ready.notify_one();
+    }
+
+    fn recv(&self) -> T {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return Some(t);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timed_out) = self.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+}
 
 /// Per-worker instrumentation from one round.
 #[derive(Clone, Debug)]
@@ -50,48 +113,71 @@ pub struct WorkerState {
 }
 
 enum Command {
-    Round { round: u64, lr: f32 },
+    Round {
+        round: u64,
+        lr: f32,
+    },
     /// Run one gradient + compress + push step for a single worker (the
     /// async driver's dispatch unit: only the quorum's workers recompute
     /// after a fold, the rest stay in flight).
-    StepOne { worker: usize, round: u64, lr: f32 },
-    Eval { worker: usize, theta: Arc<Vec<f32>> },
-    Export,
-    Restore { states: Arc<Vec<WorkerState>> },
-    /// Leader decode fan-out: decode `frames[start..end]` (one fixed group
-    /// of worker frames, in index order) into a fresh length-`d` partial
-    /// sum and send it back tagged with the group index.
-    DecodeAccum {
-        frames: Arc<Vec<Encoded>>,
-        d: usize,
-        group: usize,
-        start: usize,
-        end: usize,
+    StepOne {
+        worker: usize,
+        round: u64,
+        lr: f32,
     },
-    /// Leader decode fan-out, dense flavour: decode each of
-    /// `frames[start..end]` to its own dense vector (majority vote needs
-    /// the per-worker updates, not their sum).
+    Eval {
+        worker: usize,
+        theta: Arc<Vec<f32>>,
+    },
+    Export,
+    Restore {
+        states: Arc<Vec<WorkerState>>,
+    },
+    /// Leader decode fan-out: decode this group of worker frames — in
+    /// index order — fused into the provided accumulator (zeroed on the
+    /// thread). Both the frames' containers and the accumulator round-trip
+    /// back through [`Reply::Partial`] for reuse; the frames' byte buffers
+    /// go to the fabric's frame pool.
+    DecodeAccum {
+        frames: Vec<Encoded>,
+        group: usize,
+        acc: Vec<f32>,
+    },
+    /// Leader decode fan-out, dense flavour: decode each frame to its own
+    /// dense vector (majority vote needs the per-worker updates, not their
+    /// sum). `start` is the index of the first frame in the caller's
+    /// order.
     DecodeDense {
-        frames: Arc<Vec<Encoded>>,
+        frames: Vec<Encoded>,
         start: usize,
-        end: usize,
     },
     Shutdown,
 }
 
 enum Reply {
     Round(RoundReport),
-    Eval { loss: f64, acc: f64 },
+    Eval {
+        loss: f64,
+        acc: f64,
+    },
     Export(WorkerState),
     Restored,
-    Partial { group: usize, acc: Vec<f32> },
-    Decoded { idx: usize, v: Vec<f32> },
+    Partial {
+        group: usize,
+        acc: Vec<f32>,
+        /// The group's (now empty) frame container, returned for reuse.
+        frames: Vec<Encoded>,
+    },
+    Decoded {
+        idx: usize,
+        v: Vec<f32>,
+    },
 }
 
 /// Persistent thread pool owning the workers of one training run.
 pub struct WorkerPool {
-    command_txs: Vec<Sender<Command>>,
-    reply_rx: Receiver<Reply>,
+    command_txs: Vec<Arc<Chan<Command>>>,
+    reply_rx: Arc<Chan<Reply>>,
     handles: Vec<JoinHandle<()>>,
     n_workers: usize,
     /// worker id -> thread index (for routing eval requests).
@@ -119,7 +205,7 @@ impl WorkerPool {
             n_workers,
             "fabric sized for a different worker count (need workers + shards nodes)"
         );
-        let (reply_tx, reply_rx) = channel();
+        let reply_rx: Arc<Chan<Reply>> = Chan::new();
 
         // Contiguous block assignment: thread t owns workers
         // [t*⌈n/threads⌉ .. ), ascending by id within a thread.
@@ -133,11 +219,12 @@ impl WorkerPool {
             for w in &block {
                 owner[w.id] = t;
             }
-            let (tx, rx) = channel();
+            let tx: Arc<Chan<Command>> = Chan::new();
+            let rx = tx.clone();
             command_txs.push(tx);
             let fabric = fabric.clone();
             let ps = ps.clone();
-            let reply_tx = reply_tx.clone();
+            let reply_tx = reply_rx.clone();
             handles.push(std::thread::spawn(move || {
                 actor_loop(block, fabric, ps, rx, reply_tx);
             }));
@@ -163,40 +250,45 @@ impl WorkerPool {
     /// Wait for one reply, surfacing actor-thread death as a panic instead
     /// of blocking forever. (During normal operation no actor returns, so
     /// a finished handle means one panicked — with ≥2 threads the survivors
-    /// keep the reply channel open and a plain `recv` would hang.)
+    /// keep replying and a plain blocking `recv` would hang.)
     fn recv_reply(&self) -> Reply {
         loop {
             match self.reply_rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(reply) => return reply,
-                Err(RecvTimeoutError::Timeout) => {
+                Some(reply) => return reply,
+                None => {
                     assert!(
                         !self.handles.iter().any(|h| h.is_finished()),
                         "worker pool thread died while replies were pending"
                     );
                 }
-                Err(RecvTimeoutError::Disconnected) => {
-                    panic!("all worker pool threads died");
-                }
             }
         }
     }
 
-    /// Run one round on every worker; returns per-worker reports sorted by
-    /// worker id. The caller must have broadcast the round's parameters on
-    /// the fabric first; on return every worker's gradient push is on the
-    /// leader's queue.
-    pub fn round(&self, round: u64, lr: f32) -> Vec<RoundReport> {
+    /// Run one round on every worker; fills `reports` (cleared first) with
+    /// per-worker reports sorted by worker id. The caller must have
+    /// broadcast the round's parameters on the fabric first; on return
+    /// every worker's gradient push is on the leader's queue.
+    /// Allocation-free once `reports` is warm.
+    pub fn round_into(&self, round: u64, lr: f32, reports: &mut Vec<RoundReport>) {
+        reports.clear();
         for tx in &self.command_txs {
-            tx.send(Command::Round { round, lr }).expect("pool thread died");
+            tx.send(Command::Round { round, lr });
         }
-        let mut reports = Vec::with_capacity(self.n_workers);
         for _ in 0..self.n_workers {
             match self.recv_reply() {
                 Reply::Round(r) => reports.push(r),
                 _ => unreachable!("unexpected pool reply during round"),
             }
         }
-        reports.sort_by_key(|r| r.id);
+        // worker ids are unique: the unstable sort is deterministic
+        reports.sort_unstable_by_key(|r| r.id);
+    }
+
+    /// Allocating wrapper around [`round_into`](Self::round_into).
+    pub fn round(&self, round: u64, lr: f32) -> Vec<RoundReport> {
+        let mut reports = Vec::with_capacity(self.n_workers);
+        self.round_into(round, lr, &mut reports);
         reports
     }
 
@@ -206,13 +298,11 @@ impl WorkerPool {
     /// The caller must have sent each listed worker its parameters first.
     pub fn step_workers(&self, ids: &[usize], round: u64, lr: f32) -> Vec<RoundReport> {
         for &w in ids {
-            self.command_txs[self.owner[w]]
-                .send(Command::StepOne {
-                    worker: w,
-                    round,
-                    lr,
-                })
-                .expect("pool thread died");
+            self.command_txs[self.owner[w]].send(Command::StepOne {
+                worker: w,
+                round,
+                lr,
+            });
         }
         let mut reports = Vec::with_capacity(ids.len());
         for _ in 0..ids.len() {
@@ -221,18 +311,16 @@ impl WorkerPool {
                 _ => unreachable!("unexpected pool reply during step"),
             }
         }
-        reports.sort_by_key(|r| r.id);
+        reports.sort_unstable_by_key(|r| r.id);
         reports
     }
 
     /// Held-out eval (loss, accuracy) through one worker's grad source.
     pub fn eval(&self, worker: usize, theta: &[f32]) -> (f64, f64) {
-        let tx = &self.command_txs[self.owner[worker]];
-        tx.send(Command::Eval {
+        self.command_txs[self.owner[worker]].send(Command::Eval {
             worker,
             theta: Arc::new(theta.to_vec()),
-        })
-        .expect("pool thread died");
+        });
         match self.recv_reply() {
             Reply::Eval { loss, acc } => (loss, acc),
             _ => unreachable!("unexpected pool reply during eval"),
@@ -242,7 +330,7 @@ impl WorkerPool {
     /// Snapshot every worker's EF state, sorted by worker id.
     pub fn export_states(&self) -> Vec<WorkerState> {
         for tx in &self.command_txs {
-            tx.send(Command::Export).expect("pool thread died");
+            tx.send(Command::Export);
         }
         let mut states = Vec::with_capacity(self.n_workers);
         for _ in 0..self.n_workers {
@@ -251,66 +339,105 @@ impl WorkerPool {
                 _ => unreachable!("unexpected pool reply during export"),
             }
         }
-        states.sort_by_key(|s| s.id);
+        states.sort_unstable_by_key(|s| s.id);
         states
     }
 
     /// Fan frame decoding out over the pool threads, fused with
-    /// accumulation: each `(start, end)` group of frames is decoded — in
-    /// index order — straight into one partial-sum buffer via
-    /// [`wire::decode_any_add`]. Groups are distributed round-robin over
-    /// the threads; since every partial depends only on its own group's
-    /// frames, the returned partials (sorted by group index) are
+    /// accumulation, recycling every buffer involved:
+    ///
+    /// * `groups[g]` holds group `g`'s frames (in worker-id order); each
+    ///   group is decoded — in index order — straight into one partial-sum
+    ///   buffer via [`wire::decode_any_add`]. On return every `groups[g]`
+    ///   is empty again (same container, capacity kept) and the decoded
+    ///   frames' byte buffers are back in the fabric's frame pool.
+    /// * `partials` (cleared first) receives the group partial sums in
+    ///   group order; the buffers come from `spare`, the caller's recycle
+    ///   stack (falling back to fresh allocations when it runs dry).
+    ///
+    /// Groups are distributed round-robin over the threads; since every
+    /// partial depends only on its own group's frames, the results are
     /// bit-identical for any thread count.
-    pub fn decode_partials(
+    pub fn decode_partials_pooled(
         &self,
-        frames: &Arc<Vec<Encoded>>,
+        groups: &mut [Vec<Encoded>],
         d: usize,
-        groups: &[(usize, usize)],
-    ) -> Vec<Vec<f32>> {
+        partials: &mut Vec<Vec<f32>>,
+        spare: &mut Vec<Vec<f32>>,
+    ) {
         let threads = self.command_txs.len();
-        for (g, &(start, end)) in groups.iter().enumerate() {
-            self.command_txs[g % threads]
-                .send(Command::DecodeAccum {
-                    frames: frames.clone(),
-                    d,
-                    group: g,
-                    start,
-                    end,
-                })
-                .expect("pool thread died");
+        partials.clear();
+        partials.resize_with(groups.len(), Vec::new);
+        for (g, slot) in groups.iter_mut().enumerate() {
+            let frames = std::mem::take(slot);
+            let mut acc = spare.pop().unwrap_or_default();
+            acc.resize(d, 0.0);
+            self.command_txs[g % threads].send(Command::DecodeAccum {
+                frames,
+                group: g,
+                acc,
+            });
         }
-        let mut partials: Vec<Option<Vec<f32>>> = vec![None; groups.len()];
         for _ in 0..groups.len() {
             match self.recv_reply() {
-                Reply::Partial { group, acc } => partials[group] = Some(acc),
+                Reply::Partial { group, acc, frames } => {
+                    partials[group] = acc;
+                    groups[group] = frames;
+                }
                 _ => unreachable!("unexpected pool reply during decode"),
             }
         }
+    }
+
+    /// Fan frame decoding out with fused accumulation, one partial per
+    /// `(start, end)` group of `frames`. Allocating wrapper around
+    /// [`decode_partials_pooled`](Self::decode_partials_pooled); `groups`
+    /// must be a contiguous ascending partition of `0..frames.len()`
+    /// (asserted — handing a group the wrong frames would silently corrupt
+    /// the partial sums).
+    pub fn decode_partials(
+        &self,
+        frames: Vec<Encoded>,
+        d: usize,
+        groups: &[(usize, usize)],
+    ) -> Vec<Vec<f32>> {
+        let n = frames.len();
+        let mut it = frames.into_iter();
+        let mut group_vecs: Vec<Vec<Encoded>> = Vec::with_capacity(groups.len());
+        let mut expect = 0usize;
+        for &(start, end) in groups {
+            assert!(
+                start == expect && start < end && end <= n,
+                "decode groups must be a contiguous ascending partition of 0..{n}"
+            );
+            expect = end;
+            group_vecs.push(it.by_ref().take(end - start).collect());
+        }
+        assert_eq!(expect, n, "decode groups must cover every frame");
+        let mut partials = Vec::new();
+        let mut spare = Vec::new();
+        self.decode_partials_pooled(&mut group_vecs, d, &mut partials, &mut spare);
         partials
-            .into_iter()
-            .map(|p| p.expect("missing decode partial"))
-            .collect()
     }
 
     /// Fan frame decoding out over the pool threads, one dense vector per
     /// frame (contiguous blocks per thread); returns the decoded updates
-    /// sorted by frame index.
-    pub fn decode_dense(&self, frames: &Arc<Vec<Encoded>>) -> Vec<Vec<f32>> {
+    /// sorted by frame index. The frames' byte buffers are recycled into
+    /// the fabric's frame pool.
+    pub fn decode_dense(&self, frames: Vec<Encoded>) -> Vec<Vec<f32>> {
         let n = frames.len();
         let threads = self.command_txs.len();
         let per = n.div_ceil(threads);
+        let mut it = frames.into_iter();
         let mut start = 0usize;
         let mut t = 0usize;
         while start < n {
             let end = (start + per).min(n);
-            self.command_txs[t]
-                .send(Command::DecodeDense {
-                    frames: frames.clone(),
-                    start,
-                    end,
-                })
-                .expect("pool thread died");
+            let chunk: Vec<Encoded> = it.by_ref().take(end - start).collect();
+            self.command_txs[t].send(Command::DecodeDense {
+                frames: chunk,
+                start,
+            });
             start = end;
             t += 1;
         }
@@ -333,8 +460,7 @@ impl WorkerPool {
         for tx in &self.command_txs {
             tx.send(Command::Restore {
                 states: states.clone(),
-            })
-            .expect("pool thread died");
+            });
         }
         for _ in 0..self.command_txs.len() {
             match self.recv_reply() {
@@ -348,8 +474,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         for tx in &self.command_txs {
-            // the thread may already be gone; that's fine
-            let _ = tx.send(Command::Shutdown);
+            tx.send(Command::Shutdown);
         }
         for handle in self.handles.drain(..) {
             let _ = handle.join();
@@ -357,26 +482,31 @@ impl Drop for WorkerPool {
     }
 }
 
-/// The actor body: owns a block of workers until shutdown.
+/// The actor body: owns a block of workers until shutdown. The parameter
+/// assembly buffer and per-round frame list are persistent scratch — warm
+/// after round 1, so the steady-state round path allocates nothing.
 fn actor_loop(
     mut workers: Vec<Worker>,
     fabric: Arc<Fabric>,
     ps: ShardedParameterServer,
-    rx: Receiver<Command>,
-    tx: Sender<Reply>,
+    rx: Arc<Chan<Command>>,
+    tx: Arc<Chan<Reply>>,
 ) {
     // reused parameter assembly buffer (per-shard slices scatter into it)
     let mut params: Vec<f32> = Vec::new();
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
+    // reused per-round frame list; the frames' byte buffers cycle through
+    // the fabric's frame pool
+    let mut frames: Vec<Encoded> = Vec::new();
+    loop {
+        match rx.recv() {
             Command::Round { round, lr } => {
                 for w in workers.iter_mut() {
                     assert!(
                         ps.recv_params_into(&fabric, w.id, &mut params),
                         "parameter broadcast missing for worker"
                     );
-                    let frames = w.step_encode_sharded(&params, lr);
-                    ps.push_frames(&fabric, w.id, round, frames);
+                    w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
+                    ps.push_frames(&fabric, w.id, round, &mut frames);
                     let report = RoundReport {
                         id: w.id,
                         loss: w.last_loss,
@@ -384,9 +514,7 @@ fn actor_loop(
                         grad_density: w.last_grad_density,
                         error_norm: w.error_norm(),
                     };
-                    if tx.send(Reply::Round(report)).is_err() {
-                        return;
-                    }
+                    tx.send(Reply::Round(report));
                 }
             }
             Command::StepOne { worker, round, lr } => {
@@ -398,8 +526,8 @@ fn actor_loop(
                     ps.recv_params_into(&fabric, w.id, &mut params),
                     "parameter message missing for stepped worker"
                 );
-                let frames = w.step_encode_sharded(&params, lr);
-                ps.push_frames(&fabric, w.id, round, frames);
+                w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
+                ps.push_frames(&fabric, w.id, round, &mut frames);
                 let report = RoundReport {
                     id: w.id,
                     loss: w.last_loss,
@@ -407,9 +535,7 @@ fn actor_loop(
                     grad_density: w.last_grad_density,
                     error_norm: w.error_norm(),
                 };
-                if tx.send(Reply::Round(report)).is_err() {
-                    return;
-                }
+                tx.send(Reply::Round(report));
             }
             Command::Eval { worker, theta } => {
                 let w = workers
@@ -418,9 +544,7 @@ fn actor_loop(
                     .expect("eval routed to wrong pool thread");
                 let loss = w.eval_loss(&theta);
                 let acc = w.eval_acc(&theta);
-                if tx.send(Reply::Eval { loss, acc }).is_err() {
-                    return;
-                }
+                tx.send(Reply::Eval { loss, acc });
             }
             Command::Export => {
                 for w in &workers {
@@ -433,32 +557,30 @@ fn actor_loop(
                         error: w.export_error(),
                         corrected: w.export_corrected(),
                     };
-                    if tx.send(Reply::Export(state)).is_err() {
-                        return;
-                    }
+                    tx.send(Reply::Export(state));
                 }
             }
             Command::DecodeAccum {
-                frames,
-                d,
+                mut frames,
                 group,
-                start,
-                end,
+                mut acc,
             } => {
-                let mut acc = vec![0.0f32; d];
-                for e in &frames[start..end] {
+                acc.fill(0.0);
+                for e in &frames {
                     wire::decode_any_add(e, &mut acc).expect("leader frame decode");
                 }
-                if tx.send(Reply::Partial { group, acc }).is_err() {
-                    return;
+                // spent push frames hand their byte buffers back for the
+                // next round's encoders
+                for e in frames.drain(..) {
+                    fabric.frame_pool().put(e.bytes);
                 }
+                tx.send(Reply::Partial { group, acc, frames });
             }
-            Command::DecodeDense { frames, start, end } => {
-                for (i, e) in frames[start..end].iter().enumerate() {
-                    let v = wire::decode_any(e).expect("leader frame decode");
-                    if tx.send(Reply::Decoded { idx: start + i, v }).is_err() {
-                        return;
-                    }
+            Command::DecodeDense { mut frames, start } => {
+                for (i, e) in frames.drain(..).enumerate() {
+                    let v = wire::decode_any(&e).expect("leader frame decode");
+                    fabric.frame_pool().put(e.bytes);
+                    tx.send(Reply::Decoded { idx: start + i, v });
                 }
             }
             Command::Restore { states } => {
@@ -467,9 +589,7 @@ fn actor_loop(
                         w.restore_ef_state(s.steps, &s.error, &s.corrected);
                     }
                 }
-                if tx.send(Reply::Restored).is_err() {
-                    return;
-                }
+                tx.send(Reply::Restored);
             }
             Command::Shutdown => return,
         }
@@ -562,21 +682,19 @@ mod tests {
         let d = 97; // ragged on purpose
         let n = 6;
         let mut rng = Pcg64::seeded(31);
-        let frames: Arc<Vec<_>> = Arc::new(
-            (0..n)
-                .map(|_| {
-                    let mut p = vec![0.0f32; d];
-                    rng.fill_normal(&mut p, 0.0, 1.0);
-                    crate::compress::wire::encode_scaled_sign(&p)
-                })
-                .collect(),
-        );
+        let frames: Vec<Encoded> = (0..n)
+            .map(|_| {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                crate::compress::wire::encode_scaled_sign(&p)
+            })
+            .collect();
         let groups = [(0usize, 2usize), (2, 4), (4, 6)];
         let mut runs = Vec::new();
         for threads in [1usize, 2, 3] {
             let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
             let pool = WorkerPool::spawn(make_workers(n, d), fabric, threads);
-            runs.push(pool.decode_partials(&frames, d, &groups));
+            runs.push(pool.decode_partials(frames.clone(), d, &groups));
         }
         for r in &runs[1..] {
             assert_eq!(&runs[0], r);
@@ -591,27 +709,64 @@ mod tests {
         }
     }
 
+    /// The pooled decode recycles everything it touches: the group
+    /// containers come back empty (capacity kept), the partial buffers
+    /// cycle through the spare stack, and the frames' byte buffers land in
+    /// the fabric's frame pool.
+    #[test]
+    fn decode_partials_pooled_recycles_buffers() {
+        let d = 64;
+        let n = 4;
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 2);
+        let mut partials: Vec<Vec<f32>> = Vec::new();
+        let mut spare: Vec<Vec<f32>> = Vec::new();
+        let mut rng = Pcg64::seeded(5);
+        for round in 0..3 {
+            let mut groups: Vec<Vec<Encoded>> = (0..2)
+                .map(|_| {
+                    (0..2)
+                        .map(|_| {
+                            let mut p = vec![0.0f32; d];
+                            rng.fill_normal(&mut p, 0.0, 1.0);
+                            crate::compress::wire::encode_scaled_sign(&p)
+                        })
+                        .collect()
+                })
+                .collect();
+            pool.decode_partials_pooled(&mut groups, d, &mut partials, &mut spare);
+            assert_eq!(partials.len(), 2);
+            assert!(partials.iter().all(|p| p.len() == d));
+            assert!(groups.iter().all(|g| g.is_empty()), "round {round}");
+            // recycle the partial buffers the way the driver does
+            spare.append(&mut partials);
+        }
+        // every decoded frame's byte buffer was returned to the pool
+        assert_eq!(fabric.frame_pool().pooled(), 3 * 4);
+        assert_eq!(spare.len(), 2);
+    }
+
     #[test]
     fn decode_dense_returns_frames_in_index_order() {
         let d = 16;
         let n = 5;
         let mut rng = Pcg64::seeded(37);
-        let frames: Arc<Vec<_>> = Arc::new(
-            (0..n)
-                .map(|_| {
-                    let mut p = vec![0.0f32; d];
-                    rng.fill_normal(&mut p, 0.0, 1.0);
-                    crate::compress::wire::encode_dense(&p)
-                })
-                .collect(),
-        );
+        let frames: Vec<Encoded> = (0..n)
+            .map(|_| {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                crate::compress::wire::encode_dense(&p)
+            })
+            .collect();
         let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
-        let pool = WorkerPool::spawn(make_workers(n, d), fabric, 3);
-        let decoded = pool.decode_dense(&frames);
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 3);
+        let decoded = pool.decode_dense(frames.clone());
         assert_eq!(decoded.len(), n);
         for (v, f) in decoded.iter().zip(frames.iter()) {
             assert_eq!(v, &crate::compress::wire::decode_any(f).unwrap());
         }
+        // dense decode also recycles the spent frame buffers
+        assert_eq!(fabric.frame_pool().pooled(), n);
     }
 
     #[test]

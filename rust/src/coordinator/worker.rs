@@ -13,6 +13,7 @@ use crate::compress::wire::{self, Encoded};
 use crate::compress::{self, ErrorFeedback};
 use crate::config::CompressorKind;
 use crate::model::StochasticObjective;
+use crate::net::FramePool;
 use crate::util::Pcg64;
 
 /// Where a worker's gradients come from: a native objective or the PJRT
@@ -269,13 +270,35 @@ impl Worker {
 
     /// Run one round under the sharded parameter server: compute the
     /// gradient once, then per shard run Algorithm 2 on the slice and
-    /// encode one (tagged) wire frame. Returns the frames in shard order.
-    /// With a single-shard plan this is exactly [`step_encode`] in a vec.
-    pub fn step_encode_sharded(&mut self, theta: &[f32], gamma: f32) -> Vec<Encoded> {
+    /// encode one (tagged) wire frame into `out` (cleared first), in shard
+    /// order. Frame byte buffers come from `bufs` — the fabric's recycling
+    /// pool — so the steady-state encode path allocates nothing: the
+    /// leader returns every decoded frame's buffer to the pool and this
+    /// takes them back. With a single-shard plan the frames are exactly
+    /// [`step_encode`]'s, byte for byte.
+    pub fn step_encode_sharded_into(
+        &mut self,
+        theta: &[f32],
+        gamma: f32,
+        bufs: &FramePool,
+        out: &mut Vec<Encoded>,
+    ) {
         self.step_compress(theta, gamma);
-        (0..self.plan.num_shards())
-            .map(|s| self.encode_shard(s))
-            .collect()
+        out.clear();
+        for s in 0..self.plan.num_shards() {
+            let mut enc = Encoded::recycled(bufs.take());
+            self.encode_shard_into(s, &mut enc);
+            out.push(enc);
+        }
+    }
+
+    /// Allocating wrapper around
+    /// [`step_encode_sharded_into`](Self::step_encode_sharded_into).
+    pub fn step_encode_sharded(&mut self, theta: &[f32], gamma: f32) -> Vec<Encoded> {
+        let bufs = FramePool::default();
+        let mut out = Vec::new();
+        self.step_encode_sharded_into(theta, gamma, &bufs, &mut out);
+        out
     }
 
     /// Gradient + per-shard EF compression for one round (shared by the
@@ -326,20 +349,23 @@ impl Worker {
     }
 
     /// Encode shard `s`'s delta with the wire format matching the
-    /// compressor semantics; sharded frames carry the 48-bit shard tag,
-    /// single-shard frames stay untagged (the historical wire format).
-    fn encode_shard(&self, s: usize) -> Encoded {
+    /// compressor semantics, into a caller-owned frame (its byte buffer is
+    /// reused); sharded frames carry the 48-bit shard tag, single-shard
+    /// frames stay untagged (the historical wire format).
+    fn encode_shard_into(&self, s: usize, enc: &mut Encoded) {
         let r = self.plan.range(s);
         let delta = &self.delta_buf[r.clone()];
         let ef = &self.efs[s];
-        let enc = match self.mode {
-            WorkerMode::DenseGrad => wire::encode_dense(delta),
-            WorkerMode::SignVote => wire::encode_scaled_sign(delta),
+        match self.mode {
+            WorkerMode::DenseGrad => wire::encode_dense_into(delta, enc),
+            WorkerMode::SignVote => wire::encode_scaled_sign_into(delta, enc),
             _ => match self.kind {
-                CompressorKind::ScaledSign => wire::encode_scaled_sign(ef.corrected()),
-                CompressorKind::Sign => wire::encode_scaled_sign(delta),
-                CompressorKind::TopK | CompressorKind::RandomK => wire::encode_sparse(delta),
-                CompressorKind::TernGrad => wire::encode_ternary(delta),
+                CompressorKind::ScaledSign => wire::encode_scaled_sign_into(ef.corrected(), enc),
+                CompressorKind::Sign => wire::encode_scaled_sign_into(delta, enc),
+                CompressorKind::TopK | CompressorKind::RandomK => {
+                    wire::encode_sparse_into(delta, enc)
+                }
+                CompressorKind::TernGrad => wire::encode_ternary_into(delta, enc),
                 // QSGD travels as the Elias-gamma level pack. The codec
                 // needs the exact f32 norm the quantizer used; that is
                 // ‖p‖₂ of the error-corrected gradient the compressor saw
@@ -348,7 +374,7 @@ impl Worker {
                 // its own slice.
                 CompressorKind::Qsgd => {
                     let norm = crate::tensor::norm2(ef.corrected()) as f32;
-                    let enc = wire::encode_qsgd(delta, norm, self.qsgd_levels);
+                    wire::encode_qsgd_into(delta, norm, self.qsgd_levels, enc);
                     // The pack reconstructs levels by dividing the delta
                     // back out by `norm`, which is only exact because the
                     // quantizer computed the identical `norm2(p) as f32`
@@ -356,21 +382,25 @@ impl Worker {
                     // a future blocked/SIMD norm2 or a rescaling wrapper)
                     // where drift would otherwise corrupt training silently.
                     debug_assert!(
-                        wire::decode_qsgd(&enc)
+                        wire::decode_qsgd(enc)
                             .map(|dec| dec == delta)
                             .unwrap_or(false),
                         "qsgd wire pack is not bit-faithful to the quantized delta"
                     );
-                    enc
                 }
-                CompressorKind::None => wire::encode_dense(delta),
+                CompressorKind::None => wire::encode_dense_into(delta, enc),
             },
-        };
-        if self.plan.num_shards() == 1 {
-            enc
-        } else {
-            enc.with_shard(s as u16, r.start as u32)
         }
+        if self.plan.num_shards() > 1 {
+            enc.set_shard(s as u16, r.start as u32);
+        }
+    }
+
+    /// Allocating wrapper around [`encode_shard_into`](Self::encode_shard_into).
+    fn encode_shard(&self, s: usize) -> Encoded {
+        let mut enc = Encoded::recycled(Vec::new());
+        self.encode_shard_into(s, &mut enc);
+        enc
     }
 
     pub fn eval_loss(&mut self, theta: &[f32]) -> f64 {

@@ -20,11 +20,12 @@ fn run_residual(
     let mut ef = ErrorFeedback::new(d, comp);
     let mut rng = Pcg64::seeded(seed);
     let mut g = vec![0.0f32; d];
+    let mut delta = vec![0.0f32; d];
     let mut sup = 0.0f64;
     let sigma_sq = d as f64; // E||g||^2 for unit gaussians
     for _ in 0..steps {
         rng.fill_normal(&mut g, 0.0, 1.0);
-        ef.step(gamma, &g, &mut rng);
+        ef.step_into(gamma, &g, &mut delta, &mut rng);
         sup = sup.max(ef.error_norm().powi(2));
     }
     (sup, sigma_sq)

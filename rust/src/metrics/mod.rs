@@ -69,10 +69,27 @@ impl Recorder {
     }
 
     pub fn record(&mut self, name: &str, step: u64, value: f64) {
-        self.series
-            .entry(name.to_string())
-            .or_default()
-            .push(step, value);
+        // fast path first: the training loop records a fixed set of names
+        // every round, and `entry` would allocate a String per call just
+        // to look one up
+        if let Some(series) = self.series.get_mut(name) {
+            series.push(step, value);
+            return;
+        }
+        let mut series = Series::default();
+        series.push(step, value);
+        self.series.insert(name.to_string(), series);
+    }
+
+    /// Reserve room for `extra` more points in every existing series.
+    /// Callers that need an allocation-free measurement window (the
+    /// steady-state alloc-regression test) pre-size the recording buffers
+    /// with this after a warm-up round has created the series.
+    pub fn reserve_all(&mut self, extra: usize) {
+        for series in self.series.values_mut() {
+            series.steps.reserve(extra);
+            series.values.reserve(extra);
+        }
     }
 
     pub fn get(&self, name: &str) -> Option<&Series> {

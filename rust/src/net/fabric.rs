@@ -23,13 +23,58 @@
 //! transfer time (departure 0), which keeps the synchronous collectives'
 //! accounting unchanged. Arrival stamps ride alongside the messages
 //! ([`Fabric::recv_all_timed`]) and feed the async driver's event queue.
+//!
+//! # Buffer recycling
+//!
+//! The fabric also owns a [`FramePool`]: spent push-frame byte buffers
+//! return here after the leader decodes them, and the workers' encoders
+//! take them back for the next round — in steady state no frame buffer is
+//! ever allocated or freed (see docs/PERF.md).
 
 use super::accounting::TrafficStats;
 use super::link::LinkModel;
 use super::message::Message;
 use super::simclock::SimClock;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Recycling pool for wire-frame byte buffers. A worker `take()`s a spent
+/// buffer when encoding a push frame; the leader `put()`s each frame's
+/// bytes back after decoding it. After round 1 the pool holds one buffer
+/// per in-flight frame and the steady-state encode path stops allocating
+/// (each `encode_*_into` reserves its format's worst case once, so the
+/// recycled capacities only ever grow).
+#[derive(Default)]
+pub struct FramePool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+}
+
+impl FramePool {
+    /// Upper bound on pooled buffers: beyond this, `put` drops the buffer
+    /// instead of hoarding it (bounds memory if a caller gathers far more
+    /// frames than it re-encodes).
+    const MAX_POOLED: usize = 4096;
+
+    /// Pop a recycled buffer (empty, capacity intact), or a fresh one.
+    pub fn take(&self) -> Vec<u8> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a spent buffer to the pool.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < Self::MAX_POOLED {
+            bufs.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
 
 /// One node's inbox; each entry carries its simulated arrival stamp.
 #[derive(Default)]
@@ -44,6 +89,11 @@ pub struct Fabric {
     link: LinkModel,
     inboxes: Vec<Inbox>,
     stats: Mutex<TrafficStats>,
+    /// Running total of on-wire bits, mirrored outside the stats lock so
+    /// per-round progress logging never touches (let alone deep-clones)
+    /// the accounting maps.
+    total_bits: AtomicU64,
+    frames: FramePool,
     clock: Option<Arc<SimClock>>,
 }
 
@@ -54,6 +104,8 @@ impl Fabric {
             link,
             inboxes: (0..n).map(|_| Inbox::default()).collect(),
             stats: Mutex::new(TrafficStats::default()),
+            total_bits: AtomicU64::new(0),
+            frames: FramePool::default(),
             clock: None,
         }
     }
@@ -80,6 +132,11 @@ impl Fabric {
         self.clock.as_ref()
     }
 
+    /// The shared frame-buffer recycling pool (see module docs).
+    pub fn frame_pool(&self) -> &FramePool {
+        &self.frames
+    }
+
     /// Send a message: accounts bits + simulated time, enqueues at `dst`.
     /// Returns the message's simulated arrival time (departure = the
     /// sender's clock time, or 0 when no clock is attached).
@@ -93,6 +150,7 @@ impl Fabric {
             .as_ref()
             .map_or(0.0, |c| c.node_time(msg.src));
         let arrival = depart + time;
+        self.total_bits.fetch_add(bits, Ordering::Relaxed);
         self.stats
             .lock()
             .unwrap()
@@ -161,6 +219,15 @@ impl Fabric {
         q.drain(..).collect()
     }
 
+    /// Drain all currently queued messages at `node` into `out` (cleared
+    /// first) — the allocation-free gather primitive: the caller's scratch
+    /// vector keeps its capacity across rounds.
+    pub fn recv_all_timed_into(&self, node: usize, out: &mut Vec<(Message, f64)>) {
+        out.clear();
+        let mut q = self.inboxes[node].queue.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+
     /// Number of undelivered messages across the fabric.
     pub fn in_flight(&self) -> usize {
         self.inboxes
@@ -169,13 +236,30 @@ impl Fabric {
             .sum()
     }
 
-    /// Snapshot of the traffic statistics.
-    pub fn stats(&self) -> TrafficStats {
+    /// Total on-wire bits so far — a single atomic read: the per-round
+    /// logging hot path, with no lock and no clone of the stats maps.
+    pub fn total_bits(&self) -> u64 {
+        self.total_bits.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` against the live traffic statistics under the lock —
+    /// borrow-based access for callers that need one number, without
+    /// deep-cloning every accounting map the way a snapshot would.
+    pub fn with_stats<R>(&self, f: impl FnOnce(&TrafficStats) -> R) -> R {
+        f(&self.stats.lock().unwrap())
+    }
+
+    /// Owned snapshot of the traffic statistics. This deep-clones the
+    /// accounting maps and is meant for end-of-run reporting; hot paths
+    /// should use [`total_bits`](Self::total_bits) or
+    /// [`with_stats`](Self::with_stats) instead.
+    pub fn snapshot_stats(&self) -> TrafficStats {
         self.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
         self.stats.lock().unwrap().reset();
+        self.total_bits.store(0, Ordering::Relaxed);
     }
 }
 
@@ -211,8 +295,13 @@ mod tests {
     fn accounting_includes_framing() {
         let f = Fabric::new(2, LinkModel::default());
         f.send(ctrl(0, 1, 100));
-        let s = f.stats();
+        let s = f.snapshot_stats();
         assert_eq!(s.total_bits, 100 + FRAME_OVERHEAD_BITS);
+        // the lock-free mirror agrees with the locked accounting
+        assert_eq!(f.total_bits(), s.total_bits);
+        assert_eq!(f.with_stats(|s| s.total_bits), s.total_bits);
+        f.reset_stats();
+        assert_eq!(f.total_bits(), 0);
     }
 
     #[test]
@@ -230,6 +319,38 @@ mod tests {
         }
         assert_eq!(f.recv_all(1).len(), 5);
         assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn recv_all_timed_into_reuses_scratch() {
+        let f = Fabric::new(2, LinkModel::default());
+        let mut scratch: Vec<(Message, f64)> = Vec::new();
+        for round in 0..3 {
+            for _ in 0..4 {
+                f.send(ctrl(0, 1, 8));
+            }
+            f.recv_all_timed_into(1, &mut scratch);
+            assert_eq!(scratch.len(), 4, "round {round}");
+        }
+        assert!(scratch.capacity() >= 4);
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers() {
+        let pool = FramePool::default();
+        assert_eq!(pool.pooled(), 0);
+        let fresh = pool.take();
+        assert!(fresh.is_empty() && fresh.capacity() == 0);
+        let mut buf = Vec::with_capacity(256);
+        buf.extend_from_slice(&[1u8, 2, 3]);
+        pool.put(buf);
+        assert_eq!(pool.pooled(), 1);
+        let back = pool.take();
+        // cleared but with its allocation intact
+        assert!(back.is_empty());
+        assert!(back.capacity() >= 256);
+        assert_eq!(pool.pooled(), 0);
     }
 
     #[test]
@@ -256,7 +377,7 @@ mod tests {
         // the stamp rides with the message and into the stats
         let timed = f.recv_all_timed(1);
         assert!((timed[0].1 - expect).abs() < 1e-12);
-        let stats = f.stats();
+        let stats = f.snapshot_stats();
         assert!((stats.last_arrival_of_kind(MessageKind::Control) - expect).abs() < 1e-12);
     }
 
@@ -287,8 +408,9 @@ mod tests {
                 });
             }
         });
-        let s = f.stats();
+        let s = f.snapshot_stats();
         assert_eq!(s.total_bits, 400 * (8 + FRAME_OVERHEAD_BITS));
+        assert_eq!(f.total_bits(), s.total_bits);
         assert_eq!(f.recv_all(4).len(), 400);
     }
 }

@@ -1,22 +1,37 @@
 //! Message framing for the simulated fabric.
 
 use crate::compress::wire::{Encoded, SHARD_TAG_BITS};
+use std::sync::Arc;
 
 /// What a message carries.
+///
+/// Parameter broadcasts are **`Arc`-shared**: the leader encodes its slice
+/// once and every recipient's message bumps a refcount instead of cloning
+/// the dense vector — broadcasting to `n` workers costs one copy of θ
+/// total, not `n` (see docs/PERF.md). On-wire accounting is unchanged:
+/// the simulated network still charges every message its full dense size;
+/// the sharing only removes *host* memory traffic the real deployment's
+/// NIC scatter wouldn't pay either.
 #[derive(Clone, Debug)]
 pub enum Payload {
     /// An encoded (possibly compressed) gradient/update.
     Grad(Encoded),
-    /// A dense parameter broadcast (raw f32).
-    Params(Vec<f32>),
+    /// A dense parameter broadcast (raw f32), shared by refcount across
+    /// the broadcast's recipients.
+    Params(Arc<[f32]>),
     /// One shard leader's slice of the parameter vector: the shard id, the
     /// slice's start coordinate in the full model vector, and the raw f32
-    /// values. Workers reassemble the slices before computing.
+    /// values (shared across the slice broadcast's recipients). Workers
+    /// reassemble the slices before computing.
     ParamSlice {
         shard: u16,
         start: u32,
-        vals: Vec<f32>,
+        vals: Arc<[f32]>,
     },
+    /// A dense chunk owned by exactly one node at a time — the ring
+    /// collectives move these hop to hop, so the buffer's allocation
+    /// travels with the message instead of being cloned.
+    Chunk(Vec<f32>),
     /// Control traffic (round barriers etc.) with a nominal size.
     Control(u64),
 }
@@ -29,6 +44,7 @@ impl Payload {
             Payload::Params(v) => 32 * v.len() as u64,
             // slice values + the same 48-bit shard header the grad frames pay
             Payload::ParamSlice { vals, .. } => 32 * vals.len() as u64 + SHARD_TAG_BITS,
+            Payload::Chunk(v) => 32 * v.len() as u64,
             Payload::Control(bits) => *bits,
         }
     }
@@ -91,10 +107,26 @@ mod tests {
 
     #[test]
     fn payload_bits() {
-        assert_eq!(Payload::Params(vec![0.0; 10]).bits(), 320);
+        assert_eq!(Payload::Params(vec![0.0f32; 10].into()).bits(), 320);
+        assert_eq!(Payload::Chunk(vec![0.0f32; 10]).bits(), 320);
         assert_eq!(Payload::Control(100).bits(), 100);
         let e = encode_scaled_sign(&vec![1.0f32; 64]);
         assert_eq!(Payload::Grad(e).bits(), 64 + 32);
+    }
+
+    #[test]
+    fn params_broadcast_shares_one_allocation() {
+        let shared: Arc<[f32]> = vec![1.0f32; 8].into();
+        let a = Payload::Params(shared.clone());
+        let b = Payload::Params(shared.clone());
+        // both payloads alias the same buffer: refcount bump, no copy
+        match (&a, &b) {
+            (Payload::Params(x), Payload::Params(y)) => {
+                assert!(Arc::ptr_eq(x, y));
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(Arc::strong_count(&shared), 3);
     }
 
     #[test]
@@ -103,7 +135,7 @@ mod tests {
         let slice = Payload::ParamSlice {
             shard: 2,
             start: 512,
-            vals: vec![0.0; 10],
+            vals: vec![0.0f32; 10].into(),
         };
         assert_eq!(slice.bits(), 320 + SHARD_TAG_BITS);
         assert_eq!(slice.shard(), Some(2));
@@ -111,8 +143,9 @@ mod tests {
         assert_eq!(tagged.bits(), 64 + 32 + SHARD_TAG_BITS);
         assert_eq!(tagged.shard(), Some(5));
         // unsharded payloads attribute to no shard
-        assert_eq!(Payload::Params(vec![0.0; 4]).shard(), None);
+        assert_eq!(Payload::Params(vec![0.0f32; 4].into()).shard(), None);
         assert_eq!(Payload::Grad(encode_scaled_sign(&[1.0f32; 8])).shard(), None);
+        assert_eq!(Payload::Chunk(vec![0.0f32; 4]).shard(), None);
         assert_eq!(Payload::Control(8).shard(), None);
     }
 

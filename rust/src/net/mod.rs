@@ -25,7 +25,7 @@ pub mod simclock;
 pub mod straggler;
 
 pub use accounting::TrafficStats;
-pub use fabric::Fabric;
+pub use fabric::{Fabric, FramePool};
 pub use link::LinkModel;
 pub use message::{Message, MessageKind, Payload};
 pub use simclock::{Event, EventQueue, SimClock};

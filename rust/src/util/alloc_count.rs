@@ -1,0 +1,66 @@
+//! A counting global allocator for allocation-regression tests and the
+//! fabric benchmark: wraps the system allocator and counts every
+//! allocation event (alloc / alloc_zeroed / realloc) process-wide, across
+//! all threads.
+//!
+//! The library never installs it; each binary that wants counting opts in:
+//!
+//! ```ignore
+//! use ef_sgd::util::alloc_count::{self, CountingAllocator};
+//!
+//! #[global_allocator]
+//! static ALLOC: CountingAllocator = CountingAllocator;
+//!
+//! let before = alloc_count::allocs();
+//! hot_path();
+//! assert_eq!(alloc_count::allocs() - before, 0);
+//! ```
+//!
+//! Deallocations are deliberately not counted: the steady-state contract
+//! of docs/PERF.md is "no new allocations per round", and a path that
+//! allocates nothing cannot free anything it allocated either.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts allocation events.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocation events so far (allocs + zeroed allocs + reallocs, all
+/// threads). Only meaningful in a binary that installed
+/// [`CountingAllocator`] as its `#[global_allocator]`; otherwise 0.
+pub fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Total bytes requested by the counted allocation events.
+pub fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::SeqCst)
+}

@@ -1,4 +1,6 @@
-//! Small shared utilities: RNG, statistics, timing, JSON.
+//! Small shared utilities: RNG, statistics, timing, JSON, allocation
+//! counting.
+pub mod alloc_count;
 pub mod json;
 pub mod rng;
 pub mod stats;

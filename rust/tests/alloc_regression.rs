@@ -1,0 +1,87 @@
+//! Steady-state allocation regression: after the warm-up rounds, a full
+//! synchronous training round performs ZERO heap allocations — counted
+//! process-wide, across the driver thread and every pool thread — for
+//! shards ∈ {1, 4} × threads ∈ {1, 4}. This pins the zero-copy fabric /
+//! pooled-buffer architecture of docs/PERF.md: Arc-shared broadcasts
+//! refreshed in place, frame buffers cycling through the fabric's
+//! `FramePool`, ring-buffer pool channels, and recycled decode partials.
+//!
+//! This file intentionally contains a single #[test]: the counting
+//! allocator is process-global, and a concurrently running sibling test
+//! would pollute the measurement window.
+
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::util::alloc_count::{self, CountingAllocator};
+use ef_sgd::util::Pcg64;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn make_driver(n: usize, d: usize, shards: usize, threads: usize) -> TrainDriver {
+    let workers: Vec<Worker> = (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::ScaledSign,
+                4,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect();
+    let cfg = DriverConfig {
+        steps: 0, // rounds are driven manually
+        schedule: LrSchedule::constant(0.05),
+        threads,
+        shards,
+        ..Default::default()
+    };
+    TrainDriver::new(cfg, workers, vec![1.0f32; d])
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate() {
+    // d divisible by every shard count under test, so the recycled frame
+    // buffers and decode partials stabilize at one capacity per shape
+    // (a ragged split would make shard slices differ and reshuffle pooled
+    // capacities between rounds).
+    let d = 1024;
+    let n = 4;
+    for &(shards, threads) in &[(1usize, 1usize), (1, 4), (4, 1), (4, 4)] {
+        let mut driver = make_driver(n, d, shards, threads);
+        let mut rec = Recorder::new();
+        // Rounds 1-2 warm every pool: frame buffers, channel rings, inbox
+        // deques, broadcast Arcs, decode partials, recorder series, and
+        // the traffic-accounting map entries.
+        driver.round(&mut rec);
+        driver.round(&mut rec);
+        // the recorder's series grow amortized; give the measurement
+        // window pre-reserved headroom
+        rec.reserve_all(16);
+        let before = alloc_count::allocs();
+        for _ in 0..3 {
+            driver.round(&mut rec);
+        }
+        let after = alloc_count::allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "shards={shards} threads={threads}: {} steady-state allocation(s) \
+             in 3 rounds (leader hot path must be allocation-free)",
+            after - before
+        );
+        // sanity: the rounds actually ran and trained
+        assert_eq!(driver.rounds(), 5);
+        assert!(driver.theta().iter().all(|v| v.is_finite()));
+    }
+}
