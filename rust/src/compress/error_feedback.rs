@@ -92,6 +92,7 @@ impl ErrorFeedback {
     /// loop: each specialization is a straight-line fused multiply-add
     /// kernel the compiler can autovectorize, instead of a conditional
     /// select evaluated d times.
+    // detlint: hot
     pub fn step_into(&mut self, gamma: f32, g: &[f32], delta: &mut [f32], rng: &mut Pcg64) -> f64 {
         assert_eq!(g.len(), self.e.len(), "gradient dim mismatch");
         assert_eq!(delta.len(), self.e.len());

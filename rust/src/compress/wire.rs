@@ -307,6 +307,7 @@ impl std::error::Error for WireError {}
 
 /// Baseline encoding: 32 bits per coordinate, into a caller-owned frame
 /// (the byte buffer's allocation is reused).
+// detlint: hot
 pub fn encode_dense_into(v: &[f32], out: &mut Encoded) {
     out.bytes.clear();
     out.bytes.reserve(v.len() * 4);
@@ -358,6 +359,7 @@ pub fn decode_dense_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
 /// bits, into a caller-owned frame. Exact zeros (measure-zero after error
 /// correction) encode as +. `d + 32` bits total — the `Σ_i (d_i + 32)`
 /// accounting of §6.1.
+// detlint: hot
 pub fn encode_scaled_sign_into(p: &[f32], out: &mut Encoded) {
     let scale = super::ScaledSign::scale(p);
     // Word-packed sign encoding (hot path): the scale occupies exactly 4
@@ -461,6 +463,7 @@ pub fn decode_scaled_sign_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireEr
 /// Sparse (top-k / random-k) encoding: u32 count + (u32 index, f32 value)
 /// per non-zero, into a caller-owned frame. Two passes over `v` (count,
 /// then emit) instead of materializing an intermediate non-zero list.
+// detlint: hot
 pub fn encode_sparse_into(v: &[f32], out: &mut Encoded) {
     let nz = v.iter().filter(|x| **x != 0.0).count();
     let mut w = BitWriter::with_buf(std::mem::take(&mut out.bytes));
@@ -531,6 +534,7 @@ pub fn decode_sparse_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> 
 
 /// TernGrad encoding: one 32-bit scale + 2 bits/coordinate
 /// (00 = 0, 01 = +m, 10 = −m), into a caller-owned frame.
+// detlint: hot
 pub fn encode_ternary_into(v: &[f32], out: &mut Encoded) {
     let m = crate::tensor::norm_inf(v) as f32;
     let mut w = BitWriter::with_buf(std::mem::take(&mut out.bytes));
@@ -635,6 +639,7 @@ fn elias_gamma_bits(x: u64) -> u64 {
 /// bit-faithful to `v`. Into-variant: the frame's byte buffer is reused,
 /// reserved up front at the per-coordinate worst case
 /// (`γ(levels + 1) + 1` bits) so the encode never reallocates mid-stream.
+// detlint: hot
 pub fn encode_qsgd_into(v: &[f32], norm: f32, levels: u32, out: &mut Encoded) {
     assert!(
         (1..=u8::MAX as u32).contains(&levels),

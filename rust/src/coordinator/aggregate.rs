@@ -172,6 +172,8 @@ impl Aggregation {
     /// grouping as [`combine_frames`](Self::combine_frames), so any
     /// `(shards, threads)` combination is bit-deterministic; the
     /// single-shard case computes exactly the unsharded aggregate.
+    // detlint: profiling — shard_times is a real wall-clock measurement by
+    // contract (the driver prices it onto the virtual clock)
     pub fn combine_frames_sharded_into(
         &self,
         frames_by_shard: &mut [Vec<Encoded>],

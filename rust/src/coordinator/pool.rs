@@ -76,6 +76,8 @@ impl<T> Chan<T> {
         }
     }
 
+    // detlint: profiling — the timeout deadline is real wall time (thread
+    // liveness), never simulated time
     fn recv_timeout(&self, timeout: Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + timeout;
         let mut q = self.q.lock().unwrap();
@@ -270,6 +272,7 @@ impl WorkerPool {
     /// broadcast the round's parameters on the fabric first; on return
     /// every worker's gradient push is on the leader's queue.
     /// Allocation-free once `reports` is warm.
+    // detlint: hot
     pub fn round_into(&self, round: u64, lr: f32, reports: &mut Vec<RoundReport>) {
         reports.clear();
         for tx in &self.command_txs {
@@ -358,6 +361,7 @@ impl WorkerPool {
     /// Groups are distributed round-robin over the threads; since every
     /// partial depends only on its own group's frames, the results are
     /// bit-identical for any thread count.
+    // detlint: hot
     pub fn decode_partials_pooled(
         &self,
         groups: &mut [Vec<Encoded>],
@@ -367,6 +371,8 @@ impl WorkerPool {
     ) {
         let threads = self.command_txs.len();
         partials.clear();
+        // detlint: allow(H1) — fills only while the partial stack grows to
+        // the group count; allocation-free once warm
         partials.resize_with(groups.len(), Vec::new);
         for (g, slot) in groups.iter_mut().enumerate() {
             let frames = std::mem::take(slot);

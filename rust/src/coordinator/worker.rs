@@ -276,6 +276,7 @@ impl Worker {
     /// leader returns every decoded frame's buffer to the pool and this
     /// takes them back. With a single-shard plan the frames are exactly
     /// [`step_encode`]'s, byte for byte.
+    // detlint: hot
     pub fn step_encode_sharded_into(
         &mut self,
         theta: &[f32],

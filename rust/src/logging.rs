@@ -43,7 +43,7 @@ pub fn init() {
             _ => LevelFilter::Info,
         };
         let logger = Box::leak(Box::new(StderrLogger {
-            start: Instant::now(),
+            start: Instant::now(), // detlint: allow(D2) — log timestamps are wall-clock by design
         }));
         let _ = log::set_logger(logger);
         log::set_max_level(level);

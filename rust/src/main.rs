@@ -65,7 +65,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .unwrap_or("all");
     if id == "all" {
         for id in experiments::ALL {
-            let t = std::time::Instant::now();
+            let t = std::time::Instant::now(); // detlint: allow(D2) — CLI wall-time report
             experiments::run(id, &ctx)?;
             log::info!("experiment {id} done in {:.1}s", t.elapsed().as_secs_f64());
         }

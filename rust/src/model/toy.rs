@@ -207,6 +207,8 @@ impl StochasticObjective for SharedSignTheorem1 {
     fn stoch_grad(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f64 {
         let n = self.rows.len();
         let a = &self.rows[rng.below(n)];
+        // detlint: allow(D3) — worker-local dot product in the row's fixed
+        // iteration order; not a cross-worker reduction
         let inner: f32 = a.iter().zip(x).map(|(ai, xi)| ai * xi).sum();
         // grad of n * <a_i, x>^2 (importance-weighted so E[g] = grad f)
         for (o, ai) in out.iter_mut().zip(a) {

@@ -57,11 +57,13 @@ impl FramePool {
     const MAX_POOLED: usize = 4096;
 
     /// Pop a recycled buffer (empty, capacity intact), or a fresh one.
+    // detlint: hot
     pub fn take(&self) -> Vec<u8> {
         self.bufs.lock().unwrap().pop().unwrap_or_default()
     }
 
     /// Return a spent buffer to the pool.
+    // detlint: hot
     pub fn put(&self, mut buf: Vec<u8>) {
         buf.clear();
         let mut bufs = self.bufs.lock().unwrap();
@@ -140,6 +142,7 @@ impl Fabric {
     /// Send a message: accounts bits + simulated time, enqueues at `dst`.
     /// Returns the message's simulated arrival time (departure = the
     /// sender's clock time, or 0 when no clock is attached).
+    // detlint: hot
     pub fn send(&self, msg: Message) -> f64 {
         assert!(msg.src < self.n && msg.dst < self.n, "bad route");
         assert_ne!(msg.src, msg.dst, "self-send not allowed");
@@ -162,6 +165,7 @@ impl Fabric {
     }
 
     /// Receive the next message queued at `node` (FIFO), if any.
+    // detlint: hot
     pub fn recv(&self, node: usize) -> Option<Message> {
         self.inboxes[node]
             .queue
@@ -174,6 +178,7 @@ impl Fabric {
     /// Receive the next message queued at `node`, blocking until one
     /// arrives (used by the threaded collectives, where the matching send
     /// happens on another worker thread).
+    // detlint: hot
     pub fn recv_blocking(&self, node: usize) -> Message {
         let inbox = &self.inboxes[node];
         let mut q = inbox.queue.lock().unwrap();
@@ -189,6 +194,8 @@ impl Fabric {
     /// `timeout`, returning `None`. Lets threaded callers interleave the
     /// wait with liveness checks on their peers instead of parking forever
     /// when a peer died.
+    // detlint: profiling — the timeout deadline is real wall time (peer
+    // liveness), never simulated time
     pub fn recv_timeout(&self, node: usize, timeout: std::time::Duration) -> Option<Message> {
         let inbox = &self.inboxes[node];
         let deadline = std::time::Instant::now() + timeout;
@@ -222,6 +229,7 @@ impl Fabric {
     /// Drain all currently queued messages at `node` into `out` (cleared
     /// first) — the allocation-free gather primitive: the caller's scratch
     /// vector keeps its capacity across rounds.
+    // detlint: hot
     pub fn recv_all_timed_into(&self, node: usize, out: &mut Vec<(Message, f64)>) {
         out.clear();
         let mut q = self.inboxes[node].queue.lock().unwrap();

@@ -5,14 +5,17 @@
 use super::artifact::{Manifest, ManifestError, ModelEntry};
 use super::executable::Execution;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Execution>>>,
+    // BTreeMap, not HashMap: iteration order never matters here today, but
+    // detlint rule D1 keeps every collection in a determinism-critical
+    // module ordered so it can never start mattering silently.
+    cache: Mutex<BTreeMap<String, Arc<Execution>>>,
 }
 
 impl Runtime {
@@ -29,7 +32,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -58,7 +61,7 @@ impl Runtime {
             return Ok(hit.clone());
         }
         let path = self.manifest.dir.join(&spec.file);
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // detlint: allow(D2) — compile-time log stamp, never sim time
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )

@@ -29,23 +29,35 @@ static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 /// System-allocator wrapper that counts allocation events.
 pub struct CountingAllocator;
 
+// SAFETY: every method delegates verbatim to `System`, which upholds the
+// GlobalAlloc contract; the atomic counters have no effect on layout,
+// aliasing, or the returned pointers.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds the GlobalAlloc contract (non-zero-sized
+    // `layout`); delegated unchanged to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: caller guarantees `ptr` came from this allocator with this
+    // `layout`; delegated unchanged to `System.dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: same contract as `alloc`; delegated unchanged to
+    // `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller guarantees `ptr`/`layout` match a live allocation from
+    // this allocator and `new_size` is non-zero; delegated unchanged to
+    // `System.realloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);

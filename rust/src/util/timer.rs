@@ -9,6 +9,8 @@ pub struct Timer {
 }
 
 impl Timer {
+    // detlint: profiling — this whole module is wall-clock measurement by
+    // design; sim-time code uses net::simclock instead
     pub fn start() -> Self {
         Timer {
             start: Instant::now(),
@@ -23,6 +25,7 @@ impl Timer {
         self.elapsed().as_secs_f64()
     }
 
+    // detlint: profiling
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();

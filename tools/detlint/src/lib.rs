@@ -1,0 +1,900 @@
+//! `detlint` — the workspace's determinism & hot-path lint pass.
+//!
+//! A dependency-free (std-only, no `syn`) token-level scanner over Rust
+//! sources. It enforces, statically and on every CI run, the two invariants
+//! every PR so far has protected only dynamically: bit-determinism of the
+//! training trajectory across any `(shards, threads, async)` combination
+//! (replay tests) and the allocation-free steady-state round
+//! (`alloc_regression`). The full rule catalog, the motivating invariant
+//! behind each rule, and the annotation syntax live in `docs/LINTS.md`.
+//!
+//! Rules:
+//!
+//! * **D1** — no unordered `HashMap`/`HashSet` or `std::sync::mpsc` in
+//!   determinism-critical modules (`coordinator`, `collectives`,
+//!   `compress`, `net`, `runtime`); require `BTreeMap`/`BTreeSet` or a
+//!   sorted drain.
+//! * **D2** — no `Instant::now`/`SystemTime` outside functions annotated
+//!   `// detlint: profiling`, so virtual-clock (`simclock`) paths can never
+//!   observe wall time.
+//! * **D3** — no f32 reduction idioms (`.sum::<f32>()`, f32 `fold`, a
+//!   `: f32` binding fed by `.sum()`) outside the approved fused kernels
+//!   (`wire.rs`, `aggregate.rs`), protecting the fixed reduction trees.
+//! * **H1** — no allocating constructs (`Vec::new`, `vec![]`, `to_vec`,
+//!   `collect`, `format!`, `.clone()`, …) inside functions annotated
+//!   `// detlint: hot`, complementing the dynamic `alloc_regression` test.
+//! * **U1** — every line containing `unsafe` must carry a `// SAFETY:`
+//!   comment (same line or the contiguous comment block directly above).
+//!
+//! Escape hatch: `// detlint: allow(RULE, …) — reason` on the finding's
+//! line (trailing comment) or on a comment line directly above it. `all`
+//! waives every rule. Waived findings stay in the report, marked.
+//!
+//! The scanner strips comments and string/char literals before matching,
+//! skips `#[cfg(test)]` items entirely, and tracks `fn` bodies by brace
+//! depth — it is a lexer, not a parser, so the rules are deliberately
+//! conservative token patterns with the `allow` hatch for sanctioned uses.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Component, Path, PathBuf};
+
+/// The rule families detlint enforces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// Unordered collections / mpsc in determinism-critical modules.
+    D1,
+    /// Wall-clock reads outside profiling-annotated regions.
+    D2,
+    /// f32 reduction idioms outside the approved fused kernels.
+    D3,
+    /// Allocating constructs inside `// detlint: hot` functions.
+    H1,
+    /// `unsafe` without a `// SAFETY:` comment.
+    U1,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [Rule::D1, Rule::D2, Rule::D3, Rule::H1, Rule::U1];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::H1 => "H1",
+            Rule::U1 => "U1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "H1" => Some(Rule::H1),
+            "U1" => Some(Rule::U1),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint finding. `waived` carries the `detlint: allow` reason when the
+/// finding was explicitly waived at the site.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    pub waived: Option<String>,
+}
+
+/// Scanner configuration. The defaults encode this workspace's policy;
+/// every list is overridable from the CLI.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Path components that mark a file as determinism-critical (D1).
+    pub critical_modules: Vec<String>,
+    /// File names whose f32 reductions are the approved fused kernels (D3).
+    pub approved_reduction_files: Vec<String>,
+    /// Rules switched off entirely.
+    pub disabled: Vec<Rule>,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            critical_modules: ["coordinator", "collectives", "compress", "net", "runtime"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            approved_reduction_files: vec!["wire.rs".to_string(), "aggregate.rs".to_string()],
+            disabled: Vec::new(),
+        }
+    }
+}
+
+impl Config {
+    fn enabled(&self, rule: Rule) -> bool {
+        !self.disabled.contains(&rule)
+    }
+
+    fn is_critical(&self, path: &Path) -> bool {
+        path.components().any(|c| match c {
+            Component::Normal(os) => self
+                .critical_modules
+                .iter()
+                .any(|m| os.to_str() == Some(m.as_str())),
+            _ => false,
+        })
+    }
+
+    fn is_approved_reduction_file(&self, path: &Path) -> bool {
+        path.file_name()
+            .and_then(|f| f.to_str())
+            .is_some_and(|name| self.approved_reduction_files.iter().any(|a| a == name))
+    }
+}
+
+/// A whole-scan report.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unwaived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none())
+    }
+
+    pub fn unwaived_count(&self) -> usize {
+        self.unwaived().count()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.len() - self.unwaived_count()
+    }
+
+    pub fn count_of(&self, rule: Rule) -> usize {
+        self.unwaived().filter(|f| f.rule == rule).count()
+    }
+
+    /// Machine-readable report (hand-rolled JSON; no serde offline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"tool\": \"detlint\",\n");
+        out.push_str(&format!(
+            "  \"files_scanned\": {},\n  \"unwaived\": {},\n  \"waived\": {},\n",
+            self.files_scanned,
+            self.unwaived_count(),
+            self.waived_count()
+        ));
+        out.push_str("  \"counts\": {");
+        for (i, rule) in Rule::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", rule, self.count_of(*rule)));
+        }
+        out.push_str("},\n  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"message\": \"{}\", \"waived\": {}, \"waive_reason\": {}}}{}\n",
+                f.rule,
+                json_escape(&f.file.display().to_string()),
+                f.line,
+                json_escape(&f.message),
+                f.waived.is_some(),
+                match &f.waived {
+                    Some(r) => format!("\"{}\"", json_escape(r)),
+                    None => "null".to_string(),
+                },
+                if i + 1 == self.findings.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lexing: split a source file into per-line code (strings/chars blanked,
+// comments removed) and per-line comment texts (for annotations).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct SrcLine {
+    code: String,
+    comments: Vec<String>,
+}
+
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Strip `src` into lines of pure code + collected comments. String and
+/// char literal *contents* are dropped (their delimiters are kept so tokens
+/// never fuse across a removed literal); line and block comments are
+/// captured per line for annotation parsing.
+fn strip_lines(src: &str) -> Vec<SrcLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<SrcLine> = vec![SrcLine::default()];
+    let mut comment = String::new();
+    let mut state = LexState::Code;
+    let mut prev_code: char = ' ';
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            match state {
+                LexState::LineComment => {
+                    lines.last_mut().unwrap().comments.push(comment.clone());
+                    comment.clear();
+                    state = LexState::Code;
+                }
+                LexState::BlockComment(_) => {
+                    lines.last_mut().unwrap().comments.push(comment.clone());
+                    comment.clear();
+                }
+                _ => {}
+            }
+            lines.push(SrcLine::default());
+            prev_code = ' ';
+            i += 1;
+            continue;
+        }
+        match state {
+            LexState::Code => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '/' {
+                    state = LexState::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = LexState::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    lines.last_mut().unwrap().code.push('"');
+                    state = LexState::Str;
+                    prev_code = '"';
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !is_ident_char(prev_code) {
+                    // Possible raw / byte string or byte char. Count the
+                    // `r#…"` shape; anything else falls through as code.
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let raw = c == 'r' || chars.get(i + 1) == Some(&'r');
+                    if chars.get(j) == Some(&'"') && (raw || hashes == 0) {
+                        lines.last_mut().unwrap().code.push('"');
+                        state = if raw {
+                            LexState::RawStr(hashes)
+                        } else {
+                            LexState::Str
+                        };
+                        prev_code = '"';
+                        i = j + 1;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                        // byte char literal b'x' / b'\n'
+                        i = skip_char_literal(&chars, i + 1);
+                        prev_code = '\'';
+                    } else {
+                        lines.last_mut().unwrap().code.push(c);
+                        prev_code = c;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    let n1 = chars.get(i + 1).copied();
+                    let n2 = chars.get(i + 2).copied();
+                    if n1 == Some('\\') || (n2 == Some('\'') && n1 != Some('\'')) {
+                        i = skip_char_literal(&chars, i);
+                        prev_code = '\'';
+                    } else {
+                        // lifetime marker: drop the quote, keep going
+                        prev_code = '\'';
+                        i += 1;
+                    }
+                } else {
+                    lines.last_mut().unwrap().code.push(c);
+                    prev_code = c;
+                    i += 1;
+                }
+            }
+            LexState::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            LexState::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '*' && next == '/' {
+                    if depth == 1 {
+                        lines.last_mut().unwrap().comments.push(comment.clone());
+                        comment.clear();
+                        state = LexState::Code;
+                    } else {
+                        state = LexState::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = LexState::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    // keep `\<newline>` continuations on the line counter
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    lines.last_mut().unwrap().code.push('"');
+                    state = LexState::Code;
+                    prev_code = '"';
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            LexState::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u32;
+                    while seen < hashes && chars.get(j) == Some(&'#') {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        lines.last_mut().unwrap().code.push('"');
+                        state = LexState::Code;
+                        prev_code = '"';
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !comment.is_empty() {
+        lines.last_mut().unwrap().comments.push(comment);
+    }
+    lines
+}
+
+/// Skip a char literal starting at the opening quote `chars[start] == '\''`;
+/// returns the index just past the closing quote.
+fn skip_char_literal(chars: &[char], start: usize) -> usize {
+    let mut j = start + 1;
+    while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+        if chars[j] == '\\' {
+            j += 1;
+        }
+        j += 1;
+    }
+    (j + 1).min(chars.len())
+}
+
+// ---------------------------------------------------------------------------
+// Annotations
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct AllowSpec {
+    all: bool,
+    rules: Vec<Rule>,
+    reason: String,
+}
+
+impl AllowSpec {
+    fn applies(&self, rule: Rule) -> bool {
+        self.all || self.rules.contains(&rule)
+    }
+}
+
+enum Marker {
+    Hot,
+    Profiling,
+    Allow(AllowSpec),
+}
+
+/// Parse every `detlint:` marker out of one comment's text.
+fn parse_markers(comment: &str) -> Vec<Marker> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("detlint:") {
+        let after = &rest[pos + "detlint:".len()..];
+        let t = after.trim_start();
+        if t.starts_with("hot") {
+            out.push(Marker::Hot);
+        } else if t.starts_with("profiling") {
+            out.push(Marker::Profiling);
+        } else if let Some(spec) = t.strip_prefix("allow") {
+            if let Some(body) = spec.trim_start().strip_prefix('(') {
+                if let Some(close) = body.find(')') {
+                    let mut all = false;
+                    let mut rules = Vec::new();
+                    for part in body[..close].split(',') {
+                        let p = part.trim();
+                        if p.eq_ignore_ascii_case("all") {
+                            all = true;
+                        } else if let Some(r) = Rule::parse(p) {
+                            rules.push(r);
+                        }
+                    }
+                    let reason = body[close + 1..]
+                        .trim_matches(|c: char| {
+                            c.is_whitespace() || c == '—' || c == '-' || c == ':'
+                        })
+                        .to_string();
+                    out.push(Marker::Allow(AllowSpec { all, rules, reason }));
+                }
+            }
+        }
+        rest = after;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Matching helpers
+// ---------------------------------------------------------------------------
+
+/// Count identifier-bounded occurrences of `ident` in `code`.
+fn count_ident(code: &str, ident: &str) -> usize {
+    let bytes = code.as_bytes();
+    let mut count = 0;
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(ident) {
+        let p = from + pos;
+        let end = p + ident.len();
+        let before_ok = p == 0 || !is_ident_char(bytes[p - 1] as char);
+        let after_ok = end >= bytes.len() || !is_ident_char(bytes[end] as char);
+        if before_ok && after_ok {
+            count += 1;
+        }
+        from = end;
+    }
+    count
+}
+
+/// Count occurrences of `pat` in `hay`; when `bound_start` is set, the
+/// character before the match must not be an identifier character.
+fn count_sub(hay: &str, pat: &str, bound_start: bool) -> usize {
+    let bytes = hay.as_bytes();
+    let mut count = 0;
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(pat) {
+        let p = from + pos;
+        if !bound_start || p == 0 || !is_ident_char(bytes[p - 1] as char) {
+            count += 1;
+        }
+        from = p + pat.len();
+    }
+    count
+}
+
+/// Allocating constructs H1 bans inside `// detlint: hot` functions.
+/// Matched against whitespace-stripped code; `(name, pattern, bounded)`.
+const H1_PATTERNS: &[(&str, &str, bool)] = &[
+    ("Vec::new", "Vec::new", true),
+    ("vec![]", "vec!", true),
+    ("to_vec", ".to_vec(", false),
+    ("collect", ".collect(", false),
+    ("collect", ".collect::", false),
+    ("format!", "format!", true),
+    (".clone()", ".clone(", false),
+    ("Box::new", "Box::new", true),
+    ("String::new", "String::new", true),
+    ("String::from", "String::from", true),
+    ("to_string", ".to_string(", false),
+    ("to_owned", ".to_owned(", false),
+];
+
+// ---------------------------------------------------------------------------
+// The scan
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum RegionKind {
+    Hot,
+    Profiling,
+    CfgTest,
+}
+
+struct Region {
+    kind: RegionKind,
+    /// Brace depth just before the region's opening `{`.
+    open_depth: i64,
+}
+
+/// Scan one file's source. `file` is used for path-based policy (critical
+/// modules, approved kernels) and finding locations.
+pub fn scan_source(file: &Path, src: &str, cfg: &Config) -> Vec<Finding> {
+    let lines = strip_lines(src);
+    let critical = cfg.is_critical(file);
+    let approved_d3 = cfg.is_approved_reduction_file(file);
+    let mut findings: Vec<Finding> = Vec::new();
+
+    let mut depth: i64 = 0;
+    let mut paren: i64 = 0;
+    let mut regions: Vec<Region> = Vec::new();
+    // annotation seen; waiting for the item keyword it applies to
+    let mut pending: Option<RegionKind> = None;
+    // item keyword seen; the next top-level `{` opens the region
+    let mut awaiting: Option<RegionKind> = None;
+    // allows on comment-only lines carry to the next code line
+    let mut carried: Vec<AllowSpec> = Vec::new();
+    // `SAFETY:` seen in the contiguous comment block above the next code line
+    let mut safety_above = false;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let has_code = !line.code.trim().is_empty();
+
+        // -- annotations ---------------------------------------------------
+        let mut line_allows: Vec<AllowSpec> = Vec::new();
+        let mut safety_here = false;
+        for c in &line.comments {
+            if c.contains("SAFETY:") {
+                safety_here = true;
+            }
+            for m in parse_markers(c) {
+                match m {
+                    Marker::Hot => pending = Some(RegionKind::Hot),
+                    Marker::Profiling => pending = Some(RegionKind::Profiling),
+                    Marker::Allow(a) => line_allows.push(a),
+                }
+            }
+        }
+
+        let compact: String = line.code.chars().filter(|c| !c.is_whitespace()).collect();
+
+        // -- #[cfg(test)] gates the next item ------------------------------
+        if compact.contains("cfg(test)") || compact.contains("cfg(all(test") {
+            pending = Some(RegionKind::CfgTest);
+        }
+
+        // -- pending annotation attaches to the next item keyword ----------
+        if let Some(kind) = pending {
+            let keyword = match kind {
+                RegionKind::Hot | RegionKind::Profiling => count_ident(&line.code, "fn") > 0,
+                RegionKind::CfgTest => {
+                    count_ident(&line.code, "mod") > 0
+                        || count_ident(&line.code, "fn") > 0
+                        || count_ident(&line.code, "impl") > 0
+                }
+            };
+            if keyword {
+                awaiting = Some(kind);
+                pending = None;
+            }
+        }
+
+        // -- brace tracking ------------------------------------------------
+        let mut hot = regions.iter().any(|r| r.kind == RegionKind::Hot);
+        let mut profiling = regions.iter().any(|r| r.kind == RegionKind::Profiling);
+        let mut in_test = regions.iter().any(|r| r.kind == RegionKind::CfgTest);
+        for ch in line.code.chars() {
+            match ch {
+                '(' | '[' => paren += 1,
+                ')' | ']' => paren -= 1,
+                ';' if paren == 0 && awaiting.is_some() => {
+                    // item ended without a body (e.g. a trait signature)
+                    awaiting = None;
+                }
+                '{' => {
+                    if let Some(kind) = awaiting.take() {
+                        regions.push(Region {
+                            kind,
+                            open_depth: depth,
+                        });
+                        match kind {
+                            RegionKind::Hot => hot = true,
+                            RegionKind::Profiling => profiling = true,
+                            RegionKind::CfgTest => in_test = true,
+                        }
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    while regions.last().is_some_and(|r| depth <= r.open_depth) {
+                        regions.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // -- rule checks ---------------------------------------------------
+        if has_code && !in_test {
+            let allows: Vec<&AllowSpec> = carried.iter().chain(line_allows.iter()).collect();
+            let push = |rule: Rule, message: &str, findings: &mut Vec<Finding>| {
+                let waived = allows
+                    .iter()
+                    .find(|a| a.applies(rule))
+                    .map(|a| a.reason.clone());
+                findings.push(Finding {
+                    rule,
+                    file: file.to_path_buf(),
+                    line: lineno,
+                    message: message.to_string(),
+                    waived,
+                });
+            };
+
+            if critical && cfg.enabled(Rule::D1) {
+                for ident in ["HashMap", "HashSet"] {
+                    for _ in 0..count_ident(&line.code, ident) {
+                        push(
+                            Rule::D1,
+                            &format!("unordered `{ident}` in a determinism-critical module"),
+                            &mut findings,
+                        );
+                    }
+                }
+                for _ in 0..count_ident(&line.code, "mpsc") {
+                    push(
+                        Rule::D1,
+                        "`mpsc` in a determinism-critical module",
+                        &mut findings,
+                    );
+                }
+            }
+
+            if cfg.enabled(Rule::D2) && !profiling {
+                let hits = count_sub(&compact, "Instant::now", true)
+                    + count_ident(&line.code, "SystemTime");
+                for _ in 0..hits {
+                    push(
+                        Rule::D2,
+                        "wall-clock read outside a profiling-annotated region",
+                        &mut findings,
+                    );
+                }
+            }
+
+            if cfg.enabled(Rule::D3) && !approved_d3 {
+                let sum_f32 = count_sub(&compact, "sum::<f32>", false);
+                let mut folds = 0;
+                for pat in ["fold(0.0f32", "fold(0f32", "fold(0.0_f32", "fold(0_f32"] {
+                    folds += count_sub(&compact, pat, false);
+                }
+                let ascribed =
+                    sum_f32 == 0 && compact.contains(":f32") && compact.contains(".sum()");
+                for _ in 0..(sum_f32 + folds + usize::from(ascribed)) {
+                    push(
+                        Rule::D3,
+                        "f32 reduction outside the approved fused kernels",
+                        &mut findings,
+                    );
+                }
+            }
+
+            if cfg.enabled(Rule::H1) && hot {
+                for (name, pat, bounded) in H1_PATTERNS {
+                    for _ in 0..count_sub(&compact, pat, *bounded) {
+                        push(
+                            Rule::H1,
+                            &format!("allocating construct `{name}` in a hot function"),
+                            &mut findings,
+                        );
+                    }
+                }
+            }
+
+            if cfg.enabled(Rule::U1) && !(safety_here || safety_above) {
+                for _ in 0..count_ident(&line.code, "unsafe") {
+                    push(
+                        Rule::U1,
+                        "`unsafe` without a `// SAFETY:` comment",
+                        &mut findings,
+                    );
+                }
+            }
+        }
+
+        // -- carry state to the next line ----------------------------------
+        if has_code {
+            carried.clear();
+            safety_above = false;
+        } else {
+            carried.extend(line_allows);
+            if safety_here {
+                safety_above = true;
+            }
+        }
+    }
+    findings
+}
+
+/// Scan one file from disk.
+pub fn scan_file(path: &Path, cfg: &Config) -> io::Result<Vec<Finding>> {
+    let src = fs::read_to_string(path)?;
+    Ok(scan_source(path, &src, cfg))
+}
+
+/// Recursively collect `.rs` files under `root` in sorted (deterministic)
+/// order.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(root)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            collect_rs_files(&entry, out)?;
+        } else if entry.extension().is_some_and(|x| x == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under the given paths.
+pub fn scan_paths(paths: &[PathBuf], cfg: &Config) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs_files(p, &mut files)?;
+    }
+    let mut report = Report {
+        files_scanned: files.len(),
+        ..Report::default()
+    };
+    for f in &files {
+        report.findings.extend(scan_file(f, cfg)?);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Finding> {
+        scan_source(Path::new(path), src, &Config::default())
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = r#"
+fn f() {
+    let s = "HashMap Instant::now unsafe";
+    // HashMap in a comment
+    /* Instant::now in a block
+       comment spanning lines */
+}
+"#;
+        assert!(scan("rust/src/net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n    let c = '\\'';\n    let d = 'x';\n    c\n}\n";
+        assert!(scan("rust/src/net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_only_fires_in_critical_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(scan("rust/src/coordinator/x.rs", src).len(), 1);
+        assert_eq!(scan("rust/src/util/x.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn allow_waives_same_line_and_next_line() {
+        let trailing =
+            "use std::collections::HashMap; // detlint: allow(D1) — sorted before drain\n";
+        let f = scan("rust/src/net/x.rs", trailing);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].waived.as_deref(), Some("sorted before drain"));
+
+        let above = "// detlint: allow(D1) — reason\nuse std::collections::HashMap;\n";
+        let f = scan("rust/src/net/x.rs", above);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].waived.is_some());
+
+        // the allow does not leak past the next code line
+        let leak = "// detlint: allow(D1) — reason\nfn g() {}\nuse std::collections::HashMap;\n";
+        let f = scan("rust/src/net/x.rs", leak);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].waived.is_none());
+    }
+
+    #[test]
+    fn hot_region_ends_at_the_function_brace() {
+        let src = "// detlint: hot\nfn hot() {\n    let v = Vec::new();\n}\n\
+                   fn cold() {\n    let v = Vec::new();\n}\n";
+        let f = scan("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].rule, Rule::H1);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    \
+                   fn t() { let _ = std::time::Instant::now(); }\n}\n";
+        assert!(scan("rust/src/net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_requires_safety_comment() {
+        let bad = "fn f() {\n    unsafe { core::hint::unreachable_unchecked() }\n}\n";
+        let f = scan("rust/src/x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::U1);
+
+        let good = "fn f() {\n    // SAFETY: provably unreachable\n    \
+                    unsafe { core::hint::unreachable_unchecked() }\n}\n";
+        assert!(scan("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn d3_spares_the_approved_kernels() {
+        let src = "fn s(x: &[f32]) -> f32 { x.iter().sum::<f32>() }\n";
+        assert_eq!(scan("rust/src/compress/wire.rs", src).len(), 0);
+        assert_eq!(scan("rust/src/model/x.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough() {
+        let report = Report {
+            findings: scan("rust/src/net/x.rs", "use std::collections::HashMap;\n"),
+            files_scanned: 1,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"rule\": \"D1\""));
+        assert!(json.contains("\"unwaived\": 1"));
+    }
+}

@@ -1,0 +1,108 @@
+//! CLI entry point for `detlint`. See `docs/LINTS.md` for the rule catalog.
+//!
+//! Usage:
+//!
+//! ```text
+//! detlint [PATHS...] [--deny-all] [--json] [--quiet]
+//!         [--allow RULE] [--critical MOD1,MOD2,...]
+//! ```
+//!
+//! Exit codes: 0 = clean (or findings without `--deny-all`), 1 = unwaived
+//! findings under `--deny-all`, 2 = usage / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{scan_paths, Config, Rule};
+
+const USAGE: &str = "usage: detlint [PATHS...] [--deny-all] [--json] [--quiet] \
+                     [--allow RULE] [--critical MOD1,MOD2,...]";
+
+fn main() -> ExitCode {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut deny_all = false;
+    let mut json = false;
+    let mut quiet = false;
+    let mut cfg = Config::default();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--deny-all" => deny_all = true,
+            "--json" => json = true,
+            "--quiet" => quiet = true,
+            "--allow" => match args.next().as_deref().and_then(Rule::parse) {
+                Some(rule) => cfg.disabled.push(rule),
+                None => {
+                    eprintln!("detlint: --allow expects one of D1,D2,D3,H1,U1");
+                    return ExitCode::from(2);
+                }
+            },
+            "--critical" => match args.next() {
+                Some(mods) => {
+                    cfg.critical_modules = mods.split(',').map(|m| m.trim().to_string()).collect();
+                }
+                None => {
+                    eprintln!("detlint: --critical expects a comma-separated module list");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{flag}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            path => paths.push(PathBuf::from(path)),
+        }
+    }
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+
+    let report = match scan_paths(&paths, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", report.to_json());
+    } else if !quiet {
+        for f in &report.findings {
+            match &f.waived {
+                Some(reason) => println!(
+                    "{}:{}: [{}] waived ({}) — {}",
+                    f.file.display(),
+                    f.line,
+                    f.rule,
+                    reason,
+                    f.message
+                ),
+                None => println!(
+                    "{}:{}: [{}] {}",
+                    f.file.display(),
+                    f.line,
+                    f.rule,
+                    f.message
+                ),
+            }
+        }
+        println!(
+            "detlint: {} file(s) scanned, {} unwaived finding(s), {} waived",
+            report.files_scanned,
+            report.unwaived_count(),
+            report.waived_count()
+        );
+    }
+
+    if deny_all && report.unwaived_count() > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,15 @@
+//! A fully clean fixture: no findings under any rule. Used by the CLI
+//! exit-code test (`--deny-all` on this directory must exit 0).
+
+use std::collections::BTreeMap;
+
+pub fn deterministic_sum(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+
+pub fn table() -> BTreeMap<u32, &'static str> {
+    let mut m = BTreeMap::new();
+    m.insert(1, "one");
+    m.insert(2, "two");
+    m
+}

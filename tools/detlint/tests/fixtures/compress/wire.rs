@@ -1,0 +1,14 @@
+//! D3 negative: this fixture's file name (`wire.rs`) is on the approved
+//! fused-kernel list, so f32 reductions here are exempt by policy. The
+//! file sits under `compress/` (critical), so D1 still applies — and the
+//! BTreeMap below shows the sanctioned collection scanning clean.
+
+use std::collections::BTreeMap;
+
+pub fn fused_reduce(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+pub fn lane_table() -> BTreeMap<u8, f32> {
+    BTreeMap::new()
+}

@@ -1,0 +1,26 @@
+//! D1 fixtures: unordered collections / mpsc inside a determinism-critical
+//! module ("coordinator" is in the default critical set). Tagged lines
+//! must produce exactly one D1 finding, unwaived or waived per the marker.
+//! (Spelling a marker out in this header would register as an expectation
+//! on the header line itself.)
+
+use std::collections::BTreeMap;
+use std::collections::HashMap; // [EXPECT:D1]
+use std::collections::HashSet; // [EXPECT:D1]
+use std::sync::mpsc; // [EXPECT:D1]
+
+pub fn ordered_table() -> BTreeMap<u32, f64> {
+    BTreeMap::new()
+}
+
+pub fn bad_cache() -> usize {
+    let m = HashMap::new(); // [EXPECT:D1]
+    let _ = m.insert(1u32, 2u32);
+    m.len()
+}
+
+pub fn sanctioned_cache() -> usize {
+    // detlint: allow(D1) — keys are drained through a sorted Vec before use
+    let m = std::collections::HashMap::<u32, u32>::new(); // [EXPECT-WAIVED:D1]
+    m.len()
+}

@@ -1,0 +1,26 @@
+//! D2 fixtures: wall-clock reads. Positive outside any region, negative
+//! inside a profiling-annotated function, positive again after the region
+//! closes, waived via a trailing allow. (The annotation name is spelled
+//! out only at its real use sites below — writing it in this header would
+//! itself annotate the first function.)
+
+use std::time::{Duration, Instant};
+
+pub fn naked_now() -> Instant {
+    Instant::now() // [EXPECT:D2]
+}
+
+// detlint: profiling
+pub fn timed_section() -> Duration {
+    let t0 = Instant::now();
+    t0.elapsed()
+}
+
+pub fn after_region() -> bool {
+    let now = std::time::SystemTime::now(); // [EXPECT:D2]
+    now.elapsed().is_ok()
+}
+
+pub fn stamped() -> Instant {
+    Instant::now() // [EXPECT-WAIVED:D2] detlint: allow(D2) — wall-clock log stamp by design
+}

@@ -1,0 +1,24 @@
+//! D3 fixtures: f32 reduction idioms outside the approved fused kernels.
+//! `sum::<f32>`, an f32 `fold`, and an ascribed `: f32` + `.sum()` binding
+//! are positives; the f64 reduction is the sanctioned alternative.
+
+pub fn turbofish(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() // [EXPECT:D3]
+}
+
+pub fn folded(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, b| a + b) // [EXPECT:D3]
+}
+
+pub fn ascribed(xs: &[f32]) -> f32 {
+    let total: f32 = xs.iter().copied().sum(); // [EXPECT:D3]
+    total
+}
+
+pub fn double_precision(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+
+pub fn sanctioned(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() // [EXPECT-WAIVED:D3] detlint: allow(D3) — fixed-order local reduction
+}

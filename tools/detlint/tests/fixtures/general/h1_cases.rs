@@ -1,0 +1,28 @@
+//! H1 fixtures: allocating constructs inside a hot-annotated function.
+//! The same constructs in the un-annotated `cold_path` are negatives; the
+//! pool-growth `resize_with` shows the line-level waiver form. (The
+//! annotation name is spelled out only at its real use sites below.)
+
+// detlint: hot
+pub fn hot_path(buf: &mut Vec<u8>, src: &[u8]) -> usize {
+    let v: Vec<u8> = Vec::new(); // [EXPECT:H1]
+    let w = vec![0u8; 4]; // [EXPECT:H1]
+    let x = src.to_vec(); // [EXPECT:H1]
+    let y: Vec<u8> = src.iter().copied().collect(); // [EXPECT:H1]
+    let msg = format!("{}", src.len()); // [EXPECT:H1]
+    let z = x.clone(); // [EXPECT:H1]
+    buf.len() + v.len() + w.len() + y.len() + msg.len() + z.len()
+}
+
+pub fn cold_path(src: &[u8]) -> Vec<u8> {
+    let mut out = src.to_vec();
+    out.push(0);
+    out
+}
+
+// detlint: hot
+pub fn hot_waived(partials: &mut Vec<Vec<u8>>, n: usize) -> usize {
+    // detlint: allow(H1) — resize_with only fills on pool growth, not per round
+    partials.resize_with(n, Vec::new); // [EXPECT-WAIVED:H1]
+    partials.len()
+}

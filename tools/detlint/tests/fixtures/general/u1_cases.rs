@@ -1,0 +1,28 @@
+//! U1 fixtures: `unsafe` must carry a SAFETY comment on the same line or
+//! in the comment block directly above it. (The literal marker text is
+//! spelled out only at its real use sites below — in this header it would
+//! leak coverage onto the first code line.)
+
+static mut COUNTER: u64 = 0;
+
+pub fn bare_block() {
+    unsafe { // [EXPECT:U1]
+        COUNTER += 1;
+    }
+}
+
+pub fn documented_block() {
+    // SAFETY: fixture is single-threaded; no aliasing of COUNTER.
+    unsafe {
+        COUNTER += 1;
+    }
+}
+
+pub fn inline_documented() -> u64 {
+    unsafe { COUNTER } // SAFETY: read-only access, single-threaded fixture
+}
+
+pub unsafe fn bare_fn() {} // [EXPECT:U1]
+
+// detlint: allow(U1) — contract documented on the trait, not repeated here
+pub unsafe fn waived_fn() {} // [EXPECT-WAIVED:U1]

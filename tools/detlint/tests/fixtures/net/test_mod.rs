@@ -1,0 +1,23 @@
+//! `#[cfg(test)]` suppression fixture: everything inside the test module
+//! would trip D1 and D2 but must be skipped; the top-level import is the
+//! one real finding in this file.
+
+use std::collections::HashMap; // [EXPECT:D1]
+
+pub fn touch(m: &HashMap<u32, u32>) -> usize { // [EXPECT:D1]
+    m.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn wall_clock_and_hashmap_are_fine_in_tests() {
+        let t0 = Instant::now();
+        let mut m = HashMap::new();
+        m.insert(1u32, t0.elapsed().as_nanos() as u64);
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! D1 negative: `HashMap` outside the determinism-critical modules is
+//! allowed — D1 is scoped by path, not global. This whole file must scan
+//! clean.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> HashMap<u32, u32> {
+    let mut m = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,181 @@
+//! Fixture-driven integration tests for detlint.
+//!
+//! Each fixture under `tests/fixtures/` is self-describing: a line that
+//! must produce an unwaived finding carries an `[EXPECT:RULE]` marker in a
+//! trailing comment, a line that must produce a waived finding carries
+//! `[EXPECT-WAIVED:RULE]`. Every other line must scan clean, so the full
+//! multiset comparison below checks exact finding counts *and* locations,
+//! and every unmarked line doubles as a negative case.
+//!
+//! The CLI-level tests exercise the exit-code contract: `--deny-all` over
+//! the fixture tree (which deliberately seeds violations of all five
+//! rules) must fail, the clean fixture directory must pass, and — the
+//! acceptance criterion for this tool — the real `rust/src` tree must
+//! pass with `--deny-all`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use detlint::{collect_rs_files, scan_file, Config, Rule};
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+/// `(line, rule, waived)` triples, sorted.
+type Triples = Vec<(usize, String, bool)>;
+
+fn expected_for(src: &str) -> Triples {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        let mut rest = line;
+        while let Some(pos) = rest.find("[EXPECT") {
+            let tail = &rest[pos..];
+            let close = tail.find(']').expect("unclosed [EXPECT marker");
+            let marker = &tail[..close];
+            let (waived, rule) = if let Some(r) = marker.strip_prefix("[EXPECT-WAIVED:") {
+                (true, r)
+            } else if let Some(r) = marker.strip_prefix("[EXPECT:") {
+                (false, r)
+            } else {
+                panic!("malformed marker {marker:?}");
+            };
+            assert!(
+                Rule::parse(rule).is_some(),
+                "marker names unknown rule {rule:?}"
+            );
+            out.push((idx + 1, rule.to_string(), waived));
+            rest = &tail[close..];
+        }
+    }
+    out.sort();
+    out
+}
+
+fn actual_for(path: &Path) -> Triples {
+    let mut out: Triples = scan_file(path, &Config::default())
+        .expect("scan fixture")
+        .into_iter()
+        .map(|f| (f.line, f.rule.name().to_string(), f.waived.is_some()))
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn every_fixture_matches_its_expect_markers_exactly() {
+    let mut files = Vec::new();
+    collect_rs_files(&fixtures_dir(), &mut files).expect("walk fixtures");
+    assert!(files.len() >= 9, "fixture tree went missing: {files:?}");
+
+    let mut positives_by_rule: Vec<String> = Vec::new();
+    let mut waived_by_rule: Vec<String> = Vec::new();
+    for file in &files {
+        let src = fs::read_to_string(file).expect("read fixture");
+        let expected = expected_for(&src);
+        let actual = actual_for(file);
+        assert_eq!(
+            expected,
+            actual,
+            "findings mismatch in {} (left = expected from markers, right = scanner)",
+            file.display()
+        );
+        for (_, rule, waived) in expected {
+            if waived {
+                waived_by_rule.push(rule);
+            } else {
+                positives_by_rule.push(rule);
+            }
+        }
+    }
+    // Acceptance: all five rule families have a fixture-verified positive
+    // and a fixture-verified waived case (negatives are every unmarked
+    // line, checked by the exact-match assertion above).
+    for rule in Rule::ALL {
+        assert!(
+            positives_by_rule.iter().any(|r| r == rule.name()),
+            "no positive fixture case for {rule}"
+        );
+        assert!(
+            waived_by_rule.iter().any(|r| r == rule.name()),
+            "no allow-waived fixture case for {rule}"
+        );
+    }
+}
+
+#[test]
+fn clean_fixture_dir_has_no_findings() {
+    let mut files = Vec::new();
+    collect_rs_files(&fixtures_dir().join("clean"), &mut files).expect("walk clean");
+    for file in &files {
+        let findings = scan_file(file, &Config::default()).expect("scan clean");
+        assert!(findings.is_empty(), "unexpected findings: {findings:?}");
+    }
+}
+
+fn run_detlint(args: &[&str]) -> std::process::Output {
+    let exe = env!("CARGO_BIN_EXE_detlint");
+    Command::new(exe).args(args).output().expect("run detlint")
+}
+
+#[test]
+fn deny_all_fails_on_seeded_violations() {
+    let dir = fixtures_dir();
+    let out = run_detlint(&[dir.to_str().unwrap(), "--deny-all", "--quiet"]);
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "seeded fixture violations must fail --deny-all"
+    );
+}
+
+#[test]
+fn without_deny_all_findings_do_not_fail() {
+    let dir = fixtures_dir();
+    let out = run_detlint(&[dir.to_str().unwrap(), "--quiet"]);
+    assert_eq!(out.status.code(), Some(0));
+}
+
+#[test]
+fn deny_all_passes_on_clean_fixtures() {
+    let dir = fixtures_dir().join("clean");
+    let out = run_detlint(&[dir.to_str().unwrap(), "--deny-all"]);
+    assert_eq!(out.status.code(), Some(0));
+}
+
+#[test]
+fn json_report_has_the_expected_shape() {
+    let dir = fixtures_dir();
+    let out = run_detlint(&[dir.to_str().unwrap(), "--json"]);
+    let stdout = String::from_utf8(out.stdout).expect("utf8 json");
+    for key in [
+        "\"tool\": \"detlint\"",
+        "\"files_scanned\"",
+        "\"unwaived\"",
+        "\"counts\"",
+        "\"findings\"",
+        "\"rule\": \"D1\"",
+        "\"waive_reason\"",
+    ] {
+        assert!(stdout.contains(key), "missing {key} in JSON:\n{stdout}");
+    }
+}
+
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let out = run_detlint(&["--definitely-not-a-flag"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn real_tree_is_clean_under_deny_all() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let out = run_detlint(&[root.to_str().unwrap(), "--deny-all"]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "rust/src must be detlint-clean; output:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
