@@ -99,6 +99,8 @@ fn takes_value(key: &str) -> bool {
             | "compute-ms"
             | "link"
             | "shards"
+            | "aggregation"
+            | "adversary"
     )
 }
 
@@ -112,7 +114,8 @@ SUBCOMMANDS:
     train        Run distributed training via the PJRT runtime
                  (--config configs/<f>.toml, --set k=v overrides, --quick)
     exp <id>     Run a paper experiment: ce1 ce2 ce3 thm1 fig2 fig3 fig4
-                 fig5 fig7 table2 rem5 comm lemma3 ablation staleness all
+                 fig5 fig7 table2 rem5 comm lemma3 ablation staleness
+                 byzantine all
                  (--quick for reduced sizes, --out results/ for CSV/JSON)
     artifacts    Print the artifact manifest summary
     list         List available experiments
@@ -140,6 +143,16 @@ ASYNC TRAINING (train):
     --compute-ms <t>     Base per-step compute time on the virtual clock
     --link <preset>      Fabric link: 10gbe | 1gbe | ib | wan
     --toy                Train on the toy quadratic (no PJRT artifacts)
+
+ROBUSTNESS (train):
+    --adversary <m>      Byzantine worker model: none |
+                         signflip:FRAC | norminflate:FRAC[:FACTOR] |
+                         collude:FRAC | randombytes:FRAC
+                         (round(FRAC·n) seeded hostile workers; default none)
+    --aggregation <a>    Leader combine rule: mean | majority_vote |
+                         median | trimmed[:K] | norm_threshold
+                         (default mean; the robust rules tolerate
+                         Byzantine frames, see docs/ROBUSTNESS.md)
 ";
 
 #[cfg(test)]

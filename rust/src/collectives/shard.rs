@@ -372,13 +372,17 @@ impl ShardedParameterServer {
                 });
             }
             if let Payload::Grad(e) = msg.payload {
-                // tagged frames must agree with the leader they landed on
-                // (untagged single-shard frames carry no tag to check)
+                // The shard tag is untrusted input: a frame whose tag
+                // disagrees with the leader it landed on is dropped and
+                // counted, never aggregated into the wrong slice (the
+                // round then reports `Missing` with honest counts instead
+                // of aborting). Untagged single-shard frames carry no tag
+                // to check.
                 if let Some(tag) = e.shard {
-                    assert_eq!(
-                        tag.shard as usize, s,
-                        "frame routed to the wrong shard leader"
-                    );
+                    if tag.shard as usize != s {
+                        fabric.note_dropped_frame();
+                        continue;
+                    }
                 }
                 frames.push(e);
                 latest = latest.max(arrival);
@@ -525,6 +529,40 @@ mod tests {
             }
         );
         assert!(err.to_string().contains("0 of 1"));
+    }
+
+    /// A frame whose (untrusted) shard tag disagrees with the leader it
+    /// landed on is dropped and counted — the gather reports an honest
+    /// `Missing` instead of panicking or folding the frame into the wrong
+    /// slice.
+    #[test]
+    fn wrong_shard_tag_is_dropped_and_counted_not_fatal() {
+        let plan = ShardPlan::new(4, 2);
+        let fabric = Fabric::new(3, LinkModel::default()); // 1 worker + 2 leaders
+        let ps = ShardedParameterServer::new(&fabric, plan);
+        // shard 0's frame lies: it claims to belong to shard 1
+        ps.push_frames(
+            &fabric,
+            0,
+            2,
+            &mut vec![
+                encode_scaled_sign(&[1.0, -1.0]).with_shard(1, 2),
+                encode_scaled_sign(&[1.0, -1.0]).with_shard(1, 2),
+            ],
+        );
+        let err = ps.gather_shard_timed(&fabric, 2, 0).unwrap_err();
+        assert_eq!(
+            err,
+            GatherError::Missing {
+                shard: 0,
+                expected: 1,
+                got: 0
+            }
+        );
+        assert_eq!(fabric.with_stats(|st| st.dropped()), 1);
+        // the honestly-tagged frame on shard 1 still gathers fine
+        let (frames, _) = ps.gather_shard_timed(&fabric, 2, 1).unwrap();
+        assert_eq!(frames.len(), 1);
     }
 
     #[test]

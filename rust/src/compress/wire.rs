@@ -91,10 +91,12 @@ impl BitWriter {
         self.bits += n as u64;
     }
 
-    /// Append a whole byte (cursor must be byte-aligned).
+    /// Append a whole byte (cursor must be byte-aligned). The alignment
+    /// contract is load-bearing for the codecs' byte-aligned fast paths,
+    /// so it is a real check, not a debug assertion.
     #[inline]
     pub fn push_byte_aligned(&mut self, byte: u8) {
-        debug_assert_eq!(self.bits % 8, 0);
+        assert_eq!(self.bits % 8, 0, "push_byte_aligned at unaligned cursor");
         self.push_bits64(u64::from(byte), 8);
     }
 
@@ -262,7 +264,7 @@ impl Encoded {
     /// Attach the shard routing header (id + start coordinate) in place,
     /// charging its [`SHARD_TAG_BITS`] on the frame's exact size.
     pub fn set_shard(&mut self, shard: u16, start: u32) {
-        debug_assert!(self.shard.is_none(), "frame already shard-tagged");
+        assert!(self.shard.is_none(), "frame already shard-tagged");
         self.shard = Some(ShardTag { shard, start });
         self.bits += SHARD_TAG_BITS;
     }
@@ -284,24 +286,37 @@ pub enum Format {
     Qsgd,
 }
 
+/// Typed decode failure. Frame bytes are untrusted input (a Byzantine
+/// worker or a corrupted link can put anything on the wire), so every
+/// `decode_*` path returns this instead of panicking; the drivers count
+/// an undecodable frame as dropped and keep going.
 #[derive(Debug)]
-pub enum WireError {
+pub enum DecodeError {
+    /// Payload ends before the `d` coordinates the frame claims.
     Truncated,
+    /// Payload is the right size but semantically invalid: a sparse
+    /// index or count out of range, a QSGD level above the advertised
+    /// count, or a zero level count.
+    Malformed,
     Format(Format, Format),
 }
 
-impl std::fmt::Display for WireError {
+/// Historical name for [`DecodeError`].
+pub type WireError = DecodeError;
+
+impl std::fmt::Display for DecodeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            WireError::Truncated => write!(f, "payload truncated"),
-            WireError::Format(want, got) => {
+            DecodeError::Truncated => write!(f, "payload truncated"),
+            DecodeError::Malformed => write!(f, "payload malformed"),
+            DecodeError::Format(want, got) => {
                 write!(f, "format mismatch: expected {want:?}, got {got:?}")
             }
         }
     }
 }
 
-impl std::error::Error for WireError {}
+impl std::error::Error for DecodeError {}
 
 // ------------------------------------------------------------- dense f32
 
@@ -334,8 +349,12 @@ pub fn decode_dense(e: &Encoded) -> Result<Vec<f32>, WireError> {
     if e.bytes.len() < e.d * 4 {
         return Err(WireError::Truncated);
     }
-    Ok((0..e.d)
-        .map(|i| f32::from_le_bytes(e.bytes[i * 4..i * 4 + 4].try_into().unwrap()))
+    // chunks_exact guarantees 4-byte chunks: no slice-index or unwrap on
+    // the untrusted payload
+    Ok(e.bytes
+        .chunks_exact(4)
+        .take(e.d)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
 }
 
@@ -347,8 +366,8 @@ pub fn decode_dense_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     if e.bytes.len() < e.d * 4 || acc.len() != e.d {
         return Err(WireError::Truncated);
     }
-    for (a, chunk) in acc.iter_mut().zip(e.bytes.chunks_exact(4)) {
-        *a += f32::from_le_bytes(chunk.try_into().unwrap());
+    for (a, c) in acc.iter_mut().zip(e.bytes.chunks_exact(4)) {
+        *a += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
     }
     Ok(())
 }
@@ -408,8 +427,14 @@ fn sign_payload(e: &Encoded) -> Result<(f32, &[u8]), WireError> {
     if e.bytes.len() < 4 + e.d.div_ceil(8) {
         return Err(WireError::Truncated);
     }
-    let scale = f32::from_bits(u32::from_le_bytes(e.bytes[..4].try_into().unwrap()));
-    Ok((scale, &e.bytes[4..]))
+    let b = &e.bytes;
+    let scale = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    // a non-finite scale would silently poison every coordinate of the
+    // aggregate; honest encoders never produce one, so reject it here
+    if !scale.is_finite() {
+        return Err(WireError::Malformed);
+    }
+    Ok((scale, &b[4..]))
 }
 
 /// Decode to the dense update vector `scale * sign` (word-wise unpack into
@@ -417,16 +442,15 @@ fn sign_payload(e: &Encoded) -> Result<(f32, &[u8]), WireError> {
 pub fn decode_scaled_sign(e: &Encoded) -> Result<Vec<f32>, WireError> {
     let (scale, body) = sign_payload(e)?;
     let mut out = vec![0.0f32; e.d];
+    let full = e.d / 64; // sign_payload guarantees body.len() >= ceil(d/8)
     let mut chunks = out.chunks_exact_mut(64);
-    let mut bi = 0usize;
-    for c in &mut chunks {
-        let word = u64::from_le_bytes(body[bi..bi + 8].try_into().unwrap());
-        bi += 8;
+    for (c, w) in (&mut chunks).zip(body.chunks_exact(8).take(full)) {
+        let word = u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]);
         for (j, o) in c.iter_mut().enumerate() {
             *o = if word >> j & 1 == 1 { scale } else { -scale };
         }
     }
-    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[bi..]) {
+    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[full * 8..]) {
         for (j, o) in sub.iter_mut().enumerate() {
             *o = if byte >> j & 1 == 1 { scale } else { -scale };
         }
@@ -441,16 +465,15 @@ pub fn decode_scaled_sign_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireEr
     if acc.len() != e.d {
         return Err(WireError::Truncated);
     }
+    let full = e.d / 64;
     let mut chunks = acc.chunks_exact_mut(64);
-    let mut bi = 0usize;
-    for c in &mut chunks {
-        let word = u64::from_le_bytes(body[bi..bi + 8].try_into().unwrap());
-        bi += 8;
+    for (c, w) in (&mut chunks).zip(body.chunks_exact(8).take(full)) {
+        let word = u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]);
         for (j, a) in c.iter_mut().enumerate() {
             *a += if word >> j & 1 == 1 { scale } else { -scale };
         }
     }
-    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[bi..]) {
+    for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[full * 8..]) {
         for (j, a) in sub.iter_mut().enumerate() {
             *a += if byte >> j & 1 == 1 { scale } else { -scale };
         }
@@ -496,12 +519,20 @@ pub fn decode_sparse(e: &Encoded) -> Result<Vec<f32>, WireError> {
     }
     let mut r = BitReader::new(&e.bytes);
     let count = r.read_u32().ok_or(WireError::Truncated)? as usize;
+    // reject a garbage count before trusting it as a loop bound: more
+    // non-zeros than coordinates, or more pairs than the payload holds
+    if count > e.d {
+        return Err(WireError::Malformed);
+    }
+    if (e.bytes.len() as u64) * 8 < 32 + 64 * count as u64 {
+        return Err(WireError::Truncated);
+    }
     let mut out = vec![0.0f32; e.d];
     for _ in 0..count {
         let i = r.read_u32().ok_or(WireError::Truncated)? as usize;
         let x = r.read_f32().ok_or(WireError::Truncated)?;
-        if i >= e.d {
-            return Err(WireError::Truncated);
+        if i >= e.d || !x.is_finite() {
+            return Err(WireError::Malformed);
         }
         out[i] = x;
     }
@@ -519,11 +550,17 @@ pub fn decode_sparse_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> 
     }
     let mut r = BitReader::new(&e.bytes);
     let count = r.read_u32().ok_or(WireError::Truncated)? as usize;
+    if count > e.d {
+        return Err(WireError::Malformed);
+    }
+    if (e.bytes.len() as u64) * 8 < 32 + 64 * count as u64 {
+        return Err(WireError::Truncated);
+    }
     for _ in 0..count {
         let i = r.read_u32().ok_or(WireError::Truncated)? as usize;
         let x = r.read_f32().ok_or(WireError::Truncated)?;
-        if i >= e.d {
-            return Err(WireError::Truncated);
+        if i >= e.d || !x.is_finite() {
+            return Err(WireError::Malformed);
         }
         acc[i] += x;
     }
@@ -569,8 +606,16 @@ pub fn decode_ternary(e: &Encoded) -> Result<Vec<f32>, WireError> {
     if e.format != Format::Ternary {
         return Err(WireError::Format(Format::Ternary, e.format));
     }
+    // a valid frame is exactly 32 + 2d bits; reject short payloads before
+    // allocating the d-sized output
+    if (e.bytes.len() as u64) * 8 < 32 + 2 * e.d as u64 {
+        return Err(WireError::Truncated);
+    }
     let mut r = BitReader::new(&e.bytes);
     let m = r.read_f32().ok_or(WireError::Truncated)?;
+    if !m.is_finite() {
+        return Err(WireError::Malformed);
+    }
     let mut out = Vec::with_capacity(e.d);
     for _ in 0..e.d {
         let code = r.read_bits(2).ok_or(WireError::Truncated)?;
@@ -593,6 +638,9 @@ pub fn decode_ternary_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError>
     }
     let mut r = BitReader::new(&e.bytes);
     let m = r.read_f32().ok_or(WireError::Truncated)?;
+    if !m.is_finite() {
+        return Err(WireError::Malformed);
+    }
     for a in acc.iter_mut() {
         let code = r.read_bits(2).ok_or(WireError::Truncated)?;
         match code {
@@ -693,7 +741,14 @@ fn qsgd_header(e: &Encoded) -> Result<(f32, u32, BitReader<'_>), WireError> {
     let mut r = BitReader::new(&e.bytes);
     let norm = r.read_f32().ok_or(WireError::Truncated)?;
     let s = r.read_bits(8).ok_or(WireError::Truncated)?;
-    if s == 0 {
+    // s = 0 divides by zero downstream; a non-finite norm poisons the
+    // aggregate — both are frame corruptions, never honest encodings
+    if s == 0 || !norm.is_finite() {
+        return Err(WireError::Malformed);
+    }
+    // every coordinate costs at least one bit (γ(1)), so a valid frame
+    // has at least 40 + d bits — reject short payloads up front
+    if (e.bytes.len() as u64) * 8 < 40 + e.d as u64 {
         return Err(WireError::Truncated);
     }
     Ok((norm, s, r))
@@ -709,7 +764,7 @@ pub fn decode_qsgd(e: &Encoded) -> Result<Vec<f32>, WireError> {
     for o in out.iter_mut() {
         let l = r.read_elias_gamma().ok_or(WireError::Truncated)? - 1;
         if l > u64::from(s) {
-            return Err(WireError::Truncated);
+            return Err(WireError::Malformed);
         }
         if l > 0 {
             let mag = norm * l as f32 / s_f;
@@ -734,7 +789,7 @@ pub fn decode_qsgd_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     for a in acc.iter_mut() {
         let l = r.read_elias_gamma().ok_or(WireError::Truncated)? - 1;
         if l > u64::from(s) {
-            return Err(WireError::Truncated);
+            return Err(WireError::Malformed);
         }
         if l > 0 {
             let mag = norm * l as f32 / s_f;
@@ -1407,6 +1462,84 @@ mod tests {
         encode_dense_into(&v, &mut e2);
         assert_eq!(e2.bytes, want);
         assert_eq!(e2.bits, 64);
+    }
+
+    /// Run every decoder (dispatch, per-format, and fused-add) over a
+    /// frame of arbitrary bytes. A clean decode must be `d`-sized and an
+    /// error is fine — a panic is the bug this guards against.
+    fn exercise_all_decoders(e: &Encoded) {
+        if let Ok(v) = decode_any(e) {
+            assert_eq!(v.len(), e.d, "{:?} decoded to the wrong length", e.format);
+        }
+        let mut acc = vec![0.0f32; e.d];
+        let _ = decode_any_add(e, &mut acc);
+        let _ = decode_dense(e);
+        let _ = decode_scaled_sign(e);
+        let _ = decode_sparse(e);
+        let _ = decode_ternary(e);
+        let _ = decode_qsgd(e);
+        let _ = decode_dense_add(e, &mut acc);
+        let _ = decode_scaled_sign_add(e, &mut acc);
+        let _ = decode_sparse_add(e, &mut acc);
+        let _ = decode_ternary_add(e, &mut acc);
+        let _ = decode_qsgd_add(e, &mut acc);
+    }
+
+    /// Byzantine-input property: no `decode_*` path may panic on
+    /// arbitrary bytes. Valid frames of every format are truncated at
+    /// random byte boundaries, bit-flipped, and replaced wholesale with
+    /// random bytes; every decoder must return Err or a clean d-sized
+    /// decode. This is the wire half of the graceful-degradation
+    /// contract the drivers rely on (docs/ROBUSTNESS.md).
+    #[test]
+    fn prop_decoders_never_panic_on_adversarial_bytes() {
+        use crate::propcheck::UsizeRange;
+        propcheck::check_with(
+            &propcheck::Config {
+                cases: 120,
+                ..Default::default()
+            },
+            &UsizeRange(1, 1_000_000),
+            |&seed| {
+                let mut rng = Pcg64::seeded(seed as u64);
+                let d = 1 + rng.below(300);
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                let sparse_v =
+                    TopK::count((d / 4).max(1)).compress_vec(&p, &mut Pcg64::seeded(1));
+                let tern_v = TernGrad.compress_vec(&p, &mut Pcg64::seeded(2));
+                let qsgd_v = Qsgd::new(4).compress_vec(&p, &mut Pcg64::seeded(3));
+                let norm = crate::tensor::norm2(&p) as f32;
+                let frames = [
+                    encode_dense(&p),
+                    encode_scaled_sign(&p),
+                    encode_sparse(&sparse_v),
+                    encode_ternary(&tern_v),
+                    encode_qsgd(&qsgd_v, norm, 4),
+                ];
+                for e in &frames {
+                    // truncated at a random byte boundary
+                    let mut t = e.clone();
+                    let keep = rng.below(t.bytes.len() + 1);
+                    t.bytes.truncate(keep);
+                    exercise_all_decoders(&t);
+                    // one random bit flipped
+                    let mut f = e.clone();
+                    if !f.bytes.is_empty() {
+                        let i = rng.below(f.bytes.len());
+                        f.bytes[i] ^= 1 << rng.below(8);
+                    }
+                    exercise_all_decoders(&f);
+                    // payload replaced with arbitrary bytes, random length
+                    let mut g = e.clone();
+                    let len = rng.below(2 * e.bytes.len().max(4));
+                    g.bytes.clear();
+                    g.bytes.extend((0..len).map(|_| rng.next_u32() as u8));
+                    exercise_all_decoders(&g);
+                }
+                true
+            },
+        );
     }
 
     /// Every `encode_*_into` leaves the frame byte-identical to its

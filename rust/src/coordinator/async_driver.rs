@@ -130,7 +130,12 @@ impl AsyncTrainDriver {
         assert_eq!(theta0.len(), d);
         let quorum = if quorum == 0 { n } else { quorum.min(n) };
         let (sim_clock, fabric, ps) = super::driver::build_topology(&cfg, &mut workers);
-        let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
+        let pool = WorkerPool::spawn_with_adversary(
+            workers,
+            fabric.clone(),
+            cfg.threads.max(1),
+            cfg.adversary.clone(),
+        );
         let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
         AsyncTrainDriver {
             momentum: vec![0.0; d],

@@ -15,7 +15,9 @@ use super::worker::Worker;
 use crate::collectives::{ShardPlan, ShardedParameterServer};
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
-use crate::net::{Fabric, LinkModel, Message, SimClock, StragglerSchedule, TrafficStats};
+use crate::net::{
+    AdversarySchedule, Fabric, LinkModel, Message, SimClock, StragglerSchedule, TrafficStats,
+};
 use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
@@ -44,6 +46,11 @@ pub struct DriverConfig {
     /// link time was priced; the async driver and the straggler sweeps
     /// set a real base time.
     pub straggler: StragglerSchedule,
+    /// Byzantine worker model: which workers are hostile and what they
+    /// put on the wire (see [`crate::net::adversary`]). The default
+    /// ([`AdversarySchedule::none`]) corrupts nothing and is
+    /// byte-identical to the pre-adversary engine.
+    pub adversary: AdversarySchedule,
     /// Worker-pool threads (clamped to 1..=workers; 1 = sequential).
     pub threads: usize,
     /// Parameter-server shards: the model vector splits into this many
@@ -68,6 +75,7 @@ impl Default for DriverConfig {
             weight_decay: 0.0,
             link: LinkModel::default(),
             straggler: StragglerSchedule::none(),
+            adversary: AdversarySchedule::none(),
             threads: 1,
             shards: 1,
             log_every: 0,
@@ -209,7 +217,12 @@ impl TrainDriver {
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
         let (sim_clock, fabric, ps) = build_topology(&cfg, &mut workers);
-        let pool = WorkerPool::spawn(workers, fabric.clone(), cfg.threads.max(1));
+        let pool = WorkerPool::spawn_with_adversary(
+            workers,
+            fabric.clone(),
+            cfg.threads.max(1),
+            cfg.adversary.clone(),
+        );
         let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
         TrainDriver {
             momentum: vec![0.0; d],

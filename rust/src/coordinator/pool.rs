@@ -36,7 +36,7 @@
 use super::worker::Worker;
 use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::{self, Encoded};
-use crate::net::Fabric;
+use crate::net::{AdversarySchedule, Fabric};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -169,10 +169,14 @@ enum Reply {
         acc: Vec<f32>,
         /// The group's (now empty) frame container, returned for reuse.
         frames: Vec<Encoded>,
+        /// Frames that decoded successfully into `acc`; anything short of
+        /// the group size means undecodable frames were dropped.
+        ok: usize,
     },
     Decoded {
         idx: usize,
-        v: Vec<f32>,
+        /// `None` when the frame was undecodable and dropped.
+        v: Option<Vec<f32>>,
     },
 }
 
@@ -193,6 +197,21 @@ impl WorkerPool {
     /// from the workers' shared [`crate::collectives::ShardPlan`]; the
     /// fabric must be sized `workers + shards`.
     pub fn spawn(workers: Vec<Worker>, fabric: Arc<Fabric>, threads: usize) -> WorkerPool {
+        WorkerPool::spawn_with_adversary(workers, fabric, threads, AdversarySchedule::none())
+    }
+
+    /// [`spawn`](Self::spawn) with a Byzantine adversary schedule: each
+    /// actor corrupts a worker's outgoing frames per the schedule's
+    /// `(worker, round)` cells just before they hit the fabric — the
+    /// corruption is a pure per-cell function, so any thread assignment
+    /// produces identical wire bytes. [`AdversarySchedule::none()`]
+    /// leaves every frame untouched (byte-identical to the honest pool).
+    pub fn spawn_with_adversary(
+        workers: Vec<Worker>,
+        fabric: Arc<Fabric>,
+        threads: usize,
+        adversary: AdversarySchedule,
+    ) -> WorkerPool {
         let n_workers = workers.len();
         assert!(n_workers > 0, "pool needs at least one worker");
         let plan = workers[0].shard_plan().clone();
@@ -227,8 +246,9 @@ impl WorkerPool {
             let fabric = fabric.clone();
             let ps = ps.clone();
             let reply_tx = reply_rx.clone();
+            let adversary = adversary.clone();
             handles.push(std::thread::spawn(move || {
-                actor_loop(block, fabric, ps, rx, reply_tx);
+                actor_loop(block, fabric, ps, rx, reply_tx, adversary);
             }));
         }
         debug_assert_eq!(workers.len(), 0);
@@ -357,6 +377,12 @@ impl WorkerPool {
     /// * `partials` (cleared first) receives the group partial sums in
     ///   group order; the buffers come from `spare`, the caller's recycle
     ///   stack (falling back to fresh allocations when it runs dry).
+    /// * `decoded` (cleared first) receives, per group, how many frames
+    ///   actually decoded into the partial — undecodable (adversarial)
+    ///   frames are dropped and counted in the fabric's `TrafficStats`
+    ///   rather than aborting the round, so `decoded[g]` can fall short
+    ///   of the group size. The aggregator uses these counts to average
+    ///   over the frames that arrived intact.
     ///
     /// Groups are distributed round-robin over the threads; since every
     /// partial depends only on its own group's frames, the results are
@@ -367,6 +393,7 @@ impl WorkerPool {
         groups: &mut [Vec<Encoded>],
         d: usize,
         partials: &mut Vec<Vec<f32>>,
+        decoded: &mut Vec<usize>,
         spare: &mut Vec<Vec<f32>>,
     ) {
         let threads = self.command_txs.len();
@@ -374,6 +401,8 @@ impl WorkerPool {
         // detlint: allow(H1) — fills only while the partial stack grows to
         // the group count; allocation-free once warm
         partials.resize_with(groups.len(), Vec::new);
+        decoded.clear();
+        decoded.resize(groups.len(), 0);
         for (g, slot) in groups.iter_mut().enumerate() {
             let frames = std::mem::take(slot);
             let mut acc = spare.pop().unwrap_or_default();
@@ -386,9 +415,15 @@ impl WorkerPool {
         }
         for _ in 0..groups.len() {
             match self.recv_reply() {
-                Reply::Partial { group, acc, frames } => {
+                Reply::Partial {
+                    group,
+                    acc,
+                    frames,
+                    ok,
+                } => {
                     partials[group] = acc;
                     groups[group] = frames;
+                    decoded[group] = ok;
                 }
                 _ => unreachable!("unexpected pool reply during decode"),
             }
@@ -421,15 +456,20 @@ impl WorkerPool {
         }
         assert_eq!(expect, n, "decode groups must cover every frame");
         let mut partials = Vec::new();
+        let mut decoded = Vec::new();
         let mut spare = Vec::new();
-        self.decode_partials_pooled(&mut group_vecs, d, &mut partials, &mut spare);
+        self.decode_partials_pooled(&mut group_vecs, d, &mut partials, &mut decoded, &mut spare);
         partials
     }
 
     /// Fan frame decoding out over the pool threads, one dense vector per
     /// frame (contiguous blocks per thread); returns the decoded updates
-    /// sorted by frame index. The frames' byte buffers are recycled into
-    /// the fabric's frame pool.
+    /// sorted by frame index. Undecodable (adversarial) frames are dropped
+    /// — counted in the fabric's `TrafficStats` — so the result can be
+    /// shorter than the input; the surviving updates keep their relative
+    /// index order, which is what keeps the downstream combine
+    /// deterministic. The frames' byte buffers are recycled into the
+    /// fabric's frame pool.
     pub fn decode_dense(&self, frames: Vec<Encoded>) -> Vec<Vec<f32>> {
         let n = frames.len();
         let threads = self.command_txs.len();
@@ -450,13 +490,11 @@ impl WorkerPool {
         let mut out: Vec<Option<Vec<f32>>> = vec![None; n];
         for _ in 0..n {
             match self.recv_reply() {
-                Reply::Decoded { idx, v } => out[idx] = Some(v),
+                Reply::Decoded { idx, v } => out[idx] = v,
                 _ => unreachable!("unexpected pool reply during decode"),
             }
         }
-        out.into_iter()
-            .map(|v| v.expect("missing decoded frame"))
-            .collect()
+        out.into_iter().flatten().collect()
     }
 
     /// Restore worker EF states (each thread applies the entries for the
@@ -497,7 +535,9 @@ fn actor_loop(
     ps: ShardedParameterServer,
     rx: Arc<Chan<Command>>,
     tx: Arc<Chan<Reply>>,
+    adversary: AdversarySchedule,
 ) {
+    let n_workers = ps.workers.len();
     // reused parameter assembly buffer (per-shard slices scatter into it)
     let mut params: Vec<f32> = Vec::new();
     // reused per-round frame list; the frames' byte buffers cycle through
@@ -512,6 +552,7 @@ fn actor_loop(
                         "parameter broadcast missing for worker"
                     );
                     w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
+                    adversary.corrupt_frames(w.id, round, n_workers, &mut frames);
                     ps.push_frames(&fabric, w.id, round, &mut frames);
                     let report = RoundReport {
                         id: w.id,
@@ -533,6 +574,7 @@ fn actor_loop(
                     "parameter message missing for stepped worker"
                 );
                 w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
+                adversary.corrupt_frames(w.id, round, n_workers, &mut frames);
                 ps.push_frames(&fabric, w.id, round, &mut frames);
                 let report = RoundReport {
                     id: w.id,
@@ -572,19 +614,46 @@ fn actor_loop(
                 mut acc,
             } => {
                 acc.fill(0.0);
+                // Optimistic fused pass: every honest frame decodes, so
+                // the hot path stays the allocation-free fused kernel. A
+                // fused add is not transactional — coordinates may have
+                // landed before the error — so on the first undecodable
+                // frame, restart frame-by-frame, dropping the bad ones.
+                let mut ok = frames.len();
                 for e in &frames {
-                    wire::decode_any_add(e, &mut acc).expect("leader frame decode");
+                    if wire::decode_any_add(e, &mut acc).is_err() {
+                        acc.fill(0.0);
+                        ok = 0;
+                        for e in &frames {
+                            match wire::decode_any(e) {
+                                Ok(v) => {
+                                    crate::tensor::add_assign(&mut acc, &v);
+                                    ok += 1;
+                                }
+                                Err(_) => fabric.note_dropped_frame(),
+                            }
+                        }
+                        break;
+                    }
                 }
                 // spent push frames hand their byte buffers back for the
                 // next round's encoders
                 for e in frames.drain(..) {
                     fabric.frame_pool().put(e.bytes);
                 }
-                tx.send(Reply::Partial { group, acc, frames });
+                tx.send(Reply::Partial {
+                    group,
+                    acc,
+                    frames,
+                    ok,
+                });
             }
             Command::DecodeDense { mut frames, start } => {
                 for (i, e) in frames.drain(..).enumerate() {
-                    let v = wire::decode_any(&e).expect("leader frame decode");
+                    let v = wire::decode_any(&e).ok();
+                    if v.is_none() {
+                        fabric.note_dropped_frame();
+                    }
                     fabric.frame_pool().put(e.bytes);
                     tx.send(Reply::Decoded { idx: start + i, v });
                 }
@@ -726,6 +795,7 @@ mod tests {
         let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
         let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 2);
         let mut partials: Vec<Vec<f32>> = Vec::new();
+        let mut decoded: Vec<usize> = Vec::new();
         let mut spare: Vec<Vec<f32>> = Vec::new();
         let mut rng = Pcg64::seeded(5);
         for round in 0..3 {
@@ -740,8 +810,9 @@ mod tests {
                         .collect()
                 })
                 .collect();
-            pool.decode_partials_pooled(&mut groups, d, &mut partials, &mut spare);
+            pool.decode_partials_pooled(&mut groups, d, &mut partials, &mut decoded, &mut spare);
             assert_eq!(partials.len(), 2);
+            assert_eq!(decoded, vec![2, 2]);
             assert!(partials.iter().all(|p| p.len() == d));
             assert!(groups.iter().all(|g| g.is_empty()), "round {round}");
             // recycle the partial buffers the way the driver does
@@ -750,6 +821,55 @@ mod tests {
         // every decoded frame's byte buffer was returned to the pool
         assert_eq!(fabric.frame_pool().pooled(), 3 * 4);
         assert_eq!(spare.len(), 2);
+    }
+
+    /// An undecodable frame degrades gracefully: the fused pass falls
+    /// back to frame-by-frame decode, the bad frame is dropped (and
+    /// counted in the fabric's stats), and the partial equals the sum of
+    /// the surviving frames.
+    #[test]
+    fn undecodable_frames_are_dropped_not_fatal() {
+        let d = 41;
+        let n = 3;
+        let fabric = Arc::new(Fabric::new(n + 1, LinkModel::default()));
+        let pool = WorkerPool::spawn(make_workers(n, d), fabric.clone(), 2);
+        let mut rng = Pcg64::seeded(11);
+        let mut payloads: Vec<Vec<f32>> = Vec::new();
+        let mut frames: Vec<Encoded> = Vec::new();
+        for _ in 0..n {
+            let mut p = vec![0.0f32; d];
+            rng.fill_normal(&mut p, 0.0, 1.0);
+            frames.push(crate::compress::wire::encode_scaled_sign(&p));
+            payloads.push(p);
+        }
+        // truncate the middle frame below its header: undecodable
+        frames[1].bytes.truncate(2);
+        let mut groups = vec![frames];
+        let mut partials = Vec::new();
+        let mut decoded = Vec::new();
+        let mut spare = Vec::new();
+        pool.decode_partials_pooled(&mut groups, d, &mut partials, &mut decoded, &mut spare);
+        assert_eq!(decoded, vec![2]);
+        let mut want = vec![0.0f32; d];
+        for i in [0usize, 2] {
+            crate::compress::wire::decode_any_add(
+                &crate::compress::wire::encode_scaled_sign(&payloads[i]),
+                &mut want,
+            )
+            .unwrap();
+        }
+        assert_eq!(partials[0], want);
+        assert_eq!(fabric.with_stats(|s| s.dropped()), 1);
+
+        // dense flavour: the bad frame vanishes from the result
+        let mut frames2: Vec<Encoded> = payloads
+            .iter()
+            .map(|p| crate::compress::wire::encode_scaled_sign(p))
+            .collect();
+        frames2[0].bytes.clear();
+        let decoded2 = pool.decode_dense(frames2);
+        assert_eq!(decoded2.len(), n - 1);
+        assert_eq!(fabric.with_stats(|s| s.dropped()), 2);
     }
 
     #[test]

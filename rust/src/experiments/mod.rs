@@ -6,6 +6,7 @@
 //! shrinks sizes for CI; the full settings regenerate EXPERIMENTS.md.
 
 pub mod ablation;
+pub mod byzantine;
 pub mod cifar_sim;
 pub mod comm;
 pub mod counterexamples;
@@ -75,7 +76,7 @@ impl ExpResult {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "ce1", "ce2", "ce3", "thm1", "fig2", "fig3", "fig4", "fig5", "fig7", "table2", "rem5",
-    "comm", "lemma3", "ablation", "staleness",
+    "comm", "lemma3", "ablation", "staleness", "byzantine",
 ];
 
 /// Run an experiment by id (prints the summary and writes results).
@@ -96,6 +97,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpResult> {
         "lemma3" => error_bound::lemma3(ctx),
         "ablation" => ablation::ablation(ctx),
         "staleness" => staleness::staleness(ctx),
+        "byzantine" => byzantine::byzantine(ctx),
         other => bail!("unknown experiment '{other}'; known: {}", ALL.join(" ")),
     };
     let result = result?;

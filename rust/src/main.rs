@@ -11,7 +11,7 @@ use ef_sgd::data::tokens::MarkovCorpus;
 use ef_sgd::experiments::{self, ExpContext};
 use ef_sgd::metrics::sparkline;
 use ef_sgd::model::toy::SparseNoiseQuadratic;
-use ef_sgd::net::{LinkModel, StragglerModel, StragglerSchedule};
+use ef_sgd::net::{AdversarySchedule, LinkModel, StragglerModel, StragglerSchedule};
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
 use std::path::{Path, PathBuf};
@@ -175,6 +175,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(m) = args.opt("straggler") {
         cfg.straggler = m.to_string();
     }
+    if let Some(a) = args.opt("adversary") {
+        cfg.adversary = a.to_string();
+    }
+    if let Some(a) = args.opt("aggregation") {
+        cfg.aggregation = a.to_string();
+    }
     if let Some(c) = args.opt_f64("compute-ms") {
         cfg.compute_ms = c;
     }
@@ -259,6 +265,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let straggler_model = StragglerModel::parse(&cfg.straggler)
         .ok_or_else(|| anyhow!("bad straggler spec '{}'", cfg.straggler))?;
+    let adversary = AdversarySchedule::parse_spec(&cfg.adversary, cfg.seed)
+        .ok_or_else(|| anyhow!("bad adversary spec '{}'", cfg.adversary))?;
+    if adversary.is_active() {
+        log::info!(
+            "adversary: {}:{} — {} of {} workers Byzantine",
+            adversary.model.name(),
+            adversary.fraction,
+            adversary.num_adversaries(cfg.workers),
+            cfg.workers
+        );
+    }
     let link = LinkModel::preset(&cfg.link)
         .ok_or_else(|| anyhow!("unknown link preset '{}'", cfg.link))?;
     let dcfg = DriverConfig {
@@ -270,6 +287,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         weight_decay: cfg.weight_decay as f32,
         link,
         straggler: StragglerSchedule::new(cfg.compute_ms * 1e-3, straggler_model, cfg.seed),
+        adversary,
         threads: cfg.threads.max(1),
         shards: cfg.shards.max(1),
         log_every: cfg.log_every.max(1),

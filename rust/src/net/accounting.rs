@@ -29,6 +29,10 @@ pub struct TrafficStats {
     pub total_bits: u64,
     /// Total simulated communication time if all transfers were serial.
     pub serial_time_s: f64,
+    /// Frames the leader could not decode (truncated/garbage payloads,
+    /// mis-routed shard tags) and excluded from aggregation instead of
+    /// aborting on. Nonzero only under adversarial or corrupted traffic.
+    pub dropped_frames: u64,
 }
 
 impl TrafficStats {
@@ -126,6 +130,16 @@ impl TrafficStats {
         self.node_time_s.values().cloned().fold(0.0, f64::max)
     }
 
+    /// Count one undecodable (dropped) frame.
+    pub fn record_dropped(&mut self) {
+        self.dropped_frames += 1;
+    }
+
+    /// Frames dropped as undecodable so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_frames
+    }
+
     pub fn summary(&self) -> String {
         let mut out = format!(
             "total {:.3} Mbit over {} links; critical path {:.3} ms\n",
@@ -139,6 +153,12 @@ impl TrafficStats {
                 kind.name(),
                 *bits as f64 / 1e6,
                 self.msg_count.get(kind).unwrap_or(&0)
+            ));
+        }
+        if self.dropped_frames > 0 {
+            out.push_str(&format!(
+                "  {} frames dropped as undecodable\n",
+                self.dropped_frames
             ));
         }
         out
@@ -194,11 +214,16 @@ mod tests {
     fn reset_clears() {
         let mut t = TrafficStats::default();
         t.record(0, 1, MessageKind::Control, None, 10, 0.1, 0.1);
+        t.record_dropped();
+        assert_eq!(t.dropped(), 1);
+        assert!(t.summary().contains("dropped as undecodable"));
         t.reset();
         assert_eq!(t.total_bits, 0);
         assert!(t.per_link.is_empty());
         assert!(t.sim_time_per_kind.is_empty());
         assert!(t.per_shard.is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(!t.summary().contains("dropped"));
     }
 
     #[test]

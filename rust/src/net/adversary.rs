@@ -1,0 +1,479 @@
+//! Adversarial (Byzantine) worker models: what a hostile worker puts on
+//! the wire instead of its honest gradient frame.
+//!
+//! Ghosh et al. 2019 show the paper's error-feedback mechanism composes
+//! with Byzantine-robust aggregation — the "millions of untrusted
+//! clients" regime. These models live next to [`super::straggler`] and
+//! follow the same determinism contract: which workers are Byzantine is
+//! a pure function of `(seed, worker, n)`, and what a Byzantine worker
+//! sends in a round is a pure function of `(seed, worker, round)` — one
+//! independent [`Pcg64`] stream per cell, never call order — so any
+//! `(shards, threads)` run of an adversarial schedule stays
+//! bit-deterministic.
+//!
+//! Four models cover the Byzantine literature:
+//!
+//! * `signflip:F` — negate the frame's scale/norm field (dense/sparse:
+//!   every value), so the worker pushes the exact opposite of its honest
+//!   update. The classic sign-flip attack.
+//! * `norminflate:F[:X]` — multiply the frame's norm/scale field by X
+//!   (default 100): an honest *direction* at a hostile magnitude, the
+//!   attack norm-thresholding exists for.
+//! * `collude:F` — every Byzantine worker replaces its payload with the
+//!   identical fixed-vector frame (same format, same shard slice), the
+//!   coordinated attack that defeats naive outlier removal at high F.
+//! * `randombytes:F` — overwrite the payload with arbitrary bytes from
+//!   the cell RNG: garbage on the wire. Exercises the hardened decoders
+//!   ([`crate::compress::wire::DecodeError`]); the leader must drop, not
+//!   crash.
+//!
+//! `F` is the Byzantine fraction: `round(F · n)` of the `n` workers are
+//! Byzantine, chosen by a seeded rank so membership is unbiased in the
+//! worker id but still exact in count.
+
+use crate::compress::wire::{self, Encoded, Format};
+use crate::util::Pcg64;
+
+/// Magnitude of every coordinate of the colluders' fixed vector.
+const COLLUDE_MAG: f32 = 1.0;
+
+/// What a Byzantine worker does to its frames (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdversaryModel {
+    /// No adversary (the honest engine, byte-identical to the pre-
+    /// adversary wire path).
+    None,
+    SignFlip,
+    NormInflate { factor: f64 },
+    Collude,
+    RandomBytes,
+}
+
+impl AdversaryModel {
+    /// Parse a CLI spec `MODEL:FRACTION` into (model, fraction):
+    /// `none`, `signflip:F`, `norminflate:F[:FACTOR]`, `collude:F`,
+    /// `randombytes:F`.
+    pub fn parse(s: &str) -> Option<(AdversaryModel, f64)> {
+        let mut parts = s.split(':');
+        let name = parts.next()?;
+        if name == "none" {
+            if parts.next().is_some() {
+                return None;
+            }
+            return Some((AdversaryModel::None, 0.0));
+        }
+        let fraction: f64 = parts.next()?.parse().ok()?;
+        if !(0.0..=1.0).contains(&fraction) {
+            return None;
+        }
+        let model = match name {
+            "signflip" => AdversaryModel::SignFlip,
+            "norminflate" => {
+                let factor = match parts.next() {
+                    Some(p) => p.parse().ok()?,
+                    None => 100.0,
+                };
+                AdversaryModel::NormInflate { factor }
+            }
+            "collude" => AdversaryModel::Collude,
+            "randombytes" => AdversaryModel::RandomBytes,
+            _ => return None,
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some((model, fraction))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdversaryModel::None => "none",
+            AdversaryModel::SignFlip => "signflip",
+            AdversaryModel::NormInflate { .. } => "norminflate",
+            AdversaryModel::Collude => "collude",
+            AdversaryModel::RandomBytes => "randombytes",
+        }
+    }
+}
+
+/// A seeded adversary model with its Byzantine fraction: the engine's
+/// per-(worker, round) corruption oracle.
+#[derive(Clone, Debug)]
+pub struct AdversarySchedule {
+    pub model: AdversaryModel,
+    /// Fraction of the `n` workers that are Byzantine (`round(F · n)`).
+    pub fraction: f64,
+    pub seed: u64,
+}
+
+impl AdversarySchedule {
+    pub fn new(model: AdversaryModel, fraction: f64, seed: u64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&fraction),
+            "adversary fraction must be in [0, 1]"
+        );
+        AdversarySchedule {
+            model,
+            fraction,
+            seed,
+        }
+    }
+
+    /// No adversaries: every frame passes through untouched.
+    pub fn none() -> Self {
+        AdversarySchedule::new(AdversaryModel::None, 0.0, 0)
+    }
+
+    /// Parse a full `MODEL:FRACTION` spec (see [`AdversaryModel::parse`]).
+    pub fn parse_spec(s: &str, seed: u64) -> Option<Self> {
+        let (model, fraction) = AdversaryModel::parse(s)?;
+        Some(AdversarySchedule::new(model, fraction, seed))
+    }
+
+    /// Whether any corruption can happen under this schedule.
+    pub fn is_active(&self) -> bool {
+        self.model != AdversaryModel::None && self.fraction > 0.0
+    }
+
+    /// How many of `n` workers are Byzantine: `round(fraction · n)`.
+    pub fn num_adversaries(&self, n: usize) -> usize {
+        if !self.is_active() {
+            return 0;
+        }
+        ((self.fraction * n as f64).round() as usize).min(n)
+    }
+
+    /// Whether `worker` (of `n`) is Byzantine. Membership is the seeded
+    /// rank of the worker's draw — a pure function of `(seed, worker, n)`,
+    /// unbiased in the id, exact in count, independent of call order.
+    pub fn is_adversary(&self, worker: usize, n: usize) -> bool {
+        let k = self.num_adversaries(n);
+        if k == 0 || worker >= n {
+            return false;
+        }
+        if k >= n {
+            return true;
+        }
+        let mine = (self.member_draw(worker), worker);
+        let rank = (0..n).filter(|&w| (self.member_draw(w), w) < mine).count();
+        rank < k
+    }
+
+    /// Corrupt the frames `worker` is about to push in `round` (one per
+    /// shard, in shard order), in place. A no-op for honest workers and
+    /// under `none` — the bytes are untouched, which is what keeps
+    /// `--adversary none` byte-identical to the pre-adversary engine.
+    pub fn corrupt_frames(&self, worker: usize, round: u64, n: usize, frames: &mut [Encoded]) {
+        if !self.is_active() || !self.is_adversary(worker, n) {
+            return;
+        }
+        match self.model {
+            AdversaryModel::None => {}
+            AdversaryModel::SignFlip => {
+                for e in frames.iter_mut() {
+                    flip_frame_sign(e);
+                }
+            }
+            AdversaryModel::NormInflate { factor } => {
+                for e in frames.iter_mut() {
+                    inflate_frame(e, factor as f32);
+                }
+            }
+            AdversaryModel::Collude => {
+                for e in frames.iter_mut() {
+                    collude_frame(e);
+                }
+            }
+            AdversaryModel::RandomBytes => {
+                // one stream per (worker, round) cell; the frames are
+                // scribbled in shard order, so the bytes are a pure
+                // function of the cell, never of scheduling
+                let mut rng = self.cell_rng(worker, round);
+                for e in frames.iter_mut() {
+                    for b in e.bytes.iter_mut() {
+                        *b = rng.next_u32() as u8;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Membership draw for one worker (round-independent).
+    fn member_draw(&self, worker: usize) -> u64 {
+        let mix = (worker as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(self.seed ^ 0xbad0_cab1_e5ca_1ab5, mix).next_u64()
+    }
+
+    fn cell_rng(&self, worker: usize, round: u64) -> Pcg64 {
+        // one independent stream per (worker, round) cell, salted apart
+        // from the straggler schedule's cells
+        let mix = (worker as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(
+            self.seed ^ 0xbad0_cab1_e5ca_1ab5 ^ round.wrapping_mul(0xd1b5_4a32_d192_ed03),
+            mix ^ round,
+        )
+    }
+}
+
+impl Default for AdversarySchedule {
+    fn default() -> Self {
+        AdversarySchedule::none()
+    }
+}
+
+/// Toggle the IEEE-754 sign bit of the little-endian f32 at `off`.
+fn flip_f32_sign_at(bytes: &mut [u8], off: usize) {
+    if let Some(b) = bytes.get_mut(off + 3) {
+        *b ^= 0x80;
+    }
+}
+
+/// Multiply the little-endian f32 at `off` by `factor`.
+fn mul_f32_at(bytes: &mut [u8], off: usize, factor: f32) {
+    if off + 4 > bytes.len() {
+        return;
+    }
+    let v = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+    bytes[off..off + 4].copy_from_slice(&(v * factor).to_le_bytes());
+}
+
+/// Byte offset of every sparse-pair value field: count u32, then
+/// (u32 idx, f32 val) pairs — all byte-aligned.
+fn sparse_value_offsets(bytes: &[u8]) -> impl Iterator<Item = usize> {
+    let count = if bytes.len() >= 4 {
+        u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize
+    } else {
+        0
+    };
+    (0..count).map(|p| 8 + 8 * p)
+}
+
+/// Sign-flip: negate the frame's scale/norm field (scaled-sign, ternary,
+/// QSGD all lead with one f32), or every value (dense, sparse). The
+/// decoded update is exactly the negation of the honest one.
+fn flip_frame_sign(e: &mut Encoded) {
+    match e.format {
+        Format::DenseF32 => {
+            for c in e.bytes.chunks_exact_mut(4) {
+                c[3] ^= 0x80;
+            }
+        }
+        Format::SignScaled | Format::Ternary | Format::Qsgd => flip_f32_sign_at(&mut e.bytes, 0),
+        Format::SparseIdxVal => {
+            for off in sparse_value_offsets(&e.bytes).collect::<Vec<_>>() {
+                flip_f32_sign_at(&mut e.bytes, off);
+            }
+        }
+    }
+}
+
+/// Norm-inflation: scale the frame's norm/scale field (or every value)
+/// by `factor` — honest direction, hostile magnitude.
+fn inflate_frame(e: &mut Encoded, factor: f32) {
+    match e.format {
+        Format::DenseF32 => {
+            let n = e.bytes.len() / 4;
+            for i in 0..n {
+                mul_f32_at(&mut e.bytes, 4 * i, factor);
+            }
+        }
+        Format::SignScaled | Format::Ternary | Format::Qsgd => mul_f32_at(&mut e.bytes, 0, factor),
+        Format::SparseIdxVal => {
+            for off in sparse_value_offsets(&e.bytes).collect::<Vec<_>>() {
+                mul_f32_at(&mut e.bytes, off, factor);
+            }
+        }
+    }
+}
+
+/// Collusion: re-encode the frame as the fixed all-[`COLLUDE_MAG`] vector
+/// in the frame's own format and length, preserving the shard tag (the
+/// routing header is in-process and stays honest — only the payload
+/// lies). Every colluding worker pushes the identical frame.
+fn collude_frame(e: &mut Encoded) {
+    let tag = e.shard.take();
+    let d = e.d;
+    let v = vec![COLLUDE_MAG; d];
+    match e.format {
+        Format::DenseF32 => wire::encode_dense_into(&v, e),
+        Format::SignScaled => wire::encode_scaled_sign_into(&v, e),
+        Format::SparseIdxVal => wire::encode_sparse_into(&v, e),
+        Format::Ternary => wire::encode_ternary_into(&v, e),
+        Format::Qsgd => {
+            // keep the frame's own level count (byte 4, byte-aligned
+            // after the f32 norm; clamp a corrupt zero to 1) and quote
+            // the coordinate magnitude as the norm so every level
+            // saturates and the frame decodes to the vector exactly
+            let s = e.bytes.get(4).copied().filter(|&s| s > 0).unwrap_or(4);
+            wire::encode_qsgd_into(&v, COLLUDE_MAG, u32::from(s), e);
+        }
+    }
+    if let Some(t) = tag {
+        e.set_shard(t.shard, t.start);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        type M = AdversaryModel;
+        let p = AdversaryModel::parse;
+        assert_eq!(p("none"), Some((M::None, 0.0)));
+        assert_eq!(p("signflip:0.25"), Some((M::SignFlip, 0.25)));
+        assert_eq!(p("norminflate:0.125"), Some((M::NormInflate { factor: 100.0 }, 0.125)));
+        assert_eq!(p("norminflate:0.5:8"), Some((M::NormInflate { factor: 8.0 }, 0.5)));
+        assert_eq!(p("collude:0.375"), Some((M::Collude, 0.375)));
+        assert_eq!(p("randombytes:1.0"), Some((M::RandomBytes, 1.0)));
+        // missing fraction, out-of-range fraction, trailing junk, unknown
+        assert_eq!(p("signflip"), None);
+        assert_eq!(p("signflip:1.5"), None);
+        assert_eq!(p("signflip:0.25:9"), None);
+        assert_eq!(p("none:0.5"), None);
+        assert_eq!(p("bogus:0.5"), None);
+    }
+
+    #[test]
+    fn membership_is_exact_deterministic_and_order_free() {
+        let s = AdversarySchedule::new(AdversaryModel::SignFlip, 0.25, 7);
+        let n = 8;
+        assert_eq!(s.num_adversaries(n), 2);
+        let members: Vec<usize> = (0..n).filter(|&w| s.is_adversary(w, n)).collect();
+        assert_eq!(members.len(), 2);
+        // pure per-worker: re-query in any order, same answer
+        for &w in members.iter().rev() {
+            assert!(s.is_adversary(w, n));
+        }
+        // a different seed picks a (generally) different set, same count
+        let s2 = AdversarySchedule::new(AdversaryModel::SignFlip, 0.25, 8);
+        assert_eq!((0..n).filter(|&w| s2.is_adversary(w, n)).count(), 2);
+        // inactive schedules have no members
+        assert!(!AdversarySchedule::none().is_adversary(0, n));
+        let zero = AdversarySchedule::new(AdversaryModel::SignFlip, 0.0, 7);
+        assert!((0..n).all(|w| !zero.is_adversary(w, n)));
+    }
+
+    fn frame_of(format: Format) -> Encoded {
+        let mut rng = Pcg64::seeded(3);
+        let d = 67;
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.0, 1.0);
+        match format {
+            Format::DenseF32 => wire::encode_dense(&p),
+            Format::SignScaled => wire::encode_scaled_sign(&p),
+            Format::SparseIdxVal => {
+                let mut v = vec![0.0f32; d];
+                for i in (0..d).step_by(5) {
+                    v[i] = p[i];
+                }
+                wire::encode_sparse(&v)
+            }
+            Format::Ternary => {
+                let t: Vec<f32> = p
+                    .iter()
+                    .map(|x| {
+                        if *x > 0.3 {
+                            1.0
+                        } else if *x < -0.3 {
+                            -1.0
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                wire::encode_ternary(&t)
+            }
+            Format::Qsgd => {
+                let norm = crate::tensor::norm2(&p) as f32;
+                let q: Vec<f32> = p
+                    .iter()
+                    .map(|x| {
+                        let l = (x.abs() / norm * 4.0).round().min(4.0);
+                        x.signum() * norm * l / 4.0
+                    })
+                    .collect();
+                wire::encode_qsgd(&q, norm, 4)
+            }
+        }
+    }
+
+    #[test]
+    fn signflip_negates_the_decoded_update() {
+        for format in [
+            Format::DenseF32,
+            Format::SignScaled,
+            Format::SparseIdxVal,
+            Format::Ternary,
+            Format::Qsgd,
+        ] {
+            let honest = frame_of(format);
+            let want = wire::decode_any(&honest).unwrap();
+            let mut evil = honest.clone();
+            flip_frame_sign(&mut evil);
+            let got = wire::decode_any(&evil).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(*g, -*w, "{format:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn norminflate_scales_the_decoded_update() {
+        for format in [
+            Format::DenseF32,
+            Format::SignScaled,
+            Format::SparseIdxVal,
+            Format::Ternary,
+        ] {
+            let honest = frame_of(format);
+            let want = wire::decode_any(&honest).unwrap();
+            let mut evil = honest.clone();
+            inflate_frame(&mut evil, 4.0);
+            let got = wire::decode_any(&evil).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - 4.0 * w).abs() <= 4.0 * w.abs() * 1e-6, "{format:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn colluders_send_identical_decodable_frames() {
+        let mut a = frame_of(Format::SignScaled).with_shard(2, 64);
+        let mut b = frame_of(Format::Qsgd);
+        // mutate b so the honest frames differ, then collude both
+        b.bytes[6] ^= 0xff;
+        collude_frame(&mut a);
+        let mut a2 = frame_of(Format::SignScaled).with_shard(2, 64);
+        collude_frame(&mut a2);
+        assert_eq!(a.bytes, a2.bytes, "collusion is frame-independent");
+        assert_eq!(a.shard, a2.shard, "shard tag preserved");
+        collude_frame(&mut b);
+        let dec = wire::decode_any(&b).unwrap();
+        assert_eq!(dec.len(), b.d);
+        for x in &dec {
+            assert!((x - COLLUDE_MAG).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn corruption_is_per_cell_deterministic_and_none_is_identity() {
+        let s = AdversarySchedule::new(AdversaryModel::RandomBytes, 1.0, 5);
+        let n = 4;
+        let mut f1 = vec![frame_of(Format::SignScaled), frame_of(Format::Ternary)];
+        let mut f2 = f1.clone();
+        s.corrupt_frames(1, 9, n, &mut f1);
+        // interleave another cell, then repeat the first — same bytes
+        let mut other = vec![frame_of(Format::SignScaled)];
+        s.corrupt_frames(0, 3, n, &mut other);
+        s.corrupt_frames(1, 9, n, &mut f2);
+        assert_eq!(f1[0].bytes, f2[0].bytes);
+        assert_eq!(f1[1].bytes, f2[1].bytes);
+        // none / honest workers leave bytes untouched
+        let honest = frame_of(Format::SignScaled);
+        let mut passthrough = vec![honest.clone()];
+        AdversarySchedule::none().corrupt_frames(0, 0, n, &mut passthrough);
+        assert_eq!(passthrough[0].bytes, honest.bytes);
+    }
+}

@@ -269,6 +269,14 @@ impl Fabric {
         self.stats.lock().unwrap().reset();
         self.total_bits.store(0, Ordering::Relaxed);
     }
+
+    /// Count a frame the leader dropped as undecodable (truncated or
+    /// garbage payload, mis-routed shard tag). Rare by construction —
+    /// only adversarial/corrupted traffic takes this path — so a stats
+    /// lock here never contends on honest rounds.
+    pub fn note_dropped_frame(&self) {
+        self.stats.lock().unwrap().record_dropped();
+    }
 }
 
 #[cfg(test)]

@@ -15,9 +15,12 @@
 //! message's arrival as `sender_time + transfer_time`, so the async
 //! coordinator can consume link and compute time through a deterministic
 //! discrete-event queue ([`simclock::EventQueue`]). Worker compute cost
-//! comes from the seeded [`straggler::StragglerSchedule`] models.
+//! comes from the seeded [`straggler::StragglerSchedule`] models, and
+//! hostile traffic from the seeded [`adversary::AdversarySchedule`]
+//! Byzantine worker models.
 
 pub mod accounting;
+pub mod adversary;
 pub mod fabric;
 pub mod link;
 pub mod message;
@@ -25,6 +28,7 @@ pub mod simclock;
 pub mod straggler;
 
 pub use accounting::TrafficStats;
+pub use adversary::{AdversaryModel, AdversarySchedule};
 pub use fabric::{Fabric, FramePool};
 pub use link::LinkModel;
 pub use message::{Message, MessageKind, Payload};

@@ -1,0 +1,139 @@
+//! Integration: Byzantine-robust aggregation end to end — bit-determinism
+//! of adversarial runs over (shards × threads), the `--adversary none` /
+//! trim-0 byte-identity contract against the plain-mean engine, and
+//! graceful degradation (drop + count, never panic) when an adversary
+//! scribbles undecodable bytes over the wire.
+
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::{Aggregation, LrSchedule};
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::AdversarySchedule;
+use ef_sgd::util::Pcg64;
+
+const D: usize = 97; // ragged shard split on purpose
+const N: usize = 8; // signflip:0.25 -> exactly 2 Byzantine workers
+const STEPS: usize = 10;
+const SEED: u64 = 40;
+
+fn quadratic_workers(kind: CompressorKind) -> Vec<Worker> {
+    (0..N)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(D, 0.0),
+                    Pcg64::new(SEED, 100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                kind,
+                4,
+                4,
+                Pcg64::new(SEED + 1, id as u64),
+            )
+        })
+        .collect()
+}
+
+struct RunOut {
+    theta: Vec<f32>,
+    errors: Vec<Vec<f32>>,
+    corrected: Vec<Vec<f32>>,
+    total_bits: u64,
+    dropped: u64,
+}
+
+fn run(
+    kind: CompressorKind,
+    aggregation: Aggregation,
+    adversary: &str,
+    shards: usize,
+    threads: usize,
+) -> RunOut {
+    let cfg = DriverConfig {
+        steps: STEPS,
+        schedule: LrSchedule::constant(0.05),
+        aggregation,
+        adversary: AdversarySchedule::parse_spec(adversary, SEED).expect("valid spec"),
+        shards,
+        threads,
+        ..Default::default()
+    };
+    let mut driver = TrainDriver::new(cfg, quadratic_workers(kind), vec![1.0f32; D]);
+    let mut rec = Recorder::new();
+    for _ in 0..STEPS {
+        driver.round(&mut rec);
+    }
+    let snap = driver.snapshot();
+    let t = driver.traffic();
+    RunOut {
+        theta: snap.theta,
+        errors: snap.worker_errors,
+        corrected: snap.worker_corrected,
+        total_bits: t.total_bits,
+        dropped: t.dropped(),
+    }
+}
+
+/// Adversarial runs are bit-deterministic: with 25% sign-flippers live on
+/// the wire, the trained parameters, every EF tensor, and the exact wire
+/// bits are identical across thread counts for S ∈ {1, 4}, for both
+/// fixed-length (scaled-sign) and variable-length (QSGD) frames, under
+/// both robust combine rules.
+#[test]
+fn adversarial_robust_runs_are_bit_deterministic() {
+    for kind in [CompressorKind::ScaledSign, CompressorKind::Qsgd] {
+        for agg in [Aggregation::Median, Aggregation::TrimmedMean(1)] {
+            for shards in [1usize, 4] {
+                let a = run(kind, agg, "signflip:0.25", shards, 1);
+                let b = run(kind, agg, "signflip:0.25", shards, 4);
+                let tag = format!("{kind:?}/{agg:?} S={shards}");
+                assert_eq!(a.theta, b.theta, "{tag}: theta differs across threads");
+                assert_eq!(a.errors, b.errors, "{tag}: residuals differ");
+                assert_eq!(a.corrected, b.corrected, "{tag}: corrected differ");
+                assert_eq!(a.total_bits, b.total_bits, "{tag}: wire bits differ");
+                // sign-flipped frames stay decodable — nothing may drop
+                assert_eq!(a.dropped, 0, "{tag}: spurious frame drops");
+            }
+        }
+    }
+}
+
+/// The no-adversary contract: `--adversary none`, a parsed `signflip:0`
+/// (zero Byzantine workers), and `trimmed:0` (the robust kernel with an
+/// empty trim budget) all replay the plain-mean engine byte for byte.
+#[test]
+fn inactive_adversary_and_trim_zero_replay_the_mean_engine() {
+    for kind in [CompressorKind::ScaledSign, CompressorKind::Qsgd] {
+        let base = run(kind, Aggregation::Mean, "none", 1, 1);
+        let zero_frac = run(kind, Aggregation::Mean, "signflip:0", 1, 1);
+        let trim0 = run(kind, Aggregation::TrimmedMean(0), "none", 1, 1);
+        for (name, other) in [("signflip:0", &zero_frac), ("trimmed:0", &trim0)] {
+            assert_eq!(base.theta, other.theta, "{kind:?}/{name}: theta differs");
+            assert_eq!(base.errors, other.errors, "{kind:?}/{name}: residuals differ");
+            assert_eq!(base.corrected, other.corrected, "{kind:?}/{name}: corrected differ");
+            assert_eq!(base.total_bits, other.total_bits, "{kind:?}/{name}: wire bits differ");
+        }
+        assert_eq!(base.dropped, 0);
+    }
+}
+
+/// Random-bytes scribbling over variable-length QSGD frames produces
+/// undecodable payloads: the hardened wire path drops and counts them
+/// (no panic), the surviving honest frames still train, and the final
+/// parameters stay finite.
+#[test]
+fn scribbled_frames_are_dropped_counted_and_survivable() {
+    let out = run(CompressorKind::Qsgd, Aggregation::Mean, "randombytes:0.25", 1, 2);
+    assert!(out.dropped > 0, "scribbled QSGD frames should be undecodable and counted");
+    assert!(
+        out.theta.iter().all(|x| x.is_finite()),
+        "surviving honest frames must keep theta finite"
+    );
+    // the drop path is deterministic too
+    let again = run(CompressorKind::Qsgd, Aggregation::Mean, "randombytes:0.25", 1, 4);
+    assert_eq!(out.theta, again.theta);
+    assert_eq!(out.dropped, again.dropped);
+}
