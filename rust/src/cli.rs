@@ -101,6 +101,8 @@ fn takes_value(key: &str) -> bool {
             | "shards"
             | "aggregation"
             | "adversary"
+            | "trace"
+            | "metrics-out"
     )
 }
 
@@ -153,6 +155,18 @@ ROBUSTNESS (train):
                          median | trimmed[:K] | norm_threshold
                          (default mean; the robust rules tolerate
                          Byzantine frames, see docs/ROBUSTNESS.md)
+
+OBSERVABILITY (train):
+    --trace <file>       Record the run's flight-recorder events (sim-time
+                         stamped, one track per worker / shard leader /
+                         driver) and export Chrome trace-event JSON; open
+                         in Perfetto or chrome://tracing. Also prints a
+                         compact text timeline. See docs/OBSERVABILITY.md
+    --metrics-out <file> Write the end-of-run RunReport JSON (traffic,
+                         staleness, leader profile + the metrics registry:
+                         frame bits by format, decode latency, staleness,
+                         drops, EF residual norms); Prometheus text lands
+                         alongside with a .prom extension
 ";
 
 #[cfg(test)]

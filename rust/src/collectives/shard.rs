@@ -26,6 +26,7 @@
 
 use crate::compress::wire::Encoded;
 use crate::net::{Fabric, Message, MessageKind, Payload};
+use crate::obs::trace::{DropReason, EventKind};
 use std::ops::Range;
 use std::sync::Arc;
 
@@ -381,8 +382,28 @@ impl ShardedParameterServer {
                 if let Some(tag) = e.shard {
                     if tag.shard as usize != s {
                         fabric.note_dropped_frame();
+                        if let Some(tr) = fabric.trace() {
+                            // leader-track event; the caller (driver thread)
+                            // is this ring's only writer
+                            tr.record(
+                                self.leaders[s],
+                                arrival,
+                                round,
+                                EventKind::FrameDropped(DropReason::ShardMismatch),
+                                msg.src as u64,
+                            );
+                        }
                         continue;
                     }
+                }
+                if let Some(tr) = fabric.trace() {
+                    tr.record(
+                        self.leaders[s],
+                        arrival,
+                        round,
+                        EventKind::FrameArrived,
+                        msg.src as u64,
+                    );
                 }
                 frames.push(e);
                 latest = latest.max(arrival);

@@ -286,6 +286,42 @@ pub enum Format {
     Qsgd,
 }
 
+impl Format {
+    /// Number of wire formats (fixed metric-slot fan-out in `obs`).
+    pub const COUNT: usize = 5;
+
+    /// Every format, indexed by [`Format::index`].
+    pub const ALL: [Format; Format::COUNT] = [
+        Format::DenseF32,
+        Format::SignScaled,
+        Format::SparseIdxVal,
+        Format::Ternary,
+        Format::Qsgd,
+    ];
+
+    /// Dense per-format slot index, stable across runs.
+    pub fn index(self) -> usize {
+        match self {
+            Format::DenseF32 => 0,
+            Format::SignScaled => 1,
+            Format::SparseIdxVal => 2,
+            Format::Ternary => 3,
+            Format::Qsgd => 4,
+        }
+    }
+
+    /// Stable snake_case name used in metric labels and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::DenseF32 => "dense_f32",
+            Format::SignScaled => "sign_scaled",
+            Format::SparseIdxVal => "sparse_idx_val",
+            Format::Ternary => "ternary",
+            Format::Qsgd => "qsgd",
+        }
+    }
+}
+
 /// Typed decode failure. Frame bytes are untrusted input (a Byzantine
 /// worker or a corrupted link can put anything on the wire), so every
 /// `decode_*` path returns this instead of panicking; the drivers count

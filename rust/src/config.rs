@@ -330,6 +330,9 @@ pub struct TrainConfig {
     pub compute_ms: f64,
     /// Link preset for the fabric (`10gbe`, `1gbe`, `ib`, `wan`).
     pub link: String,
+    /// Flight-recorder ring capacity per node when `--trace` is given
+    /// (events kept per track; the ring overwrites its oldest entries).
+    pub trace_ring: usize,
 }
 
 impl Default for TrainConfig {
@@ -360,6 +363,7 @@ impl Default for TrainConfig {
             adversary: "none".into(),
             compute_ms: 1.0,
             link: "10gbe".into(),
+            trace_ring: crate::obs::trace::DEFAULT_RING_CAPACITY,
         }
     }
 }
@@ -414,6 +418,15 @@ impl TrainConfig {
                 "0 (must be >= 1)".into(),
             ));
         }
+        // trace_ring = 0 would mean a zero-capacity flight recorder; tracing
+        // is switched off by omitting --trace, so a zero here is a typo
+        let trace_ring = m.usize_or("training.trace_ring", d.trace_ring);
+        if trace_ring == 0 {
+            return Err(ConfigError::BadValue(
+                "training.trace_ring".into(),
+                "0 (must be >= 1; omit --trace to disable tracing)".into(),
+            ));
+        }
         Ok(TrainConfig {
             model: m.str_or("model.name", &d.model),
             workers: m.usize_or("training.workers", d.workers),
@@ -440,6 +453,7 @@ impl TrainConfig {
             adversary,
             compute_ms: m.f64_or("training.compute_ms", d.compute_ms),
             link,
+            trace_ring,
         })
     }
 }
@@ -572,6 +586,22 @@ artifacts = "artifacts"
         m.set_kv("training.shards=4").unwrap();
         assert_eq!(TrainConfig::from_map(&m).unwrap().shards, 4);
         m.set_kv("training.shards=0").unwrap();
+        assert!(matches!(
+            TrainConfig::from_map(&m),
+            Err(ConfigError::BadValue(..))
+        ));
+    }
+
+    #[test]
+    fn trace_ring_parses_and_validates() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(
+            TrainConfig::from_map(&m).unwrap().trace_ring,
+            crate::obs::trace::DEFAULT_RING_CAPACITY
+        );
+        m.set_kv("training.trace_ring=128").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().trace_ring, 128);
+        m.set_kv("training.trace_ring=0").unwrap();
         assert!(matches!(
             TrainConfig::from_map(&m),
             Err(ConfigError::BadValue(..))

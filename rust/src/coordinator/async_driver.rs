@@ -52,6 +52,8 @@ use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
 use crate::net::{EventQueue, Fabric, Payload, SimClock, TrafficStats};
+use crate::obs::metrics::RunMetrics;
+use crate::obs::trace::{DropReason, EventKind, TraceRecorder};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -91,6 +93,13 @@ pub struct AsyncTrainDriver {
     /// varies with the thread count).
     leader_time_s: f64,
     staleness: StalenessStats,
+    /// Flight recorder (also reachable by the pool via the fabric).
+    trace: Option<Arc<TraceRecorder>>,
+    /// Metrics registry shared with the caller.
+    metrics: Option<Arc<RunMetrics>>,
+    /// Last sighting of the fabric's dropped-frame counter (decode drops
+    /// happen on pool threads, surfaced as per-fold deltas here).
+    last_dropped: u64,
     queue: EventQueue<Inflight>,
     pending: Vec<Inflight>,
     /// Per worker: leader round whose params it is computing on.
@@ -129,7 +138,7 @@ impl AsyncTrainDriver {
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
         let quorum = if quorum == 0 { n } else { quorum.min(n) };
-        let (sim_clock, fabric, ps) = super::driver::build_topology(&cfg, &mut workers);
+        let (sim_clock, fabric, ps, trace) = super::driver::build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn_with_adversary(
             workers,
             fabric.clone(),
@@ -137,6 +146,7 @@ impl AsyncTrainDriver {
             cfg.adversary.clone(),
         );
         let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
+        let metrics = cfg.metrics.clone();
         AsyncTrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
@@ -156,6 +166,9 @@ impl AsyncTrainDriver {
             profile: LeaderProfile::default(),
             leader_time_s: 0.0,
             staleness: StalenessStats::default(),
+            trace,
+            metrics,
+            last_dropped: 0,
             queue: EventQueue::new(),
             pending: Vec::new(),
             worker_round: vec![0; n],
@@ -220,6 +233,13 @@ impl AsyncTrainDriver {
         debug_assert!(!ids.is_empty());
         let r = self.round;
         let lr = self.cfg.schedule.lr(r as usize) as f32;
+        if let Some(tr) = &self.trace {
+            let t = self.sim_time;
+            tr.record(tr.driver_track(), t, r, EventKind::RoundStart, ids.len() as u64);
+            for s in 0..self.ps.num_shards() {
+                tr.record(tr.leader_track(s), t, r, EventKind::BroadcastSent, s as u64);
+            }
+        }
         for &l in &self.ps.leaders {
             self.sim_clock.set_node_time(l, self.sim_time);
         }
@@ -284,6 +304,18 @@ impl AsyncTrainDriver {
 
     fn arrive(&mut self, ev: crate::net::Event<Inflight>) {
         self.sim_time = self.sim_time.max(ev.time);
+        if let Some(tr) = &self.trace {
+            // the async leader observes arrivals on its event queue, so the
+            // driver track carries them (the sync gather stamps leader
+            // tracks instead)
+            tr.record(
+                tr.driver_track(),
+                ev.time,
+                ev.payload.round,
+                EventKind::FrameArrived,
+                ev.payload.worker as u64,
+            );
+        }
         self.in_pending[ev.payload.worker] = true;
         self.pending.push(ev.payload);
     }
@@ -307,6 +339,9 @@ impl AsyncTrainDriver {
         batch.sort_by_key(|b| b.worker);
         let m = batch.len();
         self.staleness.record_fold(m);
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), self.sim_time, step, EventKind::QuorumFold, m as u64);
+        }
         for v in self.frames_by_shard.iter_mut() {
             v.clear();
         }
@@ -322,6 +357,10 @@ impl AsyncTrainDriver {
                 "frame folded beyond the staleness bound"
             );
             self.staleness.record_frame(stale);
+            if let Some(mtr) = &self.metrics {
+                mtr.observe_staleness(stale);
+                mtr.observe_residual(b.worker, b.report.error_norm);
+            }
             mean_stale += stale as f64;
             mean_loss += b.report.loss;
             mean_err += b.report.error_norm;
@@ -337,6 +376,17 @@ impl AsyncTrainDriver {
         mean_phi /= m as f64;
         mean_stale /= m as f64;
 
+        // frame-size metrics must run before the combine drains the frames
+        if let Some(mtr) = &self.metrics {
+            for frames in &self.frames_by_shard {
+                for f in frames {
+                    mtr.observe_frame(f.format, f.bits);
+                }
+            }
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), self.sim_time, step, EventKind::DecodeStart, m as u64);
+        }
         self.cfg.aggregation.combine_frames_sharded_into(
             &mut self.frames_by_shard,
             &self.ps.plan,
@@ -349,6 +399,15 @@ impl AsyncTrainDriver {
         // never feeds the event schedule
         let critical = self.profile.record_shards(&self.scratch.shard_times);
         self.leader_time_s += critical;
+        self.note_dropped(step);
+        if let Some(mtr) = &self.metrics {
+            mtr.inc_folds();
+            mtr.observe_decode_ns((critical * 1e9) as u64);
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), self.sim_time, step, EventKind::DecodeDone, m as u64);
+            tr.record(tr.driver_track(), self.sim_time, step, EventKind::AggregateDone, 0);
+        }
         apply_update(
             self.cfg.update_rule,
             lr,
@@ -379,12 +438,42 @@ impl AsyncTrainDriver {
         }
         if self.cfg.checkpoint_every > 0 && self.round % self.cfg.checkpoint_every as u64 == 0 {
             super::driver::save_checkpoint(self.cfg.checkpoint_dir.as_deref(), &self.snapshot());
+            if let Some(tr) = &self.trace {
+                tr.record(tr.driver_track(), self.sim_time, step, EventKind::CheckpointSaved, 0);
+            }
         }
         // the folded workers pull fresh params and start their next step
         if self.round < self.cfg.steps as u64 {
             self.dispatch(&folded);
         }
         mean_loss
+    }
+
+    /// Count newly dropped frames (decode pool threads bump the fabric's
+    /// counter) into the metrics and the driver track — same single-writer
+    /// ring discipline as the sync driver's `note_dropped`.
+    fn note_dropped(&mut self, round: u64) {
+        if self.trace.is_none() && self.metrics.is_none() {
+            return;
+        }
+        let seen = self.fabric.with_stats(|s| s.dropped());
+        let delta = seen - self.last_dropped;
+        self.last_dropped = seen;
+        if delta == 0 {
+            return;
+        }
+        if let Some(mtr) = &self.metrics {
+            mtr.add_dropped(delta);
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(
+                tr.driver_track(),
+                self.sim_time,
+                round,
+                EventKind::FrameDropped(DropReason::Undecodable),
+                delta,
+            );
+        }
     }
 
     /// Advance the simulation until exactly one fold completes; returns
@@ -435,17 +524,19 @@ impl AsyncTrainDriver {
         recorder.record("final_loss", self.round, recorder.last("train_loss"));
         let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.round, bits as f64);
+        // schedule time + the leaders' measured decode cost (the "leader
+        // compute is no longer free" pricing; kept out of the event
+        // schedule for thread-count determinism)
+        let sim_time_s = self.sim_time + self.leader_time_s;
         TrainOutcome {
             theta: self.theta,
             recorder,
             traffic: self.fabric.snapshot_stats(),
             rounds: self.round,
             profile: self.profile,
-            // schedule time + the leaders' measured decode cost (the
-            // "leader compute is no longer free" pricing; kept out of the
-            // event schedule for thread-count determinism)
-            sim_time_s: self.sim_time + self.leader_time_s,
+            sim_time_s,
             staleness: self.staleness,
+            trace: self.trace,
         }
     }
 }

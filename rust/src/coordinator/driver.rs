@@ -18,6 +18,8 @@ use crate::metrics::Recorder;
 use crate::net::{
     AdversarySchedule, Fabric, LinkModel, Message, SimClock, StragglerSchedule, TrafficStats,
 };
+use crate::obs::metrics::RunMetrics;
+use crate::obs::trace::{DropReason, EventKind, TraceRecorder};
 use std::sync::Arc;
 
 /// How the leader turns the aggregate into a parameter update.
@@ -63,6 +65,13 @@ pub struct DriverConfig {
     /// Save a checkpoint every N rounds (0 = never).
     pub checkpoint_every: usize,
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Flight-recorder ring capacity per node, in events (0 = tracing off;
+    /// no recorder is built and the engine is byte-identical to the
+    /// untraced one). See [`crate::obs::trace`].
+    pub trace_capacity: usize,
+    /// Unified metrics registry shared with the caller (`None` = no metric
+    /// updates on the round path). See [`crate::obs::metrics`].
+    pub metrics: Option<Arc<RunMetrics>>,
 }
 
 impl Default for DriverConfig {
@@ -82,6 +91,8 @@ impl Default for DriverConfig {
             eval_every: 0,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            trace_capacity: 0,
+            metrics: None,
         }
     }
 }
@@ -96,12 +107,14 @@ pub struct TrainOutcome {
     pub profile: LeaderProfile,
     /// Total simulated (virtual-clock) time of the run: broadcast +
     /// compute + gather + the leaders' measured decode+aggregate critical
-    /// path per round for the sync driver; for the async driver, the
-    /// leader's final local time plus the accumulated leader decode cost
-    /// (kept out of the event schedule so it stays bit-deterministic).
+    /// path. Both drivers keep the measured leader cost out of the event
+    /// schedule (it is added only to this reported total), so the schedule
+    /// — and with it the flight-recorder trace — stays bit-deterministic.
     pub sim_time_s: f64,
     /// Bounded-staleness accounting (all-zero for synchronous runs).
     pub staleness: StalenessStats,
+    /// The flight recorder, when `DriverConfig::trace_capacity > 0`.
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 /// Apply the leader's parameter update for one aggregate. Shared verbatim
@@ -151,7 +164,12 @@ pub(crate) fn apply_update(
 pub(crate) fn build_topology(
     cfg: &DriverConfig,
     workers: &mut [Worker],
-) -> (Arc<SimClock>, Arc<Fabric>, ShardedParameterServer) {
+) -> (
+    Arc<SimClock>,
+    Arc<Fabric>,
+    ShardedParameterServer,
+    Option<Arc<TraceRecorder>>,
+) {
     let d = workers[0].dim();
     let plan = ShardPlan::new(d, cfg.shards);
     let shards = plan.num_shards();
@@ -164,9 +182,15 @@ pub(crate) fn build_topology(
     }
     let nodes = workers.len() + shards;
     let sim_clock = Arc::new(SimClock::new(nodes));
-    let fabric = Arc::new(Fabric::with_clock(nodes, cfg.link, sim_clock.clone()));
+    let trace = (cfg.trace_capacity > 0)
+        .then(|| Arc::new(TraceRecorder::new(workers.len(), shards, cfg.trace_capacity)));
+    let mut fabric = Fabric::with_clock(nodes, cfg.link, sim_clock.clone());
+    if let Some(tr) = &trace {
+        fabric.set_trace(tr.clone());
+    }
+    let fabric = Arc::new(fabric);
     let ps = ShardedParameterServer::new(&fabric, plan);
-    (sim_clock, fabric, ps)
+    (sim_clock, fabric, ps, trace)
 }
 
 /// Persist a snapshot to `dir` if checkpointing is configured (shared by
@@ -192,6 +216,14 @@ pub struct TrainDriver {
     wd_buf: Vec<f32>,
     profile: LeaderProfile,
     sim_time: f64,
+    /// Flight recorder (also reachable by the pool via the fabric).
+    trace: Option<Arc<TraceRecorder>>,
+    /// Metrics registry shared with the caller.
+    metrics: Option<Arc<RunMetrics>>,
+    /// Last sighting of the fabric's dropped-frame counter, for per-round
+    /// deltas into the trace/metrics (decode drops happen on pool threads,
+    /// which never write rings directly).
+    last_dropped: u64,
     // --- persistent round scratch (the zero-alloc steady state of
     // docs/PERF.md: after round 1 every buffer below is warm and the
     // round loop performs no heap allocation) ---
@@ -216,7 +248,7 @@ impl TrainDriver {
         let d = workers[0].dim();
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
-        let (sim_clock, fabric, ps) = build_topology(&cfg, &mut workers);
+        let (sim_clock, fabric, ps, trace) = build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn_with_adversary(
             workers,
             fabric.clone(),
@@ -224,6 +256,7 @@ impl TrainDriver {
             cfg.adversary.clone(),
         );
         let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
+        let metrics = cfg.metrics.clone();
         TrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
@@ -236,6 +269,9 @@ impl TrainDriver {
             clock: RoundClock::default(),
             profile: LeaderProfile::default(),
             sim_time: 0.0,
+            trace,
+            metrics,
+            last_dropped: 0,
             bcast: Vec::new(),
             reports: Vec::new(),
             msgs: Vec::new(),
@@ -270,9 +306,13 @@ impl TrainDriver {
     /// straggler schedule), its gradient push, and the slowest shard
     /// leader's measured decode+aggregate all happen in sequence. The
     /// leader term closes the ROADMAP "async leader compute cost" gap:
-    /// leader decode is no longer free in simulated time.
+    /// leader decode is no longer free in simulated time. The measured
+    /// term is accumulated separately (`LeaderProfile::critical_s`) and
+    /// only added here, mirroring the async driver's `leader_time_s`, so
+    /// the event schedule — and the flight-recorder trace stamped from it
+    /// — stays a pure function of the seeded models.
     pub fn sim_time_s(&self) -> f64 {
-        self.sim_time
+        self.sim_time + self.profile.critical_s
     }
 
     /// Per-worker EF states (fetched from the pool threads), by worker id.
@@ -337,6 +377,14 @@ impl TrainDriver {
         let lr = self.cfg.schedule.lr(step as usize) as f32;
         let n = self.pool.n_workers();
 
+        if let Some(tr) = &self.trace {
+            let t = self.sim_time;
+            tr.record(tr.driver_track(), t, step, EventKind::RoundStart, n as u64);
+            for s in 0..self.ps.num_shards() {
+                tr.record(tr.leader_track(s), t, step, EventKind::BroadcastSent, s as u64);
+            }
+        }
+
         // 1. broadcast parameters from every shard leader (accounted;
         // arrivals stamped from the leaders' shared virtual time — the
         // sync engine keeps all shard leaders in lock-step). The shared
@@ -383,6 +431,21 @@ impl TrainDriver {
                 .unwrap_or_else(|e| panic!("PS gather failed: {e}"));
             round_end = round_end.max(latest);
         }
+        // shard-mismatch drops were traced individually inside the gather;
+        // absorb them into the drop-counter baseline now so the
+        // post-combine delta below is undecodable-only
+        self.note_dropped(round_end, step, false);
+        // frame-size metrics must run before the combine drains the frames
+        if let Some(m) = &self.metrics {
+            for frames in &self.frames_by_shard {
+                for f in frames {
+                    m.observe_frame(f.format, f.bits);
+                }
+            }
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeStart, n as u64);
+        }
         // the synchronous barrier: every shard has every frame
         self.cfg.aggregation.combine_frames_sharded_into(
             &mut self.frames_by_shard,
@@ -394,9 +457,21 @@ impl TrainDriver {
         // leader compute is priced on the virtual clock: the shard leaders
         // decode concurrently in the simulated deployment, so the round is
         // extended by the slowest one (max over shards = the critical path
-        // the sharding shrinks)
+        // the sharding shrinks). The measured term accumulates in the
+        // profile and is added to the *reported* total only
+        // (`sim_time_s`), never to the schedule itself: the schedule — and
+        // the trace stamped from it — stays a pure function of the seeded
+        // models, byte-identical across thread counts.
         let critical = self.profile.record_shards(&self.scratch.shard_times);
-        self.sim_time = round_end + critical;
+        self.sim_time = round_end;
+        self.note_dropped(round_end, step, true);
+        if let Some(m) = &self.metrics {
+            m.inc_rounds();
+            m.observe_decode_ns((critical * 1e9) as u64);
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeDone, n as u64);
+        }
 
         apply_update(
             self.cfg.update_rule,
@@ -417,9 +492,49 @@ impl TrainDriver {
         recorder.record("phi_corrected", step, mean_phi);
         let mean_phi_g = self.reports.iter().map(|r| r.grad_density).sum::<f64>() / n as f64;
         recorder.record("phi_grad", step, mean_phi_g);
+        if let Some(m) = &self.metrics {
+            // reports are sorted by worker id; ‖e_t‖ is the Lemma-3 residual
+            for r in &self.reports {
+                m.observe_residual(r.id, r.error_norm);
+            }
+        }
+        if let Some(tr) = &self.trace {
+            tr.record(tr.driver_track(), self.sim_time, step, EventKind::AggregateDone, 0);
+        }
 
         self.clock.advance();
         mean_loss
+    }
+
+    /// Reconcile the fabric's dropped-frame counter with the last sighting:
+    /// counts the delta into the metrics and (when `as_undecodable`) records
+    /// one lumped driver-track `FrameDropped` event. Decode drops happen on
+    /// pool threads, which never write trace rings — ring writes stay
+    /// single-writer per node, so the trace stays deterministic.
+    fn note_dropped(&mut self, t: f64, round: u64, as_undecodable: bool) {
+        if self.trace.is_none() && self.metrics.is_none() {
+            return;
+        }
+        let seen = self.fabric.with_stats(|s| s.dropped());
+        let delta = seen - self.last_dropped;
+        self.last_dropped = seen;
+        if delta == 0 {
+            return;
+        }
+        if let Some(m) = &self.metrics {
+            m.add_dropped(delta);
+        }
+        if as_undecodable {
+            if let Some(tr) = &self.trace {
+                tr.record(
+                    tr.driver_track(),
+                    t,
+                    round,
+                    EventKind::FrameDropped(DropReason::Undecodable),
+                    delta,
+                );
+            }
+        }
     }
 
     /// Run the configured number of rounds.
@@ -447,19 +562,30 @@ impl TrainDriver {
             }
             if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
                 self.checkpoint();
+                if let Some(tr) = &self.trace {
+                    tr.record(
+                        tr.driver_track(),
+                        self.sim_time,
+                        step as u64,
+                        EventKind::CheckpointSaved,
+                        0,
+                    );
+                }
             }
         }
         recorder.record("final_loss", self.clock.current(), recorder.last("train_loss"));
         let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.clock.current(), bits as f64);
+        let sim_time_s = self.sim_time + self.profile.critical_s;
         TrainOutcome {
             theta: self.theta,
             recorder,
             traffic: self.fabric.snapshot_stats(),
             rounds: self.clock.current(),
             profile: self.profile,
-            sim_time_s: self.sim_time,
+            sim_time_s,
             staleness: StalenessStats::default(),
+            trace: self.trace,
         }
     }
 }

@@ -37,6 +37,7 @@ use super::worker::Worker;
 use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::{self, Encoded};
 use crate::net::{AdversarySchedule, Fabric};
+use crate::obs::trace::EventKind;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -553,6 +554,7 @@ fn actor_loop(
                     );
                     w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
                     adversary.corrupt_frames(w.id, round, n_workers, &mut frames);
+                    trace_worker_frames(&fabric, w.id, round, n_workers, &adversary, &frames);
                     ps.push_frames(&fabric, w.id, round, &mut frames);
                     let report = RoundReport {
                         id: w.id,
@@ -575,6 +577,7 @@ fn actor_loop(
                 );
                 w.step_encode_sharded_into(&params, lr, fabric.frame_pool(), &mut frames);
                 adversary.corrupt_frames(w.id, round, n_workers, &mut frames);
+                trace_worker_frames(&fabric, w.id, round, n_workers, &adversary, &frames);
                 ps.push_frames(&fabric, w.id, round, &mut frames);
                 let report = RoundReport {
                     id: w.id,
@@ -668,6 +671,33 @@ fn actor_loop(
             }
             Command::Shutdown => return,
         }
+    }
+}
+
+/// Trace a worker's freshly encoded (and possibly corrupted) frames on its
+/// own ring. Safe for determinism: each worker's ring is written only by
+/// the one actor thread that owns that worker, the stamp is the worker's
+/// virtual compute-finish time (pre-set by the driver), and frame sizes
+/// are pure functions of the seeded models. Allocation-free — one ring
+/// write per frame into preallocated slots.
+// detlint: hot
+fn trace_worker_frames(
+    fabric: &Fabric,
+    worker: usize,
+    round: u64,
+    n_workers: usize,
+    adversary: &AdversarySchedule,
+    frames: &[Encoded],
+) {
+    let Some(tr) = fabric.trace() else {
+        return;
+    };
+    let t = fabric.clock().map_or(0.0, |c| c.node_time(worker));
+    for f in frames {
+        tr.record(worker, t, round, EventKind::FrameEncoded, f.bits);
+    }
+    if adversary.is_active() && adversary.is_adversary(worker, n_workers) {
+        tr.record(worker, t, round, EventKind::AdversaryCorrupt, frames.len() as u64);
     }
 }
 

@@ -6,29 +6,36 @@
 use super::{ExpContext, ExpResult};
 use crate::compress::{self, Compressor, ErrorFeedback};
 use crate::metrics::Recorder;
+use crate::obs::HistSnapshot;
 use crate::util::Pcg64;
 use anyhow::Result;
 
-/// Drive EF with unit-gaussian gradients; returns (sup ||e_t||², σ²).
+/// Drive EF with unit-gaussian gradients; returns (sup ||e_t||², σ²) plus
+/// the log2 histogram of ‖e_t‖ in milli-units (same encoding the run-time
+/// metrics registry uses), so the report can show the residual
+/// distribution, not just its supremum.
 fn run_residual(
     comp: Box<dyn Compressor>,
     d: usize,
     gamma: f32,
     steps: usize,
     seed: u64,
-) -> (f64, f64) {
+) -> (f64, f64, HistSnapshot) {
     let mut ef = ErrorFeedback::new(d, comp);
     let mut rng = Pcg64::seeded(seed);
     let mut g = vec![0.0f32; d];
     let mut delta = vec![0.0f32; d];
     let mut sup = 0.0f64;
+    let mut hist = HistSnapshot::new();
     let sigma_sq = d as f64; // E||g||^2 for unit gaussians
     for _ in 0..steps {
         rng.fill_normal(&mut g, 0.0, 1.0);
         ef.step_into(gamma, &g, &mut delta, &mut rng);
-        sup = sup.max(ef.error_norm().powi(2));
+        let norm = ef.error_norm();
+        sup = sup.max(norm.powi(2));
+        hist.observe((norm * 1e3) as u64);
     }
-    (sup, sigma_sq)
+    (sup, sigma_sq, hist)
 }
 
 pub fn lemma3(ctx: &ExpContext) -> Result<ExpResult> {
@@ -48,20 +55,28 @@ pub fn lemma3(ctx: &ExpContext) -> Result<ExpResult> {
 
     let gamma = 0.05f32;
     for (name, comp, delta_lb) in cases {
-        let (sup, sigma_sq) = run_residual(comp, d, gamma, steps, ctx.seed);
+        let (sup, sigma_sq, hist) = run_residual(comp, d, gamma, steps, ctx.seed);
         let bound =
             4.0 * (1.0 - delta_lb) * (gamma as f64).powi(2) * sigma_sq / (delta_lb * delta_lb);
         rec.record(&format!("sup_{name}"), 0, sup);
         rec.record(&format!("bound_{name}"), 0, bound);
+        rec.record(&format!("mean_milli_{name}"), 0, hist.mean());
         lines.push(format!(
             "  {name:<12} delta>={delta_lb:<6.3} sup||e||^2 = {sup:10.4}  bound = {bound:10.4}  within: {}",
             sup <= bound
         ));
+        lines.push(format!(
+            "  {:<12} residual dist: mean ||e|| = {:.4}, top log2 bucket = {}  ({} samples)",
+            "",
+            hist.mean() / 1e3,
+            hist.max_bucket().unwrap_or(0),
+            hist.count
+        ));
     }
 
     // gamma^2 scaling: sup||e||^2 at gamma vs gamma/2
-    let (s1, _) = run_residual(Box::new(compress::ScaledSign), d, 0.05, steps, ctx.seed + 1);
-    let (s2, _) = run_residual(Box::new(compress::ScaledSign), d, 0.025, steps, ctx.seed + 1);
+    let (s1, _, _) = run_residual(Box::new(compress::ScaledSign), d, 0.05, steps, ctx.seed + 1);
+    let (s2, _, _) = run_residual(Box::new(compress::ScaledSign), d, 0.025, steps, ctx.seed + 1);
     let ratio = s1 / s2;
     rec.record("gamma_scaling_ratio", 0, ratio);
     lines.push(format!(

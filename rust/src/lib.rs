@@ -42,6 +42,7 @@ pub mod logging;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod propcheck;
 pub mod runtime;

@@ -38,9 +38,16 @@ pub fn init() {
         let level = match std::env::var("RUST_LOG").as_deref() {
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,
+            Ok("info") => LevelFilter::Info,
             Ok("debug") => LevelFilter::Debug,
             Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+            Ok(other) => {
+                // one-time (we're inside the Once): a typo'd level should
+                // not silently read as "info"
+                eprintln!("warning: unrecognized RUST_LOG level '{other}', defaulting to info");
+                LevelFilter::Info
+            }
+            Err(_) => LevelFilter::Info,
         };
         let logger = Box::leak(Box::new(StderrLogger {
             start: Instant::now(), // detlint: allow(D2) — log timestamps are wall-clock by design

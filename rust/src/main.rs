@@ -12,6 +12,7 @@ use ef_sgd::experiments::{self, ExpContext};
 use ef_sgd::metrics::sparkline;
 use ef_sgd::model::toy::SparseNoiseQuadratic;
 use ef_sgd::net::{AdversarySchedule, LinkModel, StragglerModel, StragglerSchedule};
+use ef_sgd::obs::RunMetrics;
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
 use std::path::{Path, PathBuf};
@@ -190,6 +191,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("quick") {
         cfg.steps = cfg.steps.min(20);
     }
+    // flight recorder + metrics registry: both off unless requested, so
+    // untraced runs carry zero observability cost
+    let trace_path = args.opt("trace").map(|s| s.to_string());
+    let metrics_path = args.opt("metrics-out").map(|s| s.to_string());
+    let metrics = metrics_path
+        .as_ref()
+        .map(|_| Arc::new(RunMetrics::new(cfg.workers)));
 
     log::info!(
         "train: model={} workers={} threads={} shards={} steps={} lr={} compressor={} ef={} async={}",
@@ -292,6 +300,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         shards: cfg.shards.max(1),
         log_every: cfg.log_every.max(1),
         eval_every: cfg.eval_every,
+        trace_capacity: if trace_path.is_some() { cfg.trace_ring } else { 0 },
+        metrics: metrics.clone(),
         ..Default::default()
     };
     let outcome: TrainOutcome = if cfg.async_mode {
@@ -333,7 +343,41 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.traffic.bits_of_kind(ef_sgd::net::MessageKind::GradPush) as f64 / 1e6,
         cfg.compressor.name()
     );
+    // per-kind bit totals and the drop counter, always printed (the
+    // traffic summary below only lists kinds that carried traffic)
+    println!("  dropped:       {} frame(s)", outcome.traffic.dropped());
     println!("{}", outcome.traffic.summary());
+
+    if let Some(path) = &trace_path {
+        let recorder = outcome
+            .trace
+            .as_ref()
+            .expect("trace_capacity > 0 must produce a recorder");
+        std::fs::write(path, recorder.to_chrome_json(false).to_string_compact())
+            .with_context(|| format!("write trace {path}"))?;
+        println!("\n== flight recorder ==");
+        println!(
+            "  {} event(s) on {} track(s) -> {} (Perfetto / chrome://tracing)",
+            recorder.total_events(),
+            recorder.num_tracks(),
+            path
+        );
+        println!("{}", recorder.text_timeline(16));
+    }
+    if let Some(path) = &metrics_path {
+        let report = ef_sgd::obs::run_report(&outcome, metrics.as_deref());
+        std::fs::write(path, report.to_string_compact())
+            .with_context(|| format!("write metrics {path}"))?;
+        let prom_path = Path::new(path).with_extension("prom");
+        if let Some(m) = &metrics {
+            std::fs::write(&prom_path, m.to_prometheus())
+                .with_context(|| format!("write {}", prom_path.display()))?;
+        }
+        println!(
+            "run report written to {path} (Prometheus text: {})",
+            prom_path.display()
+        );
+    }
 
     // persist the run
     let out = PathBuf::from(args.opt("out").unwrap_or("results"));

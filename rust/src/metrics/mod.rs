@@ -227,23 +227,36 @@ impl SeriesBundle {
 
 /// Render an ASCII sparkline of a series — experiment drivers print these so
 /// the loss curves are visible in terminal output / EXPERIMENTS.md.
+///
+/// Emits exactly `min(width, values.len())` glyphs. NaN values are skipped
+/// when finding the lo/hi range (a single NaN used to poison both folds and
+/// render the whole line as `█`); NaN cells themselves draw as the lowest
+/// glyph.
 pub fn sparkline(values: &[f64], width: usize) -> String {
-    if values.is_empty() {
+    if values.is_empty() || width == 0 {
         return String::new();
     }
     const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
-    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let (lo, hi) = values
+        .iter()
+        .filter(|v| !v.is_nan())
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
     let span = (hi - lo).max(1e-12);
     let n = values.len();
-    let step = (n as f64 / width.max(1) as f64).max(1.0);
-    let mut out = String::new();
-    let mut i = 0.0;
-    while (i as usize) < n && out.chars().count() < width {
-        let v = values[i as usize];
-        let idx = (((v - lo) / span) * 7.0).round() as usize;
-        out.push(GLYPHS[idx.min(7)]);
-        i += step;
+    let cells = width.min(n);
+    let mut out = String::with_capacity(cells * GLYPHS[0].len_utf8());
+    for i in 0..cells {
+        // integer bucketing: cell i samples values[i*n/cells], which is
+        // strictly increasing in i and always in range
+        let v = values[i * n / cells];
+        let idx = if v.is_nan() || !lo.is_finite() {
+            0
+        } else {
+            ((((v - lo) / span) * 7.0).round() as usize).min(7)
+        };
+        out.push(GLYPHS[idx]);
     }
     out
 }
@@ -308,5 +321,36 @@ mod tests {
         let vals: Vec<f64> = (0..100).map(|i| (i as f64 / 10.0).sin()).collect();
         let sl = sparkline(&vals, 20);
         assert_eq!(sl.chars().count(), 20);
+    }
+
+    #[test]
+    fn sparkline_emits_exactly_min_width_len_glyphs() {
+        for n in 1..=120usize {
+            let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            for width in 1..=60usize {
+                let sl = sparkline(&vals, width);
+                assert_eq!(
+                    sl.chars().count(),
+                    width.min(n),
+                    "n={n} width={width} got '{sl}'"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparkline_skips_nan_in_range() {
+        // a single NaN used to poison the min/max folds (min(NaN, x) = NaN)
+        // and flatten the whole line; the range must come from finite values
+        let vals = vec![0.0, f64::NAN, 1.0, 0.5];
+        let sl = sparkline(&vals, 4);
+        assert_eq!(sl.chars().count(), 4);
+        let glyphs: Vec<char> = sl.chars().collect();
+        assert_eq!(glyphs[0], '▁'); // 0.0 is the low end
+        assert_eq!(glyphs[1], '▁'); // NaN cell draws as the lowest glyph
+        assert_eq!(glyphs[2], '█'); // 1.0 is the high end
+        // all-NaN input still emits the right number of glyphs
+        let all_nan = sparkline(&[f64::NAN, f64::NAN], 5);
+        assert_eq!(all_nan.chars().count(), 2);
     }
 }

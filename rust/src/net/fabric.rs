@@ -35,6 +35,7 @@ use super::accounting::TrafficStats;
 use super::link::LinkModel;
 use super::message::Message;
 use super::simclock::SimClock;
+use crate::obs::trace::TraceRecorder;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -97,6 +98,7 @@ pub struct Fabric {
     total_bits: AtomicU64,
     frames: FramePool,
     clock: Option<Arc<SimClock>>,
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Fabric {
@@ -109,6 +111,7 @@ impl Fabric {
             total_bits: AtomicU64::new(0),
             frames: FramePool::default(),
             clock: None,
+            trace: None,
         }
     }
 
@@ -132,6 +135,20 @@ impl Fabric {
     /// The attached virtual clock, if any.
     pub fn clock(&self) -> Option<&Arc<SimClock>> {
         self.clock.as_ref()
+    }
+
+    /// Attach a flight recorder (before the fabric is shared). Instrumented
+    /// call sites reach it through [`trace`](Self::trace); the fabric itself
+    /// never records — `send` runs concurrently on pool threads, and ring
+    /// writes must stay single-writer per node so the trace is deterministic
+    /// (see `docs/OBSERVABILITY.md`).
+    pub fn set_trace(&mut self, trace: Arc<TraceRecorder>) {
+        self.trace = Some(trace);
+    }
+
+    /// The attached flight recorder, if any.
+    pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
     }
 
     /// The shared frame-buffer recycling pool (see module docs).

@@ -1,0 +1,601 @@
+//! Unified metrics registry: fixed-slot counters, gauges, and log2-bucket
+//! histograms.
+//!
+//! Handles ([`CounterId`]/[`GaugeId`]/[`HistId`]) are resolved once at setup
+//! via the `register_*` methods (`&mut self`, allocating); hot-path updates
+//! go through `&self` and are index-based atomic operations — no allocation,
+//! no locks — so `alloc_regression` stays at zero with metrics enabled.
+//!
+//! Histograms use log2 buckets: bucket 0 holds exactly `{0}`, bucket `b`
+//! (1 ≤ b < 63) holds `[2^(b-1), 2^b)`, and bucket 63 is the open tail
+//! `[2^62, ∞)`. Bucket boundaries are exact at powers of two and merging two
+//! snapshots is element-wise addition (associative) — both are property
+//! tested below.
+//!
+//! [`RunMetrics`] is the engine's standard bundle (frame bits by format,
+//! decode latency, staleness, dropped frames, per-worker EF residual norms —
+//! the quantity Lemma 3 of Karimireddy et al. 2019 bounds). Snapshots export
+//! as JSON and Prometheus text format.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::compress::wire::Format;
+use crate::util::json::{arr, num, obj, Json};
+
+/// Handle to a registered counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge (stores an `f64` as raw bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered log2-bucket histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Number of log2 buckets per histogram.
+pub const HIST_BUCKETS: usize = 64;
+
+/// The log2 bucket index for a value: 0 for 0, otherwise
+/// `min(bit_length(v), 63)` so `2^k` lands exactly at bucket `k + 1`'s lower
+/// edge and the top bucket absorbs the tail.
+// detlint: hot
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+struct Slot {
+    name: String,
+    v: AtomicU64,
+}
+
+struct HistSlot {
+    name: String,
+    buckets: Box<[AtomicU64; HIST_BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Fixed-slot registry. Registration allocates; updates do not.
+pub struct MetricsRegistry {
+    counters: Vec<Slot>,
+    gauges: Vec<Slot>,
+    hists: Vec<HistSlot>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry {
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            hists: Vec::new(),
+        }
+    }
+
+    /// Register a counter. `name` may embed Prometheus-style labels, e.g.
+    /// `ef_frame_bits{format="sign_scaled"}`.
+    pub fn register_counter(&mut self, name: &str) -> CounterId {
+        self.counters.push(Slot {
+            name: name.to_string(),
+            v: AtomicU64::new(0),
+        });
+        CounterId(self.counters.len() - 1)
+    }
+
+    pub fn register_gauge(&mut self, name: &str) -> GaugeId {
+        self.gauges.push(Slot {
+            name: name.to_string(),
+            v: AtomicU64::new(0f64.to_bits()),
+        });
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    pub fn register_hist(&mut self, name: &str) -> HistId {
+        self.hists.push(HistSlot {
+            name: name.to_string(),
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        });
+        HistId(self.hists.len() - 1)
+    }
+
+    /// Add `by` to a counter. Index-based atomic add; allocation-free.
+    // detlint: hot
+    pub fn inc(&self, c: CounterId, by: u64) {
+        self.counters[c.0].v.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Set a gauge to `v`. Allocation-free.
+    // detlint: hot
+    pub fn set_gauge(&self, g: GaugeId, v: f64) {
+        self.gauges[g.0].v.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record one observation into a histogram. Allocation-free.
+    // detlint: hot
+    pub fn observe(&self, h: HistId, v: u64) {
+        let slot = &self.hists[h.0];
+        slot.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        slot.count.fetch_add(1, Ordering::Relaxed);
+        slot.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, c: CounterId) -> u64 {
+        self.counters[c.0].v.load(Ordering::Relaxed)
+    }
+
+    pub fn gauge(&self, g: GaugeId) -> f64 {
+        f64::from_bits(self.gauges[g.0].v.load(Ordering::Relaxed))
+    }
+
+    pub fn hist_snapshot(&self, h: HistId) -> HistSnapshot {
+        let slot = &self.hists[h.0];
+        let mut snap = HistSnapshot::new();
+        for (b, a) in snap.buckets.iter_mut().zip(slot.buckets.iter()) {
+            *b = a.load(Ordering::Relaxed);
+        }
+        snap.count = slot.count.load(Ordering::Relaxed);
+        snap.sum = slot.sum.load(Ordering::Relaxed);
+        snap
+    }
+
+    /// Export every metric as one JSON object (`counters` / `gauges` /
+    /// `histograms` sections; histogram buckets are the raw 64 counts).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|c| (c.name.clone(), num(c.v.load(Ordering::Relaxed) as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|g| {
+                    (
+                        g.name.clone(),
+                        num(f64::from_bits(g.v.load(Ordering::Relaxed))),
+                    )
+                })
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|h| {
+                    let buckets = h
+                        .buckets
+                        .iter()
+                        .map(|b| num(b.load(Ordering::Relaxed) as f64))
+                        .collect();
+                    (
+                        h.name.clone(),
+                        obj(vec![
+                            ("count", num(h.count.load(Ordering::Relaxed) as f64)),
+                            ("sum", num(h.sum.load(Ordering::Relaxed) as f64)),
+                            ("buckets", arr(buckets)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+
+    /// Export in Prometheus text exposition format. Histogram `le` bounds
+    /// are the inclusive upper edges of the log2 buckets (`0`, `2^b − 1`,
+    /// `+Inf`); bucket values are cumulative as the format requires.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_family = "";
+        for c in &self.counters {
+            let fam = family(&c.name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} counter");
+                last_family = fam;
+            }
+            let _ = writeln!(out, "{} {}", c.name, c.v.load(Ordering::Relaxed));
+        }
+        last_family = "";
+        for g in &self.gauges {
+            let fam = family(&g.name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} gauge");
+                last_family = fam;
+            }
+            let _ = writeln!(
+                out,
+                "{} {}",
+                g.name,
+                f64::from_bits(g.v.load(Ordering::Relaxed))
+            );
+        }
+        last_family = "";
+        for h in &self.hists {
+            let (fam, labels) = split_labels(&h.name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} histogram");
+                last_family = fam;
+            }
+            let mut cum = 0u64;
+            for (b, slot) in h.buckets.iter().enumerate() {
+                cum += slot.load(Ordering::Relaxed);
+                let le = le_bound(b);
+                if labels.is_empty() {
+                    let _ = writeln!(out, "{fam}_bucket{{le=\"{le}\"}} {cum}");
+                } else {
+                    let _ = writeln!(out, "{fam}_bucket{{{labels},le=\"{le}\"}} {cum}");
+                }
+            }
+            let (sum, count) = (
+                h.sum.load(Ordering::Relaxed),
+                h.count.load(Ordering::Relaxed),
+            );
+            if labels.is_empty() {
+                let _ = writeln!(out, "{fam}_sum {sum}");
+                let _ = writeln!(out, "{fam}_count {count}");
+            } else {
+                let _ = writeln!(out, "{fam}_sum{{{labels}}} {sum}");
+                let _ = writeln!(out, "{fam}_count{{{labels}}} {count}");
+            }
+        }
+        out
+    }
+}
+
+/// Metric family = the name with any `{label}` suffix stripped.
+fn family(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Split `name{a="b"}` into `("name", "a=\"b\"")`; labels are empty when the
+/// name carries none.
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], &name[i + 1..name.len() - 1]),
+        None => (name, ""),
+    }
+}
+
+/// Inclusive upper edge of log2 bucket `b`, as a Prometheus `le` string.
+fn le_bound(b: usize) -> String {
+    if b == 0 {
+        "0".to_string()
+    } else if b == HIST_BUCKETS - 1 {
+        "+Inf".to_string()
+    } else {
+        format!("{}", (1u64 << b) - 1)
+    }
+}
+
+/// An owned histogram snapshot — the value-semantics mirror of a registry
+/// histogram, used for offline accumulation and for the merge/boundary
+/// property tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistSnapshot {
+    pub fn new() -> Self {
+        HistSnapshot {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Element-wise merge. Associative and commutative by construction.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut out = self.clone();
+        for (b, o) in out.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        out.count += other.count;
+        out.sum += other.sum;
+        out
+    }
+
+    /// Index of the highest non-empty bucket, if any observation was made.
+    pub fn max_bucket(&self) -> Option<usize> {
+        self.buckets.iter().rposition(|&b| b > 0)
+    }
+
+    /// Mean of the observed values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// The engine's standard metric bundle, wired through both drivers.
+///
+/// Handles are resolved in [`RunMetrics::new`]; every `observe_*` /`inc_*`
+/// method is an index-based atomic update, safe to call from `// detlint:
+/// hot` round-path code.
+pub struct RunMetrics {
+    registry: MetricsRegistry,
+    rounds: CounterId,
+    folds: CounterId,
+    frames: CounterId,
+    dropped: CounterId,
+    frame_bits: [HistId; Format::COUNT],
+    decode_ns: HistId,
+    staleness_rounds: HistId,
+    residual_milli: HistId,
+    residual_norm: Vec<GaugeId>,
+}
+
+impl RunMetrics {
+    /// Register the standard slots for a run with `workers` workers.
+    pub fn new(workers: usize) -> Self {
+        let mut r = MetricsRegistry::new();
+        let rounds = r.register_counter("ef_rounds_total");
+        let folds = r.register_counter("ef_folds_total");
+        let frames = r.register_counter("ef_frames_total");
+        let dropped = r.register_counter("ef_dropped_frames_total");
+        let frame_bits = std::array::from_fn(|i| {
+            let fmt = Format::ALL[i];
+            r.register_hist(&format!("ef_frame_bits{{format=\"{}\"}}", fmt.name()))
+        });
+        let decode_ns = r.register_hist("ef_decode_ns");
+        let staleness_rounds = r.register_hist("ef_staleness_rounds");
+        let residual_milli = r.register_hist("ef_residual_milli");
+        let residual_norm = (0..workers)
+            .map(|w| r.register_gauge(&format!("ef_residual_norm{{worker=\"{w}\"}}")))
+            .collect();
+        RunMetrics {
+            registry: r,
+            rounds,
+            folds,
+            frames,
+            dropped,
+            frame_bits,
+            decode_ns,
+            staleness_rounds,
+            residual_milli,
+            residual_norm,
+        }
+    }
+
+    /// One encoded frame hit the wire: bump the frame counter and the
+    /// per-format frame-bits histogram.
+    // detlint: hot
+    pub fn observe_frame(&self, format: Format, bits: u64) {
+        self.registry.inc(self.frames, 1);
+        self.registry.observe(self.frame_bits[format.index()], bits);
+    }
+
+    /// A worker's EF residual after a round: gauge carries the latest
+    /// ‖e_t‖, the histogram accumulates ‖e_t‖ in milli-units (log2 buckets
+    /// need integers; 1e-3 resolution is far below any Lemma-3 bound of
+    /// interest).
+    // detlint: hot
+    pub fn observe_residual(&self, worker: usize, norm: f64) {
+        self.registry.set_gauge(self.residual_norm[worker], norm);
+        self.registry.observe(self.residual_milli, (norm * 1e3) as u64);
+    }
+
+    /// Measured leader decode+aggregate critical path for one round, in
+    /// nanoseconds. Measured (wall) quantities live only in metrics — never
+    /// in the trace — so the stripped trace stays deterministic.
+    // detlint: hot
+    pub fn observe_decode_ns(&self, ns: u64) {
+        self.registry.observe(self.decode_ns, ns);
+    }
+
+    /// Staleness (rounds) of one folded frame.
+    // detlint: hot
+    pub fn observe_staleness(&self, rounds: u64) {
+        self.registry.observe(self.staleness_rounds, rounds);
+    }
+
+    /// Count `n` dropped frames.
+    // detlint: hot
+    pub fn add_dropped(&self, n: u64) {
+        self.registry.inc(self.dropped, n);
+    }
+
+    // detlint: hot
+    pub fn inc_rounds(&self) {
+        self.registry.inc(self.rounds, 1);
+    }
+
+    // detlint: hot
+    pub fn inc_folds(&self) {
+        self.registry.inc(self.folds, 1);
+    }
+
+    pub fn frames_total(&self) -> u64 {
+        self.registry.counter(self.frames)
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.registry.counter(self.dropped)
+    }
+
+    /// Latest recorded ‖e_t‖ for `worker`.
+    pub fn residual_norm(&self, worker: usize) -> f64 {
+        self.registry.gauge(self.residual_norm[worker])
+    }
+
+    /// Snapshot of the pooled residual histogram (milli-units).
+    pub fn residual_hist(&self) -> HistSnapshot {
+        self.registry.hist_snapshot(self.residual_milli)
+    }
+
+    /// Snapshot of the frame-bits histogram for one wire format.
+    pub fn frame_bits_hist(&self, format: Format) -> HistSnapshot {
+        self.registry.hist_snapshot(self.frame_bits[format.index()])
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.registry.to_json()
+    }
+
+    pub fn to_prometheus(&self) -> String {
+        self.registry.to_prometheus()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cheap deterministic PRNG for the property tests (no external deps).
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_exact_at_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        for k in 1..62 {
+            let p = 1u64 << k;
+            // 2^k is the first value of bucket k+1; 2^k − 1 the last of k
+            assert_eq!(bucket_of(p), k + 1, "2^{k}");
+            assert_eq!(bucket_of(p - 1), k, "2^{k} - 1");
+        }
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_of(1u64 << 62), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Lcg(0x5eed);
+        for _ in 0..50 {
+            let mut snaps = [HistSnapshot::new(), HistSnapshot::new(), HistSnapshot::new()];
+            for s in snaps.iter_mut() {
+                for _ in 0..(rng.next() % 40) {
+                    // bias towards small values but cover the full range
+                    let v = rng.next() >> (rng.next() % 64);
+                    s.observe(v);
+                }
+            }
+            let [a, b, c] = snaps;
+            assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+            assert_eq!(a.merge(&b), b.merge(&a));
+        }
+    }
+
+    #[test]
+    fn merge_matches_pooled_observation() {
+        let mut a = HistSnapshot::new();
+        let mut b = HistSnapshot::new();
+        let mut pooled = HistSnapshot::new();
+        for v in [0u64, 1, 2, 3, 512, 513, u64::MAX] {
+            a.observe(v);
+            pooled.observe(v);
+        }
+        for v in [7u64, 8, 1 << 40] {
+            b.observe(v);
+            pooled.observe(v);
+        }
+        assert_eq!(a.merge(&b), pooled);
+        assert_eq!(pooled.max_bucket(), Some(HIST_BUCKETS - 1));
+    }
+
+    #[test]
+    fn registry_counters_gauges_hists_roundtrip() {
+        let mut r = MetricsRegistry::new();
+        let c = r.register_counter("ef_test_total");
+        let g = r.register_gauge("ef_test_gauge{worker=\"2\"}");
+        let h = r.register_hist("ef_test_hist");
+        r.inc(c, 3);
+        r.inc(c, 4);
+        r.set_gauge(g, -1.5);
+        r.observe(h, 0);
+        r.observe(h, 9);
+        assert_eq!(r.counter(c), 7);
+        assert_eq!(r.gauge(g), -1.5);
+        let snap = r.hist_snapshot(h);
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.sum, 9);
+        assert_eq!(snap.buckets[0], 1);
+        assert_eq!(snap.buckets[bucket_of(9)], 1);
+    }
+
+    #[test]
+    fn prometheus_export_shape() {
+        let mut r = MetricsRegistry::new();
+        let c = r.register_counter("ef_frames_total");
+        let h = r.register_hist("ef_frame_bits{format=\"sign_scaled\"}");
+        r.inc(c, 2);
+        r.observe(h, 4);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE ef_frames_total counter"));
+        assert!(text.contains("ef_frames_total 2"));
+        assert!(text.contains("# TYPE ef_frame_bits histogram"));
+        assert!(text.contains("ef_frame_bits_bucket{format=\"sign_scaled\",le=\"7\"} 1"));
+        assert!(text.contains("ef_frame_bits_bucket{format=\"sign_scaled\",le=\"+Inf\"} 1"));
+        assert!(text.contains("ef_frame_bits_sum{format=\"sign_scaled\"} 4"));
+        assert!(text.contains("ef_frame_bits_count{format=\"sign_scaled\"} 1"));
+        // cumulative counts: the le="3" bucket (below the observation) is 0
+        assert!(text.contains("ef_frame_bits_bucket{format=\"sign_scaled\",le=\"3\"} 0"));
+    }
+
+    #[test]
+    fn run_metrics_bundle_updates() {
+        let m = RunMetrics::new(2);
+        m.observe_frame(Format::SignScaled, 100);
+        m.observe_frame(Format::DenseF32, 4096);
+        m.observe_residual(1, 0.25);
+        m.observe_staleness(3);
+        m.add_dropped(2);
+        m.inc_rounds();
+        assert_eq!(m.frames_total(), 2);
+        assert_eq!(m.dropped_total(), 2);
+        assert_eq!(m.residual_norm(1), 0.25);
+        assert_eq!(m.residual_norm(0), 0.0);
+        assert_eq!(m.frame_bits_hist(Format::SignScaled).count, 1);
+        assert_eq!(m.residual_hist().buckets[bucket_of(250)], 1);
+        let json = Json::parse(&m.to_json().to_string_compact()).unwrap();
+        assert!(json.at(&["counters", "ef_rounds_total"]).is_some());
+        // the inner quotes of the label survive the JSON round trip
+        assert_eq!(
+            json.at(&["gauges", "ef_residual_norm{worker=\"1\"}"])
+                .unwrap()
+                .as_f64(),
+            Some(0.25)
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! Observability: the flight recorder ([`trace`]) and the unified metrics
+//! registry ([`metrics`]).
+//!
+//! Design constraints (see `docs/OBSERVABILITY.md`):
+//!
+//! * **Deterministic by default.** Trace timestamps come from the virtual
+//!   clock, never the wall clock; the stripped Chrome export is
+//!   byte-identical across `--threads`. Wall-clock data exists only in the
+//!   opt-in side channel and in metrics (which are diagnostics, not part of
+//!   the deterministic contract).
+//! * **Allocation-free on the round path.** Ring slots and metric slots are
+//!   allocated at setup; recording is indexed writes and atomics, so
+//!   `alloc_regression` holds with telemetry enabled.
+//!
+//! [`run_report`] folds the engine's pre-existing per-run structs
+//! (`TrafficStats`, `StalenessStats`, `LeaderProfile`) and the registry into
+//! one end-of-run `RunReport` JSON document.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    bucket_of, CounterId, GaugeId, HistId, HistSnapshot, MetricsRegistry, RunMetrics,
+};
+pub use trace::{DropReason, EventKind, TraceEvent, TraceRecorder, DEFAULT_RING_CAPACITY};
+
+use crate::coordinator::TrainOutcome;
+use crate::util::json::{num, obj, Json};
+
+/// Fold a finished run's traffic, leader-profile, and staleness accounting —
+/// plus the metrics registry, when one was attached — into a single
+/// `RunReport` JSON object (the `--metrics-out` payload).
+pub fn run_report(outcome: &TrainOutcome, metrics: Option<&RunMetrics>) -> Json {
+    let traffic = &outcome.traffic;
+    let per_kind_bits = Json::Obj(
+        traffic
+            .per_kind
+            .iter()
+            .map(|(k, b)| (k.name().to_string(), num(*b as f64)))
+            .collect(),
+    );
+    let per_kind_msgs = Json::Obj(
+        traffic
+            .msg_count
+            .iter()
+            .map(|(k, c)| (k.name().to_string(), num(*c as f64)))
+            .collect(),
+    );
+    let mut report = vec![
+        (
+            "run",
+            obj(vec![
+                ("rounds", num(outcome.rounds as f64)),
+                ("sim_time_s", num(outcome.sim_time_s)),
+            ]),
+        ),
+        (
+            "traffic",
+            obj(vec![
+                ("total_bits", num(traffic.total_bits as f64)),
+                ("dropped_frames", num(traffic.dropped() as f64)),
+                ("serial_time_s", num(traffic.serial_time_s)),
+                ("per_kind_bits", per_kind_bits),
+                ("per_kind_msgs", per_kind_msgs),
+            ]),
+        ),
+        (
+            "leader",
+            obj(vec![
+                ("decode_agg_s", num(outcome.profile.decode_agg_s)),
+                ("critical_s", num(outcome.profile.critical_s)),
+                ("mean_critical_s", num(outcome.profile.mean_critical_s())),
+                ("shards", num(outcome.profile.per_shard_s.len() as f64)),
+            ]),
+        ),
+        (
+            "staleness",
+            obj(vec![
+                ("folds", num(outcome.staleness.folds as f64)),
+                ("frames", num(outcome.staleness.frames as f64)),
+                ("stale_frames", num(outcome.staleness.stale_frames as f64)),
+                (
+                    "max_staleness_seen",
+                    num(outcome.staleness.max_staleness_seen as f64),
+                ),
+                ("mean_staleness", num(outcome.staleness.mean_staleness())),
+                ("stale_fraction", num(outcome.staleness.stale_fraction())),
+                ("mean_batch", num(outcome.staleness.mean_batch())),
+            ]),
+        ),
+    ];
+    if let Some(m) = metrics {
+        report.push(("metrics", m.to_json()));
+    }
+    obj(report)
+}

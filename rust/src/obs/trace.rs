@@ -1,0 +1,433 @@
+//! Flight recorder: deterministic sim-time event tracing.
+//!
+//! Every node of the simulated cluster (worker, shard leader, driver) owns a
+//! fixed-capacity ring of [`TraceEvent`]s. Events are stamped with **virtual
+//! time** from [`crate::net::SimClock`] — never the wall clock — so the
+//! recorded trace is a pure function of the seeded models and stays
+//! byte-identical for any `--threads` setting (see `docs/OBSERVABILITY.md`
+//! for the exact determinism contract, including the cross-`--shards`
+//! caveat). An optional wall-clock side channel can be enabled for local
+//! profiling; it lives behind `// detlint: profiling` regions and is omitted
+//! from the stripped export, so the deterministic view never depends on it.
+//!
+//! Ring writes are single-writer per node by construction: the driver thread
+//! records driver- and leader-track events, and each worker's events are
+//! recorded only by the pool actor that owns that worker. The fabric itself
+//! never records (its `send` runs concurrently on pool threads).
+//!
+//! Exports: Chrome trace-event JSON (`to_chrome_json`, renderable in Perfetto
+//! or `chrome://tracing`) and a compact text timeline for terminals.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Default per-node ring capacity (events). Chosen so a traced toy run keeps
+/// every event while a long run degrades gracefully to "most recent window"
+/// semantics instead of growing without bound.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Why a frame was dropped on the wire path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// The payload failed structural validation in the decoder
+    /// (`DecodeError`); counted on the decode pool threads and surfaced as
+    /// one lumped driver-track event per round.
+    Undecodable,
+    /// A frame carried a shard tag that does not match the leader it arrived
+    /// at (mis-routed by an adversary or a topology bug).
+    ShardMismatch,
+}
+
+/// Typed trace event kinds, one per instrumented point of the round path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EventKind {
+    /// Driver begins a (sync round | async dispatch); arg = workers involved.
+    #[default]
+    RoundStart,
+    /// A shard leader's parameter broadcast is scheduled; arg = shard index.
+    BroadcastSent,
+    /// A worker finished encoding one frame; arg = frame bits on the wire.
+    FrameEncoded,
+    /// A gradient frame reached a leader (sync, leader track) or the driver's
+    /// event queue popped an in-flight push (async, driver track); arg =
+    /// source worker id.
+    FrameArrived,
+    /// Decode + aggregate pass begins; arg = frames (sync) / batch size.
+    DecodeStart,
+    /// Decode + aggregate pass finished; arg mirrors [`Self::DecodeStart`].
+    DecodeDone,
+    /// The round's model update has been applied.
+    AggregateDone,
+    /// Async driver folded a quorum; arg = batch size.
+    QuorumFold,
+    /// Frame(s) dropped; arg = source worker ([`DropReason::ShardMismatch`])
+    /// or dropped-count delta ([`DropReason::Undecodable`]).
+    FrameDropped(DropReason),
+    /// A Byzantine worker corrupted its outgoing frames; arg = frame count.
+    AdversaryCorrupt,
+    /// Driver wrote a checkpoint; arg = 0.
+    CheckpointSaved,
+}
+
+impl EventKind {
+    /// Stable snake_case name used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::RoundStart => "round_start",
+            EventKind::BroadcastSent => "broadcast_sent",
+            EventKind::FrameEncoded => "frame_encoded",
+            EventKind::FrameArrived => "frame_arrived",
+            EventKind::DecodeStart => "decode_start",
+            EventKind::DecodeDone => "decode_done",
+            EventKind::AggregateDone => "aggregate_done",
+            EventKind::QuorumFold => "quorum_fold",
+            EventKind::FrameDropped(DropReason::Undecodable) => "frame_dropped_undecodable",
+            EventKind::FrameDropped(DropReason::ShardMismatch) => "frame_dropped_shard_mismatch",
+            EventKind::AdversaryCorrupt => "adversary_corrupt",
+            EventKind::CheckpointSaved => "checkpoint_saved",
+        }
+    }
+}
+
+/// One recorded event. `t` is sim-time seconds; `wall_ns` is the optional
+/// wall-clock side channel (always 0 unless [`TraceRecorder::enable_wall_clock`]
+/// was called) and is excluded from the stripped export.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub round: u64,
+    pub kind: EventKind,
+    pub arg: u64,
+    pub wall_ns: u64,
+}
+
+/// Fixed-capacity overwrite-oldest ring. Storage is allocated once at
+/// construction; pushes in the steady state never allocate.
+struct NodeRing {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    len: usize,
+    evicted: u64,
+}
+
+impl NodeRing {
+    fn new(capacity: usize) -> Self {
+        NodeRing {
+            buf: vec![TraceEvent::default(); capacity],
+            head: 0,
+            len: 0,
+            evicted: 0,
+        }
+    }
+
+    // detlint: hot
+    fn push(&mut self, ev: TraceEvent) {
+        let cap = self.buf.len();
+        self.buf[self.head] = ev;
+        self.head = (self.head + 1) % cap;
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.evicted += 1;
+        }
+    }
+
+    /// Visit events oldest-first.
+    fn for_each(&self, mut f: impl FnMut(&TraceEvent)) {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        for i in 0..self.len {
+            f(&self.buf[(start + i) % cap]);
+        }
+    }
+}
+
+/// Per-node ring-buffer event recorder for the whole simulated cluster.
+///
+/// Track layout: nodes `0..workers` are worker tracks, `workers..workers +
+/// shards` are shard-leader tracks, and the last track is the driver.
+pub struct TraceRecorder {
+    workers: usize,
+    shards: usize,
+    rings: Vec<Mutex<NodeRing>>,
+    wall_epoch: Option<Instant>,
+}
+
+impl TraceRecorder {
+    /// Build a recorder with `capacity` event slots per node. All ring
+    /// storage is allocated here; recording is allocation-free.
+    pub fn new(workers: usize, shards: usize, capacity: usize) -> Self {
+        assert!(capacity > 0, "trace ring capacity must be >= 1");
+        let tracks = workers + shards + 1;
+        TraceRecorder {
+            workers,
+            shards,
+            rings: (0..tracks).map(|_| Mutex::new(NodeRing::new(capacity))).collect(),
+            wall_epoch: None,
+        }
+    }
+
+    /// Convenience constructor that also wraps in an [`Arc`] for sharing
+    /// across the fabric and the drivers.
+    pub fn shared(workers: usize, shards: usize, capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(workers, shards, capacity))
+    }
+
+    /// Enable the wall-clock side channel: subsequent events carry a
+    /// nanosecond stamp relative to this call. Off by default — the sim-time
+    /// view never depends on it, and `to_chrome_json(false)` omits it.
+    // detlint: profiling — opt-in wall stamps; the sim-time view stays a pure
+    // function of the seeded models
+    pub fn enable_wall_clock(&mut self) {
+        self.wall_epoch = Some(Instant::now());
+    }
+
+    // detlint: profiling — reads the optional wall epoch (zero when the side
+    // channel is off, which is the deterministic default)
+    fn wall_ns(&self) -> u64 {
+        match &self.wall_epoch {
+            Some(epoch) => epoch.elapsed().as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    /// Number of tracks (workers + shard leaders + driver).
+    pub fn num_tracks(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// The driver's track id (last track).
+    pub fn driver_track(&self) -> usize {
+        self.rings.len() - 1
+    }
+
+    /// The track id of shard leader `s`.
+    pub fn leader_track(&self, s: usize) -> usize {
+        self.workers + s
+    }
+
+    /// Human-readable track name, mirrored into the Chrome trace metadata.
+    pub fn track_name(&self, node: usize) -> String {
+        if node < self.workers {
+            format!("worker {node}")
+        } else if node < self.workers + self.shards {
+            format!("shard-leader {}", node - self.workers)
+        } else {
+            "driver".to_string()
+        }
+    }
+
+    /// Record one event on `node`'s ring at sim-time `t`. Allocation-free:
+    /// a mutex lock plus an indexed write into preallocated storage.
+    // detlint: hot
+    pub fn record(&self, node: usize, t: f64, round: u64, kind: EventKind, arg: u64) {
+        let wall_ns = self.wall_ns();
+        let ev = TraceEvent {
+            t,
+            round,
+            kind,
+            arg,
+            wall_ns,
+        };
+        self.rings[node].lock().unwrap().push(ev);
+    }
+
+    /// Total events currently retained across all rings.
+    pub fn total_events(&self) -> usize {
+        self.rings.iter().map(|r| r.lock().unwrap().len).sum()
+    }
+
+    /// Total events overwritten because a ring wrapped.
+    pub fn total_evicted(&self) -> u64 {
+        self.rings.iter().map(|r| r.lock().unwrap().evicted).sum()
+    }
+
+    /// Copy out one node's retained events, oldest-first (test/export use).
+    pub fn events(&self, node: usize) -> Vec<TraceEvent> {
+        let ring = self.rings[node].lock().unwrap();
+        let mut out = Vec::with_capacity(ring.len);
+        ring.for_each(|ev| out.push(*ev));
+        out
+    }
+
+    /// Export the trace as Chrome trace-event JSON on the virtual timeline:
+    /// per-track `M` metadata, `i` instant events (ts in microseconds =
+    /// sim-time × 1e6), and `X` spans synthesized from each driver-track
+    /// `round_start`/`aggregate_done` pair. Load the file in Perfetto
+    /// (<https://ui.perfetto.dev>) or `chrome://tracing`.
+    ///
+    /// With `include_wall = false` the export contains only sim-time fields
+    /// and is byte-identical across thread counts (the "stripped" trace).
+    pub fn to_chrome_json(&self, include_wall: bool) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("pid", num(0.0)),
+            ("name", s("process_name")),
+            ("args", obj(vec![("name", s("ef-sgd simulated cluster"))])),
+        ]));
+        for node in 0..self.num_tracks() {
+            events.push(obj(vec![
+                ("ph", s("M")),
+                ("pid", num(0.0)),
+                ("tid", num(node as f64)),
+                ("name", s("thread_name")),
+                ("args", obj(vec![("name", Json::Str(self.track_name(node)))])),
+            ]));
+        }
+        for node in 0..self.num_tracks() {
+            let ring = self.rings[node].lock().unwrap();
+            ring.for_each(|ev| {
+                let mut args = vec![("round", num(ev.round as f64)), ("arg", num(ev.arg as f64))];
+                if include_wall {
+                    args.push(("wall_ns", num(ev.wall_ns as f64)));
+                }
+                events.push(obj(vec![
+                    ("ph", s("i")),
+                    ("s", s("t")),
+                    ("pid", num(0.0)),
+                    ("tid", num(node as f64)),
+                    ("ts", num(ev.t * 1e6)),
+                    ("name", s(ev.kind.name())),
+                    ("args", obj(args)),
+                ]));
+            });
+        }
+        // Synthesized round spans on the driver track so Perfetto shows the
+        // run as a flamegraph, not just instants.
+        let driver = self.driver_track();
+        let ring = self.rings[driver].lock().unwrap();
+        let mut open: Option<(u64, f64)> = None;
+        ring.for_each(|ev| match ev.kind {
+            EventKind::RoundStart => open = Some((ev.round, ev.t)),
+            EventKind::AggregateDone => {
+                if let Some((r, t0)) = open.take() {
+                    if r == ev.round {
+                        events.push(obj(vec![
+                            ("ph", s("X")),
+                            ("pid", num(0.0)),
+                            ("tid", num(driver as f64)),
+                            ("ts", num(t0 * 1e6)),
+                            ("dur", num((ev.t - t0) * 1e6)),
+                            ("name", Json::Str(format!("round {r}"))),
+                            ("args", obj(vec![("round", num(r as f64))])),
+                        ]));
+                    }
+                }
+            }
+            _ => {}
+        });
+        drop(ring);
+        obj(vec![
+            ("displayTimeUnit", s("ms")),
+            ("traceEvents", arr(events)),
+        ])
+    }
+
+    /// Compact chronological text timeline for terminals. Ties are broken by
+    /// `(node, ring order)` so the output is deterministic.
+    pub fn text_timeline(&self, max_lines: usize) -> String {
+        let mut all: Vec<(f64, usize, usize, TraceEvent)> = Vec::new();
+        for node in 0..self.num_tracks() {
+            let ring = self.rings[node].lock().unwrap();
+            let mut seq = 0usize;
+            ring.for_each(|ev| {
+                all.push((ev.t, node, seq, *ev));
+                seq += 1;
+            });
+        }
+        all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        let total = all.len();
+        let mut out = String::new();
+        for (t, node, _seq, ev) in all.into_iter().take(max_lines) {
+            use std::fmt::Write as _;
+            let _ = writeln!(
+                out,
+                "  {t:>12.6}s  {:<16} r{:<5} {} ({})",
+                self.track_name(node),
+                ev.round,
+                ev.kind.name(),
+                ev.arg
+            );
+        }
+        if total > max_lines {
+            use std::fmt::Write as _;
+            let _ = writeln!(out, "  … {} more events", total - max_lines);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let tr = TraceRecorder::new(1, 1, 3);
+        for i in 0..5u64 {
+            tr.record(0, i as f64, i, EventKind::FrameEncoded, i);
+        }
+        let evs = tr.events(0);
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].arg, 2);
+        assert_eq!(evs[2].arg, 4);
+        assert_eq!(tr.total_evicted(), 2);
+    }
+
+    #[test]
+    fn track_layout_and_names() {
+        let tr = TraceRecorder::new(3, 2, 8);
+        assert_eq!(tr.num_tracks(), 6);
+        assert_eq!(tr.driver_track(), 5);
+        assert_eq!(tr.leader_track(1), 4);
+        assert_eq!(tr.track_name(0), "worker 0");
+        assert_eq!(tr.track_name(3), "shard-leader 0");
+        assert_eq!(tr.track_name(5), "driver");
+    }
+
+    #[test]
+    fn chrome_export_parses_and_spans_rounds() {
+        let tr = TraceRecorder::new(1, 1, 16);
+        let d = tr.driver_track();
+        tr.record(d, 0.0, 0, EventKind::RoundStart, 1);
+        tr.record(0, 0.5, 0, EventKind::FrameEncoded, 64);
+        tr.record(d, 1.0, 0, EventKind::AggregateDone, 0);
+        let json = tr.to_chrome_json(false);
+        let parsed = Json::parse(&json.to_string_compact()).unwrap();
+        assert_eq!(parsed.at(&["displayTimeUnit"]).unwrap().as_str(), Some("ms"));
+        let evs = parsed.at(&["traceEvents"]).unwrap().as_arr().unwrap();
+        // 1 process_name + 3 thread_name metadata, 3 instants, 1 span
+        assert_eq!(evs.len(), 8);
+        let span = evs.last().unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(1e6));
+        // stripped export carries no wall-clock field anywhere
+        assert!(!json.to_string_compact().contains("wall_ns"));
+    }
+
+    #[test]
+    fn wall_side_channel_only_in_unstripped_export() {
+        let mut rec = TraceRecorder::new(1, 1, 4);
+        rec.enable_wall_clock();
+        rec.record(0, 0.0, 0, EventKind::FrameEncoded, 1);
+        let full = rec.to_chrome_json(true).to_string_compact();
+        assert!(full.contains("wall_ns"));
+        assert!(!rec.to_chrome_json(false).to_string_compact().contains("wall_ns"));
+    }
+
+    #[test]
+    fn text_timeline_is_sorted_and_truncates() {
+        let tr = TraceRecorder::new(2, 1, 8);
+        tr.record(1, 2.0, 0, EventKind::FrameEncoded, 1);
+        tr.record(0, 1.0, 0, EventKind::FrameEncoded, 2);
+        tr.record(tr.driver_track(), 3.0, 0, EventKind::AggregateDone, 0);
+        let full = tr.text_timeline(10);
+        let first = full.lines().next().unwrap();
+        assert!(first.contains("worker 0"), "{first}");
+        let short = tr.text_timeline(1);
+        assert!(short.contains("… 2 more events"));
+    }
+}

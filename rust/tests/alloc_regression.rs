@@ -5,6 +5,9 @@
 //! pooled-buffer architecture of docs/PERF.md: Arc-shared broadcasts
 //! refreshed in place, frame buffers cycling through the fabric's
 //! `FramePool`, ring-buffer pool channels, and recycled decode partials.
+//! The flight recorder (fixed-capacity rings) and the metrics registry
+//! (fixed-slot atomics) are enabled too, so observability is covered by
+//! the same zero-allocation contract.
 //!
 //! This file intentionally contains a single #[test]: the counting
 //! allocator is process-global, and a concurrently running sibling test
@@ -16,8 +19,10 @@ use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
 use ef_sgd::coordinator::LrSchedule;
 use ef_sgd::metrics::Recorder;
 use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::obs::{RunMetrics, DEFAULT_RING_CAPACITY};
 use ef_sgd::util::alloc_count::{self, CountingAllocator};
 use ef_sgd::util::Pcg64;
+use std::sync::Arc;
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
@@ -44,6 +49,11 @@ fn make_driver(n: usize, d: usize, shards: usize, threads: usize) -> TrainDriver
         schedule: LrSchedule::constant(0.05),
         threads,
         shards,
+        // the flight recorder and metrics registry run at full tilt here:
+        // their hot paths (indexed ring writes, relaxed atomics) must also
+        // be allocation-free in the steady state
+        trace_capacity: DEFAULT_RING_CAPACITY,
+        metrics: Some(Arc::new(RunMetrics::new(n))),
         ..Default::default()
     };
     TrainDriver::new(cfg, workers, vec![1.0f32; d])
