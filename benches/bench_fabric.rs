@@ -17,7 +17,9 @@
 //! The acceptance bar from the PR issue: pooled ≥ 2x legacy rounds/sec on
 //! the dense-broadcast n = 16 configuration, and pooled allocs/round = 0.
 //! A full-engine row (TrainDriver, n = 16, threads = 4) is included for
-//! context. Emits `results/BENCH_fabric.json`.
+//! context, along with a sign decode+accumulate kernel row that times the
+//! vectorized word-unpack against its per-bit scalar reference (bitwise
+//! parity asserted; CI requires ≥ 2x). Emits `results/BENCH_fabric.json`.
 
 use ef_sgd::bench::quick_mode;
 use ef_sgd::collectives::{ShardPlan, ShardedParameterServer};
@@ -117,6 +119,61 @@ struct Row {
     rounds_per_sec: f64,
     allocs_per_round: f64,
     copied_bytes_per_round: u64,
+}
+
+/// Per-bit scalar reference for the sign decode kernel (the same contract
+/// as the `#[cfg(test)]` parity reference in `compress::wire`): one
+/// bounds-checked bit read and one branchy ±scale select per coordinate.
+fn scalar_sign_decode_add(e: &Encoded, acc: &mut [f32]) {
+    let b = &e.bytes;
+    let scale = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    let body = &b[4..];
+    let mut pos = 0u64;
+    for a in acc.iter_mut() {
+        let idx = (pos / 8) as usize;
+        assert!(idx < body.len(), "sign bit out of range");
+        let bit = (body[idx] >> (pos % 8)) & 1 == 1;
+        pos += 1;
+        *a += if bit { scale } else { -scale };
+    }
+}
+
+/// Vectorized-vs-scalar speedup of the fused sign decode+accumulate (the
+/// per-frame leader kernel the pooled gather runs): asserts bitwise parity
+/// first, then times both paths. Returns (Mcoord/s vectorized, speedup).
+fn bench_sign_kernel(d: usize) -> (f64, f64) {
+    let reps = if quick_mode() { 400u32 } else { 60 };
+    let mut rng = Pcg64::seeded(42);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    let frame = wire::encode_scaled_sign(&v);
+
+    let mut fast = vec![0.25f32; d];
+    let mut slow = fast.clone();
+    wire::decode_scaled_sign_add(&frame, &mut fast).expect("decode");
+    scalar_sign_decode_add(&frame, &mut slow);
+    assert!(
+        fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "sign decode parity"
+    );
+
+    let mut acc = vec![0.0f32; d];
+    let time = |f: &mut dyn FnMut()| {
+        f();
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t.elapsed().as_secs_f64() / f64::from(reps)
+    };
+    let t_vec = time(&mut || {
+        wire::decode_scaled_sign_add(std::hint::black_box(&frame), &mut acc).expect("decode");
+    });
+    let t_scalar = time(&mut || {
+        scalar_sign_decode_add(std::hint::black_box(&frame), &mut acc);
+    });
+    std::hint::black_box(&acc);
+    (d as f64 / t_vec / 1e6, t_scalar / t_vec)
 }
 
 fn measure<F: FnMut(u64)>(rounds: u64, mut f: F) -> (f64, f64) {
@@ -224,6 +281,13 @@ fn main() {
         "  pooled steady-state allocs/round: {pooled_allocs:.1} (acceptance bar: 0)"
     );
 
+    // ---- sign decode+accumulate kernel row --------------------------
+    let (sign_mcoords, sign_speedup) = bench_sign_kernel(d);
+    println!(
+        "  sign decode kernel: {sign_mcoords:.1} Mcoord/s, {sign_speedup:.2}x vs per-bit scalar \
+         (acceptance bar: >= 2x)"
+    );
+
     // ---- full engine context row ------------------------------------
     let mut driver = make_driver(n, d, 4);
     let mut rec = Recorder::new();
@@ -254,7 +318,9 @@ fn main() {
     let mut json = String::from("{\n  \"bench\": \"fabric_zero_copy\",\n");
     json.push_str(&format!(
         "  \"quick\": {},\n  \"workers\": {n},\n  \"d\": {d},\n  \
-         \"speedup_pooled_vs_legacy\": {speedup:.3},\n  \"configs\": [\n",
+         \"speedup_pooled_vs_legacy\": {speedup:.3},\n  \
+         \"sign_decode_mcoords_per_sec\": {sign_mcoords:.1},\n  \
+         \"sign_decode_speedup_vs_scalar\": {sign_speedup:.3},\n  \"configs\": [\n",
         quick_mode()
     ));
     for (i, r) in rows.iter().enumerate() {

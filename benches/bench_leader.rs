@@ -1,11 +1,15 @@
 //! Leader hot-path benchmark: full synchronous rounds at n ∈ {4, 16}
 //! workers, separating the leader's decode+aggregate wall-clock (via
 //! [`LeaderProfile`]) from whole-round throughput, for the scaled-sign and
-//! Elias-packed QSGD wire formats. Emits `results/BENCH_leader.json`
-//! (rounds/sec, bytes/round) so the perf trajectory of the
-//! gather→decode→aggregate path is tracked from this PR onward.
+//! Elias-packed QSGD wire formats, plus a decode-kernel microbench that
+//! pits the vectorized sign/QSGD decoders against their per-bit scalar
+//! references (bitwise parity asserted, speedup reported — CI requires
+//! ≥ 2x). Emits `results/BENCH_leader.json` (rounds/sec, bytes/round,
+//! kernel speedups) so the perf trajectory of the gather→decode→aggregate
+//! path is tracked from this PR onward.
 
 use ef_sgd::bench::{quick_mode, Bench};
+use ef_sgd::compress::wire::{self, Encoded};
 use ef_sgd::config::CompressorKind;
 use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
 use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
@@ -52,6 +56,179 @@ struct Row {
     push_mean_frame_bits: f64,
 }
 
+// ---------------------------------------------------------------- kernels
+//
+// Scalar baselines for the decode kernels, mirroring the `#[cfg(test)]`
+// bitwise-parity references in `compress::wire`: every bit flows through a
+// per-bit reader with a branchy sign select — the shape of the decoder
+// before the windowed BitReader and the branch-free sign unpack. The bench
+// asserts bitwise parity first, then reports vectorized-vs-scalar speedup
+// (the CI bar is ≥ 2x on these decode-dominated kernels).
+
+struct ScalarBitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> ScalarBitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn read_bit(&mut self) -> Option<bool> {
+        let idx = (self.pos / 8) as usize;
+        if idx >= self.bytes.len() {
+            return None;
+        }
+        let bit = (self.bytes[idx] >> (self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    fn read_bits32(&mut self, n: u32) -> Option<u32> {
+        let mut v = 0u32;
+        for i in 0..n {
+            v |= u32::from(self.read_bit()?) << i;
+        }
+        Some(v)
+    }
+
+    fn read_elias_gamma(&mut self) -> Option<u64> {
+        let mut zeros = 0u32;
+        while !self.read_bit()? {
+            zeros += 1;
+            if zeros > 63 {
+                return None;
+            }
+        }
+        let mut x = 1u64;
+        for _ in 0..zeros {
+            x = (x << 1) | u64::from(self.read_bit()?);
+        }
+        Some(x)
+    }
+}
+
+fn scalar_sign_decode_add(e: &Encoded, acc: &mut [f32]) {
+    let b = &e.bytes;
+    let scale = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    let mut r = ScalarBitReader::new(&b[4..]);
+    for a in acc.iter_mut() {
+        let bit = r.read_bit().expect("sign bit");
+        *a += if bit { scale } else { -scale };
+    }
+}
+
+fn scalar_qsgd_decode_add(e: &Encoded, acc: &mut [f32]) {
+    let mut r = ScalarBitReader::new(&e.bytes);
+    let norm = f32::from_bits(r.read_bits32(32).expect("norm"));
+    let s = r.read_bits32(8).expect("levels");
+    let s_f = s as f32;
+    for a in acc.iter_mut() {
+        let l = r.read_elias_gamma().expect("level") - 1;
+        if l > 0 {
+            let mag = norm * l as f32 / s_f;
+            if r.read_bit().expect("sign") {
+                *a -= mag;
+            } else {
+                *a += mag;
+            }
+        }
+    }
+}
+
+/// Mean seconds per call after one warm-up invocation.
+fn kernel_time<F: FnMut()>(reps: u32, mut f: F) -> f64 {
+    f();
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed().as_secs_f64() / f64::from(reps)
+}
+
+struct KernelRows {
+    d: usize,
+    sign_mcoords_per_sec: f64,
+    sign_decode_speedup: f64,
+    qsgd_mcoords_per_sec: f64,
+    qsgd_decode_speedup: f64,
+}
+
+fn bench_kernels(d: usize) -> KernelRows {
+    let reps = if quick_mode() { 400u32 } else { 60 };
+    let mut rng = Pcg64::seeded(42);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    let sign_frame = wire::encode_scaled_sign(&v);
+    // the qsgd input carries a deliberate spread of levels (level-0-heavy,
+    // like real gradients, but with enough multi-bit gamma codes to
+    // exercise the windowed reader) as exactly representable ±norm·l/s
+    // values, so the frame round-trips bit-faithfully
+    let s = 4u32;
+    let norm = 1.0f32;
+    let mut q = vec![0.0f32; d];
+    for (i, x) in q.iter_mut().enumerate() {
+        let l = [0.0f32, 0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 4.0][i % 8];
+        let mag = norm * l / s as f32;
+        *x = if i % 3 == 0 { -mag } else { mag };
+    }
+    let qsgd_frame = wire::encode_qsgd(&q, norm, s);
+
+    // bitwise parity before timing: the speedup is only meaningful if the
+    // two paths produce the identical accumulator
+    let mut fast = vec![0.25f32; d];
+    let mut slow = fast.clone();
+    wire::decode_scaled_sign_add(&sign_frame, &mut fast).expect("decode");
+    scalar_sign_decode_add(&sign_frame, &mut slow);
+    assert!(
+        fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "sign decode parity"
+    );
+    wire::decode_qsgd_add(&qsgd_frame, &mut fast).expect("decode");
+    scalar_qsgd_decode_add(&qsgd_frame, &mut slow);
+    assert!(
+        fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "qsgd decode parity"
+    );
+
+    let mut acc = vec![0.0f32; d];
+    let t_sign_vec = kernel_time(reps, || {
+        wire::decode_scaled_sign_add(std::hint::black_box(&sign_frame), &mut acc).expect("decode");
+    });
+    let t_sign_scalar = kernel_time(reps, || {
+        scalar_sign_decode_add(std::hint::black_box(&sign_frame), &mut acc);
+    });
+    std::hint::black_box(&acc);
+    acc.fill(0.0);
+    let t_qsgd_vec = kernel_time(reps, || {
+        wire::decode_qsgd_add(std::hint::black_box(&qsgd_frame), &mut acc).expect("decode");
+    });
+    let t_qsgd_scalar = kernel_time(reps, || {
+        scalar_qsgd_decode_add(std::hint::black_box(&qsgd_frame), &mut acc);
+    });
+    std::hint::black_box(&acc);
+
+    let rows = KernelRows {
+        d,
+        sign_mcoords_per_sec: d as f64 / t_sign_vec / 1e6,
+        sign_decode_speedup: t_sign_scalar / t_sign_vec,
+        qsgd_mcoords_per_sec: d as f64 / t_qsgd_vec / 1e6,
+        qsgd_decode_speedup: t_qsgd_scalar / t_qsgd_vec,
+    };
+    println!("\n== bench group: decode kernels, vectorized vs per-bit scalar (d = {d}) ==");
+    println!(
+        "  sign  {:>9.1} Mcoord/s  speedup {:>6.2}x   (word unpack + branch-free ±scale)",
+        rows.sign_mcoords_per_sec, rows.sign_decode_speedup
+    );
+    println!(
+        "  qsgd  {:>9.1} Mcoord/s  speedup {:>6.2}x   (windowed Elias-gamma reader)",
+        rows.qsgd_mcoords_per_sec, rows.qsgd_decode_speedup
+    );
+    println!("== end group ==");
+    rows
+}
+
 fn main() {
     let d = if quick_mode() { 16_384 } else { 262_144 };
     let mut b = Bench::new(&format!("leader decode+aggregate (d = {d})"));
@@ -83,9 +260,22 @@ fn main() {
     }
     b.finish();
 
+    let kernels = bench_kernels(d);
+
     // hand-rolled JSON (no serde offline); one object per config row
     let mut json = String::from("{\n  \"bench\": \"leader_decode_aggregate\",\n");
-    json.push_str(&format!("  \"quick\": {},\n  \"configs\": [\n", quick_mode()));
+    json.push_str(&format!("  \"quick\": {},\n", quick_mode()));
+    json.push_str(&format!(
+        "  \"kernels\": {{\"d\": {}, \"sign_mcoords_per_sec\": {:.1}, \
+         \"sign_decode_speedup\": {:.3}, \"qsgd_mcoords_per_sec\": {:.1}, \
+         \"qsgd_decode_speedup\": {:.3}}},\n",
+        kernels.d,
+        kernels.sign_mcoords_per_sec,
+        kernels.sign_decode_speedup,
+        kernels.qsgd_mcoords_per_sec,
+        kernels.qsgd_decode_speedup
+    ));
+    json.push_str("  \"configs\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"workers\": {}, \"threads\": {}, \"d\": {}, \"compressor\": \"{}\", \

@@ -98,6 +98,7 @@ fn takes_value(key: &str) -> bool {
             | "straggler"
             | "compute-ms"
             | "link"
+            | "leader-cost"
             | "shards"
             | "aggregation"
             | "adversary"
@@ -144,6 +145,15 @@ ASYNC TRAINING (train):
                          failslow:NODE[:FACTOR]   (default constant)
     --compute-ms <t>     Base per-step compute time on the virtual clock
     --link <preset>      Fabric link: 10gbe | 1gbe | ib | wan
+    --link-serialized    Serialize each sender's uplink: frames from one
+                         node queue FIFO on its link (transmission starts
+                         at max(node time, link free time)) instead of
+                         overlapping; trained bits are unchanged, only
+                         sim_time_s moves. See docs/WIRE.md
+    --leader-cost <m>    Leader decode pricing: measured (wall-clock
+                         profile, default) | calibrated (analytic
+                         per-coordinate model — sim_time_s becomes a pure
+                         function of the seeded models, machine-independent)
     --toy                Train on the toy quadratic (no PJRT artifacts)
 
 ROBUSTNESS (train):

@@ -89,21 +89,20 @@ impl ErrorFeedback {
     /// error-corrected gradient (the quantity Fig. 2 tracks).
     ///
     /// The enabled/disabled branch is hoisted out of the per-coordinate
-    /// loop: each specialization is a straight-line fused multiply-add
-    /// kernel the compiler can autovectorize, instead of a conditional
-    /// select evaluated d times.
+    /// loop, and both the correction (`p = γg + e`) and the residual
+    /// update (`e = p − δ`) run through the lane-blocked elementwise
+    /// kernels in [`crate::tensor`] — fixed-width `chunks_exact` blocks
+    /// the compiler turns into straight SIMD, with per-coordinate values
+    /// bit-identical to the historical inline loops (elementwise, no
+    /// cross-lane reduction; see docs/PERF.md).
     // detlint: hot
     pub fn step_into(&mut self, gamma: f32, g: &[f32], delta: &mut [f32], rng: &mut Pcg64) -> f64 {
         assert_eq!(g.len(), self.e.len(), "gradient dim mismatch");
         assert_eq!(delta.len(), self.e.len());
         if self.enabled {
-            for ((p, e), gi) in self.p.iter_mut().zip(&self.e).zip(g) {
-                *p = gamma * *gi + *e;
-            }
+            tensor::scaled_add_into(gamma, g, &self.e, &mut self.p);
         } else {
-            for (p, gi) in self.p.iter_mut().zip(g) {
-                *p = gamma * *gi;
-            }
+            tensor::scale_into(gamma, g, &mut self.p);
         }
         let phi = if self.track_density {
             tensor::density(&self.p)
@@ -112,9 +111,7 @@ impl ErrorFeedback {
         };
         self.compressor.compress(&self.p, delta, rng);
         if self.enabled {
-            for ((e, p), d) in self.e.iter_mut().zip(&self.p).zip(delta.iter()) {
-                *e = *p - *d;
-            }
+            tensor::sub(&self.p, delta, &mut self.e);
         }
         self.steps += 1;
         phi

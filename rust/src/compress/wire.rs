@@ -135,24 +135,58 @@ impl BitWriter {
     }
 }
 
-/// Bit-level reader matching [`BitWriter`].
+/// Bit-level reader matching [`BitWriter`], built around a residual u64
+/// window: bytes are fetched into `window` once and every read serves from
+/// it, so a read that straddles a refill boundary never re-fetches (the
+/// historical reader re-shifted per bit). Zero runs in the Elias-gamma
+/// path are counted with one `trailing_zeros` (a count-zeros instruction)
+/// instead of a bit-at-a-time loop. Byte stream semantics are unchanged
+/// (LSB-first within each byte, truncation at byte granularity) —
+/// asserted bit-for-bit against the retained per-bit reference reader by
+/// `prop_windowed_reader_matches_scalar`.
 pub struct BitReader<'a> {
     bytes: &'a [u8],
-    pos: u64,
+    /// Index of the next unfetched byte.
+    byte_pos: usize,
+    /// Fetched-but-unread stream bits, LSB-first (oldest bit = bit 0).
+    /// Invariant: every bit at position ≥ `avail` is zero.
+    window: u64,
+    /// Number of valid bits in `window` (≤ 64).
+    avail: u32,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(bytes: &'a [u8]) -> Self {
-        BitReader { bytes, pos: 0 }
+        BitReader {
+            bytes,
+            byte_pos: 0,
+            window: 0,
+            avail: 0,
+        }
     }
 
-    pub fn read_bit(&mut self) -> Option<bool> {
-        let idx = (self.pos / 8) as usize;
-        if idx >= self.bytes.len() {
-            return None;
+    /// Top the window up to > 56 valid bits (or until the bytes run out):
+    /// whole bytes land above the residual, preserving stream order.
+    #[inline]
+    fn refill(&mut self) {
+        while self.avail <= 56 && self.byte_pos < self.bytes.len() {
+            self.window |= u64::from(self.bytes[self.byte_pos]) << self.avail;
+            self.avail += 8;
+            self.byte_pos += 1;
         }
-        let bit = (self.bytes[idx] >> (self.pos % 8)) & 1 == 1;
-        self.pos += 1;
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        if self.avail == 0 {
+            self.refill();
+            if self.avail == 0 {
+                return None;
+            }
+        }
+        let bit = self.window & 1 == 1;
+        self.window >>= 1;
+        self.avail -= 1;
         Some(bit)
     }
 
@@ -162,48 +196,94 @@ impl<'a> BitReader<'a> {
     }
 
     /// Read `n` bits (LSB first) into a 64-bit word — the counterpart of
-    /// [`BitWriter::push_bits64`].
-    /// Fast path: byte-aligned whole-byte reads (the codecs keep their
-    /// multi-bit fields byte-aligned).
+    /// [`BitWriter::push_bits64`]. Served from the residual window; at
+    /// most one refill per call.
+    // detlint: hot
     pub fn read_bits64(&mut self, n: u32) -> Option<u64> {
         debug_assert!(n <= 64);
-        if self.pos % 8 == 0 && n % 8 == 0 {
-            let start = (self.pos / 8) as usize;
-            let nbytes = (n / 8) as usize;
-            if start + nbytes > self.bytes.len() {
-                return None;
-            }
-            let mut v = 0u64;
-            for (i, b) in self.bytes[start..start + nbytes].iter().enumerate() {
-                v |= (*b as u64) << (8 * i);
-            }
-            self.pos += n as u64;
+        if n == 0 {
+            return Some(0);
+        }
+        if self.avail < n {
+            self.refill();
+        }
+        if n <= self.avail {
+            let v = if n == 64 {
+                self.window
+            } else {
+                self.window & ((1u64 << n) - 1)
+            };
+            self.window = if n == 64 { 0 } else { self.window >> n };
+            self.avail -= n;
             return Some(v);
         }
-        let mut v = 0u64;
-        for i in 0..n {
-            if self.read_bit()? {
-                v |= 1 << i;
-            }
+        // Straddle: the refill tops up to at most 63 residual bits when it
+        // stops above 56 mid-stream, so n ∈ {58..=64} can still exceed it.
+        // Take everything the window holds, refill, take the rest — the
+        // already-taken bits are never re-fetched.
+        let have = self.avail; // ≥ 1 unless the bytes are exhausted
+        if have == 0 {
+            return None;
         }
-        Some(v)
+        let low = self.window;
+        self.window = 0;
+        self.avail = 0;
+        self.refill();
+        let need = n - have; // ≤ 63 because have ≥ 1
+        if need > self.avail {
+            return None; // truncated mid-read (callers bail on None)
+        }
+        let hi = self.window & ((1u64 << need) - 1);
+        self.window >>= need;
+        self.avail -= need;
+        Some(low | (hi << have))
     }
 
     /// Read one Elias-gamma-coded positive integer — the counterpart of
-    /// [`BitWriter::push_elias_gamma`].
+    /// [`BitWriter::push_elias_gamma`]. The leading zero run is counted
+    /// whole-window via `trailing_zeros` (the window invariant keeps junk
+    /// bits zero, so a non-zero window locates its terminator in one
+    /// instruction) and the suffix is one [`read_bits64`] — no per-bit
+    /// loop anywhere.
+    // detlint: hot
     pub fn read_elias_gamma(&mut self) -> Option<u64> {
         let mut zeros = 0u32;
-        while !self.read_bit()? {
-            zeros += 1;
-            if zeros > 63 {
-                return None; // not a valid gamma code for a u64
+        loop {
+            if self.avail == 0 {
+                self.refill();
+                if self.avail == 0 {
+                    return None;
+                }
             }
+            if self.window != 0 {
+                // invariant: bits ≥ avail are zero, so the lowest set bit
+                // is a real stream bit — the run below it is all zeros
+                let run = self.window.trailing_zeros();
+                zeros += run;
+                if zeros > 63 {
+                    return None; // not a valid gamma code for a u64
+                }
+                // consume the zero run and its 1-terminator (used == 64
+                // exactly when a 63-zero run fills a fresh window)
+                let used = run + 1;
+                self.window = if used == 64 { 0 } else { self.window >> used };
+                self.avail -= used;
+                break;
+            }
+            // every valid bit in the window is zero: consume them all
+            zeros += self.avail;
+            if zeros > 63 {
+                return None;
+            }
+            self.avail = 0;
         }
-        let mut x = 1u64;
-        for _ in 0..zeros {
-            x = (x << 1) | u64::from(self.read_bit()?);
+        if zeros == 0 {
+            return Some(1);
         }
-        Some(x)
+        // suffix: x's bits below the MSB, stream order MSB-first — an
+        // LSB-first word read is the bit-reversal within its width
+        let low = self.read_bits64(zeros)?;
+        Some((1u64 << zeros) | (low.reverse_bits() >> (64 - zeros)))
     }
 
     pub fn read_f32(&mut self) -> Option<f32> {
@@ -395,6 +475,9 @@ pub fn decode_dense(e: &Encoded) -> Result<Vec<f32>, WireError> {
 }
 
 /// Decode dense straight into a sum accumulator (fused leader hot path).
+/// `chunks_exact(4)` fixes the lane shape so the byte-to-f32 loads and the
+/// elementwise adds autovectorize; per-coordinate add order is unchanged.
+// detlint: hot
 pub fn decode_dense_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     if e.format != Format::DenseF32 {
         return Err(WireError::Format(Format::DenseF32, e.format));
@@ -473,45 +556,62 @@ fn sign_payload(e: &Encoded) -> Result<(f32, &[u8]), WireError> {
     Ok((scale, &b[4..]))
 }
 
+/// The ±scale of one packed sign bit, by xor-ing the f32 sign bit: a set
+/// wire bit selects `+scale`, a clear one `-scale`. Produces the exact
+/// bit pattern of the old `if bit { scale } else { -scale }` select
+/// (unary f32 negation flips the sign bit and nothing else), but with no
+/// per-bit branch — the sign unpack loops below compile to straight-line
+/// lane arithmetic the autovectorizer can widen.
+#[inline(always)]
+fn sign_lane(pos_bits: u32, bit: u64) -> f32 {
+    f32::from_bits(pos_bits ^ (((bit as u32) ^ 1) << 31))
+}
+
 /// Decode to the dense update vector `scale * sign` (word-wise unpack into
 /// a preallocated buffer; branch-free lane fill, 64 lanes per load).
 pub fn decode_scaled_sign(e: &Encoded) -> Result<Vec<f32>, WireError> {
     let (scale, body) = sign_payload(e)?;
+    let pos = scale.to_bits();
     let mut out = vec![0.0f32; e.d];
     let full = e.d / 64; // sign_payload guarantees body.len() >= ceil(d/8)
     let mut chunks = out.chunks_exact_mut(64);
     for (c, w) in (&mut chunks).zip(body.chunks_exact(8).take(full)) {
         let word = u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]);
         for (j, o) in c.iter_mut().enumerate() {
-            *o = if word >> j & 1 == 1 { scale } else { -scale };
+            *o = sign_lane(pos, word >> j & 1);
         }
     }
     for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[full * 8..]) {
         for (j, o) in sub.iter_mut().enumerate() {
-            *o = if byte >> j & 1 == 1 { scale } else { -scale };
+            *o = sign_lane(pos, u64::from(byte >> j) & 1);
         }
     }
     Ok(out)
 }
 
 /// Decode straight into a sum accumulator (the parameter-server hot path:
-/// no intermediate dense vector).
+/// no intermediate dense vector). Elementwise `acc[i] += ±scale` in
+/// coordinate order — per-output-coordinate summation order is identical
+/// to the scalar reference, so the result is bitwise identical (asserted
+/// by `prop_vectorized_decode_add_matches_scalar`).
+// detlint: hot
 pub fn decode_scaled_sign_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     let (scale, body) = sign_payload(e)?;
     if acc.len() != e.d {
         return Err(WireError::Truncated);
     }
+    let pos = scale.to_bits();
     let full = e.d / 64;
     let mut chunks = acc.chunks_exact_mut(64);
     for (c, w) in (&mut chunks).zip(body.chunks_exact(8).take(full)) {
         let word = u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]);
         for (j, a) in c.iter_mut().enumerate() {
-            *a += if word >> j & 1 == 1 { scale } else { -scale };
+            *a += sign_lane(pos, word >> j & 1);
         }
     }
     for (sub, byte) in chunks.into_remainder().chunks_mut(8).zip(&body[full * 8..]) {
         for (j, a) in sub.iter_mut().enumerate() {
-            *a += if byte >> j & 1 == 1 { scale } else { -scale };
+            *a += sign_lane(pos, u64::from(byte >> j) & 1);
         }
     }
     Ok(())
@@ -577,6 +677,7 @@ pub fn decode_sparse(e: &Encoded) -> Result<Vec<f32>, WireError> {
 
 /// Decode sparse straight into a sum accumulator: only the stored non-zeros
 /// are touched, so a top-k frame costs O(k), not O(d), to aggregate.
+// detlint: hot
 pub fn decode_sparse_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     if e.format != Format::SparseIdxVal {
         return Err(WireError::Format(Format::SparseIdxVal, e.format));
@@ -665,6 +766,7 @@ pub fn decode_ternary(e: &Encoded) -> Result<Vec<f32>, WireError> {
 }
 
 /// Decode ternary straight into a sum accumulator (fused leader hot path).
+// detlint: hot
 pub fn decode_ternary_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     if e.format != Format::Ternary {
         return Err(WireError::Format(Format::Ternary, e.format));
@@ -815,7 +917,11 @@ pub fn decode_qsgd(e: &Encoded) -> Result<Vec<f32>, WireError> {
 }
 
 /// Decode a QSGD frame straight into a sum accumulator: level-0
-/// coordinates (the vast majority) cost one bit-read and no write.
+/// coordinates (the vast majority) cost one bit-read and no write. The
+/// throughput win over the historical path comes from the windowed
+/// [`BitReader`]: the gamma zero-run is one `trailing_zeros` and the
+/// suffix one word read, instead of a per-bit loop.
+// detlint: hot
 pub fn decode_qsgd_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
     let (norm, s, mut r) = qsgd_header(e)?;
     if acc.len() != e.d {
@@ -1612,5 +1718,293 @@ mod tests {
         encode_qsgd_into(&q, norm, 4, &mut e);
         assert_eq!(e.bytes, encode_qsgd(&q, norm, 4).bytes);
         assert!(e.shard.is_none());
+    }
+
+    // ----------------------------------------------- scalar reference path
+    //
+    // The historical per-bit reader and per-coordinate decoders, retained
+    // verbatim as the bitwise-parity oracle for the windowed/vectorized
+    // kernels. Slow on purpose: one bit (or one coordinate) at a time, no
+    // word windows, no branchless lanes.
+
+    /// The pre-windowing [`BitReader`]: a bare bit cursor over the byte
+    /// slice, one shift-and-mask per bit.
+    struct ScalarBitReader<'a> {
+        bytes: &'a [u8],
+        pos: u64,
+    }
+
+    impl<'a> ScalarBitReader<'a> {
+        fn new(bytes: &'a [u8]) -> Self {
+            ScalarBitReader { bytes, pos: 0 }
+        }
+
+        fn read_bit(&mut self) -> Option<bool> {
+            let idx = (self.pos / 8) as usize;
+            if idx >= self.bytes.len() {
+                return None;
+            }
+            let bit = (self.bytes[idx] >> (self.pos % 8)) & 1;
+            self.pos += 1;
+            Some(bit == 1)
+        }
+
+        fn read_bits64(&mut self, n: u32) -> Option<u64> {
+            let mut v = 0u64;
+            for i in 0..n {
+                v |= u64::from(self.read_bit()?) << i;
+            }
+            Some(v)
+        }
+
+        fn read_bits(&mut self, n: u32) -> Option<u32> {
+            self.read_bits64(n).map(|v| v as u32)
+        }
+
+        fn read_f32(&mut self) -> Option<f32> {
+            self.read_bits(32).map(f32::from_bits)
+        }
+
+        fn read_elias_gamma(&mut self) -> Option<u64> {
+            let mut zeros = 0u32;
+            while !self.read_bit()? {
+                zeros += 1;
+                if zeros > 63 {
+                    return None;
+                }
+            }
+            let mut x = 1u64;
+            for _ in 0..zeros {
+                x = (x << 1) | u64::from(self.read_bit()?);
+            }
+            Some(x)
+        }
+    }
+
+    /// The windowed reader is call-for-call identical to the per-bit
+    /// reference on random mixed read scripts over random write scripts —
+    /// including the reads that run off the end of the stream (both
+    /// readers expose the same byte-granularity truncation semantics).
+    #[test]
+    fn prop_windowed_reader_matches_scalar() {
+        use crate::propcheck::UsizeRange;
+        propcheck::check_with(
+            &propcheck::Config {
+                cases: 300,
+                ..Default::default()
+            },
+            &UsizeRange(1, 100_000),
+            |&seed| {
+                let mut rng = Pcg64::seeded(seed as u64);
+                let mut w = BitWriter::new();
+                for _ in 0..rng.below(50) {
+                    match rng.below(3) {
+                        0 => w.push_bit(rng.next_u32() & 1 == 1),
+                        1 => {
+                            let n = 1 + rng.below(64) as u32;
+                            w.push_bits64(rng.next_u64(), n);
+                        }
+                        _ => w.push_elias_gamma(1 + rng.next_u64() % (1 << 40)),
+                    }
+                }
+                let (bytes, _) = w.into_bytes();
+                let mut fast = BitReader::new(&bytes);
+                let mut slow = ScalarBitReader::new(&bytes);
+                // read with an unrelated random script: alignments, widths
+                // and gamma probes all land at arbitrary cursor offsets,
+                // and the tail read exercises end-of-stream behaviour.
+                // Stop at the first None: decoders abandon a reader on
+                // None, so post-failure cursor state is out of contract
+                // (a >63-zero gamma probe may consume different amounts).
+                for _ in 0..80 {
+                    let (a, b) = match rng.below(4) {
+                        0 => (
+                            fast.read_bit().map(u64::from),
+                            slow.read_bit().map(u64::from),
+                        ),
+                        1 => {
+                            let n = rng.below(65) as u32;
+                            (fast.read_bits64(n), slow.read_bits64(n))
+                        }
+                        2 => {
+                            let n = rng.below(33) as u32;
+                            (
+                                fast.read_bits(n).map(u64::from),
+                                slow.read_bits(n).map(u64::from),
+                            )
+                        }
+                        _ => (fast.read_elias_gamma(), slow.read_elias_gamma()),
+                    };
+                    if a != b {
+                        return false;
+                    }
+                    if a.is_none() {
+                        break;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Scalar reference decode-accumulate for every wire format: the exact
+    /// per-coordinate arithmetic of the vectorized kernels, driven bit by
+    /// bit. Any divergence in value *or* in f32 add order shows up as a
+    /// `to_bits` mismatch in the parity tests below.
+    fn scalar_decode_add(e: &Encoded, acc: &mut [f32]) -> Result<(), WireError> {
+        assert_eq!(acc.len(), e.d);
+        match e.format {
+            Format::DenseF32 => {
+                if e.bytes.len() < e.d * 4 {
+                    return Err(WireError::Truncated);
+                }
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let b = &e.bytes[i * 4..i * 4 + 4];
+                    *a += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+            Format::SignScaled => {
+                let (scale, body) = sign_payload(e)?;
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let bit = (body[i / 8] >> (i % 8)) & 1;
+                    *a += if bit == 1 { scale } else { -scale };
+                }
+            }
+            Format::SparseIdxVal => {
+                let mut r = ScalarBitReader::new(&e.bytes);
+                let count = r.read_bits(32).ok_or(WireError::Truncated)? as usize;
+                if count > e.d {
+                    return Err(WireError::Malformed);
+                }
+                for _ in 0..count {
+                    let i = r.read_bits(32).ok_or(WireError::Truncated)? as usize;
+                    let x = r.read_f32().ok_or(WireError::Truncated)?;
+                    if i >= e.d || !x.is_finite() {
+                        return Err(WireError::Malformed);
+                    }
+                    acc[i] += x;
+                }
+            }
+            Format::Ternary => {
+                let mut r = ScalarBitReader::new(&e.bytes);
+                let m = r.read_f32().ok_or(WireError::Truncated)?;
+                for a in acc.iter_mut() {
+                    match r.read_bits(2).ok_or(WireError::Truncated)? {
+                        0 => {}
+                        1 => *a += m,
+                        _ => *a -= m,
+                    }
+                }
+            }
+            Format::Qsgd => {
+                let mut r = ScalarBitReader::new(&e.bytes);
+                let norm = r.read_f32().ok_or(WireError::Truncated)?;
+                let s = r.read_bits(8).ok_or(WireError::Truncated)?;
+                let s_f = s as f32;
+                for a in acc.iter_mut() {
+                    let l = r.read_elias_gamma().ok_or(WireError::Truncated)? - 1;
+                    if l > u64::from(s) {
+                        return Err(WireError::Malformed);
+                    }
+                    if l > 0 {
+                        let mag = norm * l as f32 / s_f;
+                        if r.read_bit().ok_or(WireError::Truncated)? {
+                            *a -= mag;
+                        } else {
+                            *a += mag;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build one valid frame of each format over a shared gaussian vector
+    /// slice (seeded per call so shard slices get distinct content).
+    fn frames_for(p: &[f32], seed: u64) -> [Encoded; Format::COUNT] {
+        let d = p.len();
+        let sparse_v = TopK::count((d / 4).max(1)).compress_vec(p, &mut Pcg64::seeded(seed));
+        let tern_v = TernGrad.compress_vec(p, &mut Pcg64::seeded(seed + 1));
+        let qsgd_v = Qsgd::new(4).compress_vec(p, &mut Pcg64::seeded(seed + 2));
+        let norm = crate::tensor::norm2(p) as f32;
+        [
+            encode_dense(p),
+            encode_scaled_sign(p),
+            encode_sparse(&sparse_v),
+            encode_ternary(&tern_v),
+            encode_qsgd(&qsgd_v, norm, 4),
+        ]
+    }
+
+    /// Tentpole parity bar: for every wire format and every alignment
+    /// class d mod 64 ∈ {0, 1, 63}, the vectorized `decode_any_add` is
+    /// **bitwise** identical (f32::to_bits per coordinate) to the scalar
+    /// per-bit reference on a non-trivial accumulator.
+    #[test]
+    fn prop_vectorized_decode_add_matches_scalar() {
+        let mut rng = Pcg64::seeded(31);
+        for d in [1usize, 63, 64, 65, 127, 128, 191, 192] {
+            let mut p = vec![0.0f32; d];
+            rng.fill_normal(&mut p, 0.0, 1.0);
+            for e in &frames_for(&p, d as u64) {
+                let init: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+                let mut fast = init.clone();
+                let mut slow = init;
+                decode_any_add(e, &mut fast).unwrap();
+                scalar_decode_add(e, &mut slow).unwrap();
+                for i in 0..d {
+                    assert_eq!(
+                        fast[i].to_bits(),
+                        slow[i].to_bits(),
+                        "{:?} d={d} i={i}: {} vs {}",
+                        e.format,
+                        fast[i],
+                        slow[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Sharded variant of the parity bar: slice the vector with a 4-way
+    /// [`crate::collectives::ShardPlan`], encode each slice as a tagged
+    /// frame (exactly what workers push), decode each into its coordinate
+    /// range — still bitwise identical to the scalar reference. Shard
+    /// boundaries land at ragged offsets, so the word kernels hit partial
+    /// leading/trailing lanes.
+    #[test]
+    fn prop_vectorized_decode_add_matches_scalar_sharded() {
+        use crate::collectives::ShardPlan;
+        let mut rng = Pcg64::seeded(37);
+        for d in [63usize, 64, 65, 191, 192] {
+            let mut p = vec![0.0f32; d];
+            rng.fill_normal(&mut p, 0.0, 1.0);
+            for shards in [1usize, 4] {
+                let plan = ShardPlan::new(d, shards);
+                for fi in 0..Format::COUNT {
+                    let init: Vec<f32> =
+                        (0..d).map(|i| (i as f32 * 0.53).cos() * 2.0).collect();
+                    let mut fast = init.clone();
+                    let mut slow = init;
+                    for s in 0..plan.num_shards() {
+                        let r = plan.range(s);
+                        let e = frames_for(&p[r.clone()], (d + s) as u64)[fi]
+                            .clone()
+                            .with_shard(s as u16, r.start as u32);
+                        decode_any_add(&e, &mut fast[r.clone()]).unwrap();
+                        scalar_decode_add(&e, &mut slow[r]).unwrap();
+                    }
+                    for i in 0..d {
+                        assert_eq!(
+                            fast[i].to_bits(),
+                            slow[i].to_bits(),
+                            "{:?} d={d} shards={shards} i={i}",
+                            Format::ALL[fi]
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -330,6 +330,13 @@ pub struct TrainConfig {
     pub compute_ms: f64,
     /// Link preset for the fabric (`10gbe`, `1gbe`, `ib`, `wan`).
     pub link: String,
+    /// Serialize each sender's uplink (CLI `--link-serialized`): frames
+    /// from one node queue FIFO on its link instead of overlapping.
+    pub link_serialized: bool,
+    /// Leader decode-cost pricing: `measured` (wall-clock profile, the
+    /// historical default) or `calibrated` (the analytic
+    /// `DecodeCostModel`, machine-independent `sim_time_s`).
+    pub leader_cost: String,
     /// Flight-recorder ring capacity per node when `--trace` is given
     /// (events kept per track; the ring overwrites its oldest entries).
     pub trace_ring: usize,
@@ -363,6 +370,8 @@ impl Default for TrainConfig {
             adversary: "none".into(),
             compute_ms: 1.0,
             link: "10gbe".into(),
+            link_serialized: false,
+            leader_cost: "measured".into(),
             trace_ring: crate::obs::trace::DEFAULT_RING_CAPACITY,
         }
     }
@@ -396,6 +405,15 @@ impl TrainConfig {
         let link = m.str_or("training.link", &d.link);
         if crate::net::LinkModel::preset(&link).is_none() {
             return Err(ConfigError::BadValue("training.link".into(), link));
+        }
+        // leader-cost pricing mode is a closed two-value set; a typo here
+        // would silently fall back to measured timing, so validate it
+        let leader_cost = m.str_or("training.leader_cost", &d.leader_cost);
+        if !matches!(leader_cost.as_str(), "measured" | "calibrated") {
+            return Err(ConfigError::BadValue(
+                "training.leader_cost".into(),
+                format!("{leader_cost} (must be 'measured' or 'calibrated')"),
+            ));
         }
         // adversary and aggregation specs likewise fail at load time
         let adversary = m.str_or("training.adversary", &d.adversary);
@@ -453,6 +471,8 @@ impl TrainConfig {
             adversary,
             compute_ms: m.f64_or("training.compute_ms", d.compute_ms),
             link,
+            link_serialized: m.bool_or("training.link_serialized", d.link_serialized),
+            leader_cost,
             trace_ring,
         })
     }

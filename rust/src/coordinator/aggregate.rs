@@ -61,6 +61,11 @@ pub struct DecodeScratch {
     /// Robust-aggregation scratch: one coordinate's values across the
     /// live workers, in worker-id order.
     column: Vec<f32>,
+    /// Robust-aggregation scratch: an n × [`COL_BLOCK`] gather block
+    /// (worker-major) so the per-coordinate rules read the per-worker
+    /// vectors in contiguous runs instead of one strided element at a
+    /// time.
+    block: Vec<f32>,
     /// Robust-aggregation scratch: value-sorted positions of `column`.
     order: Vec<u32>,
     /// Robust-aggregation scratch: per-column trim mask.
@@ -79,6 +84,13 @@ pub struct DecodeScratch {
 /// Norm-thresholding cutoff: a worker whose update norm exceeds this
 /// multiple of the median live-worker norm is excluded from the mean.
 pub const NORM_THRESHOLD_FACTOR: f64 = 2.0;
+
+/// Coordinates gathered per robust-reduce block: each kept worker
+/// contributes this many contiguous values to the gather block before the
+/// per-column rule runs. Purely a memory-access restructure — the values
+/// entering each column, and their worker-id order, are exactly those of
+/// the historical one-coordinate-at-a-time gather.
+pub const COL_BLOCK: usize = 8;
 
 /// How the leader combines per-worker updates.
 ///
@@ -250,6 +262,7 @@ impl Aggregation {
                     &s.decoded,
                     out,
                     &mut s.column,
+                    &mut s.block,
                     &mut s.order,
                     &mut s.trimmed,
                     &mut s.keep,
@@ -362,6 +375,7 @@ impl Aggregation {
                     &mut Vec::new(),
                     &mut Vec::new(),
                     &mut Vec::new(),
+                    &mut Vec::new(),
                 );
                 out
             }
@@ -396,6 +410,7 @@ fn robust_reduce_into(
     decoded: &[usize],
     out: &mut [f32],
     column: &mut Vec<f32>,
+    block: &mut Vec<f32>,
     order: &mut Vec<u32>,
     trimmed: &mut Vec<bool>,
     keep: &mut Vec<bool>,
@@ -449,56 +464,74 @@ fn robust_reduce_into(
         }
         return;
     }
-    for (j, o) in out.iter_mut().enumerate() {
-        column.clear();
-        for w in 0..n {
+    // Blocked gather: walk the output in COL_BLOCK-coordinate blocks and
+    // copy each kept worker's contiguous slice of the block into `block`
+    // (worker-major rows). The per-column rule then reads its column out
+    // of that compact block — the same values in the same worker-id order
+    // as the historical one-element-per-worker strided gather, but each
+    // per-worker vector is touched once per block in a contiguous run.
+    let d = out.len();
+    let mut j0 = 0usize;
+    while j0 < d {
+        let b = COL_BLOCK.min(d - j0);
+        block.clear();
+        for (w, p) in partials.iter().enumerate() {
             if keep[w] {
-                column.push(partials[w][j]);
+                block.extend_from_slice(&p[j0..j0 + b]);
             }
         }
-        let m = column.len();
+        let m = block.len() / b;
         if m == 0 {
-            *o = 0.0;
+            out[j0..j0 + b].fill(0.0);
+            j0 += b;
             continue;
         }
-        *o = match agg {
-            Aggregation::Median => {
-                column.sort_unstable_by(|a, b| f32::total_cmp(a, b));
-                if m % 2 == 1 {
-                    column[m / 2]
-                } else {
-                    (column[m / 2 - 1] + column[m / 2]) * 0.5
-                }
+        for (c, o) in out[j0..j0 + b].iter_mut().enumerate() {
+            column.clear();
+            for i in 0..m {
+                column.push(block[i * b + c]);
             }
-            Aggregation::TrimmedMean(k) => {
-                // at least one value must survive the 2k discards
-                let k = k.min((m - 1) / 2);
-                trimmed.clear();
-                trimmed.resize(m, false);
-                if k > 0 {
-                    order.clear();
-                    for i in 0..m as u32 {
-                        order.push(i);
-                    }
-                    order.sort_unstable_by(|a, b| {
-                        f32::total_cmp(&column[*a as usize], &column[*b as usize]).then(a.cmp(b))
-                    });
-                    for &i in order[..k].iter().chain(order[m - k..].iter()) {
-                        trimmed[i as usize] = true;
+            *o = match agg {
+                Aggregation::Median => {
+                    column.sort_unstable_by(|a, b| f32::total_cmp(a, b));
+                    if m % 2 == 1 {
+                        column[m / 2]
+                    } else {
+                        (column[m / 2 - 1] + column[m / 2]) * 0.5
                     }
                 }
-                // mean of the survivors, summed in worker-id order (k = 0
-                // replays Mean's per-worker sum order exactly)
-                let mut acc = 0.0f32;
-                for i in 0..m {
-                    if !trimmed[i] {
-                        acc += column[i];
+                Aggregation::TrimmedMean(k) => {
+                    // at least one value must survive the 2k discards
+                    let k = k.min((m - 1) / 2);
+                    trimmed.clear();
+                    trimmed.resize(m, false);
+                    if k > 0 {
+                        order.clear();
+                        for i in 0..m as u32 {
+                            order.push(i);
+                        }
+                        order.sort_unstable_by(|a, b| {
+                            f32::total_cmp(&column[*a as usize], &column[*b as usize])
+                                .then(a.cmp(b))
+                        });
+                        for &i in order[..k].iter().chain(order[m - k..].iter()) {
+                            trimmed[i as usize] = true;
+                        }
                     }
+                    // mean of the survivors, summed in worker-id order
+                    // (k = 0 replays Mean's per-worker sum order exactly)
+                    let mut acc = 0.0f32;
+                    for i in 0..m {
+                        if !trimmed[i] {
+                            acc += column[i];
+                        }
+                    }
+                    acc * (1.0 / (m - 2 * k) as f32)
                 }
-                acc * (1.0 / (m - 2 * k) as f32)
-            }
-            _ => unreachable!("robust reduce called with a non-robust rule"),
-        };
+                _ => unreachable!("robust reduce called with a non-robust rule"),
+            };
+        }
+        j0 += b;
     }
 }
 
@@ -824,6 +857,85 @@ mod tests {
             let lo = honest.iter().cloned().fold(f32::INFINITY, f32::min);
             let hi = honest.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             assert!(median[j] >= lo && median[j] <= hi, "coord {j}");
+        }
+    }
+
+    /// The COL_BLOCK-blocked gather in `robust_reduce_into` is bitwise
+    /// identical to a naive one-coordinate-at-a-time reference, at d
+    /// spanning block boundaries and with dropped workers in the mix.
+    #[test]
+    fn blocked_robust_reduce_matches_per_coordinate_reference() {
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::seeded(71);
+        for d in [1usize, 7, 8, 9, 15, 16, 17, 33] {
+            let n = 6;
+            let partials: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut p = vec![0.0f32; d];
+                    rng.fill_normal(&mut p, 0.0, 1.0);
+                    p
+                })
+                .collect();
+            // worker 2's frame "failed to decode"
+            let decoded = [1usize, 1, 0, 1, 1, 1];
+            for agg in [Aggregation::Median, Aggregation::TrimmedMean(1)] {
+                let mut got = vec![0.0f32; d];
+                robust_reduce_into(
+                    agg,
+                    &partials,
+                    &decoded,
+                    &mut got,
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                    &mut Vec::new(),
+                );
+                for j in 0..d {
+                    let mut col: Vec<f32> = (0..n)
+                        .filter(|w| decoded[*w] > 0)
+                        .map(|w| partials[w][j])
+                        .collect();
+                    let m = col.len();
+                    let want = match agg {
+                        Aggregation::Median => {
+                            col.sort_unstable_by(|a, b| f32::total_cmp(a, b));
+                            if m % 2 == 1 {
+                                col[m / 2]
+                            } else {
+                                (col[m / 2 - 1] + col[m / 2]) * 0.5
+                            }
+                        }
+                        Aggregation::TrimmedMean(k) => {
+                            let k = k.min((m - 1) / 2);
+                            let mut order: Vec<usize> = (0..m).collect();
+                            order.sort_unstable_by(|a, b| {
+                                f32::total_cmp(&col[*a], &col[*b]).then(a.cmp(b))
+                            });
+                            let mut trimmed = vec![false; m];
+                            for &i in order[..k].iter().chain(order[m - k..].iter()) {
+                                trimmed[i] = true;
+                            }
+                            let mut acc = 0.0f32;
+                            for i in 0..m {
+                                if !trimmed[i] {
+                                    acc += col[i];
+                                }
+                            }
+                            acc * (1.0 / (m - 2 * k) as f32)
+                        }
+                        _ => unreachable!(),
+                    };
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want.to_bits(),
+                        "{} d={d} j={j}",
+                        agg.name()
+                    );
+                }
+            }
         }
     }
 

@@ -92,6 +92,10 @@ pub struct AsyncTrainDriver {
     /// `--threads` remains bit-deterministic (wall-clock decode speed
     /// varies with the thread count).
     leader_time_s: f64,
+    /// Accumulated *analytic* leader cost (Σ folds of max-over-shards
+    /// modeled decode time); replaces `leader_time_s` in the reported
+    /// total when `cfg.leader_cost.is_enabled()`.
+    model_leader_s: f64,
     staleness: StalenessStats,
     /// Flight recorder (also reachable by the pool via the fabric).
     trace: Option<Arc<TraceRecorder>>,
@@ -165,6 +169,7 @@ impl AsyncTrainDriver {
             round: 0,
             profile: LeaderProfile::default(),
             leader_time_s: 0.0,
+            model_leader_s: 0.0,
             staleness: StalenessStats::default(),
             trace,
             metrics,
@@ -384,6 +389,19 @@ impl AsyncTrainDriver {
                 }
             }
         }
+        // analytic leader pricing (same max-over-shards rule as the sync
+        // driver): read (format, d) before the combine drains the frames
+        if self.cfg.leader_cost.is_enabled() {
+            let mut worst = 0.0f64;
+            for frames in &self.frames_by_shard {
+                let mut shard_cost = 0.0f64;
+                for f in frames {
+                    shard_cost += self.cfg.leader_cost.frame_cost(f.format, f.d);
+                }
+                worst = worst.max(shard_cost);
+            }
+            self.model_leader_s += worst;
+        }
         if let Some(tr) = &self.trace {
             tr.record(tr.driver_track(), self.sim_time, step, EventKind::DecodeStart, m as u64);
         }
@@ -524,10 +542,16 @@ impl AsyncTrainDriver {
         recorder.record("final_loss", self.round, recorder.last("train_loss"));
         let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.round, bits as f64);
-        // schedule time + the leaders' measured decode cost (the "leader
-        // compute is no longer free" pricing; kept out of the event
-        // schedule for thread-count determinism)
-        let sim_time_s = self.sim_time + self.leader_time_s;
+        // schedule time + the leaders' decode cost (the "leader compute is
+        // no longer free" pricing; kept out of the event schedule for
+        // thread-count determinism). Modeled when a DecodeCostModel is
+        // configured, measured wall-clock otherwise.
+        let leader = if self.cfg.leader_cost.is_enabled() {
+            self.model_leader_s
+        } else {
+            self.leader_time_s
+        };
+        let sim_time_s = self.sim_time + leader;
         TrainOutcome {
             theta: self.theta,
             recorder,

@@ -1,0 +1,103 @@
+//! Calibrated leader decode-cost model: simulated seconds per frame as a
+//! pure function of `(format, d)`.
+//!
+//! Both drivers price the leader's decode+aggregate on the virtual clock.
+//! The historical source for that term is the *measured* wall-clock of the
+//! actual decode ([`crate::coordinator::round::LeaderProfile`]), which is
+//! honest but machine-dependent: the same seeded run reports a different
+//! `sim_time_s` on different hardware. The S-sweeps in the comm experiment
+//! need to separate the parallel-uplink gain from the leader-decode gain
+//! as a *reproducible* number, so this model prices a frame analytically:
+//!
+//! ```text
+//! frame_cost(format, d) = per_frame_s + d * per_coord_s[format]
+//! ```
+//!
+//! With a cost model enabled, `sim_time_s` adds the modeled per-round
+//! max-over-shards leader term instead of the measured one — making the
+//! whole reported time a pure function of the seeded models, bit-exact
+//! across machines and runs. The event schedule itself never sees either
+//! term (leader cost is added to the reported total only), so traces and
+//! trained bits are unaffected either way.
+
+use crate::compress::wire::Format;
+
+/// Per-frame leader decode cost model. `Default` (= [`none`](Self::none))
+/// disables the model: drivers fall back to the measured profile.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct DecodeCostModel {
+    /// Fixed per-frame overhead (header parse, dispatch, buffer return).
+    pub per_frame_s: f64,
+    /// Per-coordinate decode+accumulate cost, indexed by
+    /// [`Format::index`].
+    pub per_coord_s: [f64; Format::COUNT],
+}
+
+impl DecodeCostModel {
+    /// The disabled model: every cost zero, [`is_enabled`](Self::is_enabled)
+    /// false. Drivers charge the measured leader profile instead —
+    /// byte-identical to the historical engine.
+    pub fn none() -> Self {
+        DecodeCostModel::default()
+    }
+
+    /// Nominal costs for the vectorized kernels on commodity hardware
+    /// (order-of-magnitude from `bench_leader`): word-unpacked signs are
+    /// cheapest, bit-serial Elias-gamma (QSGD) dearest. The absolute scale
+    /// matters less than being a fixed, machine-independent function.
+    pub fn calibrated() -> Self {
+        let mut per_coord_s = [0.0; Format::COUNT];
+        per_coord_s[Format::DenseF32.index()] = 0.2e-9;
+        per_coord_s[Format::SignScaled.index()] = 0.15e-9;
+        per_coord_s[Format::SparseIdxVal.index()] = 0.3e-9;
+        per_coord_s[Format::Ternary.index()] = 0.8e-9;
+        per_coord_s[Format::Qsgd.index()] = 1.2e-9;
+        DecodeCostModel {
+            per_frame_s: 200e-9,
+            per_coord_s,
+        }
+    }
+
+    /// Whether any cost is non-zero (i.e. the model, not the measured
+    /// profile, should price the leader term).
+    pub fn is_enabled(&self) -> bool {
+        self.per_frame_s != 0.0 || self.per_coord_s.iter().any(|&c| c != 0.0)
+    }
+
+    /// Modeled decode+accumulate cost of one `d`-coordinate frame.
+    pub fn frame_cost(&self, format: Format, d: usize) -> f64 {
+        self.per_frame_s + d as f64 * self.per_coord_s[format.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_disabled_and_free() {
+        let m = DecodeCostModel::none();
+        assert!(!m.is_enabled());
+        assert_eq!(m.frame_cost(Format::Qsgd, 1_000_000), 0.0);
+        assert_eq!(m, DecodeCostModel::default());
+    }
+
+    #[test]
+    fn calibrated_is_affine_in_d() {
+        let m = DecodeCostModel::calibrated();
+        assert!(m.is_enabled());
+        for f in Format::ALL {
+            let c0 = m.frame_cost(f, 0);
+            let c1 = m.frame_cost(f, 1000);
+            let c2 = m.frame_cost(f, 2000);
+            assert_eq!(c0, m.per_frame_s);
+            // affine: equal increments per coordinate block
+            assert!(((c2 - c1) - (c1 - c0)).abs() < 1e-18, "{f:?}");
+            assert!(c1 > c0, "{f:?} has zero per-coord cost");
+        }
+        // the ordering the comment promises: sign cheapest, qsgd dearest
+        let d = 65_536;
+        assert!(m.frame_cost(Format::SignScaled, d) < m.frame_cost(Format::DenseF32, d));
+        assert!(m.frame_cost(Format::Ternary, d) < m.frame_cost(Format::Qsgd, d));
+    }
+}

@@ -8,6 +8,7 @@
 //! the module docs of [`crate::coordinator`]).
 
 use super::aggregate::{Aggregation, DecodeScratch};
+use super::cost::DecodeCostModel;
 use super::pool::{RoundReport, WorkerPool, WorkerState};
 use super::round::{LeaderProfile, LrSchedule, RoundClock, StalenessStats};
 use super::state::{CheckpointStore, Snapshot};
@@ -16,7 +17,8 @@ use crate::collectives::{ShardPlan, ShardedParameterServer};
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
 use crate::net::{
-    AdversarySchedule, Fabric, LinkModel, Message, SimClock, StragglerSchedule, TrafficStats,
+    AdversarySchedule, Fabric, LinkDiscipline, LinkModel, Message, SimClock, StragglerSchedule,
+    TrafficStats,
 };
 use crate::obs::metrics::RunMetrics;
 use crate::obs::trace::{DropReason, EventKind, TraceRecorder};
@@ -43,6 +45,20 @@ pub struct DriverConfig {
     pub update_rule: UpdateRule,
     pub weight_decay: f32,
     pub link: LinkModel,
+    /// How each node's sends share its physical link. The default
+    /// ([`LinkDiscipline::Overlapped`]) prices every send independently —
+    /// the historical infinite-fan-out model, under which all existing
+    /// timing identities hold. [`LinkDiscipline::Serialized`] queues a
+    /// node's sends FIFO on its uplink (`max(node_time, link_free_time)`;
+    /// see `docs/WIRE.md`), so a worker's S per-shard pushes serialize.
+    pub discipline: LinkDiscipline,
+    /// Analytic leader decode-cost model. Disabled
+    /// ([`DecodeCostModel::none`], the default) the drivers charge the
+    /// *measured* decode wall-clock ([`LeaderProfile`]); enabled, the
+    /// leader term of `sim_time_s` becomes
+    /// `Σ_rounds max_shards Σ_frames frame_cost(format, d)` — a pure
+    /// function of the seeded models, reproducible across machines.
+    pub leader_cost: DecodeCostModel,
     /// Per-(worker, step) virtual compute-time model. The default charges
     /// zero compute, which reproduces the historical engine where only
     /// link time was priced; the async driver and the straggler sweeps
@@ -83,6 +99,8 @@ impl Default for DriverConfig {
             update_rule: UpdateRule::ApplyAggregate,
             weight_decay: 0.0,
             link: LinkModel::default(),
+            discipline: LinkDiscipline::Overlapped,
+            leader_cost: DecodeCostModel::none(),
             straggler: StragglerSchedule::none(),
             adversary: AdversarySchedule::none(),
             threads: 1,
@@ -185,6 +203,7 @@ pub(crate) fn build_topology(
     let trace = (cfg.trace_capacity > 0)
         .then(|| Arc::new(TraceRecorder::new(workers.len(), shards, cfg.trace_capacity)));
     let mut fabric = Fabric::with_clock(nodes, cfg.link, sim_clock.clone());
+    fabric.set_discipline(cfg.discipline);
     if let Some(tr) = &trace {
         fabric.set_trace(tr.clone());
     }
@@ -216,6 +235,10 @@ pub struct TrainDriver {
     wd_buf: Vec<f32>,
     profile: LeaderProfile,
     sim_time: f64,
+    /// Accumulated analytic leader cost (Σ rounds of max-over-shards
+    /// modeled decode time); only meaningful when
+    /// `cfg.leader_cost.is_enabled()`.
+    model_leader_s: f64,
     /// Flight recorder (also reachable by the pool via the fabric).
     trace: Option<Arc<TraceRecorder>>,
     /// Metrics registry shared with the caller.
@@ -269,6 +292,7 @@ impl TrainDriver {
             clock: RoundClock::default(),
             profile: LeaderProfile::default(),
             sim_time: 0.0,
+            model_leader_s: 0.0,
             trace,
             metrics,
             last_dropped: 0,
@@ -310,9 +334,21 @@ impl TrainDriver {
     /// term is accumulated separately (`LeaderProfile::critical_s`) and
     /// only added here, mirroring the async driver's `leader_time_s`, so
     /// the event schedule — and the flight-recorder trace stamped from it
-    /// — stays a pure function of the seeded models.
+    /// — stays a pure function of the seeded models. With a
+    /// [`DecodeCostModel`] configured the measured term is replaced by the
+    /// analytic one, making the whole total machine-independent.
     pub fn sim_time_s(&self) -> f64 {
-        self.sim_time + self.profile.critical_s
+        self.sim_time + self.leader_term_s()
+    }
+
+    /// The leader term of `sim_time_s`: modeled when a cost model is
+    /// enabled, measured otherwise.
+    fn leader_term_s(&self) -> f64 {
+        if self.cfg.leader_cost.is_enabled() {
+            self.model_leader_s
+        } else {
+            self.profile.critical_s
+        }
     }
 
     /// Per-worker EF states (fetched from the pool threads), by worker id.
@@ -442,6 +478,20 @@ impl TrainDriver {
                     m.observe_frame(f.format, f.bits);
                 }
             }
+        }
+        // analytic leader pricing: also reads (format, d) off the gathered
+        // frames before the combine drains them. Shard leaders decode
+        // concurrently, so the round charges the slowest shard.
+        if self.cfg.leader_cost.is_enabled() {
+            let mut worst = 0.0f64;
+            for frames in &self.frames_by_shard {
+                let mut shard_cost = 0.0f64;
+                for f in frames {
+                    shard_cost += self.cfg.leader_cost.frame_cost(f.format, f.d);
+                }
+                worst = worst.max(shard_cost);
+            }
+            self.model_leader_s += worst;
         }
         if let Some(tr) = &self.trace {
             tr.record(tr.driver_track(), round_end, step, EventKind::DecodeStart, n as u64);
@@ -576,7 +626,7 @@ impl TrainDriver {
         recorder.record("final_loss", self.clock.current(), recorder.last("train_loss"));
         let bits = self.fabric.total_bits();
         recorder.record("total_bits", self.clock.current(), bits as f64);
-        let sim_time_s = self.sim_time + self.profile.critical_s;
+        let sim_time_s = self.sim_time_s();
         TrainOutcome {
             theta: self.theta,
             recorder,
@@ -731,6 +781,90 @@ mod tests {
         assert!((push_total - expect_push).abs() < 1e-9 * expect_push);
         // sync runs report zero staleness
         assert_eq!(out.staleness.frames, 0);
+    }
+
+    /// Satellite identity (ISSUE 9): a 1-worker, S-shard run under the
+    /// serialized-uplink discipline reports a `sim_time_s` equal to the
+    /// closed-form FIFO replay **to the bit** — every send replayed with
+    /// the same `max(node_time, link_free_time)` rule, the same
+    /// `transfer_time`/`serialization_time` expressions, in the same
+    /// order. The analytic [`DecodeCostModel`] replaces the measured
+    /// leader term so the whole total is a pure function of the models.
+    #[test]
+    fn serialized_uplink_sim_time_matches_closed_form() {
+        use crate::compress::wire::{Format, SHARD_TAG_BITS};
+        use crate::net::message::FRAME_OVERHEAD_BITS;
+        use crate::net::{StragglerModel, StragglerSchedule};
+        let d = 96;
+        let steps = 4u64;
+        let base = 1e-3;
+        let link = LinkModel::wan();
+        for shards in [1usize, 4] {
+            let cost = DecodeCostModel::calibrated();
+            let run = |discipline| {
+                let workers =
+                    quadratic_workers(1, d, WorkerMode::ErrorFeedback, CompressorKind::ScaledSign);
+                let cfg = DriverConfig {
+                    steps: steps as usize,
+                    schedule: LrSchedule::constant(0.05),
+                    straggler: StragglerSchedule::new(base, StragglerModel::Constant, 0),
+                    link,
+                    discipline,
+                    leader_cost: cost,
+                    shards,
+                    ..Default::default()
+                };
+                TrainDriver::new(cfg, workers, vec![1.0f32; d]).run()
+            };
+            let out = run(LinkDiscipline::Serialized);
+            // closed-form replay: worker is node 0, shard leaders 1..=S
+            let plan = ShardPlan::new(d, shards);
+            let s_total = plan.num_shards();
+            let mut free = vec![0.0f64; 1 + s_total];
+            let mut sim = 0.0f64;
+            let mut model = 0.0f64;
+            for _ in 0..steps {
+                // leaders broadcast at `sim`, one slice each on its own uplink
+                let mut params_arrival = 0.0f64;
+                for s in 0..s_total {
+                    let bits = if s_total == 1 {
+                        32 * d as u64 + FRAME_OVERHEAD_BITS
+                    } else {
+                        32 * plan.len_of(s) as u64 + SHARD_TAG_BITS + FRAME_OVERHEAD_BITS
+                    };
+                    let start = sim.max(free[1 + s]);
+                    free[1 + s] = start + link.serialization_time(bits);
+                    params_arrival = params_arrival.max(start + link.transfer_time(bits));
+                }
+                // the worker's S pushes serialize on its single uplink
+                let finish = params_arrival + base;
+                let mut round_end = sim;
+                let mut worst = 0.0f64;
+                for s in 0..s_total {
+                    let tag = if s_total == 1 { 0 } else { SHARD_TAG_BITS };
+                    let bits = plan.len_of(s) as u64 + 32 + tag + FRAME_OVERHEAD_BITS;
+                    let start = finish.max(free[0]);
+                    free[0] = start + link.serialization_time(bits);
+                    round_end = round_end.max(start + link.transfer_time(bits));
+                    worst = worst.max(cost.frame_cost(Format::SignScaled, plan.len_of(s)));
+                }
+                model += worst;
+                sim = round_end;
+            }
+            assert_eq!(out.sim_time_s, sim + model, "shards={shards}");
+            // cross-check against the legacy overlapped pricing: a single
+            // frame per (node, instant) has nothing to queue behind, so
+            // S=1 degenerates exactly; S>1 pushes genuinely serialize
+            let ov = run(LinkDiscipline::Overlapped);
+            if shards == 1 {
+                assert_eq!(out.sim_time_s, ov.sim_time_s);
+            } else {
+                assert!(out.sim_time_s > ov.sim_time_s, "shards={shards}");
+            }
+            // the discipline only reprices time — the trained bits are
+            // identical (timing never feeds back into the trajectory)
+            assert_eq!(out.theta, ov.theta, "shards={shards}");
+        }
     }
 
     #[test]

@@ -86,6 +86,7 @@
 
 pub mod aggregate;
 pub mod async_driver;
+pub mod cost;
 pub mod driver;
 pub mod pool;
 pub mod round;
@@ -94,6 +95,7 @@ pub mod worker;
 
 pub use aggregate::{Aggregation, DecodeScratch};
 pub use async_driver::AsyncTrainDriver;
+pub use cost::DecodeCostModel;
 pub use driver::{TrainDriver, TrainOutcome};
 pub use pool::{RoundReport, WorkerPool, WorkerState};
 pub use round::{LrSchedule, StalenessStats};

@@ -199,44 +199,77 @@ pub fn comm(ctx: &ExpContext) -> Result<ExpResult> {
     // leaders) shrinks ~linearly, while the wan round is latency-dominated
     // and barely moves — the crossover to leader-bound rounds needs
     // faster links or bigger worker fleets.
+    //
+    // Each S now runs under BOTH uplink disciplines, side by side: the
+    // legacy Overlapped fabric (every frame transfers concurrently) and
+    // the Serialized fabric (frames from one sender queue FIFO on its
+    // uplink). The leader term uses the calibrated DecodeCostModel, so
+    // both round times are pure functions of the seeded models — the gap
+    // between the columns is exactly the uplink-serialization cost, and
+    // what S buys back of it (more shard leaders = more parallel uplinks),
+    // cleanly separated from the leader-decode gain. Serialized can never
+    // beat Overlapped (a FIFO queue only delays transmissions), and the
+    // sweep asserts that for every S rather than trusting the model.
     {
+        use crate::coordinator::DecodeCostModel;
+        use crate::net::LinkDiscipline;
         let d_s = if ctx.quick { 4096 } else { 65_536 };
         let steps_s = 5usize;
         lines.push(format!(
-            "  sharded PS on wan (d={d_s}, 8 workers, ef-qsgd):  S | leader crit ms/round | sim round ms"
+            "  sharded PS on wan (d={d_s}, 8 workers, ef-qsgd, calibrated leader cost):\n    S | leader crit ms/round | round ms overlapped | round ms serialized"
         ));
         for s in [1usize, 2, 4] {
-            let workers: Vec<Worker> = (0..8)
-                .map(|id| {
-                    Worker::new(
-                        id,
-                        Box::new(ObjectiveSource::new(
-                            SparseNoiseQuadratic::new(d_s, 1.0),
-                            Pcg64::seeded(id as u64),
-                        )),
-                        WorkerMode::ErrorFeedback,
-                        CompressorKind::Qsgd,
-                        64,
-                        4,
-                        Pcg64::seeded(100 + id as u64),
-                    )
-                })
-                .collect();
-            let cfg = DriverConfig {
-                steps: steps_s,
-                schedule: LrSchedule::constant(0.01),
-                link: crate::net::LinkModel::wan(),
-                shards: s,
-                ..Default::default()
+            let run_s = |discipline: LinkDiscipline| {
+                let workers: Vec<Worker> = (0..8)
+                    .map(|id| {
+                        Worker::new(
+                            id,
+                            Box::new(ObjectiveSource::new(
+                                SparseNoiseQuadratic::new(d_s, 1.0),
+                                Pcg64::seeded(id as u64),
+                            )),
+                            WorkerMode::ErrorFeedback,
+                            CompressorKind::Qsgd,
+                            64,
+                            4,
+                            Pcg64::seeded(100 + id as u64),
+                        )
+                    })
+                    .collect();
+                let cfg = DriverConfig {
+                    steps: steps_s,
+                    schedule: LrSchedule::constant(0.01),
+                    link: crate::net::LinkModel::wan(),
+                    discipline,
+                    leader_cost: DecodeCostModel::calibrated(),
+                    shards: s,
+                    ..Default::default()
+                };
+                TrainDriver::new(cfg, workers, vec![1.0f32; d_s]).run()
             };
-            let out = TrainDriver::new(cfg, workers, vec![1.0f32; d_s]).run();
-            let crit_ms = out.profile.mean_critical_s() * 1e3;
-            let round_ms = out.sim_time_s / steps_s as f64 * 1e3;
+            let over = run_s(LinkDiscipline::Overlapped);
+            let ser = run_s(LinkDiscipline::Serialized);
+            // the discipline only moves simulated time, never the bits
+            assert_eq!(
+                over.theta, ser.theta,
+                "S={s}: uplink discipline leaked into the trained parameters"
+            );
+            assert!(
+                ser.sim_time_s >= over.sim_time_s,
+                "S={s}: serialized uplinks finished before overlapped \
+                 ({} vs {})",
+                ser.sim_time_s,
+                over.sim_time_s
+            );
+            let crit_ms = over.profile.mean_critical_s() * 1e3;
+            let over_ms = over.sim_time_s / steps_s as f64 * 1e3;
+            let ser_ms = ser.sim_time_s / steps_s as f64 * 1e3;
             lines.push(format!(
-                "    S={s}: leader {crit_ms:.4} ms | round {round_ms:.3} ms"
+                "    S={s}: leader {crit_ms:.4} ms | overlapped {over_ms:.3} ms | serialized {ser_ms:.3} ms"
             ));
             rec.record(&format!("shard_crit_ms_S{s}"), 0, crit_ms);
-            rec.record(&format!("shard_round_ms_S{s}"), 0, round_ms);
+            rec.record(&format!("shard_round_ms_S{s}"), 0, over_ms);
+            rec.record(&format!("shard_round_serialized_ms_S{s}"), 0, ser_ms);
         }
     }
 
@@ -300,7 +333,22 @@ mod tests {
                 .last()
                 .unwrap();
             assert!(crit > 0.0, "S={s}: leader decode charged no time");
-            assert!(rec.get(&format!("shard_round_ms_S{s}")).is_some());
+            let over = rec
+                .get(&format!("shard_round_ms_S{s}"))
+                .expect("missing overlapped row")
+                .last()
+                .unwrap();
+            let ser = rec
+                .get(&format!("shard_round_serialized_ms_S{s}"))
+                .expect("missing serialized row")
+                .last()
+                .unwrap();
+            // a FIFO uplink queue can only delay transmissions, and with
+            // the calibrated leader model both columns are deterministic
+            assert!(
+                ser >= over,
+                "S={s}: serialized {ser} ms beat overlapped {over} ms"
+            );
         }
     }
 }

@@ -6,12 +6,16 @@ use ef_sgd::cli::{Args, USAGE};
 use ef_sgd::config::{CompressorKind, ConfigMap, TrainConfig};
 use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
 use ef_sgd::coordinator::worker::{GradSource, ObjectiveSource, Worker, WorkerMode};
-use ef_sgd::coordinator::{Aggregation, AsyncTrainDriver, LrSchedule, TrainOutcome};
+use ef_sgd::coordinator::{
+    Aggregation, AsyncTrainDriver, DecodeCostModel, LrSchedule, TrainOutcome,
+};
 use ef_sgd::data::tokens::MarkovCorpus;
 use ef_sgd::experiments::{self, ExpContext};
 use ef_sgd::metrics::sparkline;
 use ef_sgd::model::toy::SparseNoiseQuadratic;
-use ef_sgd::net::{AdversarySchedule, LinkModel, StragglerModel, StragglerSchedule};
+use ef_sgd::net::{
+    AdversarySchedule, LinkDiscipline, LinkModel, StragglerModel, StragglerSchedule,
+};
 use ef_sgd::obs::RunMetrics;
 use ef_sgd::runtime::{LmSession, Runtime};
 use ef_sgd::util::Pcg64;
@@ -188,6 +192,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(l) = args.opt("link") {
         cfg.link = l.to_string();
     }
+    if args.flag("link-serialized") {
+        cfg.link_serialized = true;
+    }
+    if let Some(c) = args.opt("leader-cost") {
+        cfg.leader_cost = c.to_string();
+    }
     if args.flag("quick") {
         cfg.steps = cfg.steps.min(20);
     }
@@ -286,6 +296,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let link = LinkModel::preset(&cfg.link)
         .ok_or_else(|| anyhow!("unknown link preset '{}'", cfg.link))?;
+    let leader_cost = match cfg.leader_cost.as_str() {
+        "measured" => DecodeCostModel::none(),
+        "calibrated" => DecodeCostModel::calibrated(),
+        other => bail!("bad leader-cost '{other}' (expected 'measured' or 'calibrated')"),
+    };
     let dcfg = DriverConfig {
         steps: cfg.steps,
         schedule: LrSchedule::new(cfg.lr, cfg.steps, cfg.lr_decay_at.clone()),
@@ -294,6 +309,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         update_rule,
         weight_decay: cfg.weight_decay as f32,
         link,
+        discipline: if cfg.link_serialized {
+            LinkDiscipline::Serialized
+        } else {
+            LinkDiscipline::Overlapped
+        },
+        leader_cost,
         straggler: StragglerSchedule::new(cfg.compute_ms * 1e-3, straggler_model, cfg.seed),
         adversary,
         threads: cfg.threads.max(1),

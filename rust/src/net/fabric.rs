@@ -24,6 +24,22 @@
 //! accounting unchanged. Arrival stamps ride alongside the messages
 //! ([`Fabric::recv_all_timed`]) and feed the async driver's event queue.
 //!
+//! Under [`LinkDiscipline::Serialized`] ([`Fabric::set_discipline`]) each
+//! sender's transmissions additionally serialize on its uplink FIFO: the
+//! send *starts* at `max(node_time(src), link_free_time(src))`, occupies
+//! the link for the bandwidth term (`link.serialization_time`), and
+//!
+//! ```text
+//! arrival = start + link.transfer_time(wire_bits)
+//! ```
+//!
+//! so a worker's S per-shard pushes queue on its uplink instead of
+//! overlapping for free, while propagation latency still pipelines. The
+//! default stays `Overlapped` — the historical pricing, which every
+//! analytic timing identity in the tests assumes — and serialization
+//! requires an attached clock (clockless fabrics have no notion of a
+//! departure time to queue behind). Semantics: `docs/ASYNC.md`.
+//!
 //! # Buffer recycling
 //!
 //! The fabric also owns a [`FramePool`]: spent push-frame byte buffers
@@ -32,7 +48,7 @@
 //! ever allocated or freed (see docs/PERF.md).
 
 use super::accounting::TrafficStats;
-use super::link::LinkModel;
+use super::link::{LinkDiscipline, LinkModel};
 use super::message::Message;
 use super::simclock::SimClock;
 use crate::obs::trace::TraceRecorder;
@@ -98,6 +114,7 @@ pub struct Fabric {
     total_bits: AtomicU64,
     frames: FramePool,
     clock: Option<Arc<SimClock>>,
+    discipline: LinkDiscipline,
     trace: Option<Arc<TraceRecorder>>,
 }
 
@@ -111,6 +128,7 @@ impl Fabric {
             total_bits: AtomicU64::new(0),
             frames: FramePool::default(),
             clock: None,
+            discipline: LinkDiscipline::Overlapped,
             trace: None,
         }
     }
@@ -137,6 +155,18 @@ impl Fabric {
         self.clock.as_ref()
     }
 
+    /// Select the uplink sharing discipline (before the fabric is shared,
+    /// same builder pattern as [`set_trace`](Self::set_trace)). Serialized
+    /// pricing only takes effect on a clocked fabric — see module docs.
+    pub fn set_discipline(&mut self, discipline: LinkDiscipline) {
+        self.discipline = discipline;
+    }
+
+    /// The uplink sharing discipline in effect.
+    pub fn discipline(&self) -> LinkDiscipline {
+        self.discipline
+    }
+
     /// Attach a flight recorder (before the fabric is shared). Instrumented
     /// call sites reach it through [`trace`](Self::trace); the fabric itself
     /// never records — `send` runs concurrently on pool threads, and ring
@@ -158,18 +188,25 @@ impl Fabric {
 
     /// Send a message: accounts bits + simulated time, enqueues at `dst`.
     /// Returns the message's simulated arrival time (departure = the
-    /// sender's clock time, or 0 when no clock is attached).
+    /// sender's clock time — queued behind the sender's earlier
+    /// transmissions under [`LinkDiscipline::Serialized`] — or 0 when no
+    /// clock is attached).
     // detlint: hot
     pub fn send(&self, msg: Message) -> f64 {
         assert!(msg.src < self.n && msg.dst < self.n, "bad route");
         assert_ne!(msg.src, msg.dst, "self-send not allowed");
         let bits = msg.wire_bits();
         let time = self.link.transfer_time(bits);
-        let depart = self
-            .clock
-            .as_ref()
-            .map_or(0.0, |c| c.node_time(msg.src));
-        let arrival = depart + time;
+        let arrival = match &self.clock {
+            Some(c) if self.discipline == LinkDiscipline::Serialized => {
+                // FIFO uplink: start at max(node_time, link_free); only
+                // the bandwidth term occupies the link (latency pipelines)
+                let occupancy = self.link.serialization_time(bits);
+                c.reserve_link(msg.src, c.node_time(msg.src), occupancy) + time
+            }
+            Some(c) => c.node_time(msg.src) + time,
+            None => time,
+        };
         self.total_bits.fetch_add(bits, Ordering::Relaxed);
         self.stats
             .lock()
@@ -412,6 +449,63 @@ mod tests {
         assert!((timed[0].1 - expect).abs() < 1e-12);
         let stats = f.snapshot_stats();
         assert!((stats.last_arrival_of_kind(MessageKind::Control) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serialized_sends_queue_on_the_senders_uplink() {
+        let link = LinkModel::new(1e6, 1e-3);
+        let clock = Arc::new(SimClock::new(3));
+        let mut f = Fabric::with_clock(3, link, clock.clone());
+        f.set_discipline(LinkDiscipline::Serialized);
+        assert_eq!(f.discipline(), LinkDiscipline::Serialized);
+        clock.set_node_time(0, 5.0);
+        let bits = 1000 + FRAME_OVERHEAD_BITS;
+        let ser = link.serialization_time(bits);
+        // first send: idle uplink, identical to the overlapped stamp
+        let a1 = f.send(ctrl(0, 1, 1000));
+        assert_eq!(a1, 5.0 + link.transfer_time(bits));
+        // second send at the same node time: starts once the uplink frees
+        let a2 = f.send(ctrl(0, 2, 1000));
+        assert_eq!(a2, (5.0 + ser) + link.transfer_time(bits));
+        // a different sender's uplink is independent
+        clock.set_node_time(1, 5.0);
+        let a3 = f.send(ctrl(1, 2, 1000));
+        assert_eq!(a3, 5.0 + link.transfer_time(bits));
+        // per-message accounting still records the bare transfer time
+        let stats = f.snapshot_stats();
+        let total = stats.sim_time_of_kind(MessageKind::Control);
+        assert!((total - 3.0 * link.transfer_time(bits)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapped_sends_ignore_the_uplink_queue() {
+        // the historical default: back-to-back sends from one node carry
+        // identical stamps (infinite fan-out)
+        let link = LinkModel::new(1e6, 1e-3);
+        let clock = Arc::new(SimClock::new(3));
+        let f = Fabric::with_clock(3, link, clock.clone());
+        clock.set_node_time(0, 2.0);
+        let a1 = f.send(ctrl(0, 1, 1000));
+        let a2 = f.send(ctrl(0, 2, 1000));
+        assert_eq!(a1, a2);
+        assert_eq!(clock.link_free_time(0), 0.0);
+    }
+
+    #[test]
+    fn serialized_never_arrives_before_overlapped() {
+        let link = LinkModel::wan();
+        let clock_o = Arc::new(SimClock::new(4));
+        let fab_o = Fabric::with_clock(4, link, clock_o.clone());
+        let clock_s = Arc::new(SimClock::new(4));
+        let mut fab_s = Fabric::with_clock(4, link, clock_s.clone());
+        fab_s.set_discipline(LinkDiscipline::Serialized);
+        clock_o.set_node_time(0, 1.0);
+        clock_s.set_node_time(0, 1.0);
+        for dst in [1usize, 2, 3, 1, 2, 3] {
+            let o = fab_o.send(ctrl(0, dst, 4096));
+            let s = fab_s.send(ctrl(0, dst, 4096));
+            assert!(s >= o, "serialized {s} earlier than overlapped {o}");
+        }
     }
 
     #[test]

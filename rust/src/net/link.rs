@@ -14,6 +14,27 @@ pub struct LinkModel {
     pub latency_s: f64,
 }
 
+/// How a node's outgoing messages share its physical link.
+///
+/// The historical fabric priced every send independently of the sender's
+/// other sends — an infinite-fan-out NIC where a worker's S per-shard
+/// pushes all overlap for free. [`Serialized`](LinkDiscipline::Serialized)
+/// models the real constraint: one uplink per sender, transmissions
+/// serialize FIFO, and a send begins at
+/// `max(node_time, link_free_time)` (see `SimClock::reserve_link`).
+/// Only the bandwidth term occupies the link — propagation latency
+/// pipelines, so back-to-back frames pay it concurrently.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LinkDiscipline {
+    /// Every send departs at the sender's node time regardless of what
+    /// else the sender has on the wire (the historical model, and the
+    /// default: every existing timing identity holds under it).
+    #[default]
+    Overlapped,
+    /// Sends from one node serialize on its uplink FIFO.
+    Serialized,
+}
+
 impl LinkModel {
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
         assert!(bandwidth_bps > 0.0);
@@ -61,6 +82,15 @@ impl LinkModel {
     pub fn transfer_time(&self, bits: u64) -> f64 {
         self.latency_s + bits as f64 / self.bandwidth_bps
     }
+
+    /// Time the sender's uplink is *occupied* transmitting `bits`: the
+    /// bandwidth term only. Propagation latency pipelines — the next frame
+    /// may start serializing while the previous one is still in flight —
+    /// so under [`LinkDiscipline::Serialized`] this, not
+    /// [`transfer_time`](Self::transfer_time), is what reserves the link.
+    pub fn serialization_time(&self, bits: u64) -> f64 {
+        bits as f64 / self.bandwidth_bps
+    }
 }
 
 impl Default for LinkModel {
@@ -103,6 +133,23 @@ mod tests {
         let l = LinkModel::wan();
         let t = l.transfer_time(4128);
         assert!(l.latency_s / t > 0.99, "latency share {}", l.latency_s / t);
+    }
+
+    #[test]
+    fn serialization_time_is_the_bandwidth_term() {
+        let l = LinkModel::new(1e9, 1e-4);
+        assert!((l.serialization_time(1_000_000) - 1e-3).abs() < 1e-15);
+        // transfer = latency + serialization, exactly
+        assert_eq!(
+            l.transfer_time(12345),
+            l.latency_s + l.serialization_time(12345)
+        );
+        assert_eq!(l.serialization_time(0), 0.0);
+    }
+
+    #[test]
+    fn discipline_defaults_to_overlapped() {
+        assert_eq!(LinkDiscipline::default(), LinkDiscipline::Overlapped);
     }
 
     #[test]

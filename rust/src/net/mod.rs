@@ -30,7 +30,7 @@ pub mod straggler;
 pub use accounting::TrafficStats;
 pub use adversary::{AdversaryModel, AdversarySchedule};
 pub use fabric::{Fabric, FramePool};
-pub use link::LinkModel;
+pub use link::{LinkDiscipline, LinkModel};
 pub use message::{Message, MessageKind, Payload};
 pub use simclock::{Event, EventQueue, SimClock};
 pub use straggler::{StragglerModel, StragglerSchedule};

@@ -39,12 +39,18 @@ use std::sync::Mutex;
 #[derive(Debug)]
 pub struct SimClock {
     node_time: Mutex<Vec<f64>>,
+    /// Per-node uplink FIFO state: the virtual time at which the node's
+    /// link finishes its last reserved transmission. Only consulted under
+    /// [`crate::net::LinkDiscipline::Serialized`]; stays all-zero (and
+    /// harmless) otherwise.
+    link_free: Mutex<Vec<f64>>,
 }
 
 impl SimClock {
     pub fn new(nodes: usize) -> Self {
         SimClock {
             node_time: Mutex::new(vec![0.0; nodes]),
+            link_free: Mutex::new(vec![0.0; nodes]),
         }
     }
 
@@ -68,6 +74,32 @@ impl SimClock {
         if t > times[node] {
             times[node] = t;
         }
+    }
+
+    /// Virtual time at which `node`'s uplink becomes idle (0 until the
+    /// first [`reserve_link`](Self::reserve_link)).
+    pub fn link_free_time(&self, node: usize) -> f64 {
+        self.link_free.lock().unwrap()[node]
+    }
+
+    /// Reserve `node`'s uplink FIFO for a transmission requested at
+    /// virtual time `at` that occupies the link for `occupancy` seconds.
+    /// The transmission starts at `max(at, link_free_time)` — the link
+    /// serializes, it never preempts — and the link is then busy until
+    /// `start + occupancy`. Returns the start time.
+    ///
+    /// Determinism: each node's sends are issued by a single thread in a
+    /// fixed program order (workers push their shard frames in shard
+    /// order; leaders broadcast in worker-id order), so the FIFO state —
+    /// and every arrival derived from it — is a pure function of the
+    /// seeded models, never of thread scheduling.
+    // detlint: hot
+    pub fn reserve_link(&self, node: usize, at: f64, occupancy: f64) -> f64 {
+        debug_assert!(occupancy >= 0.0);
+        let mut free = self.link_free.lock().unwrap();
+        let start = at.max(free[node]);
+        free[node] = start + occupancy;
+        start
     }
 
     /// Latest local time over all nodes.
@@ -188,6 +220,26 @@ mod tests {
         c.advance_node(2, 4.0);
         assert_eq!(c.max_time(), 4.0);
         assert_eq!(c.nodes(), 3);
+    }
+
+    #[test]
+    fn reserve_link_serializes_back_to_back_sends() {
+        let c = SimClock::new(2);
+        assert_eq!(c.link_free_time(0), 0.0);
+        // idle link: transmission starts at the requested time
+        let s1 = c.reserve_link(0, 1.0, 0.5);
+        assert_eq!(s1, 1.0);
+        assert_eq!(c.link_free_time(0), 1.5);
+        // second send at the same node time queues behind the first
+        let s2 = c.reserve_link(0, 1.0, 0.25);
+        assert_eq!(s2, 1.5);
+        assert_eq!(c.link_free_time(0), 1.75);
+        // a later request on an idle link does not wait
+        let s3 = c.reserve_link(0, 3.0, 0.1);
+        assert_eq!(s3, 3.0);
+        // other nodes' links are independent
+        assert_eq!(c.link_free_time(1), 0.0);
+        assert_eq!(c.reserve_link(1, 0.0, 1.0), 0.0);
     }
 
     #[test]

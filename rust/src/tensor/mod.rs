@@ -10,26 +10,98 @@ pub mod matrix;
 
 pub use matrix::Matrix;
 
+/// Fixed lane width of the elementwise kernels below: `chunks_exact`
+/// blocks of this size give the compiler a constant trip count (no
+/// per-iteration bounds checks, clean SIMD codegen) while every output
+/// coordinate keeps its exact scalar expression — elementwise ops have no
+/// cross-lane f32 reduction, so chunking cannot change a single bit.
+/// See docs/PERF.md ("Elementwise kernel shape").
+const LANES: usize = 8;
+
 /// y += alpha * x
+// detlint: hot
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut ys = y.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    for (yc, xc) in (&mut ys).zip(&mut xs) {
+        for (yi, xi) in yc.iter_mut().zip(xc) {
+            *yi += alpha * *xi;
+        }
+    }
+    for (yi, xi) in ys.into_remainder().iter_mut().zip(xs.remainder()) {
         *yi += alpha * *xi;
     }
 }
 
 /// y = alpha * x + beta * y
+// detlint: hot
 pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut ys = y.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    for (yc, xc) in (&mut ys).zip(&mut xs) {
+        for (yi, xi) in yc.iter_mut().zip(xc) {
+            *yi = alpha * *xi + beta * *yi;
+        }
+    }
+    for (yi, xi) in ys.into_remainder().iter_mut().zip(xs.remainder()) {
         *yi = alpha * *xi + beta * *yi;
     }
 }
 
 /// Element-wise in-place scale.
+// detlint: hot
 pub fn scale(alpha: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
+    let mut chunks = x.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        for xi in c.iter_mut() {
+            *xi *= alpha;
+        }
+    }
+    for xi in chunks.into_remainder() {
         *xi *= alpha;
+    }
+}
+
+/// out = alpha * x (scaled copy).
+// detlint: hot
+pub fn scale_into(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut os = out.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    for (oc, xc) in (&mut os).zip(&mut xs) {
+        for (oi, xi) in oc.iter_mut().zip(xc) {
+            *oi = alpha * *xi;
+        }
+    }
+    for (oi, xi) in os.into_remainder().iter_mut().zip(xs.remainder()) {
+        *oi = alpha * *xi;
+    }
+}
+
+/// out = alpha * x + y — the error-feedback correction kernel
+/// (`p = γg + e`); per-coordinate expression order matches the historical
+/// inline loop exactly.
+// detlint: hot
+pub fn scaled_add_into(alpha: f32, x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    let mut os = out.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    let mut ys = y.chunks_exact(LANES);
+    for ((oc, xc), yc) in (&mut os).zip(&mut xs).zip(&mut ys) {
+        for ((oi, xi), yi) in oc.iter_mut().zip(xc).zip(yc) {
+            *oi = alpha * *xi + *yi;
+        }
+    }
+    for ((oi, xi), yi) in os
+        .into_remainder()
+        .iter_mut()
+        .zip(xs.remainder())
+        .zip(ys.remainder())
+    {
+        *oi = alpha * *xi + *yi;
     }
 }
 
@@ -120,35 +192,79 @@ pub fn density(v: &[f32]) -> f64 {
     }
 }
 
-/// out = x - y
+/// out = x - y (also the EF residual update `e = p − δ`).
+// detlint: hot
 pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+    let mut os = out.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    let mut ys = y.chunks_exact(LANES);
+    for ((oc, xc), yc) in (&mut os).zip(&mut xs).zip(&mut ys) {
+        for ((o, a), b) in oc.iter_mut().zip(xc).zip(yc) {
+            *o = a - b;
+        }
+    }
+    for ((o, a), b) in os
+        .into_remainder()
+        .iter_mut()
+        .zip(xs.remainder())
+        .zip(ys.remainder())
+    {
         *o = a - b;
     }
 }
 
 /// out = x + y
+// detlint: hot
 pub fn add(x: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+    let mut os = out.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact(LANES);
+    let mut ys = y.chunks_exact(LANES);
+    for ((oc, xc), yc) in (&mut os).zip(&mut xs).zip(&mut ys) {
+        for ((o, a), b) in oc.iter_mut().zip(xc).zip(yc) {
+            *o = a + b;
+        }
+    }
+    for ((o, a), b) in os
+        .into_remainder()
+        .iter_mut()
+        .zip(xs.remainder())
+        .zip(ys.remainder())
+    {
         *o = a + b;
     }
 }
 
 /// x -= y, in place.
+// detlint: hot
 pub fn sub_assign(x: &mut [f32], y: &[f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (a, b) in x.iter_mut().zip(y) {
+    let mut xs = x.chunks_exact_mut(LANES);
+    let mut ys = y.chunks_exact(LANES);
+    for (xc, yc) in (&mut xs).zip(&mut ys) {
+        for (a, b) in xc.iter_mut().zip(yc) {
+            *a -= b;
+        }
+    }
+    for (a, b) in xs.into_remainder().iter_mut().zip(ys.remainder()) {
         *a -= b;
     }
 }
 
-/// x += y, in place.
+/// x += y, in place (the aggregation accumulate kernel).
+// detlint: hot
 pub fn add_assign(x: &mut [f32], y: &[f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (a, b) in x.iter_mut().zip(y) {
+    let mut xs = x.chunks_exact_mut(LANES);
+    let mut ys = y.chunks_exact(LANES);
+    for (xc, yc) in (&mut xs).zip(&mut ys) {
+        for (a, b) in xc.iter_mut().zip(yc) {
+            *a += b;
+        }
+    }
+    for (a, b) in xs.into_remainder().iter_mut().zip(ys.remainder()) {
         *a += b;
     }
 }
@@ -255,6 +371,67 @@ mod tests {
         let mut out = [0.0f32; 2];
         mean_of(&[&a, &b], &mut out);
         assert_eq!(out, [2.0, 4.0]);
+    }
+
+    /// The 8-lane blocked kernels are bitwise identical to naive
+    /// per-element loops at every alignment class around the lane width
+    /// (elementwise ops must be — this pins the contract).
+    #[test]
+    fn lane_blocked_kernels_match_naive_bitwise() {
+        let mut rng = crate::util::Pcg64::seeded(5);
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 100] {
+            let mut x = vec![0.0f32; n];
+            let mut y = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            rng.fill_normal(&mut y, 0.0, 1.0);
+            let (a, b) = (0.37f32, -1.21f32);
+
+            let mut got = y.clone();
+            axpy(a, &x, &mut got);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (y[i] + a * x[i]).to_bits(), "axpy n={n} i={i}");
+            }
+
+            let mut got = y.clone();
+            axpby(a, &x, b, &mut got);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (a * x[i] + b * y[i]).to_bits(), "axpby");
+            }
+
+            let mut got = x.clone();
+            scale(a, &mut got);
+            let mut out = vec![0.0f32; n];
+            scale_into(a, &x, &mut out);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (x[i] * a).to_bits(), "scale");
+                assert_eq!(out[i].to_bits(), (a * x[i]).to_bits(), "scale_into");
+            }
+
+            scaled_add_into(a, &x, &y, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), (a * x[i] + y[i]).to_bits(), "scaled_add");
+            }
+
+            sub(&x, &y, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), (x[i] - y[i]).to_bits(), "sub");
+            }
+            add(&x, &y, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), (x[i] + y[i]).to_bits(), "add");
+            }
+
+            let mut got = x.clone();
+            add_assign(&mut got, &y);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (x[i] + y[i]).to_bits(), "add_assign");
+            }
+            let mut got = x.clone();
+            sub_assign(&mut got, &y);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (x[i] - y[i]).to_bits(), "sub_assign");
+            }
+        }
     }
 
     #[test]
