@@ -1,0 +1,136 @@
+//! Elastic-membership benchmark: host-side round throughput of the sync
+//! and async engines under seeded fail-stop churn, against the churn-free
+//! baseline. The churn machinery (live-set maintenance, per-round event
+//! application, epoch bookkeeping, departed-frame filtering) must stay
+//! off the hot path when the schedule is inactive and cheap when it is
+//! not; this bench puts a number on both. Emits
+//! `results/BENCH_churn.json`.
+
+use ef_sgd::bench::{quick_mode, Bench};
+use ef_sgd::config::CompressorKind;
+use ef_sgd::coordinator::async_driver::AsyncTrainDriver;
+use ef_sgd::coordinator::driver::{DriverConfig, TrainDriver};
+use ef_sgd::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use ef_sgd::coordinator::LrSchedule;
+use ef_sgd::metrics::Recorder;
+use ef_sgd::model::toy::SparseNoiseQuadratic;
+use ef_sgd::net::MembershipSchedule;
+use ef_sgd::util::Pcg64;
+
+/// Churn horizon: more rounds than any bench run will drive, so the
+/// schedule never runs out of events mid-measurement.
+const HORIZON: u64 = 100_000;
+
+fn make_workers(n: usize, d: usize) -> Vec<Worker> {
+    (0..n)
+        .map(|id| {
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    SparseNoiseQuadratic::new(d, 0.0),
+                    Pcg64::seeded(100 + id as u64),
+                )),
+                WorkerMode::ErrorFeedback,
+                CompressorKind::ScaledSign,
+                64,
+                4,
+                Pcg64::seeded(id as u64),
+            )
+        })
+        .collect()
+}
+
+fn cfg_with(membership: MembershipSchedule, threads: usize) -> DriverConfig {
+    DriverConfig {
+        steps: usize::MAX, // rounds are driven manually below
+        schedule: LrSchedule::constant(0.01),
+        membership,
+        threads,
+        ..Default::default()
+    }
+}
+
+struct Row {
+    engine: &'static str,
+    workers: usize,
+    rate_milli: u64,
+    events: usize,
+    rounds_per_sec: f64,
+}
+
+fn main() {
+    let d = if quick_mode() { 16_384 } else { 262_144 };
+    let n = 8usize;
+    let mut b = Bench::new(&format!("elastic-membership churn (n = {n}, d = {d})"));
+    let mut rows: Vec<Row> = Vec::new();
+
+    // sync engine: churn-free baseline, then crash churn at 2% and 5%
+    for &rate_milli in &[0u64, 20, 50] {
+        let membership =
+            MembershipSchedule::random_churn(7, n, HORIZON, rate_milli as f64 / 1000.0, true);
+        let events = membership.events().len();
+        let mut driver =
+            TrainDriver::new(cfg_with(membership, 4), make_workers(n, d), vec![0.5f32; d]);
+        let mut rec = Recorder::new();
+        let name = format!("sync round rate={:.3}", rate_milli as f64 / 1000.0);
+        let res = b.bench_elems(&name, n as u64, || {
+            driver.round(&mut rec);
+        });
+        rows.push(Row {
+            engine: "sync",
+            workers: n,
+            rate_milli,
+            events,
+            rounds_per_sec: 1.0 / res.mean.as_secs_f64(),
+        });
+    }
+
+    // async engine: half quorum, staleness bound 3, same churn flavours
+    for &rate_milli in &[0u64, 50] {
+        let membership =
+            MembershipSchedule::random_churn(7, n, HORIZON, rate_milli as f64 / 1000.0, true);
+        let events = membership.events().len();
+        let mut driver = AsyncTrainDriver::new(
+            cfg_with(membership, 4),
+            n / 2,
+            3,
+            make_workers(n, d),
+            vec![0.5f32; d],
+        );
+        let mut rec = Recorder::new();
+        let name = format!("async fold rate={:.3}", rate_milli as f64 / 1000.0);
+        let res = b.bench_elems(&name, n as u64, || {
+            driver.step_round(&mut rec);
+        });
+        rows.push(Row {
+            engine: "async",
+            workers: n,
+            rate_milli,
+            events,
+            rounds_per_sec: 1.0 / res.mean.as_secs_f64(),
+        });
+    }
+    b.finish();
+
+    // hand-rolled JSON (no serde offline); one object per config row
+    let mut json = String::from("{\n  \"bench\": \"churn\",\n");
+    json.push_str(&format!("  \"quick\": {},\n  \"configs\": [\n", quick_mode()));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"workers\": {}, \"crash_rate\": {:.3}, \
+             \"schedule_events\": {}, \"d\": {}, \"rounds_per_sec\": {:.3}}}{}\n",
+            r.engine,
+            r.workers,
+            r.rate_milli as f64 / 1000.0,
+            r.events,
+            d,
+            r.rounds_per_sec,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    let path = "results/BENCH_churn.json";
+    std::fs::write(path, &json).expect("write BENCH_churn.json");
+    println!("wrote {path}");
+}

@@ -102,6 +102,7 @@ fn takes_value(key: &str) -> bool {
             | "shards"
             | "aggregation"
             | "adversary"
+            | "churn"
             | "trace"
             | "metrics-out"
     )
@@ -118,7 +119,7 @@ SUBCOMMANDS:
                  (--config configs/<f>.toml, --set k=v overrides, --quick)
     exp <id>     Run a paper experiment: ce1 ce2 ce3 thm1 fig2 fig3 fig4
                  fig5 fig7 table2 rem5 comm lemma3 ablation staleness
-                 byzantine all
+                 byzantine churn all
                  (--quick for reduced sizes, --out results/ for CSV/JSON)
     artifacts    Print the artifact manifest summary
     list         List available experiments
@@ -165,6 +166,12 @@ ROBUSTNESS (train):
                          median | trimmed[:K] | norm_threshold
                          (default mean; the robust rules tolerate
                          Byzantine frames, see docs/ROBUSTNESS.md)
+    --churn <spec>       Elastic-membership schedule: none, or a
+                         comma-separated list of leave:W@R | crash:W@R |
+                         rejoin:W@R | join:W@R — worker W transitions at
+                         the start of round R (crash loses the EF
+                         residual, leave parks it for a warm rejoin;
+                         default none). See docs/ASYNC.md
 
 OBSERVABILITY (train):
     --trace <file>       Record the run's flight-recorder events (sim-time

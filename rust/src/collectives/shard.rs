@@ -357,6 +357,22 @@ impl ShardedParameterServer {
         msgs: &mut Vec<(Message, f64)>,
         frames: &mut Vec<Encoded>,
     ) -> Result<f64, GatherError> {
+        self.gather_shard_expecting(fabric, round, s, msgs, frames, self.workers.len())
+    }
+
+    /// Leader side: like [`gather_shard_into`](Self::gather_shard_into)
+    /// but expecting frames from `expected` workers instead of the full
+    /// fleet — the membership-aware gather used by churn-active rounds,
+    /// where only live workers pushed this round.
+    pub fn gather_shard_expecting(
+        &self,
+        fabric: &Fabric,
+        round: u64,
+        s: usize,
+        msgs: &mut Vec<(Message, f64)>,
+        frames: &mut Vec<Encoded>,
+        expected: usize,
+    ) -> Result<f64, GatherError> {
         frames.clear();
         fabric.recv_all_timed_into(self.leaders[s], msgs);
         // worker ids are unique within a shard's round, so the unstable
@@ -409,10 +425,10 @@ impl ShardedParameterServer {
                 latest = latest.max(arrival);
             }
         }
-        if frames.len() != self.workers.len() {
+        if frames.len() != expected {
             return Err(GatherError::Missing {
                 shard: s,
-                expected: self.workers.len(),
+                expected,
                 got: frames.len(),
             });
         }

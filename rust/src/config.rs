@@ -326,6 +326,10 @@ pub struct TrainConfig {
     /// `norminflate:F[:X]`, `collude:F`, `randombytes:F`) — parsed by
     /// `net::AdversaryModel::parse`.
     pub adversary: String,
+    /// Elastic-membership churn spec (`none` or a comma-separated list of
+    /// `leave:W@R`/`crash:W@R`/`rejoin:W@R`/`join:W@R`) — parsed by
+    /// `net::MembershipSchedule::parse`.
+    pub churn: String,
     /// Base worker compute time per step in milliseconds (virtual clock).
     pub compute_ms: f64,
     /// Link preset for the fabric (`10gbe`, `1gbe`, `ib`, `wan`).
@@ -368,6 +372,7 @@ impl Default for TrainConfig {
             max_staleness: 0,
             straggler: "constant".into(),
             adversary: "none".into(),
+            churn: "none".into(),
             compute_ms: 1.0,
             link: "10gbe".into(),
             link_serialized: false,
@@ -399,8 +404,17 @@ impl TrainConfig {
         // straggler / link specs are validated here so a typo fails at
         // config load, not mid-run
         let straggler = m.str_or("training.straggler", &d.straggler);
-        if crate::net::StragglerModel::parse(&straggler).is_none() {
-            return Err(ConfigError::BadValue("training.straggler".into(), straggler));
+        if let Err(e) = crate::net::StragglerModel::parse(&straggler) {
+            return Err(ConfigError::BadValue(
+                "training.straggler".into(),
+                e.to_string(),
+            ));
+        }
+        // churn specs likewise fail at load time, with the parser's typed
+        // error (offending token + grammar) forwarded verbatim
+        let churn = m.str_or("training.churn", &d.churn);
+        if let Err(e) = crate::net::MembershipSchedule::parse(&churn) {
+            return Err(ConfigError::BadValue("training.churn".into(), e.to_string()));
         }
         let link = m.str_or("training.link", &d.link);
         if crate::net::LinkModel::preset(&link).is_none() {
@@ -469,6 +483,7 @@ impl TrainConfig {
             max_staleness: m.usize_or("training.max_staleness", d.max_staleness as usize) as u64,
             straggler,
             adversary,
+            churn,
             compute_ms: m.f64_or("training.compute_ms", d.compute_ms),
             link,
             link_serialized: m.bool_or("training.link_serialized", d.link_serialized),
@@ -597,6 +612,27 @@ artifacts = "artifacts"
         m.set_kv("training.adversary=\"none\"").unwrap();
         m.set_kv("training.aggregation=\"mode\"").unwrap();
         assert!(TrainConfig::from_map(&m).is_err());
+    }
+
+    #[test]
+    fn churn_key_parses_and_validates() {
+        let mut m = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().churn, "none");
+        m.set_kv("training.churn=\"crash:1@3,rejoin:1@6\"").unwrap();
+        assert_eq!(
+            TrainConfig::from_map(&m).unwrap().churn,
+            "crash:1@3,rejoin:1@6"
+        );
+        // a malformed spec fails at load time with the parser's message
+        m.set_kv("training.churn=\"vanish:1@3\"").unwrap();
+        match TrainConfig::from_map(&m) {
+            Err(ConfigError::BadValue(key, msg)) => {
+                assert_eq!(key, "training.churn");
+                assert!(msg.contains("vanish:1@3"), "{msg}");
+                assert!(msg.contains("accepted grammar"), "{msg}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
     }
 
     #[test]

@@ -51,7 +51,10 @@ use super::worker::Worker;
 use crate::collectives::ShardedParameterServer;
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
-use crate::net::{EventQueue, Fabric, Payload, SimClock, TrafficStats};
+use crate::net::{
+    EventQueue, Fabric, MembershipEvent, MembershipEventKind, MembershipState, Payload, SimClock,
+    TrafficStats,
+};
 use crate::obs::metrics::RunMetrics;
 use crate::obs::trace::{DropReason, EventKind, TraceRecorder};
 use std::collections::BTreeMap;
@@ -65,6 +68,10 @@ struct Inflight {
     worker: usize,
     /// Leader round whose parameters the frames were computed on.
     round: u64,
+    /// Membership epoch at dispatch time (always 0 without churn). A frame
+    /// dispatched before its worker's revival is from a closed life of that
+    /// worker and is discarded on arrival.
+    epoch: u64,
     /// Per-shard frames in shard order.
     frames: Vec<Encoded>,
     report: RoundReport,
@@ -104,6 +111,34 @@ pub struct AsyncTrainDriver {
     /// Last sighting of the fabric's dropped-frame counter (decode drops
     /// happen on pool threads, surfaced as per-fold deltas here).
     last_dropped: u64,
+    /// Elastic-membership state: live bitmap + epoch. Stays at "all live,
+    /// epoch 0" when `cfg.membership` is inactive.
+    membership: MembershipState,
+    /// Quorum re-clamped to the live count at every epoch transition
+    /// (identical to `quorum` while the fleet is full).
+    effective_quorum: usize,
+    /// Per worker: the membership epoch in which it departed (only
+    /// meaningful while it is not live). A departed worker's in-flight
+    /// frame folds while that epoch is still current and is dropped —
+    /// counted in `TrafficStats::departed_frames`, traced as
+    /// `frame_dropped_departed` — once a later epoch has begun.
+    departed_at_epoch: Vec<u64>,
+    /// Per worker: the membership epoch of its latest revival (0 = never
+    /// departed). Frames dispatched before this epoch belong to a closed
+    /// life of the worker and are dropped on arrival.
+    revived_at_epoch: Vec<u64>,
+    /// Per worker: the membership epoch of its latest dispatch (mirrors
+    /// the `Inflight::epoch` stamp). A worker gates the staleness bound
+    /// only while its in-flight frame is from its current life.
+    dispatched_epoch: Vec<u64>,
+    /// Per worker: true from dispatch until its frame folds or drops.
+    /// Churn-free runs keep every worker permanently outstanding.
+    outstanding: Vec<bool>,
+    /// Dispatch-set scratch for churn-active folds (live ∧ ¬outstanding).
+    dispatch_ids: Vec<usize>,
+    /// Copy of the round's `events_at` slice (releases the borrow on
+    /// `cfg.membership` before the events mutate driver state).
+    event_scratch: Vec<MembershipEvent>,
     queue: EventQueue<Inflight>,
     pending: Vec<Inflight>,
     /// Per worker: leader round whose params it is computing on.
@@ -141,7 +176,17 @@ impl AsyncTrainDriver {
         let d = workers[0].dim();
         assert!(workers.iter().all(|w| w.dim() == d));
         assert_eq!(theta0.len(), d);
+        if quorum > n {
+            // one-time: the configured quorum can never be met by a fleet
+            // of n, so it silently degrades to "all workers" — say so
+            log::warn!("quorum {quorum} exceeds the fleet size {n}; clamping to {n}");
+        }
         let quorum = if quorum == 0 { n } else { quorum.min(n) };
+        if cfg.membership.is_active() {
+            if let Err(e) = cfg.membership.validate(n) {
+                panic!("invalid membership schedule: {e}");
+            }
+        }
         let (sim_clock, fabric, ps, trace) = super::driver::build_topology(&cfg, &mut workers);
         let pool = WorkerPool::spawn_with_adversary(
             workers,
@@ -174,6 +219,14 @@ impl AsyncTrainDriver {
             trace,
             metrics,
             last_dropped: 0,
+            membership: MembershipState::new(n),
+            effective_quorum: quorum,
+            departed_at_epoch: vec![0; n],
+            revived_at_epoch: vec![0; n],
+            dispatched_epoch: vec![0; n],
+            outstanding: vec![false; n],
+            dispatch_ids: Vec::with_capacity(n),
+            event_scratch: Vec::new(),
             queue: EventQueue::new(),
             pending: Vec::new(),
             worker_round: vec![0; n],
@@ -226,6 +279,7 @@ impl AsyncTrainDriver {
         Snapshot {
             round: self.round,
             shards: self.ps.num_shards(),
+            epoch: self.membership.epoch(),
             theta: self.theta.clone(),
             worker_errors: states.iter().map(|s| s.error.clone()).collect(),
             worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
@@ -260,6 +314,8 @@ impl AsyncTrainDriver {
             self.sim_clock.set_node_time(w, finish);
             self.worker_round[w] = r;
             self.worker_steps[w] += 1;
+            self.outstanding[w] = true;
+            self.dispatched_epoch[w] = self.membership.epoch();
         }
         let mut reports = self.pool.step_workers(ids, r, lr);
         // collect each dispatched worker's per-shard frames from all the
@@ -300,6 +356,7 @@ impl AsyncTrainDriver {
                 Inflight {
                     worker: src,
                     round,
+                    epoch: self.membership.epoch(),
                     frames,
                     report,
                 },
@@ -309,6 +366,43 @@ impl AsyncTrainDriver {
 
     fn arrive(&mut self, ev: crate::net::Event<Inflight>) {
         self.sim_time = self.sim_time.max(ev.time);
+        let w = ev.payload.worker;
+        // Departed-frame rule: a departed worker's in-flight frame folds
+        // while the epoch it departed in is still current and is discarded
+        // once a later epoch has begun; a frame dispatched before its
+        // worker's latest revival belongs to a closed life of that worker
+        // and is discarded too (its dispatch-time state was lost or
+        // superseded). Every discard is counted in the traffic stats and
+        // traced — never silently lost.
+        if self.cfg.membership.is_active() {
+            let discard = if self.membership.is_live(w) {
+                ev.payload.epoch < self.revived_at_epoch[w]
+            } else {
+                self.membership.epoch() > self.departed_at_epoch[w]
+            };
+            if discard {
+                self.outstanding[w] = false;
+                self.fabric.note_departed_frame();
+                if let Some(tr) = &self.trace {
+                    tr.record(
+                        tr.driver_track(),
+                        ev.time,
+                        ev.payload.round,
+                        EventKind::FrameDropped(DropReason::Departed),
+                        w as u64,
+                    );
+                }
+                // a revived worker waits out its stale pre-revival frame
+                // (dispatching a second frame would double-count it in a
+                // fold); once that frame resolves here, the worker
+                // re-enters the fleet immediately
+                if self.membership.is_live(w) && self.round < self.cfg.steps as u64 {
+                    let ids = [w];
+                    self.dispatch(&ids);
+                }
+                return;
+            }
+        }
         if let Some(tr) = &self.trace {
             // the async leader observes arrivals on its event queue, so the
             // driver track carries them (the sync gather stamps leader
@@ -318,22 +412,36 @@ impl AsyncTrainDriver {
                 ev.time,
                 ev.payload.round,
                 EventKind::FrameArrived,
-                ev.payload.worker as u64,
+                w as u64,
             );
         }
-        self.in_pending[ev.payload.worker] = true;
+        self.in_pending[w] = true;
         self.pending.push(ev.payload);
     }
 
-    /// The quorum + bounded-staleness trigger (see module docs).
+    /// The quorum + bounded-staleness trigger (see module docs). Under
+    /// churn the quorum is the epoch's `effective_quorum` and departed
+    /// workers never gate the staleness bound: a dead worker will not push
+    /// again, so blocking on it would deadlock the leader. A departed
+    /// worker's frame already in `pending` still counts toward the quorum
+    /// and folds with the batch.
     fn trigger(&self) -> bool {
-        if self.pending.len() < self.quorum {
+        if self.pending.len() < self.effective_quorum {
             return false;
         }
-        self.worker_round
-            .iter()
-            .enumerate()
-            .all(|(w, &rw)| self.in_pending[w] || self.round + 1 <= rw + self.max_staleness)
+        let churn = self.cfg.membership.is_active();
+        self.worker_round.iter().enumerate().all(|(w, &rw)| {
+            // a worker gates the bound only while a frame from its current
+            // life is in flight: dead workers never push again, and a
+            // revived worker whose only in-flight frame predates its
+            // revival is waiting for that frame to resolve and drop
+            self.in_pending[w]
+                || (churn
+                    && (!self.membership.is_live(w)
+                        || !self.outstanding[w]
+                        || self.dispatched_epoch[w] < self.revived_at_epoch[w]))
+                || self.round + 1 <= rw + self.max_staleness
+        })
     }
 
     /// Fold all pending frames into one parameter update.
@@ -355,10 +463,14 @@ impl AsyncTrainDriver {
         let mut mean_err = 0.0f64;
         let mut mean_phi = 0.0f64;
         let mut mean_stale = 0.0f64;
+        let churn = self.cfg.membership.is_active();
         for b in batch {
             let stale = step - b.round;
+            // a departed worker's frame may fold arbitrarily late: the
+            // trigger stops blocking on dead workers (they will never push
+            // again), so only live workers are held to the SSP bound
             debug_assert!(
-                stale <= self.max_staleness,
+                stale <= self.max_staleness || (churn && !self.membership.is_live(b.worker)),
                 "frame folded beyond the staleness bound"
             );
             self.staleness.record_frame(stale);
@@ -371,6 +483,7 @@ impl AsyncTrainDriver {
             mean_err += b.report.error_norm;
             mean_phi += b.report.phi;
             self.in_pending[b.worker] = false;
+            self.outstanding[b.worker] = false;
             folded.push(b.worker);
             for (s, f) in b.frames.into_iter().enumerate() {
                 self.frames_by_shard[s].push(f);
@@ -445,6 +558,12 @@ impl AsyncTrainDriver {
         recorder.record("sim_time_s", step, self.sim_time);
 
         self.round += 1;
+        if churn {
+            // membership events for the round the leader just advanced to
+            // apply before the next dispatch, so revived workers join this
+            // fold's dispatch set and departed ones leave it
+            self.apply_membership(self.round);
+        }
         if self.cfg.eval_every > 0 && self.round % self.cfg.eval_every as u64 == 0 {
             let (el, ea) = self.pool.eval(0, &self.theta);
             if el.is_finite() {
@@ -460,11 +579,95 @@ impl AsyncTrainDriver {
                 tr.record(tr.driver_track(), self.sim_time, step, EventKind::CheckpointSaved, 0);
             }
         }
-        // the folded workers pull fresh params and start their next step
+        // the folded workers pull fresh params and start their next step.
+        // Under churn the next dispatch set is recomputed from scratch —
+        // live workers with no frame in flight — which equals `folded`
+        // exactly while the fleet is full, and additionally covers
+        // revivals (no outstanding frame) while excluding departures.
         if self.round < self.cfg.steps as u64 {
-            self.dispatch(&folded);
+            if churn {
+                let mut ids = std::mem::take(&mut self.dispatch_ids);
+                ids.clear();
+                for w in 0..self.pool.n_workers() {
+                    if self.membership.is_live(w) && !self.outstanding[w] {
+                        ids.push(w);
+                    }
+                }
+                // the set can be empty (e.g. the fold drained only a dead
+                // worker's frame): every live worker already has a frame in
+                // flight, so the next arrival re-evaluates the trigger
+                if !ids.is_empty() {
+                    self.dispatch(&ids);
+                }
+                self.dispatch_ids = ids;
+            } else {
+                self.dispatch(&folded);
+            }
         }
         mean_loss
+    }
+
+    /// Apply membership events for `round` (leave/crash/rejoin/join):
+    /// trace them, stamp departure epochs, advance the epoch, re-clamp the
+    /// effective quorum to the live count, and cold-start revived workers
+    /// whose EF state was lost (a crash, or a brand-new join). Graceful
+    /// leavers keep their residual parked in their pool actor for a warm
+    /// rejoin. Only called when the schedule is active.
+    fn apply_membership(&mut self, round: u64) {
+        let evs = self.cfg.membership.events_at(round);
+        if evs.is_empty() {
+            return;
+        }
+        // copy the (Copy) events out: the slice borrows `cfg.membership`,
+        // and applying them mutates driver state
+        let mut events = std::mem::take(&mut self.event_scratch);
+        events.clear();
+        events.extend_from_slice(evs);
+        // the epoch these events open: departures stamped with it keep
+        // folding until a later epoch begins
+        let new_epoch = self.membership.epoch() + 1;
+        for &ev in &events {
+            let cold = self.membership.apply(&ev);
+            if let Some(tr) = &self.trace {
+                let kind = match ev.kind {
+                    MembershipEventKind::Leave | MembershipEventKind::Crash => {
+                        EventKind::MemberLeave
+                    }
+                    MembershipEventKind::Rejoin | MembershipEventKind::Join => {
+                        EventKind::MemberJoin
+                    }
+                };
+                tr.record(tr.driver_track(), self.sim_time, round, kind, ev.worker as u64);
+            }
+            match ev.kind {
+                MembershipEventKind::Leave | MembershipEventKind::Crash => {
+                    self.departed_at_epoch[ev.worker] = new_epoch;
+                }
+                MembershipEventKind::Rejoin | MembershipEventKind::Join => {
+                    self.revived_at_epoch[ev.worker] = new_epoch;
+                    if cold {
+                        // fail-stop lost the residual (or a join never had
+                        // one): revive with zeroed EF state
+                        let d = self.theta.len();
+                        self.pool.restore_states(vec![super::pool::WorkerState {
+                            id: ev.worker,
+                            steps: round,
+                            error: vec![0.0; d],
+                            corrected: vec![0.0; d],
+                        }]);
+                    }
+                }
+            }
+        }
+        self.event_scratch = events;
+        self.membership.bump_epoch();
+        self.effective_quorum = self.quorum.min(self.membership.live_count()).max(1);
+        debug_assert!(
+            self.effective_quorum <= self.membership.live_count(),
+            "effective quorum {} exceeds the live count {}",
+            self.effective_quorum,
+            self.membership.live_count()
+        );
     }
 
     /// Count newly dropped frames (decode pool threads bump the fabric's
@@ -499,8 +702,17 @@ impl AsyncTrainDriver {
     pub fn step_round(&mut self, recorder: &mut Recorder) -> f64 {
         if !self.started {
             self.started = true;
-            let all: Vec<usize> = (0..self.pool.n_workers()).collect();
-            self.dispatch(&all);
+            if self.cfg.membership.is_active() {
+                // round-0 events (a worker can depart before the first
+                // dispatch) apply before any wire traffic
+                self.apply_membership(0);
+                let mut all = Vec::new();
+                self.membership.live_ids_into(&mut all);
+                self.dispatch(&all);
+            } else {
+                let all: Vec<usize> = (0..self.pool.n_workers()).collect();
+                self.dispatch(&all);
+            }
         }
         loop {
             let ev = self
@@ -693,6 +905,44 @@ mod tests {
         assert!(out.sim_time_s > 0.0);
         let losses = &out.recorder.get("train_loss").unwrap().values;
         assert!(losses.last().unwrap() < &(losses.first().unwrap() * 0.5));
+    }
+
+    #[test]
+    fn churn_crash_rejoin_completes_and_drops_closed_epoch_frames() {
+        use crate::net::MembershipSchedule;
+        let d = 16;
+        let n = 4;
+        let steps = 30;
+        let cfg = DriverConfig {
+            steps,
+            schedule: LrSchedule::constant(0.05),
+            // worker 1 is two hundred times slower than the fleet: its
+            // first frame is still on the wire long after its crash epoch
+            // has closed, forcing the departed-drop path
+            straggler: StragglerSchedule::new(
+                1e-3,
+                StragglerModel::FailSlow {
+                    node: 1,
+                    factor: 200.0,
+                },
+                0,
+            ),
+            membership: MembershipSchedule::parse("crash:1@2,leave:2@4,rejoin:2@8,rejoin:1@10")
+                .unwrap(),
+            ..Default::default()
+        };
+        let out = AsyncTrainDriver::new(cfg, 2, 3, quadratic_workers(n, d), vec![1.0f32; d]).run();
+        assert_eq!(out.rounds, steps as u64);
+        // the crashed worker's in-flight frame arrived after a later
+        // membership epoch began, so it was discarded and accounted
+        assert!(
+            out.traffic.departed() >= 1,
+            "expected at least one departed-frame drop, saw {}",
+            out.traffic.departed()
+        );
+        // training still descended through the churn
+        let losses = &out.recorder.get("train_loss").unwrap().values;
+        assert!(losses.last().unwrap() < losses.first().unwrap());
     }
 
     #[test]

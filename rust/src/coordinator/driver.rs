@@ -17,8 +17,8 @@ use crate::collectives::{ShardPlan, ShardedParameterServer};
 use crate::compress::wire::Encoded;
 use crate::metrics::Recorder;
 use crate::net::{
-    AdversarySchedule, Fabric, LinkDiscipline, LinkModel, Message, SimClock, StragglerSchedule,
-    TrafficStats,
+    AdversarySchedule, Fabric, LinkDiscipline, LinkModel, MembershipEvent, MembershipEventKind,
+    MembershipSchedule, MembershipState, Message, SimClock, StragglerSchedule, TrafficStats,
 };
 use crate::obs::metrics::RunMetrics;
 use crate::obs::trace::{DropReason, EventKind, TraceRecorder};
@@ -69,6 +69,12 @@ pub struct DriverConfig {
     /// ([`AdversarySchedule::none`]) corrupts nothing and is
     /// byte-identical to the pre-adversary engine.
     pub adversary: AdversarySchedule,
+    /// Elastic-membership churn schedule (see [`crate::net::membership`]):
+    /// seeded leave/crash/rejoin/join events applied at round starts. The
+    /// default ([`MembershipSchedule::none`]) schedules nothing and is
+    /// byte-identical to the fixed-fleet engine — every churn code path is
+    /// gated on `membership.is_active()`.
+    pub membership: MembershipSchedule,
     /// Worker-pool threads (clamped to 1..=workers; 1 = sequential).
     pub threads: usize,
     /// Parameter-server shards: the model vector splits into this many
@@ -103,6 +109,7 @@ impl Default for DriverConfig {
             leader_cost: DecodeCostModel::none(),
             straggler: StragglerSchedule::none(),
             adversary: AdversarySchedule::none(),
+            membership: MembershipSchedule::none(),
             threads: 1,
             shards: 1,
             log_every: 0,
@@ -247,6 +254,16 @@ pub struct TrainDriver {
     /// deltas into the trace/metrics (decode drops happen on pool threads,
     /// which never write rings directly).
     last_dropped: u64,
+    /// Elastic-membership state: live bitmap + epoch. Stays at "all live,
+    /// epoch 0" forever when `cfg.membership` is inactive.
+    membership: MembershipState,
+    /// Live worker ids for the current epoch, ascending. Initialized to
+    /// the full fleet and refreshed only when an epoch transition fires,
+    /// so churn-free rounds never touch it.
+    live_ids: Vec<usize>,
+    /// Copy of the round's `events_at` slice (releases the borrow on
+    /// `cfg.membership` before the events mutate driver state).
+    event_scratch: Vec<MembershipEvent>,
     // --- persistent round scratch (the zero-alloc steady state of
     // docs/PERF.md: after round 1 every buffer below is warm and the
     // round loop performs no heap allocation) ---
@@ -280,6 +297,14 @@ impl TrainDriver {
         );
         let frames_by_shard = (0..ps.num_shards()).map(|_| Vec::new()).collect();
         let metrics = cfg.metrics.clone();
+        if cfg.membership.is_active() {
+            if let Err(e) = cfg.membership.validate(pool.n_workers()) {
+                panic!("invalid membership schedule: {e}");
+            }
+        }
+        let membership = MembershipState::new(pool.n_workers());
+        let mut live_ids = Vec::with_capacity(pool.n_workers());
+        membership.live_ids_into(&mut live_ids);
         TrainDriver {
             momentum: vec![0.0; d],
             wd_buf: vec![0.0; d],
@@ -296,6 +321,9 @@ impl TrainDriver {
             trace,
             metrics,
             last_dropped: 0,
+            membership,
+            live_ids,
+            event_scratch: Vec::new(),
             bcast: Vec::new(),
             reports: Vec::new(),
             msgs: Vec::new(),
@@ -362,6 +390,7 @@ impl TrainDriver {
         Snapshot {
             round: self.clock.current(),
             shards: self.ps.num_shards(),
+            epoch: self.membership.epoch(),
             theta: self.theta.clone(),
             worker_errors: states.iter().map(|s| s.error.clone()).collect(),
             worker_corrected: states.into_iter().map(|s| s.corrected).collect(),
@@ -398,6 +427,23 @@ impl TrainDriver {
         while self.clock.current() < snap.round {
             self.clock.advance();
         }
+        if self.cfg.membership.is_active() {
+            // Replay the schedule up to the snapshot round so the live set
+            // and epoch resume exactly where the checkpointing run stood.
+            // Crash-departed workers got their (stale) snapshot state back
+            // above; their rejoin event re-zeroes it, same as the original
+            // run. Pre-membership checkpoints carry epoch 0, which replay
+            // reproduces only when no event fired before the snapshot —
+            // the debug assert catches schedule/checkpoint mismatches.
+            self.membership =
+                MembershipState::replay(&self.cfg.membership, self.pool.n_workers(), snap.round);
+            debug_assert_eq!(
+                self.membership.epoch(),
+                snap.epoch,
+                "checkpoint membership epoch disagrees with schedule replay"
+            );
+            self.membership.live_ids_into(&mut self.live_ids);
+        }
     }
 
     fn checkpoint(&self) {
@@ -411,11 +457,18 @@ impl TrainDriver {
     pub fn round(&mut self, recorder: &mut Recorder) -> f64 {
         let step = self.clock.current();
         let lr = self.cfg.schedule.lr(step as usize) as f32;
-        let n = self.pool.n_workers();
+        let churn = self.cfg.membership.is_active();
+        if churn {
+            // membership events apply at the *start* of the round, before
+            // any wire traffic: a worker departing at round R never sees
+            // round R's broadcast
+            self.apply_membership(step);
+        }
+        let live = self.live_ids.len();
 
         if let Some(tr) = &self.trace {
             let t = self.sim_time;
-            tr.record(tr.driver_track(), t, step, EventKind::RoundStart, n as u64);
+            tr.record(tr.driver_track(), t, step, EventKind::RoundStart, live as u64);
             for s in 0..self.ps.num_shards() {
                 tr.record(tr.leader_track(s), t, step, EventKind::BroadcastSent, s as u64);
             }
@@ -431,20 +484,38 @@ impl TrainDriver {
             self.sim_clock.set_node_time(l, self.sim_time);
         }
         self.ps.make_broadcast(&self.theta, &mut self.bcast);
-        let params_arrival = self.ps.broadcast_shared(&self.fabric, step, &self.bcast);
+        let params_arrival = if churn {
+            // live-set broadcast: the same per-worker sends as
+            // `broadcast_shared`, restricted to the live ids (ascending —
+            // the identical wire schedule while nobody has departed)
+            let mut latest = 0.0f64;
+            for &w in &self.live_ids {
+                latest = latest.max(self.ps.send_params_shared(&self.fabric, w, step, &self.bcast));
+            }
+            latest
+        } else {
+            self.ps.broadcast_shared(&self.fabric, step, &self.bcast)
+        };
         // each worker's push departs once its (straggler-model) compute
         // finishes, so the frames the pool is about to send get stamped
-        // with honest virtual arrival times
-        for w in 0..n {
+        // with honest virtual arrival times (`live_ids` is the full fleet
+        // whenever churn is off)
+        for &w in &self.live_ids {
             let finish = params_arrival + self.cfg.straggler.compute_time(w, step);
             self.sim_clock.set_node_time(w, finish);
         }
 
-        // 2-3. pool: every worker drains its broadcast, computes, EF-
+        // 2-3. pool: every live worker drains its broadcast, computes, EF-
         // compresses, and pushes one encoded frame per shard leader (the
-        // frame buffers come from the fabric's recycle pool).
-        self.pool.round_into(step, lr, &mut self.reports);
-        let mean_loss = self.reports.iter().map(|r| r.loss).sum::<f64>() / n as f64;
+        // frame buffers come from the fabric's recycle pool). Departed
+        // workers keep their actors — and, after a graceful leave, their
+        // parked EF residual — but are never stepped.
+        if churn {
+            self.reports = self.pool.step_workers(&self.live_ids, step, lr);
+        } else {
+            self.pool.round_into(step, lr, &mut self.reports);
+        }
+        let mean_loss = self.reports.iter().map(|r| r.loss).sum::<f64>() / live as f64;
 
         // 4. shard leaders: gather, decode, aggregate, update. Each shard
         // sorts its frames by source so the f32 aggregation order is
@@ -457,12 +528,13 @@ impl TrainDriver {
         for s in 0..s_total {
             let latest = self
                 .ps
-                .gather_shard_into(
+                .gather_shard_expecting(
                     &self.fabric,
                     step,
                     s,
                     &mut self.msgs,
                     &mut self.frames_by_shard[s],
+                    live,
                 )
                 .unwrap_or_else(|e| panic!("PS gather failed: {e}"));
             round_end = round_end.max(latest);
@@ -494,7 +566,7 @@ impl TrainDriver {
             self.model_leader_s += worst;
         }
         if let Some(tr) = &self.trace {
-            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeStart, n as u64);
+            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeStart, live as u64);
         }
         // the synchronous barrier: every shard has every frame
         self.cfg.aggregation.combine_frames_sharded_into(
@@ -520,7 +592,7 @@ impl TrainDriver {
             m.observe_decode_ns((critical * 1e9) as u64);
         }
         if let Some(tr) = &self.trace {
-            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeDone, n as u64);
+            tr.record(tr.driver_track(), round_end, step, EventKind::DecodeDone, live as u64);
         }
 
         apply_update(
@@ -536,11 +608,11 @@ impl TrainDriver {
         // instrumentation (reports are sorted by worker id)
         recorder.record("train_loss", step, mean_loss);
         recorder.record("lr", step, lr as f64);
-        let mean_err = self.reports.iter().map(|r| r.error_norm).sum::<f64>() / n as f64;
+        let mean_err = self.reports.iter().map(|r| r.error_norm).sum::<f64>() / live as f64;
         recorder.record("error_norm", step, mean_err);
-        let mean_phi = self.reports.iter().map(|r| r.phi).sum::<f64>() / n as f64;
+        let mean_phi = self.reports.iter().map(|r| r.phi).sum::<f64>() / live as f64;
         recorder.record("phi_corrected", step, mean_phi);
-        let mean_phi_g = self.reports.iter().map(|r| r.grad_density).sum::<f64>() / n as f64;
+        let mean_phi_g = self.reports.iter().map(|r| r.grad_density).sum::<f64>() / live as f64;
         recorder.record("phi_grad", step, mean_phi_g);
         if let Some(m) = &self.metrics {
             // reports are sorted by worker id; ‖e_t‖ is the Lemma-3 residual
@@ -554,6 +626,53 @@ impl TrainDriver {
 
         self.clock.advance();
         mean_loss
+    }
+
+    /// Apply this round's membership events (leave/crash/rejoin/join):
+    /// trace them, bump the epoch once if any fired, refresh the live-id
+    /// scratch, and cold-start revived workers whose EF state was lost (a
+    /// crash, or a brand-new join). Graceful leavers keep their residual
+    /// parked inside their pool actor, so a warm rejoin moves no state at
+    /// all. Only called when the schedule is active, and before any wire
+    /// traffic for the round.
+    fn apply_membership(&mut self, step: u64) {
+        let evs = self.cfg.membership.events_at(step);
+        if evs.is_empty() {
+            return;
+        }
+        // copy the (Copy) events out: the slice borrows `cfg.membership`,
+        // and applying them mutates driver state
+        let mut events = std::mem::take(&mut self.event_scratch);
+        events.clear();
+        events.extend_from_slice(evs);
+        for &ev in &events {
+            let cold = self.membership.apply(&ev);
+            if let Some(tr) = &self.trace {
+                let kind = match ev.kind {
+                    MembershipEventKind::Leave | MembershipEventKind::Crash => {
+                        EventKind::MemberLeave
+                    }
+                    MembershipEventKind::Rejoin | MembershipEventKind::Join => {
+                        EventKind::MemberJoin
+                    }
+                };
+                tr.record(tr.driver_track(), self.sim_time, step, kind, ev.worker as u64);
+            }
+            if cold {
+                // fail-stop lost the residual (or a join never had one):
+                // revive with zeroed EF state at the current round
+                let d = self.theta.len();
+                self.pool.restore_states(vec![WorkerState {
+                    id: ev.worker,
+                    steps: step,
+                    error: vec![0.0; d],
+                    corrected: vec![0.0; d],
+                }]);
+            }
+        }
+        self.event_scratch = events;
+        self.membership.bump_epoch();
+        self.membership.live_ids_into(&mut self.live_ids);
     }
 
     /// Reconcile the fabric's dropped-frame counter with the last sighting:

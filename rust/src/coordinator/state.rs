@@ -68,7 +68,20 @@ fn write_f32(path: &Path, data: &[f32]) -> std::io::Result<()> {
 }
 
 fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, CheckpointError> {
-    let bytes = std::fs::read(path)?;
+    // A tensor file named by meta.json but absent on disk is a corrupt
+    // checkpoint (meta is written last, so a complete checkpoint has every
+    // blob), not a transient IO condition — rejoin-from-checkpoint must
+    // never half-restore.
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(CheckpointError::Corrupt(format!(
+                "missing tensor file {}",
+                path.display()
+            )))
+        }
+        Err(e) => return Err(CheckpointError::Io(e)),
+    };
     if bytes.len() != expect * 4 {
         return Err(CheckpointError::Corrupt(format!(
             "{} has {} bytes, expected {}",
@@ -92,6 +105,11 @@ pub struct Snapshot {
     /// path checks this. Checkpoints written before sharding existed load
     /// as 1.
     pub shards: usize,
+    /// Membership epoch at snapshot time: how many rounds with applied
+    /// membership events precede this snapshot. Restore replays the seeded
+    /// schedule and checks it against this value; churn-free checkpoints
+    /// (and checkpoints from before elastic membership) load as 0.
+    pub epoch: u64,
     pub theta: Vec<f32>,
     /// Per-worker EF residuals `e_t` (full-length: contiguous shards
     /// concatenate, so the tensor layout is plan-independent).
@@ -126,6 +144,7 @@ impl CheckpointStore {
         let meta = obj(vec![
             ("round", num(snap.round as f64)),
             ("shards", num(snap.shards as f64)),
+            ("epoch", num(snap.epoch as f64)),
             ("d", num(snap.theta.len() as f64)),
             ("workers", num(snap.worker_errors.len() as f64)),
             ("format", s(CHECKPOINT_FORMAT)),
@@ -161,6 +180,9 @@ impl CheckpointStore {
         // checkpoints from before the sharded parameter server carry no
         // shard count; they were trained single-leader
         let shards = meta.get("shards").and_then(|v| v.as_usize()).unwrap_or(1);
+        // checkpoints from before elastic membership carry no epoch; they
+        // were trained churn-free
+        let epoch = meta.get("epoch").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
         let theta = read_f32(&self.dir.join("theta.f32"), d)?;
         let worker_errors = (0..workers)
             .map(|w| read_f32(&self.dir.join(format!("error_{w}.f32")), d))
@@ -171,6 +193,7 @@ impl CheckpointStore {
         Ok(Snapshot {
             round,
             shards,
+            epoch,
             theta,
             worker_errors,
             worker_corrected,
@@ -200,6 +223,7 @@ mod tests {
         let snap = Snapshot {
             round: 42,
             shards: 4,
+            epoch: 3,
             theta: vec![1.0, -2.0, 3.0],
             worker_errors: vec![vec![0.1, 0.2, 0.3], vec![-0.1, 0.0, 0.5]],
             worker_corrected: vec![vec![1.1, 1.2, 1.3], vec![-1.1, 0.0, -0.5]],
@@ -209,6 +233,7 @@ mod tests {
         let loaded = store.load().unwrap();
         assert_eq!(loaded.round, 42);
         assert_eq!(loaded.shards, 4);
+        assert_eq!(loaded.epoch, 3);
         assert_eq!(loaded.theta, snap.theta);
         assert_eq!(loaded.worker_errors, snap.worker_errors);
         assert_eq!(loaded.worker_corrected, snap.worker_corrected);
@@ -222,6 +247,7 @@ mod tests {
         let snap = Snapshot {
             round: 1,
             shards: 1,
+            epoch: 0,
             theta: vec![1.0; 8],
             worker_errors: vec![vec![0.0; 8]],
             worker_corrected: vec![vec![0.0; 8]],
@@ -243,6 +269,7 @@ mod tests {
         let snap = Snapshot {
             round: 2,
             shards: 1,
+            epoch: 0,
             theta: vec![1.0; 4],
             worker_errors: vec![vec![0.0; 4]],
             worker_corrected: vec![vec![0.0; 4]],
@@ -277,6 +304,7 @@ mod tests {
         let snap = Snapshot {
             round: 3,
             shards: 2,
+            epoch: 0,
             theta: vec![1.0; 4],
             worker_errors: vec![vec![0.0; 4]],
             worker_corrected: vec![vec![0.0; 4]],
@@ -290,7 +318,95 @@ mod tests {
             ("format", s(CHECKPOINT_FORMAT)),
         ]);
         std::fs::write(dir.join("meta.json"), meta.to_string_compact()).unwrap();
-        assert_eq!(store.load().unwrap().shards, 1);
+        let loaded = store.load().unwrap();
+        assert_eq!(loaded.shards, 1);
+        // pre-membership checkpoints also carry no epoch key
+        assert_eq!(loaded.epoch, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn seeded_store(tag: &str) -> (PathBuf, CheckpointStore) {
+        let dir = tmpdir(tag);
+        let store = CheckpointStore::new(&dir).unwrap();
+        let snap = Snapshot {
+            round: 5,
+            shards: 2,
+            epoch: 1,
+            theta: vec![0.5; 16],
+            worker_errors: vec![vec![0.25; 16], vec![-0.25; 16]],
+            worker_corrected: vec![vec![1.0; 16], vec![-1.0; 16]],
+        };
+        store.save(&snap).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn missing_tensor_file_is_corrupt_not_io() {
+        // Rejoin-from-checkpoint runs load on the hot path: a checkpoint
+        // whose meta names a blob that is gone must be Corrupt (with the
+        // path in the message), never a panic or a half-restore.
+        for victim in ["theta.f32", "error_1.f32", "corrected_0.f32"] {
+            let (dir, store) = seeded_store("missing_blob");
+            std::fs::remove_file(dir.join(victim)).unwrap();
+            match store.load() {
+                Err(CheckpointError::Corrupt(msg)) => {
+                    assert!(msg.contains(victim), "victim {victim}: {msg}")
+                }
+                other => panic!("victim {victim}: expected Corrupt, got {other:?}"),
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn meta_blob_length_mismatch_is_corrupt() {
+        // meta claims a larger d than the blobs hold
+        let (dir, store) = seeded_store("meta_mismatch");
+        let meta = obj(vec![
+            ("round", num(5.0)),
+            ("shards", num(2.0)),
+            ("epoch", num(1.0)),
+            ("d", num(32.0)),
+            ("workers", num(2.0)),
+            ("format", s(CHECKPOINT_FORMAT)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string_compact()).unwrap();
+        assert!(matches!(store.load(), Err(CheckpointError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_truncated_blobs_always_corrupt_never_panic() {
+        // Property: truncating any tensor blob to any shorter length
+        // (including lengths that are not multiples of 4) yields Corrupt —
+        // load never panics and never half-restores.
+        let mut rng = crate::util::Pcg64::seeded(0xC0FFEE);
+        let (dir, store) = seeded_store("prop_trunc");
+        let blobs = ["theta.f32", "error_0.f32", "corrected_1.f32"];
+        let full = 16 * 4;
+        let mut cuts: Vec<usize> = vec![0, 1, 3, 4, full - 4, full - 1];
+        for _ in 0..10 {
+            cuts.push(rng.below(full));
+        }
+        for blob in blobs {
+            let pristine = std::fs::read(dir.join(blob)).unwrap();
+            assert_eq!(pristine.len(), full);
+            for &cut in &cuts {
+                std::fs::write(dir.join(blob), &pristine[..cut]).unwrap();
+                match store.load() {
+                    Err(CheckpointError::Corrupt(_)) => {}
+                    other => panic!("{blob} truncated to {cut}: expected Corrupt, got {other:?}"),
+                }
+            }
+            // over-long blobs are corrupt too
+            let mut long = pristine.clone();
+            long.extend_from_slice(&[0u8; 4]);
+            std::fs::write(dir.join(blob), &long).unwrap();
+            assert!(matches!(store.load(), Err(CheckpointError::Corrupt(_))));
+            std::fs::write(dir.join(blob), &pristine).unwrap();
+            // restored blob loads again — no state was half-mutated
+            store.load().unwrap();
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,212 @@
+//! Elastic-membership sweep: EF-SGD vs (plain) SIGNSGD under seeded
+//! fail-stop churn of increasing rate.
+//!
+//! The paper's claim is that the error residual makes compressed SGD
+//! robust to whatever the system loses; membership churn is the harshest
+//! loss the fleet model supports — a crashed worker's residual is gone,
+//! and a cold rejoin restarts its compressor from zero. This experiment
+//! runs the Theorem-1 shared-sign least-squares family on the synchronous
+//! engine and sweeps the per-round crash probability of
+//! [`MembershipSchedule::random_churn`] (worker 0 pinned live, departed
+//! workers revive with probability 0.3 per round). Reported per method
+//! and rate: the tail-mean loss, its degradation versus the rate-0
+//! (churn-free, byte-identical to the plain engine) baseline, and the
+//! mean number of membership events.
+//!
+//! Shape to observe (asserted by the `churn_sweep_*` integration test):
+//! EF-SGD degrades gracefully — cold restarts only discard a bounded
+//! residual, which the feedback loop rebuilds in O(1/delta) rounds —
+//! while plain SIGNSGD's loss gap versus EF is strictly larger at every
+//! swept rate, because the sign baseline is structurally trapped with or
+//! without churn and every crash re-randomizes its oscillation.
+
+use super::{ExpContext, ExpResult};
+use crate::config::CompressorKind;
+use crate::coordinator::driver::{DriverConfig, TrainDriver, UpdateRule};
+use crate::coordinator::worker::{ObjectiveSource, Worker, WorkerMode};
+use crate::coordinator::LrSchedule;
+use crate::metrics::Recorder;
+use crate::model::toy::SharedSignTheorem1;
+use crate::net::MembershipSchedule;
+use crate::util::Pcg64;
+use anyhow::Result;
+
+/// Problem + engine constants: the same shared-sign family as the
+/// staleness sweep, so the two robustness experiments are comparable.
+const D: usize = 16;
+const ROWS: usize = 32;
+const WORKERS: usize = 8;
+const GAMMA: f64 = 1e-3;
+
+/// Per-round, per-worker crash probabilities. Rate 0 produces an
+/// inactive schedule, so that column runs the churn-free engine.
+pub const RATES: [f64; 4] = [0.0, 0.02, 0.05, 0.1];
+
+struct MethodSpec {
+    name: &'static str,
+    mode: WorkerMode,
+    kind: CompressorKind,
+}
+
+const METHODS: [MethodSpec; 2] = [
+    MethodSpec {
+        name: "ef_sign",
+        mode: WorkerMode::ErrorFeedback,
+        kind: CompressorKind::ScaledSign,
+    },
+    MethodSpec {
+        name: "signsgd",
+        mode: WorkerMode::PlainCompress,
+        kind: CompressorKind::ScaledSign,
+    },
+];
+
+struct RunStats {
+    tail_loss: f64,
+    events: usize,
+}
+
+/// One synchronous run under seeded crash churn; `rep` seeds the problem
+/// instance, the RNG streams and the churn schedule together, so every
+/// (method, rate) cell of a rep sees identical data and — rate permitting
+/// — identical membership events.
+fn run_one(spec: &MethodSpec, rate: f64, steps: usize, rep: u64, base_seed: u64) -> RunStats {
+    let obj_seed = base_seed + 9000 + rep;
+    let workers: Vec<Worker> = (0..WORKERS)
+        .map(|id| {
+            let obj = SharedSignTheorem1::new(ROWS, D, &mut Pcg64::seeded(obj_seed));
+            Worker::new(
+                id,
+                Box::new(ObjectiveSource::new(
+                    obj,
+                    Pcg64::new(base_seed + rep, 1000 + id as u64),
+                )),
+                spec.mode,
+                spec.kind,
+                4,
+                4,
+                Pcg64::new(base_seed + rep, id as u64),
+            )
+        })
+        .collect();
+    let membership =
+        MembershipSchedule::random_churn(base_seed + 77 + rep, WORKERS, steps as u64, rate, true);
+    let events = membership.events().len();
+    let cfg = DriverConfig {
+        steps,
+        schedule: LrSchedule::constant(GAMMA),
+        update_rule: UpdateRule::ApplyAggregate,
+        membership,
+        ..Default::default()
+    };
+    let out = TrainDriver::new(cfg, workers, vec![1.0f32; D]).run();
+    let losses = &out.recorder.get("train_loss").unwrap().values;
+    let tail = &losses[losses.len() * 3 / 4..];
+    RunStats {
+        tail_loss: tail.iter().sum::<f64>() / tail.len() as f64,
+        events,
+    }
+}
+
+pub fn churn(ctx: &ExpContext) -> Result<ExpResult> {
+    let steps = if ctx.quick { 300 } else { 600 };
+    let reps = if ctx.quick { 2 } else { 3 };
+
+    let mut rec = Recorder::new();
+    rec.tag("experiment", "churn");
+    let mut lines = vec![format!(
+        "== Elastic-membership sweep: fail-stop churn, fleet of {WORKERS}, \
+         shared-sign least squares d={D}, {steps} rounds x {reps} reps =="
+    )];
+    lines.push(format!(
+        "  {:<9} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "method", "rate=0", "rate=.02", "rate=.05", "rate=.1", "events@.1"
+    ));
+
+    for spec in &METHODS {
+        let mut finals = Vec::with_capacity(RATES.len());
+        let mut last_events = 0.0f64;
+        for (ri, &rate) in RATES.iter().enumerate() {
+            let mut loss = 0.0f64;
+            let mut events = 0.0f64;
+            for rep in 0..reps {
+                let s = run_one(spec, rate, steps, rep as u64, ctx.seed);
+                loss += s.tail_loss;
+                events += s.events as f64;
+            }
+            loss /= reps as f64;
+            events /= reps as f64;
+            rec.record(&format!("final_{}", spec.name), ri as u64, loss);
+            rec.record(&format!("events_{}", spec.name), ri as u64, events);
+            finals.push(loss);
+            last_events = events;
+        }
+        for (ri, f) in finals.iter().enumerate().skip(1) {
+            rec.record(&format!("deg_{}", spec.name), ri as u64, f - finals[0]);
+        }
+        lines.push(format!(
+            "  {:<9} {:>10.3e} {:>10.3e} {:>10.3e} {:>10.3e} {:>12.1}",
+            spec.name, finals[0], finals[1], finals[2], finals[3], last_events
+        ));
+    }
+    lines.push(
+        "  shape: EF's loss stays near its churn-free floor at every crash rate —\n  \
+         a cold restart discards one bounded residual, which the feedback loop\n  \
+         rebuilds — while plain SIGNSGD sits an order of magnitude higher at\n  \
+         every rate: the sign trap does not need churn to bite, and every\n  \
+         crash re-randomizes its oscillation (Theorem 1 vs Theorem II)."
+            .into(),
+    );
+
+    Ok(ExpResult {
+        id: "churn",
+        summary: lines.join("\n"),
+        recorders: vec![("sweep".into(), rec)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Rate 0 must be byte-identical to an explicit `none()` schedule:
+    /// the rate-0 column of the sweep IS the churn-free engine.
+    #[test]
+    fn rate_zero_matches_membership_none() {
+        let spec = &METHODS[0];
+        let mk = || {
+            (0..WORKERS)
+                .map(|id| {
+                    let obj = SharedSignTheorem1::new(ROWS, D, &mut Pcg64::seeded(42));
+                    Worker::new(
+                        id,
+                        Box::new(ObjectiveSource::new(obj, Pcg64::new(7, 1000 + id as u64))),
+                        spec.mode,
+                        spec.kind,
+                        4,
+                        4,
+                        Pcg64::new(7, id as u64),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let run = |membership: MembershipSchedule| {
+            let cfg = DriverConfig {
+                steps: 40,
+                schedule: LrSchedule::constant(GAMMA),
+                update_rule: UpdateRule::ApplyAggregate,
+                membership,
+                ..Default::default()
+            };
+            TrainDriver::new(cfg, mk(), vec![1.0f32; D]).run().theta
+        };
+        let zero_rate = MembershipSchedule::random_churn(3, WORKERS, 40, 0.0, true);
+        assert!(!zero_rate.is_active());
+        let a = run(zero_rate);
+        let b = run(MembershipSchedule::none());
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod ablation;
 pub mod byzantine;
+pub mod churn;
 pub mod cifar_sim;
 pub mod comm;
 pub mod counterexamples;
@@ -76,7 +77,7 @@ impl ExpResult {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "ce1", "ce2", "ce3", "thm1", "fig2", "fig3", "fig4", "fig5", "fig7", "table2", "rem5",
-    "comm", "lemma3", "ablation", "staleness", "byzantine",
+    "comm", "lemma3", "ablation", "staleness", "byzantine", "churn",
 ];
 
 /// Run an experiment by id (prints the summary and writes results).
@@ -98,6 +99,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpResult> {
         "ablation" => ablation::ablation(ctx),
         "staleness" => staleness::staleness(ctx),
         "byzantine" => byzantine::byzantine(ctx),
+        "churn" => churn::churn(ctx),
         other => bail!("unknown experiment '{other}'; known: {}", ALL.join(" ")),
     };
     let result = result?;

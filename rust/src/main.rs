@@ -14,7 +14,8 @@ use ef_sgd::experiments::{self, ExpContext};
 use ef_sgd::metrics::sparkline;
 use ef_sgd::model::toy::SparseNoiseQuadratic;
 use ef_sgd::net::{
-    AdversarySchedule, LinkDiscipline, LinkModel, StragglerModel, StragglerSchedule,
+    AdversarySchedule, LinkDiscipline, LinkModel, MembershipSchedule, StragglerModel,
+    StragglerSchedule,
 };
 use ef_sgd::obs::RunMetrics;
 use ef_sgd::runtime::{LmSession, Runtime};
@@ -183,6 +184,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(a) = args.opt("adversary") {
         cfg.adversary = a.to_string();
     }
+    if let Some(c) = args.opt("churn") {
+        cfg.churn = c.to_string();
+    }
     if let Some(a) = args.opt("aggregation") {
         cfg.aggregation = a.to_string();
     }
@@ -281,8 +285,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         UpdateRule::ApplyAggregate
     };
-    let straggler_model = StragglerModel::parse(&cfg.straggler)
-        .ok_or_else(|| anyhow!("bad straggler spec '{}'", cfg.straggler))?;
+    // the typed parse errors print the offending token plus the accepted
+    // grammar, so a CLI typo is self-explaining
+    let straggler_model = StragglerModel::parse(&cfg.straggler).map_err(|e| anyhow!("{e}"))?;
     let adversary = AdversarySchedule::parse_spec(&cfg.adversary, cfg.seed)
         .ok_or_else(|| anyhow!("bad adversary spec '{}'", cfg.adversary))?;
     if adversary.is_active() {
@@ -291,6 +296,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             adversary.model.name(),
             adversary.fraction,
             adversary.num_adversaries(cfg.workers),
+            cfg.workers
+        );
+    }
+    let membership = MembershipSchedule::parse(&cfg.churn).map_err(|e| anyhow!("{e}"))?;
+    if membership.is_active() {
+        membership
+            .validate(cfg.workers)
+            .map_err(|e| anyhow!("bad churn schedule: {e}"))?;
+        log::info!(
+            "churn: {membership} — {} membership event(s) over a fleet of {}",
+            membership.events().len(),
             cfg.workers
         );
     }
@@ -317,6 +333,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         leader_cost,
         straggler: StragglerSchedule::new(cfg.compute_ms * 1e-3, straggler_model, cfg.seed),
         adversary,
+        membership,
         threads: cfg.threads.max(1),
         shards: cfg.shards.max(1),
         log_every: cfg.log_every.max(1),

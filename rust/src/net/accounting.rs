@@ -33,6 +33,11 @@ pub struct TrafficStats {
     /// mis-routed shard tags) and excluded from aggregation instead of
     /// aborting on. Nonzero only under adversarial or corrupted traffic.
     pub dropped_frames: u64,
+    /// Frames discarded because their sender departed the membership and
+    /// the epoch they were dispatched in has closed (elastic churn; see
+    /// `docs/ASYNC.md`). Nonzero only for runs with an active
+    /// `MembershipSchedule`.
+    pub departed_frames: u64,
 }
 
 impl TrafficStats {
@@ -140,6 +145,16 @@ impl TrafficStats {
         self.dropped_frames
     }
 
+    /// Count one frame discarded because its sender departed.
+    pub fn record_departed(&mut self) {
+        self.departed_frames += 1;
+    }
+
+    /// Frames discarded from departed workers so far.
+    pub fn departed(&self) -> u64 {
+        self.departed_frames
+    }
+
     pub fn summary(&self) -> String {
         let mut out = format!(
             "total {:.3} Mbit over {} links; critical path {:.3} ms\n",
@@ -159,6 +174,12 @@ impl TrafficStats {
             out.push_str(&format!(
                 "  {} frames dropped as undecodable\n",
                 self.dropped_frames
+            ));
+        }
+        if self.departed_frames > 0 {
+            out.push_str(&format!(
+                "  {} frames dropped from departed workers\n",
+                self.departed_frames
             ));
         }
         out
@@ -217,12 +238,16 @@ mod tests {
         t.record_dropped();
         assert_eq!(t.dropped(), 1);
         assert!(t.summary().contains("dropped as undecodable"));
+        t.record_departed();
+        assert_eq!(t.departed(), 1);
+        assert!(t.summary().contains("departed workers"));
         t.reset();
         assert_eq!(t.total_bits, 0);
         assert!(t.per_link.is_empty());
         assert!(t.sim_time_per_kind.is_empty());
         assert!(t.per_shard.is_empty());
         assert_eq!(t.dropped(), 0);
+        assert_eq!(t.departed(), 0);
         assert!(!t.summary().contains("dropped"));
     }
 

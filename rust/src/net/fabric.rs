@@ -331,6 +331,13 @@ impl Fabric {
     pub fn note_dropped_frame(&self) {
         self.stats.lock().unwrap().record_dropped();
     }
+
+    /// Count a frame discarded because its sender departed the membership
+    /// and the epoch it was dispatched in has closed (elastic churn; only
+    /// runs with an active `MembershipSchedule` take this path).
+    pub fn note_departed_frame(&self) {
+        self.stats.lock().unwrap().record_departed();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,594 @@
+//! Seeded, virtual-clock-scheduled membership churn.
+//!
+//! A production fleet is never a fixed `n`: workers crash, rejoin, and
+//! scale out mid-run. [`MembershipSchedule`] models that as a list of
+//! events — `leave:W@R` (graceful departure, EF residual parked in the
+//! worker actor), `crash:W@R` (fail-stop, the residual is lost),
+//! `rejoin:W@R` (revive; cold after a crash, warm after a leave) and
+//! `join:W@R` (cold revival regardless of history) — applied at the
+//! *start* of round `R`. A schedule is either written explicitly
+//! ([`MembershipSchedule::parse`]) or drawn from seeded per-`(worker,
+//! round)` PCG cells ([`MembershipSchedule::random_churn`]), so the event
+//! list is a pure function of `(seed, n, round)` and every churn run is
+//! bit-deterministic across `(shards, threads)`.
+//!
+//! The drivers consume the schedule through [`MembershipState`]: a live
+//! bitmap plus a monotone *membership epoch* that advances once per round
+//! that applies at least one event. The epoch is what the async driver
+//! keys departed-frame semantics on (a frame from a departed worker folds
+//! while the epoch it was dispatched in is still open, and drops once a
+//! later epoch begins) and what [`crate::coordinator::state::Snapshot`]
+//! records so checkpoint restore can replay membership exactly.
+
+use crate::util::rng::Pcg64;
+use std::fmt;
+
+/// What happens to a worker at a scheduled membership event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MembershipEventKind {
+    /// Graceful departure: the worker stops participating but its EF
+    /// residual stays parked in its actor, so a later `rejoin` is warm.
+    Leave,
+    /// Fail-stop: the worker disappears and its EF residual is lost; a
+    /// later `rejoin` restores cold (zeroed) state.
+    Crash,
+    /// Revival of a departed worker: warm after `leave`, cold after
+    /// `crash`.
+    Rejoin,
+    /// Cold revival: zeroed EF state regardless of how the worker left.
+    Join,
+}
+
+impl MembershipEventKind {
+    /// The spec keyword for this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            MembershipEventKind::Leave => "leave",
+            MembershipEventKind::Crash => "crash",
+            MembershipEventKind::Rejoin => "rejoin",
+            MembershipEventKind::Join => "join",
+        }
+    }
+}
+
+/// One scheduled membership transition, applied at the start of `round`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipEvent {
+    pub kind: MembershipEventKind,
+    pub worker: usize,
+    pub round: u64,
+}
+
+impl fmt::Display for MembershipEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}@{}", self.kind.name(), self.worker, self.round)
+    }
+}
+
+/// The accepted spec grammar, quoted by parse errors and the CLI.
+pub const MEMBERSHIP_GRAMMAR: &str = "'none' or a comma-separated list of \
+leave:W@R | crash:W@R | rejoin:W@R | join:W@R \
+(worker W transitions at the start of round R)";
+
+/// A malformed membership spec: the offending token plus what went wrong.
+/// `Display` includes the accepted grammar so the CLI error is
+/// self-describing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipParseError {
+    /// The token (one comma-separated element) that failed to parse.
+    pub token: String,
+    /// Why it was rejected.
+    pub reason: String,
+}
+
+impl fmt::Display for MembershipParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "bad membership spec token '{}': {}; accepted grammar: {}",
+            self.token, self.reason, MEMBERSHIP_GRAMMAR
+        )
+    }
+}
+
+impl std::error::Error for MembershipParseError {}
+
+/// A full churn schedule: membership events sorted by `(round, worker)`.
+///
+/// The empty schedule (`none`) is inert: drivers guard every churn code
+/// path behind [`MembershipSchedule::is_active`], so an empty schedule is
+/// byte-identical to the churn-free engine.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct MembershipSchedule {
+    events: Vec<MembershipEvent>,
+}
+
+impl MembershipSchedule {
+    /// The empty (inert) schedule.
+    pub fn none() -> Self {
+        MembershipSchedule { events: Vec::new() }
+    }
+
+    /// Build from an explicit event list (sorted internally).
+    pub fn from_events(mut events: Vec<MembershipEvent>) -> Self {
+        events.sort_by_key(|e| (e.round, e.worker, e.kind));
+        MembershipSchedule { events }
+    }
+
+    /// True when the schedule contains at least one event. Drivers take
+    /// the churn-aware code paths only when this holds.
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty()
+    }
+
+    /// All events, sorted by `(round, worker)`.
+    pub fn events(&self) -> &[MembershipEvent] {
+        &self.events
+    }
+
+    /// The events applying at the start of `round`, as a sorted subslice
+    /// (allocation-free: binary search into the sorted event list).
+    pub fn events_at(&self, round: u64) -> &[MembershipEvent] {
+        let lo = self.events.partition_point(|e| e.round < round);
+        let hi = self.events.partition_point(|e| e.round <= round);
+        &self.events[lo..hi]
+    }
+
+    /// Parse a spec: `none` or a comma-separated list of
+    /// `leave:W@R`/`crash:W@R`/`rejoin:W@R`/`join:W@R`.
+    pub fn parse(spec: &str) -> Result<MembershipSchedule, MembershipParseError> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(MembershipSchedule::none());
+        }
+        let mut events = Vec::new();
+        for token in spec.split(',') {
+            let token = token.trim();
+            let err = |reason: &str| MembershipParseError {
+                token: token.to_string(),
+                reason: reason.to_string(),
+            };
+            if token.is_empty() {
+                return Err(err("empty element"));
+            }
+            let (kind_s, rest) = token
+                .split_once(':')
+                .ok_or_else(|| err("missing ':' (expected kind:W@R)"))?;
+            let kind = match kind_s {
+                "leave" => MembershipEventKind::Leave,
+                "crash" => MembershipEventKind::Crash,
+                "rejoin" => MembershipEventKind::Rejoin,
+                "join" => MembershipEventKind::Join,
+                _ => {
+                    return Err(err(
+                        "unknown event kind (expected leave, crash, rejoin or join)",
+                    ))
+                }
+            };
+            let (worker_s, round_s) = rest
+                .split_once('@')
+                .ok_or_else(|| err("missing '@' (expected kind:W@R)"))?;
+            let worker: usize = worker_s
+                .parse()
+                .map_err(|_| err("worker id W is not a non-negative integer"))?;
+            let round: u64 = round_s
+                .parse()
+                .map_err(|_| err("round R is not a non-negative integer"))?;
+            events.push(MembershipEvent {
+                kind,
+                worker,
+                round,
+            });
+        }
+        // Reject two transitions of the same worker in the same round: the
+        // outcome would depend on intra-round event order.
+        let mut keys: Vec<(u64, usize)> = events.iter().map(|e| (e.round, e.worker)).collect();
+        keys.sort_unstable();
+        if let Some(w) = keys.windows(2).find(|w| w[0] == w[1]) {
+            return Err(MembershipParseError {
+                token: format!("worker {} at round {}", w[0].1, w[0].0),
+                reason: "duplicate event for the same worker in the same round".to_string(),
+            });
+        }
+        Ok(MembershipSchedule::from_events(events))
+    }
+
+    /// Seeded random churn: each worker other than worker 0 (pinned live
+    /// so the fleet never empties) departs with probability `rate` per
+    /// live round and revives with probability 0.3 per departed round.
+    /// `crash` selects fail-stop departures (cold rejoin) instead of
+    /// graceful leaves. Every draw comes from a per-`(worker, round)` PCG
+    /// cell, so the schedule is a pure function of `(seed, n, rounds,
+    /// rate, crash)` — independent of call order, shards and threads.
+    pub fn random_churn(seed: u64, n: usize, rounds: u64, rate: f64, crash: bool) -> Self {
+        let mut events = Vec::new();
+        let depart = if crash {
+            MembershipEventKind::Crash
+        } else {
+            MembershipEventKind::Leave
+        };
+        for w in 1..n {
+            let mut live = true;
+            for r in 1..rounds {
+                let mut rng = Self::cell_rng(seed, w, r);
+                if live {
+                    if rng.bernoulli(rate) {
+                        events.push(MembershipEvent {
+                            kind: depart,
+                            worker: w,
+                            round: r,
+                        });
+                        live = false;
+                    }
+                } else if rng.bernoulli(0.3) {
+                    events.push(MembershipEvent {
+                        kind: MembershipEventKind::Rejoin,
+                        worker: w,
+                        round: r,
+                    });
+                    live = true;
+                }
+            }
+        }
+        MembershipSchedule::from_events(events)
+    }
+
+    /// One PCG cell per `(worker, round)` — the same idiom as the
+    /// straggler and adversary models, so sampling never depends on call
+    /// order.
+    fn cell_rng(seed: u64, worker: usize, round: u64) -> Pcg64 {
+        let mix = (worker as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(seed ^ round.wrapping_mul(0xd1b5_4a32_d192_ed03), mix ^ round)
+    }
+
+    /// Check the schedule is consistent for a fleet of `n` workers:
+    /// worker ids in range, departures only of live workers, revivals
+    /// only of departed ones, and the live set never empties.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let mut state = MembershipState::new(n);
+        for ev in &self.events {
+            if ev.worker >= n {
+                return Err(format!(
+                    "membership event '{ev}' names worker {} but the fleet has {n} workers (ids 0..{n})",
+                    ev.worker
+                ));
+            }
+            let live = state.is_live(ev.worker);
+            match ev.kind {
+                MembershipEventKind::Leave | MembershipEventKind::Crash if !live => {
+                    return Err(format!(
+                        "membership event '{ev}' departs worker {} which is not live at round {}",
+                        ev.worker, ev.round
+                    ));
+                }
+                MembershipEventKind::Rejoin | MembershipEventKind::Join if live => {
+                    return Err(format!(
+                        "membership event '{ev}' revives worker {} which is already live at round {}",
+                        ev.worker, ev.round
+                    ));
+                }
+                _ => {}
+            }
+            state.apply(ev);
+            if state.live_count() == 0 {
+                return Err(format!(
+                    "membership event '{ev}' empties the fleet at round {}",
+                    ev.round
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for MembershipSchedule {
+    /// The canonical spec string (`none` for the empty schedule).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.events.is_empty() {
+            return write!(f, "none");
+        }
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{ev}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Live-set tracker the drivers carry: which workers participate this
+/// round, whether a departed worker's residual was lost (crash) or parked
+/// (leave), and the membership epoch — incremented once per round that
+/// applies at least one event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipState {
+    live: Vec<bool>,
+    crashed: Vec<bool>,
+    epoch: u64,
+}
+
+impl MembershipState {
+    /// All `n` workers live, epoch 0.
+    pub fn new(n: usize) -> Self {
+        MembershipState {
+            live: vec![true; n],
+            crashed: vec![false; n],
+            epoch: 0,
+        }
+    }
+
+    /// Replay `schedule` for every round strictly before `upto`: the state
+    /// a driver that applied events at the start of each round holds just
+    /// before running round `upto`. Used by checkpoint restore.
+    pub fn replay(schedule: &MembershipSchedule, n: usize, upto: u64) -> Self {
+        let mut state = MembershipState::new(n);
+        let mut last_round = None;
+        for ev in schedule.events().iter().filter(|e| e.round < upto) {
+            state.apply(ev);
+            if last_round != Some(ev.round) {
+                last_round = Some(ev.round);
+                state.bump_epoch();
+            }
+        }
+        state
+    }
+
+    /// Apply one event. Returns `true` when the event revives a worker
+    /// whose EF state must be cold (zeroed): a `join`, or a `rejoin` after
+    /// a crash.
+    pub fn apply(&mut self, ev: &MembershipEvent) -> bool {
+        let w = ev.worker;
+        match ev.kind {
+            MembershipEventKind::Leave => {
+                self.live[w] = false;
+                self.crashed[w] = false;
+                false
+            }
+            MembershipEventKind::Crash => {
+                self.live[w] = false;
+                self.crashed[w] = true;
+                false
+            }
+            MembershipEventKind::Rejoin => {
+                let cold = self.crashed[w];
+                self.live[w] = true;
+                self.crashed[w] = false;
+                cold
+            }
+            MembershipEventKind::Join => {
+                self.live[w] = true;
+                self.crashed[w] = false;
+                true
+            }
+        }
+    }
+
+    /// Advance the membership epoch (once per round that applied events).
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// The current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Whether worker `w` participates in the current round.
+    pub fn is_live(&self, w: usize) -> bool {
+        self.live[w]
+    }
+
+    /// Number of live workers.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Fleet size (live or not).
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// True when the fleet is empty (never the case for validated runs).
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Fill `out` with the live worker ids in ascending order (reuses the
+    /// caller's buffer so epoch transitions stay allocation-light).
+    pub fn live_ids_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        for (w, &l) in self.live.iter().enumerate() {
+            if l {
+                out.push(w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_none_and_empty() {
+        assert_eq!(
+            MembershipSchedule::parse("none").unwrap(),
+            MembershipSchedule::none()
+        );
+        assert_eq!(
+            MembershipSchedule::parse("  ").unwrap(),
+            MembershipSchedule::none()
+        );
+        assert!(!MembershipSchedule::none().is_active());
+    }
+
+    #[test]
+    fn parse_roundtrips_canonical_spec() {
+        let spec = "crash:1@3,rejoin:1@6,leave:2@4,join:2@9";
+        let sched = MembershipSchedule::parse(spec).unwrap();
+        assert!(sched.is_active());
+        assert_eq!(sched.events().len(), 4);
+        // Display is the canonical (round, worker)-sorted spec.
+        assert_eq!(sched.to_string(), "crash:1@3,leave:2@4,rejoin:1@6,join:2@9");
+        assert_eq!(
+            MembershipSchedule::parse(&sched.to_string()).unwrap(),
+            sched
+        );
+    }
+
+    #[test]
+    fn parse_errors_carry_token_and_grammar() {
+        for (spec, bad_token) in [
+            ("leave", "leave"),
+            ("leave:1", "leave:1"),
+            ("vanish:1@3", "vanish:1@3"),
+            ("leave:x@3", "leave:x@3"),
+            ("leave:1@y", "leave:1@y"),
+            ("crash:1@3,,rejoin:1@6", ""),
+        ] {
+            let err = MembershipSchedule::parse(spec).unwrap_err();
+            assert_eq!(err.token, bad_token, "spec {spec:?}");
+            let msg = err.to_string();
+            assert!(msg.contains("accepted grammar"), "spec {spec:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_same_worker_same_round() {
+        let err = MembershipSchedule::parse("crash:1@3,rejoin:1@3").unwrap_err();
+        assert!(err.reason.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn events_at_is_the_sorted_round_slice() {
+        let sched = MembershipSchedule::parse("crash:2@3,leave:1@3,rejoin:2@6").unwrap();
+        let at3 = sched.events_at(3);
+        assert_eq!(at3.len(), 2);
+        assert_eq!((at3[0].worker, at3[1].worker), (1, 2));
+        assert_eq!(sched.events_at(4), &[]);
+        assert_eq!(sched.events_at(6).len(), 1);
+    }
+
+    #[test]
+    fn validate_accepts_consistent_and_rejects_inconsistent() {
+        let ok = MembershipSchedule::parse("crash:1@3,rejoin:1@6").unwrap();
+        ok.validate(4).unwrap();
+        // Worker id out of range.
+        assert!(MembershipSchedule::parse("crash:9@3")
+            .unwrap()
+            .validate(4)
+            .is_err());
+        // Departing a worker that is not live.
+        assert!(MembershipSchedule::parse("crash:1@3,leave:1@5")
+            .unwrap()
+            .validate(4)
+            .is_err());
+        // Reviving a live worker.
+        assert!(MembershipSchedule::parse("rejoin:1@3")
+            .unwrap()
+            .validate(4)
+            .is_err());
+        // Emptying the fleet.
+        assert!(MembershipSchedule::parse("leave:0@1,leave:1@2")
+            .unwrap()
+            .validate(2)
+            .is_err());
+    }
+
+    #[test]
+    fn state_tracks_cold_vs_warm_revivals() {
+        let mut st = MembershipState::new(4);
+        assert_eq!(st.live_count(), 4);
+        let crash = MembershipEvent {
+            kind: MembershipEventKind::Crash,
+            worker: 1,
+            round: 3,
+        };
+        assert!(!st.apply(&crash));
+        assert!(!st.is_live(1));
+        let rejoin = MembershipEvent {
+            kind: MembershipEventKind::Rejoin,
+            worker: 1,
+            round: 6,
+        };
+        // Rejoin after crash is cold.
+        assert!(st.apply(&rejoin));
+        let leave = MembershipEvent {
+            kind: MembershipEventKind::Leave,
+            worker: 2,
+            round: 7,
+        };
+        st.apply(&leave);
+        let rejoin2 = MembershipEvent {
+            kind: MembershipEventKind::Rejoin,
+            worker: 2,
+            round: 9,
+        };
+        // Rejoin after graceful leave is warm.
+        assert!(!st.apply(&rejoin2));
+        let join = MembershipEvent {
+            kind: MembershipEventKind::Join,
+            worker: 2,
+            round: 11,
+        };
+        st.apply(&leave);
+        // Join is always cold.
+        assert!(st.apply(&join));
+    }
+
+    #[test]
+    fn replay_counts_epochs_per_event_round() {
+        let sched = MembershipSchedule::parse("crash:1@3,leave:2@3,rejoin:1@6").unwrap();
+        let st = MembershipState::replay(&sched, 4, 0);
+        assert_eq!(st.epoch(), 0);
+        assert_eq!(st.live_count(), 4);
+        // Events at round 3 apply at the start of round 3, so they are
+        // included when restoring to run round 4.
+        let st = MembershipState::replay(&sched, 4, 4);
+        assert_eq!(st.epoch(), 1);
+        assert_eq!(st.live_count(), 2);
+        let st = MembershipState::replay(&sched, 4, 7);
+        assert_eq!(st.epoch(), 2);
+        assert_eq!(st.live_count(), 3);
+        assert!(st.is_live(1));
+        assert!(!st.is_live(2));
+    }
+
+    #[test]
+    fn random_churn_is_deterministic_and_valid() {
+        let a = MembershipSchedule::random_churn(7, 8, 50, 0.2, false);
+        let b = MembershipSchedule::random_churn(7, 8, 50, 0.2, false);
+        assert_eq!(a, b);
+        assert!(a.is_active(), "rate 0.2 over 50 rounds should churn");
+        a.validate(8).unwrap();
+        // Worker 0 is pinned live.
+        assert!(a.events().iter().all(|e| e.worker != 0));
+        // Crash flavour yields the same event pattern with crash kinds.
+        let c = MembershipSchedule::random_churn(7, 8, 50, 0.2, true);
+        c.validate(8).unwrap();
+        assert!(c
+            .events()
+            .iter()
+            .all(|e| e.kind != MembershipEventKind::Leave));
+        // Rate 0 is inert.
+        let z = MembershipSchedule::random_churn(7, 8, 50, 0.0, false);
+        assert!(!z.is_active());
+        // Different seeds differ.
+        let d = MembershipSchedule::random_churn(8, 8, 50, 0.2, false);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn live_ids_into_reuses_buffer() {
+        let mut st = MembershipState::new(4);
+        st.apply(&MembershipEvent {
+            kind: MembershipEventKind::Leave,
+            worker: 2,
+            round: 1,
+        });
+        let mut ids = Vec::new();
+        st.live_ids_into(&mut ids);
+        assert_eq!(ids, vec![0, 1, 3]);
+    }
+}

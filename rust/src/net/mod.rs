@@ -23,14 +23,19 @@ pub mod accounting;
 pub mod adversary;
 pub mod fabric;
 pub mod link;
+pub mod membership;
 pub mod message;
 pub mod simclock;
 pub mod straggler;
 
 pub use accounting::TrafficStats;
 pub use adversary::{AdversaryModel, AdversarySchedule};
+pub use membership::{
+    MembershipEvent, MembershipEventKind, MembershipParseError, MembershipSchedule,
+    MembershipState,
+};
 pub use fabric::{Fabric, FramePool};
 pub use link::{LinkDiscipline, LinkModel};
 pub use message::{Message, MessageKind, Payload};
 pub use simclock::{Event, EventQueue, SimClock};
-pub use straggler::{StragglerModel, StragglerSchedule};
+pub use straggler::{StragglerModel, StragglerParseError, StragglerSchedule};

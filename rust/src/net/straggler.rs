@@ -18,6 +18,42 @@
 //! engine's bit-determinism across `--threads` values.
 
 use crate::util::Pcg64;
+use std::fmt;
+
+/// The accepted straggler spec grammar, quoted by parse errors and the
+/// CLI.
+pub const STRAGGLER_GRAMMAR: &str =
+    "constant | none | uniform[:JITTER] | lognormal[:SIGMA] | failslow:NODE[:FACTOR]";
+
+/// A malformed straggler spec: the offending token plus what went wrong.
+/// `Display` includes the accepted grammar so the CLI error is
+/// self-describing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StragglerParseError {
+    /// The part of the spec that failed to parse.
+    pub token: String,
+    /// Why it was rejected.
+    pub reason: String,
+}
+
+impl fmt::Display for StragglerParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "bad straggler spec token '{}': {}; accepted grammar: {}",
+            self.token, self.reason, STRAGGLER_GRAMMAR
+        )
+    }
+}
+
+impl std::error::Error for StragglerParseError {}
+
+fn straggler_err(token: &str, reason: &str) -> StragglerParseError {
+    StragglerParseError {
+        token: token.to_string(),
+        reason: reason.to_string(),
+    }
+}
 
 /// The compute-time distribution (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -31,39 +67,52 @@ pub enum StragglerModel {
 impl StragglerModel {
     /// Parse a CLI spec: `constant`, `uniform[:J]`, `lognormal[:SIGMA]`,
     /// `failslow:NODE[:FACTOR]`.
-    pub fn parse(s: &str) -> Option<StragglerModel> {
+    pub fn parse(s: &str) -> Result<StragglerModel, StragglerParseError> {
         let mut parts = s.split(':');
-        let name = parts.next()?;
+        let name = parts
+            .next()
+            .ok_or_else(|| straggler_err(s, "empty spec"))?;
         let model = match name {
             "constant" | "none" => StragglerModel::Constant,
             "uniform" => {
                 let jitter = match parts.next() {
-                    Some(p) => p.parse().ok()?,
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| straggler_err(p, "JITTER is not a number"))?,
                     None => 0.5,
                 };
                 StragglerModel::UniformJitter { jitter }
             }
             "lognormal" => {
                 let sigma = match parts.next() {
-                    Some(p) => p.parse().ok()?,
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| straggler_err(p, "SIGMA is not a number"))?,
                     None => 1.0,
                 };
                 StragglerModel::LogNormal { sigma }
             }
             "failslow" => {
-                let node = parts.next()?.parse().ok()?;
+                let node_s = parts
+                    .next()
+                    .ok_or_else(|| straggler_err(s, "failslow requires a NODE id"))?;
+                let node = node_s
+                    .parse()
+                    .map_err(|_| straggler_err(node_s, "NODE is not a non-negative integer"))?;
                 let factor = match parts.next() {
-                    Some(p) => p.parse().ok()?,
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| straggler_err(p, "FACTOR is not a number"))?,
                     None => 8.0,
                 };
                 StragglerModel::FailSlow { node, factor }
             }
-            _ => return None,
+            _ => return Err(straggler_err(name, "unknown straggler model")),
         };
-        if parts.next().is_some() {
-            return None;
+        if let Some(extra) = parts.next() {
+            return Err(straggler_err(extra, "unexpected trailing part"));
         }
-        Some(model)
+        Ok(model)
     }
 
     pub fn name(&self) -> &'static str {
@@ -148,36 +197,49 @@ mod tests {
 
     #[test]
     fn parse_specs() {
-        assert_eq!(StragglerModel::parse("constant"), Some(StragglerModel::Constant));
+        assert_eq!(StragglerModel::parse("constant"), Ok(StragglerModel::Constant));
         assert_eq!(
             StragglerModel::parse("uniform:0.25"),
-            Some(StragglerModel::UniformJitter { jitter: 0.25 })
+            Ok(StragglerModel::UniformJitter { jitter: 0.25 })
         );
         assert_eq!(
             StragglerModel::parse("lognormal:1.5"),
-            Some(StragglerModel::LogNormal { sigma: 1.5 })
+            Ok(StragglerModel::LogNormal { sigma: 1.5 })
         );
         assert_eq!(
             StragglerModel::parse("lognormal"),
-            Some(StragglerModel::LogNormal { sigma: 1.0 })
+            Ok(StragglerModel::LogNormal { sigma: 1.0 })
         );
         assert_eq!(
             StragglerModel::parse("failslow:2:16"),
-            Some(StragglerModel::FailSlow {
+            Ok(StragglerModel::FailSlow {
                 node: 2,
                 factor: 16.0
             })
         );
         assert_eq!(
             StragglerModel::parse("failslow:3"),
-            Some(StragglerModel::FailSlow {
+            Ok(StragglerModel::FailSlow {
                 node: 3,
                 factor: 8.0
             })
         );
-        assert_eq!(StragglerModel::parse("failslow"), None);
-        assert_eq!(StragglerModel::parse("bogus"), None);
-        assert_eq!(StragglerModel::parse("constant:1:2"), None);
+        assert!(StragglerModel::parse("failslow").is_err());
+        assert!(StragglerModel::parse("bogus").is_err());
+        assert!(StragglerModel::parse("constant:1:2").is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_token_and_grammar() {
+        let err = StragglerModel::parse("lognormal:abc").unwrap_err();
+        assert_eq!(err.token, "abc");
+        assert!(err.to_string().contains("accepted grammar"), "{err}");
+        let err = StragglerModel::parse("failslow").unwrap_err();
+        assert!(err.reason.contains("NODE"), "{err}");
+        let err = StragglerModel::parse("bogus").unwrap_err();
+        assert_eq!(err.token, "bogus");
+        let err = StragglerModel::parse("constant:1:2").unwrap_err();
+        assert_eq!(err.token, "1");
     }
 
     #[test]

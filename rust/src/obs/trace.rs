@@ -38,6 +38,9 @@ pub enum DropReason {
     /// A frame carried a shard tag that does not match the leader it arrived
     /// at (mis-routed by an adversary or a topology bug).
     ShardMismatch,
+    /// The frame's sender departed the membership and the epoch it was
+    /// dispatched in has closed (see `docs/ASYNC.md`, "Membership epochs").
+    Departed,
 }
 
 /// Typed trace event kinds, one per instrumented point of the round path.
@@ -69,6 +72,12 @@ pub enum EventKind {
     AdversaryCorrupt,
     /// Driver wrote a checkpoint; arg = 0.
     CheckpointSaved,
+    /// A worker joined (or rejoined) the membership; arg = worker id.
+    /// Recorded on the driver track at the epoch transition.
+    MemberJoin,
+    /// A worker left the membership (graceful leave or fail-stop crash);
+    /// arg = worker id. Recorded on the driver track.
+    MemberLeave,
 }
 
 impl EventKind {
@@ -85,8 +94,11 @@ impl EventKind {
             EventKind::QuorumFold => "quorum_fold",
             EventKind::FrameDropped(DropReason::Undecodable) => "frame_dropped_undecodable",
             EventKind::FrameDropped(DropReason::ShardMismatch) => "frame_dropped_shard_mismatch",
+            EventKind::FrameDropped(DropReason::Departed) => "frame_dropped_departed",
             EventKind::AdversaryCorrupt => "adversary_corrupt",
             EventKind::CheckpointSaved => "checkpoint_saved",
+            EventKind::MemberJoin => "member_join",
+            EventKind::MemberLeave => "member_leave",
         }
     }
 }
